@@ -1,0 +1,91 @@
+//! QuAFL vs FedBuff (Figures 6/16): the asynchronous-FL comparison.
+//!
+//!     cargo run --release --example fedbuff_compare
+//!
+//! Prints time-aligned accuracy trajectories for the four arms (each ±
+//! quantization at the same bit width) plus compute/communication budgets,
+//! so the trade-off the paper discusses is visible: FedBuff burns every
+//! client's compute continuously, QuAFL samples s clients per round and
+//! still folds in partial progress from slow ones; quantization costs
+//! QuAFL (position-aware lattice) less than FedBuff (norm-scaled QSGD).
+
+use quafl::config::{Algorithm, ExperimentConfig, QuantizerKind, TimingConfig};
+use quafl::coordinator;
+use quafl::data::{PartitionKind, SynthFamily};
+use quafl::metrics::RunMetrics;
+
+fn main() -> anyhow::Result<()> {
+    let base = ExperimentConfig {
+        n: 20,
+        s: 5,
+        k: 10,
+        rounds: 80,
+        eval_every: 8,
+        family: SynthFamily::Hard,
+        partition: PartitionKind::ByClass,
+        train_samples: 3000,
+        val_samples: 512,
+        timing: TimingConfig { slow_fraction: 0.3, ..Default::default() },
+        ..Default::default()
+    };
+    let arms: Vec<(&str, ExperimentConfig)> = vec![
+        (
+            "quafl+lattice10",
+            ExperimentConfig {
+                quantizer: QuantizerKind::Lattice { bits: 10 },
+                ..base.clone()
+            },
+        ),
+        ("quafl fp32", ExperimentConfig { quantizer: QuantizerKind::None, ..base.clone() }),
+        (
+            "fedbuff+qsgd10",
+            ExperimentConfig {
+                algorithm: Algorithm::FedBuff,
+                quantizer: QuantizerKind::Qsgd { bits: 10 },
+                ..base.clone()
+            },
+        ),
+        (
+            "fedbuff fp32",
+            ExperimentConfig {
+                algorithm: Algorithm::FedBuff,
+                quantizer: QuantizerKind::None,
+                ..base.clone()
+            },
+        ),
+    ];
+
+    let mut results: Vec<(&str, RunMetrics)> = Vec::new();
+    for (label, cfg) in arms {
+        let m = coordinator::run(&cfg).map_err(|e| anyhow::anyhow!("{e:#}"))?;
+        results.push((label, m));
+    }
+
+    println!(
+        "{:<16} {:>9} {:>9} {:>12} {:>12} {:>10}",
+        "arm", "acc", "loss", "client_steps", "MB_moved", "sim_time"
+    );
+    for (label, m) in &results {
+        let last = m.points.last().unwrap();
+        println!(
+            "{:<16} {:>9.4} {:>9.4} {:>12} {:>12.1} {:>10.1}",
+            label,
+            m.final_acc(),
+            m.final_loss(),
+            last.total_client_steps,
+            m.total_bits() as f64 / 8e6,
+            last.sim_time,
+        );
+    }
+
+    // Quantization cost per algorithm family (the Figure 16 takeaway).
+    let acc = |l: &str| {
+        results.iter().find(|(x, _)| *x == l).unwrap().1.final_acc()
+    };
+    println!(
+        "\nquantization cost: quafl {:+.4} | fedbuff {:+.4}",
+        acc("quafl fp32") - acc("quafl+lattice10"),
+        acc("fedbuff fp32") - acc("fedbuff+qsgd10"),
+    );
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Quickstart: the smallest complete QuAFL run.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Trains the paper's MNIST-style MLP federated across 20 clients with
+//! 10-bit lattice-quantized communication on the native engine, and prints
+//! the convergence table. See `e2e_train` for the full XLA-artifact path.
+
+use quafl::config::ExperimentConfig;
+use quafl::coordinator;
+
+fn main() -> anyhow::Result<()> {
+    // Everything has a sensible default; this is the whole API surface a
+    // downstream user needs for a first run.
+    let cfg = ExperimentConfig {
+        n: 20,                    // clients
+        s: 5,                     // sampled per round
+        k: 10,                    // max local steps between interactions
+        rounds: 100,              // server rounds
+        eval_every: 10,
+        ..Default::default()      // mlp, synthetic MNIST, lattice:10, iid
+    };
+
+    println!("QuAFL quickstart: n={} s={} K={} quant={:?}", cfg.n, cfg.s, cfg.k, cfg.quantizer);
+    let metrics = coordinator::run(&cfg).map_err(|e| anyhow::anyhow!("{e:#}"))?;
+
+    println!("{:>6} {:>10} {:>10} {:>9} {:>9}", "round", "sim_time", "steps", "val_loss", "val_acc");
+    for p in &metrics.points {
+        println!(
+            "{:>6} {:>10.1} {:>10} {:>9.4} {:>9.4}",
+            p.round, p.sim_time, p.total_client_steps, p.val_loss, p.val_acc
+        );
+    }
+    println!(
+        "\nfinal accuracy {:.1}% | total communication {:.1} MB (vs {:.1} MB uncompressed)",
+        metrics.final_acc() * 100.0,
+        metrics.total_bits() as f64 / 8e6,
+        metrics.total_bits() as f64 / 8e6 * 32.0 / 10.0,
+    );
+    Ok(())
+}

@@ -1,0 +1,165 @@
+"""AOT compile path: lower the L2 model functions to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser on the Rust side reassigns ids and round-trips cleanly.
+
+Emits, per model in ``model.MODELS``:
+
+    artifacts/<name>_train_step.hlo.txt   params..., x(B,din), y(B,C), lr -> (params'..., loss)
+    artifacts/<name>_eval.hlo.txt         params..., x(Be,din), y(Be,C)  -> (loss_sum, correct)
+
+plus ``artifacts/meta.json`` describing shapes/arg order for the Rust
+runtime, and (with --report) a §Perf structural report for the kernels.
+
+Python runs ONCE (`make artifacts`); it is never on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import dense as dense_k
+
+TRAIN_BATCH = 32
+EVAL_BATCH = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def specs_for(sizes, batch):
+    f32 = jnp.float32
+    params = [
+        jax.ShapeDtypeStruct(shape, f32)
+        for shape, _ in model.param_shapes(sizes)
+    ]
+    x = jax.ShapeDtypeStruct((batch, sizes[0]), f32)
+    y = jax.ShapeDtypeStruct((batch, sizes[-1]), f32)
+    return params, x, y
+
+
+def lower_train_step(sizes, batch):
+    params, x, y = specs_for(sizes, batch)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def fn(*args):
+        n = len(params)
+        p, xx, yy, llr = list(args[:n]), args[n], args[n + 1], args[n + 2]
+        return model.train_step(p, xx, yy, llr)
+
+    return jax.jit(fn).lower(*params, x, y, lr)
+
+
+def lower_train_k_steps(sizes, batch, k):
+    params, x, y = specs_for(sizes, batch)
+    f32 = jnp.float32
+    xs = jax.ShapeDtypeStruct((k, batch, sizes[0]), f32)
+    ys = jax.ShapeDtypeStruct((k, batch, sizes[-1]), f32)
+    lr = jax.ShapeDtypeStruct((), f32)
+    h = jax.ShapeDtypeStruct((), jnp.int32)
+    _ = (x, y)
+
+    def fn(*args):
+        n = len(params)
+        p = list(args[:n])
+        return model.train_k_steps(p, args[n], args[n + 1], args[n + 2],
+                                   args[n + 3])
+
+    return jax.jit(fn).lower(*params, xs, ys, lr, h)
+
+
+def lower_eval(sizes, batch):
+    params, x, y = specs_for(sizes, batch)
+
+    def fn(*args):
+        n = len(params)
+        p, xx, yy = list(args[:n]), args[n], args[n + 1]
+        return model.eval_step(p, xx, yy)
+
+    return jax.jit(fn).lower(*params, x, y)
+
+
+def perf_report(sizes, batch):
+    """Structural §Perf estimates for every matmul in fwd+bwd (DESIGN §7)."""
+    rep = {}
+    for i in range(len(sizes) - 1):
+        m, k, n = batch, sizes[i], sizes[i + 1]
+        rep[f"fwd_layer{i}"] = dense_k.vmem_report(m, k, n)
+        rep[f"bwd_gx_layer{i}"] = dense_k.vmem_report(m, n, k)
+        rep[f"bwd_gw_layer{i}"] = dense_k.vmem_report(k, m, n)
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(model.MODELS))
+    ap.add_argument("--train-batch", type=int, default=TRAIN_BATCH)
+    ap.add_argument("--eval-batch", type=int, default=EVAL_BATCH)
+    ap.add_argument("--k-max", type=int, default=10,
+                    help="max local steps K baked into the fused "
+                         "train_k_steps artifact (§Perf L2)")
+    ap.add_argument("--report", action="store_true",
+                    help="also emit perf_report.json (§Perf structural stats)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    meta = {"train_batch": args.train_batch, "eval_batch": args.eval_batch,
+            "models": {}}
+    reports = {}
+    for name in args.models.split(","):
+        sizes = model.MODELS[name]
+        tl = lower_train_step(sizes, args.train_batch)
+        text = to_hlo_text(tl)
+        tp = os.path.join(args.out_dir, f"{name}_train_step.hlo.txt")
+        with open(tp, "w") as f:
+            f.write(text)
+        el = lower_eval(sizes, args.eval_batch)
+        etext = to_hlo_text(el)
+        ep = os.path.join(args.out_dir, f"{name}_eval.hlo.txt")
+        with open(ep, "w") as f:
+            f.write(etext)
+        kl = lower_train_k_steps(sizes, args.train_batch, args.k_max)
+        ktext = to_hlo_text(kl)
+        kp = os.path.join(args.out_dir, f"{name}_train_k{args.k_max}.hlo.txt")
+        with open(kp, "w") as f:
+            f.write(ktext)
+        meta["models"][name] = {
+            "sizes": sizes,
+            "num_params": model.num_params(sizes),
+            "param_shapes": [
+                {"name": n_, "shape": list(s)} for s, n_ in
+                model.param_shapes(sizes)
+            ],
+            "train_step": os.path.basename(tp),
+            "eval": os.path.basename(ep),
+            "train_k": os.path.basename(kp),
+            "k_max": args.k_max,
+        }
+        reports[name] = perf_report(sizes, args.train_batch)
+        print(f"[aot] {name}: train_step={len(text)}B eval={len(etext)}B "
+              f"d={model.num_params(sizes)}")
+
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    if args.report:
+        with open(os.path.join(args.out_dir, "perf_report.json"), "w") as f:
+            json.dump(reports, f, indent=2)
+    print(f"[aot] wrote artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""L1 Pallas kernel: tiled dense layer (x @ w + b) with VMEM-sized blocks.
+
+TPU-oriented design (see DESIGN.md §Hardware-Adaptation):
+
+- The grid is (M/bm, N/bn, K/bk); each program instance owns a (bm, bn)
+  output tile held in the output block across the K axis ("revisiting"
+  schedule: the K grid dimension is innermost, so the same output block is
+  live in VMEM while partial products accumulate into it).
+- Block shapes are chosen so the per-step working set
+  ``bm*bk + bk*bn + bm*bn`` floats stays within a VMEM budget (default
+  2 MiB), and the inner ``jnp.dot`` maps onto MXU-shaped (multiple-of-8 x
+  multiple-of-128) tiles where the true dims allow it.
+- Inputs whose dims do not divide the block shape are zero-padded by the
+  wrapper; zero columns/rows contribute nothing to the matmul and the
+  result is sliced back.
+
+On this image Pallas runs ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); correctness is asserted against ``ref.dense_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget (floats) for one grid step's working set. 2 MiB / 4 bytes.
+_VMEM_BUDGET_F32 = 2 * 1024 * 1024 // 4
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pick_blocks(m: int, k: int, n: int):
+    """Choose (bm, bk, bn) for a (m,k) @ (k,n) matmul.
+
+    Heuristic: favour MXU-friendly tiles (sublane multiple of 8, lane
+    multiple of 128) capped at the actual dims, shrinking bk until the
+    working set fits the VMEM budget. Small output dims (n < 96, the MLP
+    heads here) use 8-aligned lanes instead of padding to 128 — a 12.8x
+    compute saving for the 10-class head in interpret mode; a real TPU
+    pads lanes in-register at no FLOP cost, so this does not change the
+    §Perf VMEM story (measured in EXPERIMENTS.md §Perf L2).
+    """
+    bm = min(_round_up(m, 8), 128)
+    if n >= 96:
+        bn = min(_round_up(n, 128), 256)
+    else:
+        bn = _round_up(n, 8)
+    # Prefer a single K block when it fits (no K padding, no revisits).
+    bk = min(_round_up(k, 8), 1024)
+    while bm * bk + bk * bn + bm * bn > _VMEM_BUDGET_F32 and bk > 128:
+        bk //= 2
+        bk = _round_up(bk, 8)
+    return bm, bk, bn
+
+
+def vmem_report(m: int, k: int, n: int) -> dict:
+    """Analytic VMEM-footprint / MXU-utilization estimate for DESIGN §Perf.
+
+    interpret=True gives no hardware timings, so we report the structural
+    quantities that determine TPU efficiency: per-step VMEM bytes, the
+    fraction of MXU-aligned tile area that is real data (utilization), and
+    HBM traffic per output element.
+    """
+    bm, bk, bn = pick_blocks(m, k, n)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    vmem_bytes = 4 * (bm * bk + bk * bn + bm * bn)
+    mxu_util = (m * k * n) / (mp * kp * np_)
+    # Each x block is read N/bn times, each w block M/bm times.
+    hbm_reads = mp * kp * (np_ // bn) + kp * np_ * (mp // bm)
+    return {
+        "blocks": (bm, bk, bn),
+        "padded": (mp, kp, np_),
+        "vmem_bytes": vmem_bytes,
+        "mxu_utilization": mxu_util,
+        "hbm_read_floats": hbm_reads,
+    }
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref):
+    """One (bm, bn) output tile; K axis (program_id 2) accumulates."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.broadcast_to(b_ref[...], o_ref.shape)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad2(a, m0, m1):
+    p0, p1 = m0 - a.shape[0], m1 - a.shape[1]
+    if p0 == 0 and p1 == 0:
+        return a
+    return jnp.pad(a, ((0, p0), (0, p1)))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dense(x, w, b, interpret=True):
+    """Pallas tiled ``x @ w + b``. x: (M, K) f32, w: (K, N) f32, b: (N,) f32."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm, bk, bn = pick_blocks(m, k, n)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = _pad2(x, mp, kp)
+    wp = _pad2(w, kp, np_)
+    bp = jnp.pad(b, (0, np_ - n)) if np_ != n else b
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _dense_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul(x, w, interpret=True):
+    """Pallas tiled ``x @ w`` (no bias) — used by the hand-written backward."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm, bk, bn = pick_blocks(m, k, n)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = _pad2(x, mp, kp)
+    wp = _pad2(w, kp, np_)
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]

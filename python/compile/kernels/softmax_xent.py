@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: fused row-wise softmax cross-entropy.
+
+Fuses max / exp / sum / log and the one-hot reduction into a single pass
+over a (bm, C) row block, so the logits make one HBM->VMEM trip instead of
+three (softmax, log, reduce). Emits both the per-row loss and the softmax
+probabilities; the latter are the residual for the hand-written backward
+pass in model.py (d loss / d logits = probs - y_onehot, scaled).
+
+The class dimension C is small for every model in this repo (10 classes),
+so one block spans all of C; the grid tiles only rows.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _softmax_xent_kernel(logits_ref, y_ref, loss_ref, probs_ref):
+    z = logits_ref[...]
+    y = y_ref[...]
+    m = jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z - m)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    probs_ref[...] = e / s
+    logp = z - m - jnp.log(s)
+    loss_ref[...] = -jnp.sum(y * logp, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def softmax_xent(logits, y_onehot, interpret=True):
+    """Returns (loss_per_row (M,), probs (M, C)).
+
+    Rows are zero-padded to the block size; a padded row has all-zero
+    one-hot so its loss contribution is log(C_padded-sum...) times 0 = 0
+    only for the y*logp term — we therefore slice the outputs back to M
+    and padded rows never leak into results.
+    """
+    m, c = logits.shape
+    assert y_onehot.shape == (m, c)
+    bm = min(_round_up(m, 8), 128)
+    mp = _round_up(m, bm)
+    if mp != m:
+        logits = jnp.pad(logits, ((0, mp - m), (0, 0)))
+        y_onehot = jnp.pad(y_onehot, ((0, mp - m), (0, 0)))
+    grid = (mp // bm,)
+    loss, probs = pl.pallas_call(
+        _softmax_xent_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+            jax.ShapeDtypeStruct((mp, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits, y_onehot)
+    return loss[:m], probs[:m]

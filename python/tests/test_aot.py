@@ -1,0 +1,72 @@
+"""AOT path: the lowered HLO text must be non-trivial, parseable-looking,
+and the meta description must match the model zoo. (The authoritative
+load-and-execute check lives on the Rust side: rust/tests/integration.rs.)
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_roundtrip_shapes():
+    lowered = aot.lower_train_step([12, 6, 4], batch=8)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    # 4 params + x + y + lr inputs, 4 params + loss outputs.
+    assert "parameter(6)" in text
+    assert "f32[8,12]" in text  # the batch input
+
+
+def test_lower_eval_has_two_outputs():
+    lowered = aot.lower_eval([12, 6, 4], batch=16)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[16,12]" in text
+
+
+def test_train_step_numerics_after_lowering():
+    """Executing the lowered artifact (via jax compile of the same fn)
+    equals calling train_step eagerly — guards against lowering bugs."""
+    sizes = [12, 6, 4]
+    params = model.init_params(jax.random.PRNGKey(0), sizes)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((8, 12)).astype(np.float32)
+    y = np.eye(4, dtype=np.float32)[rng.integers(0, 4, 8)]
+    lr = jnp.float32(0.1)
+    eager = model.train_step(params, x, y, lr)
+    lowered = aot.lower_train_step(sizes, batch=8)
+    compiled = lowered.compile()
+    aotted = compiled(*params, x, y, lr)
+    for a, b in zip(eager, aotted):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_emitted_artifacts_exist_and_match_meta():
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    meta_path = os.path.join(art, "meta.json")
+    if not os.path.exists(meta_path):
+        pytest.skip("run `make artifacts` first")
+    meta = json.load(open(meta_path))
+    assert meta["train_batch"] >= 1 and meta["eval_batch"] >= 1
+    for name, info in meta["models"].items():
+        assert info["sizes"] == model.MODELS[name]
+        assert info["num_params"] == model.num_params(info["sizes"])
+        for key in ("train_step", "eval"):
+            p = os.path.join(art, info[key])
+            assert os.path.exists(p), p
+            head = open(p).read(512)
+            assert "HloModule" in head
+
+
+def test_perf_report_structure_sane():
+    rep = aot.perf_report([784, 32, 10], 32)
+    assert "fwd_layer0" in rep and "bwd_gw_layer1" in rep
+    for v in rep.values():
+        assert v["vmem_bytes"] <= 4 * 1024 * 1024
+        assert 0 < v["mxu_utilization"] <= 1.0

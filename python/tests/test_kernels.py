@@ -1,0 +1,129 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (including the padding-relevant non-multiples of
+block sizes) and values; assert_allclose is the core signal.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense as dense_k
+from compile.kernels import softmax_xent as sx_k
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------- dense ---
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 200),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(m, k, n, seed):
+    x, w, b = rand((m, k), seed), rand((k, n), seed + 1), rand((n,), seed + 2)
+    out = dense_k.dense(x, w, b)
+    ref_out = ref.dense_ref(x, w, b)
+    np.testing.assert_allclose(out, ref_out, rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 50),
+    k=st.integers(1, 150),
+    n=st.integers(1, 50),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x, w = rand((m, k), seed), rand((k, n), seed + 1)
+    np.testing.assert_allclose(
+        dense_k.matmul(x, w), ref.matmul_ref(x, w), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_dense_paper_shapes():
+    """The exact layer shapes of the paper's MNIST MLP (784, 32, 10)."""
+    for (m, k, n) in [(32, 784, 32), (32, 32, 10), (256, 784, 32)]:
+        x, w, b = rand((m, k), 7), rand((k, n), 8), rand((n,), 9)
+        # K=784 reduces in a different order than the reference dot; allow
+        # accumulation-order error proportional to sqrt(K).
+        np.testing.assert_allclose(
+            dense_k.dense(x, w, b), ref.dense_ref(x, w, b),
+            rtol=1e-4, atol=1e-3,
+        )
+
+
+def test_dense_zero_bias_is_matmul():
+    x, w = rand((17, 33), 3), rand((33, 12), 4)
+    b = np.zeros(12, np.float32)
+    np.testing.assert_allclose(
+        dense_k.dense(x, w, b), dense_k.matmul(x, w), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_pick_blocks_within_vmem_budget():
+    for (m, k, n) in [(32, 784, 32), (1024, 1024, 1024), (1, 1, 1),
+                      (256, 100000, 8)]:
+        bm, bk, bn = dense_k.pick_blocks(m, k, n)
+        working = bm * bk + bk * bn + bm * bn
+        assert working * 4 <= 4 * 1024 * 1024, (m, k, n, bm, bk, bn)
+
+
+def test_vmem_report_fields():
+    rep = dense_k.vmem_report(32, 784, 32)
+    assert 0 < rep["mxu_utilization"] <= 1.0
+    assert rep["vmem_bytes"] > 0 and rep["hbm_read_floats"] > 0
+
+
+# ---------------------------------------------------------- softmax xent ---
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    c=st.integers(2, 16),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.1, 30.0),
+)
+def test_softmax_xent_matches_ref(m, c, seed, scale):
+    logits = rand((m, c), seed, scale)
+    labels = np.random.default_rng(seed + 1).integers(0, c, m)
+    y = np.eye(c, dtype=np.float32)[labels]
+    loss, probs = sx_k.softmax_xent(logits, y)
+    rloss, rprobs = ref.softmax_xent_ref(logits, y)
+    np.testing.assert_allclose(loss, rloss, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(probs, rprobs, rtol=1e-4, atol=1e-6)
+
+
+def test_softmax_xent_extreme_logits_stable():
+    """Max-subtraction must keep huge logits finite (no inf/nan)."""
+    logits = np.array([[1000.0, -1000.0, 0.0], [-1e8, 1e8, 0.0]], np.float32)
+    y = np.eye(3, dtype=np.float32)[[0, 1]]
+    loss, probs = sx_k.softmax_xent(logits, y)
+    assert np.all(np.isfinite(loss)) and np.all(np.isfinite(probs))
+    np.testing.assert_allclose(loss, [0.0, 0.0], atol=1e-5)
+
+
+def test_softmax_probs_sum_to_one():
+    logits = rand((33, 10), 5, 3.0)
+    y = np.eye(10, dtype=np.float32)[np.zeros(33, int)]
+    _, probs = sx_k.softmax_xent(logits, y)
+    np.testing.assert_allclose(np.sum(probs, axis=1), np.ones(33), rtol=1e-5)
+
+
+def test_uniform_logits_loss_is_log_c():
+    c = 10
+    logits = np.zeros((8, c), np.float32)
+    y = np.eye(c, dtype=np.float32)[np.arange(8) % c]
+    loss, _ = sx_k.softmax_xent(logits, y)
+    np.testing.assert_allclose(loss, np.full(8, np.log(c)), rtol=1e-5)

@@ -1,0 +1,46 @@
+//! End-to-end throughput bench (EXPERIMENTS.md §Perf headline): server
+//! rounds/second for the full QuAFL system on both engines, and scaling
+//! in n and s. This is the number a deployment would size against.
+
+use quafl::config::ExperimentConfig;
+use quafl::coordinator;
+use quafl::testing::bench::bench_units;
+
+fn main() {
+    println!("== bench_e2e ==");
+    let base = ExperimentConfig {
+        n: 20,
+        s: 5,
+        k: 10,
+        rounds: 10,
+        eval_every: 1_000_000,
+        train_samples: 2000,
+        val_samples: 256,
+        ..Default::default()
+    };
+
+    bench_units("e2e quafl native (n=20 s=5)", 10.0, "rounds", || {
+        std::hint::black_box(coordinator::run(&base).unwrap());
+    });
+
+    if std::path::Path::new("artifacts/meta.json").exists() {
+        let cfg = ExperimentConfig { use_xla: true, ..base.clone() };
+        bench_units("e2e quafl xla    (n=20 s=5)", 10.0, "rounds", || {
+            std::hint::black_box(coordinator::run(&cfg).unwrap());
+        });
+    }
+
+    // Scaling in fleet size (per-round work is s·K steps, not n).
+    for (n, s) in [(50usize, 10usize), (100, 10), (300, 30)] {
+        let cfg = ExperimentConfig {
+            n,
+            s,
+            rounds: 5,
+            train_samples: n * 40,
+            ..base.clone()
+        };
+        bench_units(&format!("e2e quafl native (n={n} s={s})"), 5.0, "rounds", || {
+            std::hint::black_box(coordinator::run(&cfg).unwrap());
+        });
+    }
+}

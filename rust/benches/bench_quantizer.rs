@@ -1,0 +1,50 @@
+//! Quantizer hot-path bench (EXPERIMENTS.md §Perf L3-a).
+//!
+//! Claim tied to: compression must be negligible next to a local SGD step
+//! (a native mlp train step is ~1.5 ms; see bench_engine). Reports
+//! encode/decode latency and MB/s for both quantizer families at the real
+//! model dims (d = 25,450 for `mlp`, 235,146 for `mlp_deep`).
+
+use quafl::quant::{IdentityQuantizer, LatticeQuantizer, QsgdQuantizer, Quantizer};
+use quafl::testing::bench::bench_units;
+use quafl::util::rng::Rng;
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.normal() as f32).collect()
+}
+
+fn main() {
+    println!("== bench_quantizer ==");
+    for &d in &[25_450usize, 235_146] {
+        let x = randvec(d, 1);
+        let key: Vec<f32> = x.iter().map(|v| v + 0.001).collect();
+        let bytes = (d * 4) as f64;
+
+        let lat = LatticeQuantizer::new(10, 1e-4);
+        let mut seed = 0u64;
+        bench_units(&format!("lattice10 encode d={d}"), bytes, "B", || {
+            seed += 1;
+            std::hint::black_box(lat.encode(&x, seed));
+        });
+        let msg = lat.encode(&x, 42);
+        bench_units(&format!("lattice10 decode d={d}"), bytes, "B", || {
+            std::hint::black_box(lat.decode(&msg, &key));
+        });
+
+        let qs = QsgdQuantizer::new(10);
+        bench_units(&format!("qsgd10    encode d={d}"), bytes, "B", || {
+            seed += 1;
+            std::hint::black_box(qs.encode(&x, seed));
+        });
+        let qmsg = qs.encode(&x, 42);
+        bench_units(&format!("qsgd10    decode d={d}"), bytes, "B", || {
+            std::hint::black_box(qs.decode(&qmsg, &key));
+        });
+
+        let id = IdentityQuantizer;
+        bench_units(&format!("identity  encode d={d}"), bytes, "B", || {
+            std::hint::black_box(id.encode(&x, 0));
+        });
+    }
+}

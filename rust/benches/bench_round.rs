@@ -1,0 +1,80 @@
+//! Round-orchestration bench (EXPERIMENTS.md §Perf L3-b): one full QuAFL
+//! server round vs one FedAvg round, and the L3-only overhead (averaging +
+//! quantization + sampling with the engine swapped for a no-op model) —
+//! the claim is that the coordinator is NOT the bottleneck: its share of a
+//! round must be small next to the client SGD steps.
+
+use quafl::config::{Algorithm, ExperimentConfig, QuantizerKind};
+use quafl::coordinator;
+use quafl::model::params;
+use quafl::quant::{LatticeQuantizer, Quantizer};
+use quafl::testing::bench::{bench, bench_units};
+use quafl::util::rng::Rng;
+
+fn main() {
+    println!("== bench_round ==");
+
+    // Full end-to-end rounds (engine included), per algorithm.
+    for algo in [Algorithm::QuAFL, Algorithm::FedAvg, Algorithm::FedBuff] {
+        let cfg = ExperimentConfig {
+            algorithm: algo,
+            n: 20,
+            s: 5,
+            k: 10,
+            rounds: 10,
+            eval_every: 1_000_000, // never evaluate inside the bench
+            train_samples: 2000,
+            val_samples: 256,
+            ..Default::default()
+        };
+        bench_units(
+            &format!("{} 10 rounds (n=20 s=5 K=10, engine incl)", algo.name()),
+            10.0,
+            "rounds",
+            || {
+                std::hint::black_box(coordinator::run(&cfg).unwrap());
+            },
+        );
+    }
+
+    // L3-only cost of the QuAFL server update path at model scale:
+    // quantize s models, decode s models, weighted-average (engine
+    // excluded). Compare against bench_engine's ~per-step cost x s x K.
+    let d = 25_450;
+    let mut rng = Rng::new(7);
+    let x_server: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let clients: Vec<Vec<f32>> = (0..5)
+        .map(|_| x_server.iter().map(|v| v + 0.001).collect())
+        .collect();
+    let q = LatticeQuantizer::new(10, 1e-4);
+    let mut seed = 0u64;
+    bench("quafl L3-only round update (s=5, d=25450)", || {
+        seed += 1;
+        let enc_x = q.encode(&x_server, seed);
+        let mut sum = vec![0f32; d];
+        for c in &clients {
+            let enc_y = q.encode(c, seed ^ 0x99);
+            let qy = q.decode(&enc_y, &x_server);
+            params::axpy(&mut sum, 1.0, &qy);
+            std::hint::black_box(q.decode(&enc_x, c));
+        }
+        let mut xs = x_server.clone();
+        params::scale(&mut xs, 1.0 / 6.0);
+        params::axpy(&mut xs, 1.0 / 6.0, &sum);
+        std::hint::black_box(xs);
+    });
+
+    // Identity path (fp32) for reference — isolates quantizer cost.
+    let qn = QuantizerKind::None;
+    let _ = qn;
+    bench("quafl L3-only round update, fp32 (s=5, d=25450)", || {
+        let mut sum = vec![0f32; d];
+        for c in &clients {
+            params::axpy(&mut sum, 1.0, c);
+        }
+        let mut xs = x_server.clone();
+        params::scale(&mut xs, 1.0 / 6.0);
+        params::axpy(&mut xs, 1.0 / 6.0, &sum);
+        std::hint::black_box(xs);
+    });
+}

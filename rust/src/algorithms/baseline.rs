@@ -1,0 +1,44 @@
+//! Sequential baseline — the paper's "Baseline": a single node (assumed
+//! *slow*, per Appendix A) that both holds all the data and performs one
+//! optimization step per round. Fastest per-round convergence, slowest in
+//! wall-clock — the anchor for the time-vs-rounds comparisons
+//! (Figures 3, 10–15).
+
+use anyhow::Result;
+
+use crate::coordinator::FlRun;
+use crate::data::Shard;
+use crate::metrics::RunMetrics;
+use crate::util::rng::{derive_seed, Rng};
+
+pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
+    let cfg = ctx.cfg.clone();
+    let mut metrics = RunMetrics::new("baseline");
+
+    let mut x = ctx.engine.spec().init_params(derive_seed(cfg.seed, 0x1417));
+    // The baseline node sees the whole training set.
+    let all: Vec<usize> = (0..ctx.train.len()).collect();
+    let mut shard = Shard::new(all, Rng::new(derive_seed(cfg.seed, 0xBA5E)));
+    // Slow node: one Exp(slow_lambda) step per round.
+    let mut step_rng = Rng::new(derive_seed(cfg.seed, 0xBA5E + 1));
+
+    let mut now = 0f64;
+    let mut total_steps = 0u64;
+
+    ctx.eval_point(&mut metrics, 0, now, 0, 0, 0, &x)?;
+
+    for t in 0..cfg.rounds {
+        now += step_rng.exponential(cfg.timing.slow_lambda);
+        let idx = shard.sample_batch(cfg.batch);
+        let batch = ctx.train.gather_batch(&idx);
+        ctx.engine.train_step(&mut x, &batch, cfg.lr)?;
+        total_steps += 1;
+        metrics.total_interactions += 1;
+        metrics.sum_observed_steps += 1;
+
+        if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
+            ctx.eval_point(&mut metrics, t + 1, now, total_steps, 0, 0, &x)?;
+        }
+    }
+    Ok(metrics)
+}

@@ -1,0 +1,73 @@
+//! Synchronous FedAvg [25] — the paper's primary comparison point
+//! (Appendix A.2 simulation rules):
+//!
+//! Each round the server samples s clients, sends them its model
+//! *uncompressed*, and blocks until the slowest of them completes exactly
+//! K local steps; it then averages the returned models equally. The round
+//! duration is max_i(time for K steps) + sit, and swt = 0 (the server
+//! calls again immediately) — both straight from the paper.
+
+use anyhow::Result;
+
+use super::local_sgd;
+use crate::coordinator::FlRun;
+use crate::metrics::RunMetrics;
+use crate::model::params;
+use crate::util::rng::derive_seed;
+
+pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
+    let cfg = ctx.cfg.clone();
+    let d = ctx.engine.spec().num_params();
+    let mut metrics = RunMetrics::new("fedavg");
+
+    let mut x_server = ctx.engine.spec().init_params(derive_seed(cfg.seed, 0x1417));
+    let mut now = 0f64;
+    let mut bits_up = 0u64;
+    let mut bits_down = 0u64;
+    let mut total_steps = 0u64;
+
+    ctx.eval_point(&mut metrics, 0, now, 0, 0, 0, &x_server)?;
+
+    // FedAvg transmits full-precision models in both directions.
+    let model_bits = (d * 32) as u64;
+
+    for t in 0..cfg.rounds {
+        let sampled = ctx.rng.sample_distinct(cfg.n, cfg.s);
+
+        // Synchronous barrier: the round takes as long as the slowest
+        // sampled client needs for its K steps.
+        let mut round_end = now;
+        let mut sum = vec![0f32; d];
+        for &i in &sampled {
+            ctx.clocks[i].restart(now);
+            let finish = ctx.clocks[i].finish_time_for(cfg.k);
+            round_end = round_end.max(finish);
+
+            metrics.total_interactions += 1;
+            metrics.sum_observed_steps += cfg.k as u64;
+
+            let mut x_i = x_server.clone();
+            local_sgd(ctx, i, &mut x_i, cfg.k)?;
+            total_steps += cfg.k as u64;
+            params::axpy(&mut sum, 1.0 / cfg.s as f32, &x_i);
+
+            bits_down += model_bits;
+            bits_up += model_bits;
+        }
+        x_server = sum;
+        now = round_end + cfg.timing.sit;
+
+        if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
+            ctx.eval_point(
+                &mut metrics,
+                t + 1,
+                now,
+                total_steps,
+                bits_up,
+                bits_down,
+                &x_server,
+            )?;
+        }
+    }
+    Ok(metrics)
+}

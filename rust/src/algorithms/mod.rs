@@ -1,0 +1,54 @@
+//! The federated protocols under study.
+//!
+//! - [`quafl`] — Algorithm 1 of the paper: non-blocking rounds, partial
+//!   client progress, speed-weighted averaging, fully-quantized traffic.
+//! - [`fedavg`] — synchronous FedAvg [25]: the server waits for the
+//!   slowest sampled client each round; uncompressed.
+//! - [`fedbuff`] — buffered asynchronous aggregation [30], the SOTA
+//!   asynchronous baseline, with optional QSGD update compression.
+//! - [`baseline`] — a single sequential SGD node (the paper's "Baseline").
+//!
+//! All four consume the same [`crate::coordinator::FlRun`] context and
+//! produce the same [`crate::metrics::RunMetrics`], so every figure
+//! compares like with like (same data, same engine, same timing model).
+
+pub mod baseline;
+pub mod fedavg;
+pub mod fedbuff;
+pub mod quafl;
+
+use crate::coordinator::FlRun;
+use crate::data::Batch;
+
+/// Run `h` local SGD steps from `params` on client `client_id`'s shard.
+/// Returns the summed training loss over the steps (diagnostics) — the
+/// resulting parameters are written in place.
+pub(crate) fn local_sgd(
+    ctx: &mut FlRun,
+    client_id: usize,
+    params: &mut [f32],
+    h: usize,
+) -> anyhow::Result<f32> {
+    local_sgd_lr(ctx, client_id, params, h, ctx.cfg.lr)
+}
+
+/// `local_sgd` with an explicit learning rate (the weighted QuAFL variant
+/// rescales η globally — see quafl.rs). The whole h-step burst goes
+/// through `TrainEngine::train_steps`, which the XLA engine fuses into a
+/// single PJRT dispatch (§Perf L2).
+pub(crate) fn local_sgd_lr(
+    ctx: &mut FlRun,
+    client_id: usize,
+    params: &mut [f32],
+    h: usize,
+    lr: f32,
+) -> anyhow::Result<f32> {
+    let batch_size = ctx.cfg.batch;
+    let batches: Vec<Batch> = (0..h)
+        .map(|_| {
+            let idx = ctx.shards[client_id].sample_batch(batch_size);
+            ctx.train.gather_batch(&idx)
+        })
+        .collect();
+    ctx.engine.train_steps(params, &batches, lr)
+}

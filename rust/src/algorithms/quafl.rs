@@ -1,0 +1,208 @@
+//! QuAFL — Algorithm 1 of the paper, simulated exactly as Appendix A.2
+//! describes.
+//!
+//! Per server round t (server clock τ):
+//!
+//! 1. Sample S, |S| = s, uniformly at random.
+//! 2. For each i ∈ S (non-blocking — the client replies immediately):
+//!    - the client's realized progress is H_i = (steps its Exp(λ_i)
+//!      process completed since its last interaction, capped at K); those
+//!      H_i SGD steps are *actually executed* on its shard now (lazy
+//!      materialization — identical trajectory, no wasted compute);
+//!    - it transmits Enc(Y^i), Y^i = X^i − η·η_i·h̃_i (speed-dampened
+//!      progress; η_i = H_min/H_i in the weighted variant, 1 otherwise);
+//!      the server decodes against its own model: Q(Y^i) = Dec(X_t, ·);
+//!    - it receives Enc(X_t) and decodes against its own model:
+//!      Q(X_t) = Dec(X^i, ·);
+//!    - client update (averaging mode "both", the paper default):
+//!      X^i ← Q(X_t)/(s+1) + s/(s+1)·Y^i, then restarts K local steps.
+//! 3. Server update: X_{t+1} = (X_t + Σ_{i∈S} Q(Y^i))/(s+1).
+//! 4. τ += sit, then τ += swt before the next round.
+//!
+//! The Figure 4 ablation modes replace step 2/3's averaging:
+//! `ServerOnly` has clients adopt Q(X_t) outright; `ClientOnly` has the
+//! server adopt the mean of the received Q(Y^i).
+
+use anyhow::Result;
+
+use crate::config::AveragingMode;
+use crate::coordinator::FlRun;
+use crate::metrics::RunMetrics;
+use crate::model::params;
+use crate::util::rng::derive_seed;
+use crate::util::stats::l2_dist;
+
+pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
+    let cfg = ctx.cfg.clone();
+    let d = ctx.engine.spec().num_params();
+    let mut metrics = RunMetrics::new("quafl");
+
+    // Initial models: server and all clients start from the same init
+    // (the paper initializes everything to the same point).
+    let server_init = ctx.engine.spec().init_params(derive_seed(cfg.seed, 0x1417));
+    let mut x_server = server_init.clone();
+    let mut x_client: Vec<Vec<f32>> = vec![server_init.clone(); cfg.n];
+    let mut last_interaction = vec![0f64; cfg.n];
+
+    // η_i = H_min / H_i (weighted variant); 1 otherwise. The paper's
+    // theory pairs the dampening with a global rate η ∝ 1/H_min
+    // (Theorem 3.2); we keep total step mass comparable to the unweighted
+    // variant by rescaling the local rate so η_i·H_i ≈ H̄ (mean speed)
+    // rather than H_min — the same reparameterization, calibrated in
+    // EXPERIMENTS.md §Weighting.
+    let h_min = ctx
+        .expected_h
+        .iter()
+        .cloned()
+        .fold(f64::INFINITY, f64::min);
+    let h_mean =
+        ctx.expected_h.iter().sum::<f64>() / ctx.expected_h.len() as f64;
+    let (eta, lr_eff): (Vec<f32>, f32) = if cfg.weighted {
+        (
+            ctx.expected_h.iter().map(|&h| (h_min / h) as f32).collect(),
+            cfg.lr * (h_mean / h_min) as f32,
+        )
+    } else {
+        (vec![1.0; cfg.n], cfg.lr)
+    };
+
+    let mut now = 0f64;
+    let mut bits_up = 0u64;
+    let mut bits_down = 0u64;
+    let mut total_steps = 0u64;
+    let inv_s1 = 1.0 / (cfg.s as f32 + 1.0);
+
+    ctx.eval_point(&mut metrics, 0, now, 0, 0, 0, &x_server)?;
+
+    for t in 0..cfg.rounds {
+        now += cfg.timing.swt;
+        let sampled = ctx.rng.sample_distinct(cfg.n, cfg.s);
+
+        // Server's outgoing message is encoded once per round.
+        let down_seed = derive_seed(cfg.seed, 0xD011 ^ (t as u64) << 24);
+        let enc_x = ctx.quantizer.encode(&x_server, down_seed);
+
+        // Accumulate Σ Q(Y^i) while processing clients.
+        let mut sum_qy = vec![0f32; d];
+        for &i in &sampled {
+            // Realized partial progress since the client's last interaction.
+            let h = ctx.clocks[i].steps_completed(now, cfg.k);
+            metrics.total_interactions += 1;
+            metrics.sum_observed_steps += h as u64;
+            if h == 0 {
+                metrics.zero_progress_interactions += 1;
+            }
+
+            // Execute the h steps the client actually took (from X^i).
+            let mut x_sgd = x_client[i].clone();
+            if h > 0 {
+                super::local_sgd_lr(ctx, i, &mut x_sgd, h, lr_eff)?;
+                total_steps += h as u64;
+            }
+            // Y^i = X^i - η·η_i·h̃ = (1-η_i)·X^i + η_i·(SGD result).
+            let y_i = if eta[i] == 1.0 {
+                x_sgd
+            } else {
+                let mut y = x_client[i].clone();
+                params::scale(&mut y, 1.0 - eta[i]);
+                params::axpy(&mut y, eta[i], &x_sgd);
+                y
+            };
+
+            // Upstream: Enc(Y^i), decoded by the server against X_t.
+            let up_seed = derive_seed(cfg.seed, (t as u64) << 20 | i as u64);
+            let enc_y = ctx.quantizer.encode(&y_i, up_seed);
+            bits_up += enc_y.bits as u64;
+            let q_y = ctx.quantizer.decode(&enc_y, &x_server);
+            params::axpy(&mut sum_qy, 1.0, &q_y);
+
+            // Downstream: Enc(X_t), decoded by the client against X^i.
+            bits_down += enc_x.bits as u64;
+            let q_x = ctx.quantizer.decode(&enc_x, &x_client[i]);
+
+            // Client-side model update. The Figure 4 ablation *removes*
+            // one side's averaging: in ServerOnly the client ignores the
+            // server's message entirely and continues from its own
+            // progress (no client-side averaging).
+            x_client[i] = match cfg.averaging {
+                AveragingMode::Both | AveragingMode::ClientOnly => {
+                    let mut m = q_x;
+                    params::scale(&mut m, inv_s1);
+                    params::axpy(&mut m, cfg.s as f32 * inv_s1, &y_i);
+                    m
+                }
+                AveragingMode::ServerOnly => y_i,
+            };
+
+            // The client restarts its K local steps after the interaction.
+            last_interaction[i] = now + cfg.timing.sit;
+            ctx.clocks[i].restart(now + cfg.timing.sit);
+        }
+
+        // Server-side model update. ClientOnly removes the server's
+        // self-retention: it adopts the plain mean of client replies.
+        match cfg.averaging {
+            AveragingMode::Both | AveragingMode::ServerOnly => {
+                // X_{t+1} = (X_t + Σ Q(Y^i)) / (s+1)
+                params::scale(&mut x_server, inv_s1);
+                params::axpy(&mut x_server, inv_s1, &sum_qy);
+            }
+            AveragingMode::ClientOnly => {
+                x_server = sum_qy;
+                params::scale(&mut x_server, 1.0 / cfg.s as f32);
+            }
+        }
+
+        now += cfg.timing.sit;
+
+        if cfg.track_potential {
+            metrics.potential.push(potential(&x_server, &x_client));
+        }
+
+        if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
+            ctx.eval_point(
+                &mut metrics,
+                t + 1,
+                now,
+                total_steps,
+                bits_up,
+                bits_down,
+                &x_server,
+            )?;
+        }
+    }
+    Ok(metrics)
+}
+
+/// Diagnostic used by tests/benches: distance between server and the mean
+/// of client models (the paper's potential Φ_t tracks exactly this kind of
+/// discrepancy — Lemma 3.4 keeps it bounded).
+pub fn server_client_discrepancy(x_server: &[f32], clients: &[Vec<f32>]) -> f64 {
+    let n = clients.len();
+    let d = x_server.len();
+    let mut mean = vec![0f32; d];
+    for c in clients {
+        params::axpy(&mut mean, 1.0 / n as f32, c);
+    }
+    l2_dist(x_server, &mean)
+}
+
+/// The paper's potential Φ_t = ‖X_t − μ_t‖² + Σᵢ‖Xⁱ − μ_t‖², with
+/// μ_t = (X_t + Σᵢ Xⁱ)/(n+1) (Section 3.3). Lemma 3.4 proves a
+/// supermartingale-type contraction; `track_potential` lets experiments
+/// verify the boundedness empirically.
+pub fn potential(x_server: &[f32], clients: &[Vec<f32>]) -> f64 {
+    let n1 = (clients.len() + 1) as f32;
+    let d = x_server.len();
+    let mut mu = x_server.to_vec();
+    for c in clients {
+        params::axpy(&mut mu, 1.0, c);
+    }
+    params::scale(&mut mu, 1.0 / n1);
+    let mut phi = l2_dist(x_server, &mu).powi(2);
+    for c in clients {
+        phi += l2_dist(c, &mu).powi(2);
+    }
+    let _ = d;
+    phi
+}

@@ -1,0 +1,364 @@
+//! Experiment configuration: one struct wiring every axis of the paper's
+//! evaluation (algorithm, model, dataset family, partition, quantizer,
+//! timing, schedule). Built from CLI args (util::cli) or programmatically
+//! by the figure harness.
+
+use crate::data::{PartitionKind, SynthFamily};
+use crate::util::cli::Args;
+
+/// Which protocol to run (paper §4 comparisons).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    QuAFL,
+    FedAvg,
+    FedBuff,
+    /// single (slow) sequential SGD node — the paper's "Baseline"
+    Baseline,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "quafl" => Ok(Algorithm::QuAFL),
+            "fedavg" => Ok(Algorithm::FedAvg),
+            "fedbuff" => Ok(Algorithm::FedBuff),
+            "baseline" | "sgd" => Ok(Algorithm::Baseline),
+            other => Err(format!("unknown algorithm {other:?}")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::QuAFL => "quafl",
+            Algorithm::FedAvg => "fedavg",
+            Algorithm::FedBuff => "fedbuff",
+            Algorithm::Baseline => "baseline",
+        }
+    }
+}
+
+/// Quantizer selection (paper Figures 2/5/6/16).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QuantizerKind {
+    /// position-aware lattice quantizer with b bits/coordinate
+    Lattice { bits: u8 },
+    /// QSGD with b bits/coordinate
+    Qsgd { bits: u8 },
+    /// full precision (b = 32)
+    None,
+}
+
+impl QuantizerKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if s == "none" || s == "32" {
+            return Ok(QuantizerKind::None);
+        }
+        if let Some(rest) = s.strip_prefix("lattice:") {
+            return rest
+                .parse::<u8>()
+                .map(|bits| QuantizerKind::Lattice { bits })
+                .map_err(|_| format!("bad lattice bits {s:?}"));
+        }
+        if let Some(rest) = s.strip_prefix("qsgd:") {
+            return rest
+                .parse::<u8>()
+                .map(|bits| QuantizerKind::Qsgd { bits })
+                .map_err(|_| format!("bad qsgd bits {s:?}"));
+        }
+        Err(format!(
+            "unknown quantizer {s:?} (none | lattice:BITS | qsgd:BITS)"
+        ))
+    }
+
+    pub fn bits(&self) -> u8 {
+        match self {
+            QuantizerKind::Lattice { bits } | QuantizerKind::Qsgd { bits } => *bits,
+            QuantizerKind::None => 32,
+        }
+    }
+}
+
+/// Which nodes average which messages — the Figure 4 ablation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AveragingMode {
+    /// paper default: both server and clients average with weight 1/(s+1)
+    Both,
+    /// only the server averages; clients adopt the server model
+    ServerOnly,
+    /// only clients average; server adopts the mean of client replies
+    ClientOnly,
+}
+
+impl AveragingMode {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "both" => Ok(AveragingMode::Both),
+            "server-only" | "server" => Ok(AveragingMode::ServerOnly),
+            "client-only" | "client" => Ok(AveragingMode::ClientOnly),
+            other => Err(format!("unknown averaging mode {other:?}")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AveragingMode::Both => "both",
+            AveragingMode::ServerOnly => "server-only",
+            AveragingMode::ClientOnly => "client-only",
+        }
+    }
+}
+
+/// Client speed classes (paper Appendix A.2 timing model): step duration
+/// ~ Exp(lambda), lambda = 1/2 for fast and 1/8 for slow clients.
+#[derive(Clone, Debug)]
+pub struct TimingConfig {
+    pub fast_lambda: f64,
+    pub slow_lambda: f64,
+    /// fraction of clients that are slow (paper uses 0.25–0.30)
+    pub slow_fraction: f64,
+    /// server waiting time between calls (swt)
+    pub swt: f64,
+    /// server interaction time per round (sit)
+    pub sit: f64,
+}
+
+impl Default for TimingConfig {
+    fn default() -> Self {
+        TimingConfig {
+            fast_lambda: 0.5,
+            slow_lambda: 0.125,
+            slow_fraction: 0.25,
+            swt: 10.0,
+            sit: 1.0,
+        }
+    }
+}
+
+/// Everything an experiment run needs.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub algorithm: Algorithm,
+    /// number of clients n
+    pub n: usize,
+    /// sampled clients per round s
+    pub s: usize,
+    /// max local steps K
+    pub k: usize,
+    /// learning rate η
+    pub lr: f32,
+    /// server rounds T
+    pub rounds: usize,
+    pub model: String,
+    pub family: SynthFamily,
+    pub train_samples: usize,
+    pub val_samples: usize,
+    pub partition: PartitionKind,
+    pub quantizer: QuantizerKind,
+    pub averaging: AveragingMode,
+    /// QuAFL speed weighting η_i = H_min/H_i (paper's "weighted" variant)
+    pub weighted: bool,
+    pub timing: TimingConfig,
+    /// FedBuff buffer size Z
+    pub fedbuff_buffer: usize,
+    /// FedBuff server lr η_g
+    pub fedbuff_server_lr: f32,
+    /// evaluate every this many rounds
+    pub eval_every: usize,
+    pub batch: usize,
+    pub seed: u64,
+    /// use the XLA engine (artifacts) instead of the native engine
+    pub use_xla: bool,
+    /// override γ for the lattice quantizer (otherwise derived from lr/K)
+    pub lattice_gamma: Option<f32>,
+    /// record the paper's potential Φ_t each round (Lemma 3.4 diagnostic;
+    /// costs O(n·d) per round, off by default)
+    pub track_potential: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            algorithm: Algorithm::QuAFL,
+            n: 20,
+            s: 5,
+            k: 10,
+            lr: 0.1,
+            rounds: 100,
+            model: "mlp".into(),
+            family: SynthFamily::Mnist,
+            train_samples: 4000,
+            val_samples: 1024,
+            partition: PartitionKind::Iid,
+            quantizer: QuantizerKind::Lattice { bits: 10 },
+            averaging: AveragingMode::Both,
+            weighted: false,
+            timing: TimingConfig::default(),
+            fedbuff_buffer: 5,
+            fedbuff_server_lr: 1.0,
+            eval_every: 10,
+            batch: 32,
+            seed: 1,
+            use_xla: false,
+            lattice_gamma: None,
+            track_potential: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.s == 0 || self.s > self.n {
+            return Err(format!("need 1 <= s <= n, got s={} n={}", self.s, self.n));
+        }
+        if self.k == 0 {
+            return Err("K must be >= 1".into());
+        }
+        if self.rounds == 0 {
+            return Err("rounds must be >= 1".into());
+        }
+        if !(self.lr > 0.0) {
+            return Err("lr must be positive".into());
+        }
+        if self.train_samples < self.n {
+            return Err("need at least one training sample per client".into());
+        }
+        if self.algorithm == Algorithm::FedBuff && self.fedbuff_buffer == 0 {
+            return Err("fedbuff buffer must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// Known CLI keys for the `run` subcommand.
+    pub const CLI_KEYS: &'static [&'static str] = &[
+        "algorithm", "n", "s", "k", "lr", "rounds", "model", "family",
+        "train-samples", "val-samples", "partition", "quantizer",
+        "averaging", "weighted", "swt", "sit", "slow-fraction",
+        "fast-lambda", "slow-lambda",
+        "fedbuff-buffer", "fedbuff-server-lr", "eval-every", "batch",
+        "seed", "xla", "gamma", "out",
+    ];
+
+    pub fn from_args(args: &Args) -> Result<Self, String> {
+        let mut c = ExperimentConfig::default();
+        if let Some(a) = args.get("algorithm") {
+            c.algorithm = Algorithm::parse(a)?;
+        }
+        c.n = args.get_usize("n", c.n);
+        c.s = args.get_usize("s", c.s);
+        c.k = args.get_usize("k", c.k);
+        c.lr = args.get_f64("lr", c.lr as f64) as f32;
+        c.rounds = args.get_usize("rounds", c.rounds);
+        c.model = args.get_str("model", &c.model);
+        if let Some(f) = args.get("family") {
+            c.family = match f {
+                "mnist" => SynthFamily::Mnist,
+                "hard" => SynthFamily::Hard,
+                "celeb" => SynthFamily::Celeb,
+                other => return Err(format!("unknown family {other:?}")),
+            };
+        }
+        c.train_samples = args.get_usize("train-samples", c.train_samples);
+        c.val_samples = args.get_usize("val-samples", c.val_samples);
+        if let Some(p) = args.get("partition") {
+            c.partition = PartitionKind::parse(p)?;
+        }
+        if let Some(q) = args.get("quantizer") {
+            c.quantizer = QuantizerKind::parse(q)?;
+        }
+        if let Some(a) = args.get("averaging") {
+            c.averaging = AveragingMode::parse(a)?;
+        }
+        c.weighted = args.flag("weighted")
+            || args.get("weighted").map(|v| v == "true").unwrap_or(false);
+        c.timing.swt = args.get_f64("swt", c.timing.swt);
+        c.timing.sit = args.get_f64("sit", c.timing.sit);
+        c.timing.slow_fraction =
+            args.get_f64("slow-fraction", c.timing.slow_fraction);
+        c.timing.fast_lambda = args.get_f64("fast-lambda", c.timing.fast_lambda);
+        c.timing.slow_lambda = args.get_f64("slow-lambda", c.timing.slow_lambda);
+        c.fedbuff_buffer = args.get_usize("fedbuff-buffer", c.fedbuff_buffer);
+        c.fedbuff_server_lr =
+            args.get_f64("fedbuff-server-lr", c.fedbuff_server_lr as f64) as f32;
+        c.eval_every = args.get_usize("eval-every", c.eval_every);
+        c.batch = args.get_usize("batch", c.batch);
+        c.seed = args.get_u64("seed", c.seed);
+        c.use_xla =
+            args.flag("xla") || args.get("xla").map(|v| v == "true").unwrap_or(false);
+        if let Some(g) = args.get("gamma") {
+            c.lattice_gamma =
+                Some(g.parse().map_err(|_| format!("bad gamma {g:?}"))?);
+        }
+        c.validate()?;
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn default_is_valid() {
+        assert!(ExperimentConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn from_args_overrides() {
+        let a = cli::parse(&sv(&[
+            "run", "--algorithm", "fedavg", "--n", "40", "--s", "8",
+            "--quantizer", "qsgd:8", "--partition", "by-class", "--weighted",
+        ]));
+        let c = ExperimentConfig::from_args(&a).unwrap();
+        assert_eq!(c.algorithm, Algorithm::FedAvg);
+        assert_eq!(c.n, 40);
+        assert_eq!(c.s, 8);
+        assert_eq!(c.quantizer, QuantizerKind::Qsgd { bits: 8 });
+        assert_eq!(c.partition, PartitionKind::ByClass);
+        assert!(c.weighted);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = ExperimentConfig::default();
+        c.s = 0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.s = c.n + 1;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.k = 0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.lr = -1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn quantizer_parse() {
+        assert_eq!(
+            QuantizerKind::parse("lattice:14").unwrap(),
+            QuantizerKind::Lattice { bits: 14 }
+        );
+        assert_eq!(QuantizerKind::parse("none").unwrap(), QuantizerKind::None);
+        assert!(QuantizerKind::parse("lattice:x").is_err());
+        assert_eq!(QuantizerKind::parse("qsgd:8").unwrap().bits(), 8);
+        assert_eq!(QuantizerKind::None.bits(), 32);
+    }
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for a in [
+            Algorithm::QuAFL,
+            Algorithm::FedAvg,
+            Algorithm::FedBuff,
+            Algorithm::Baseline,
+        ] {
+            assert_eq!(Algorithm::parse(a.name()).unwrap(), a);
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! Experiment coordinator: wires config × data × engine × quantizer ×
+//! timing into a run context, dispatches to the selected algorithm, and
+//! owns evaluation scheduling + bit accounting.
+//!
+//! This is the launcher layer a deployment would use: `run(cfg)` is the single
+//! entry point behind both the CLI (`quafl run ...`) and the figure
+//! harness.
+
+use anyhow::{Context, Result};
+
+use crate::algorithms;
+use crate::config::{Algorithm, ExperimentConfig, QuantizerKind};
+use crate::data::{partition, Dataset, Shard, SynthSpec};
+use crate::engine::{build_engine, TrainEngine};
+use crate::metrics::{EvalPoint, RunMetrics};
+use crate::model::ModelSpec;
+use crate::quant::{
+    lattice_gamma_for, IdentityQuantizer, LatticeQuantizer, QsgdQuantizer,
+    Quantizer,
+};
+use crate::sim::{build_clocks, ClientClock};
+use crate::util::rng::{derive_seed, Rng};
+
+/// Default location of the AOT artifacts relative to the workspace root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Everything an algorithm needs to execute a run.
+pub struct FlRun {
+    pub cfg: ExperimentConfig,
+    pub train: Dataset,
+    pub val: Dataset,
+    /// fixed subsample of the training set for train-loss curves
+    pub train_probe: Dataset,
+    pub shards: Vec<Shard>,
+    pub clocks: Vec<ClientClock>,
+    pub engine: Box<dyn TrainEngine>,
+    pub quantizer: Box<dyn Quantizer>,
+    /// server-side sampling randomness
+    pub rng: Rng,
+    /// expected steps per interaction per client (H_i) — analytic, used by
+    /// the weighted variant's η_i = H_min / H_i
+    pub expected_h: Vec<f64>,
+}
+
+impl FlRun {
+    /// Materialize a run context from a validated config.
+    pub fn new(cfg: &ExperimentConfig) -> Result<Self> {
+        Self::with_artifacts(cfg, DEFAULT_ARTIFACTS_DIR)
+    }
+
+    pub fn with_artifacts(cfg: &ExperimentConfig, artifacts: &str) -> Result<Self> {
+        cfg.validate().map_err(anyhow::Error::msg)?;
+        let spec = ModelSpec::by_name(&cfg.model).map_err(anyhow::Error::msg)?;
+
+        let synth = SynthSpec::family(
+            cfg.family,
+            cfg.train_samples,
+            cfg.val_samples,
+            derive_seed(cfg.seed, 0xDA7A),
+        );
+        let (train, val) = synth.generate();
+        anyhow::ensure!(
+            train.dim == spec.input_dim() && train.num_classes == spec.num_classes(),
+            "dataset ({}, {}) does not match model {:?}",
+            train.dim,
+            train.num_classes,
+            spec.name
+        );
+
+        let part = partition(&train, cfg.n, cfg.partition, derive_seed(cfg.seed, 0x9A47));
+        let mut shard_rng = Rng::new(derive_seed(cfg.seed, 0x54A2D));
+        let shards: Vec<Shard> = part
+            .shards
+            .iter()
+            .map(|idx| Shard::new(idx.clone(), shard_rng.fork(idx.len() as u64)))
+            .collect();
+
+        let clocks = build_clocks(cfg.n, &cfg.timing, derive_seed(cfg.seed, 0xC10C));
+
+        let engine = build_engine(&cfg.model, cfg.use_xla, artifacts, cfg.batch)
+            .context("building engine")?;
+        anyhow::ensure!(
+            engine.train_batch() == cfg.batch,
+            "engine batch {} != config batch {} (XLA artifacts fix the batch; \
+             set --batch accordingly)",
+            engine.train_batch(),
+            cfg.batch
+        );
+
+        // Fixed train-loss probe: first min(512, len) samples.
+        let probe_n = train.len().min(512);
+        let probe_idx: Vec<usize> = (0..probe_n).collect();
+        let train_probe = subset(&train, &probe_idx);
+
+        let expected_h = expected_steps_per_interaction(cfg, &clocks);
+        let quantizer = build_quantizer(cfg, spec.num_params());
+
+        Ok(FlRun {
+            cfg: cfg.clone(),
+            train,
+            val,
+            train_probe,
+            shards,
+            clocks,
+            engine,
+            quantizer,
+            rng: Rng::new(derive_seed(cfg.seed, 0x5E1EC7)),
+            expected_h,
+        })
+    }
+
+    /// Evaluate server params; push an EvalPoint.
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_point(
+        &mut self,
+        metrics: &mut RunMetrics,
+        round: usize,
+        sim_time: f64,
+        total_client_steps: u64,
+        bits_up: u64,
+        bits_down: u64,
+        params: &[f32],
+    ) -> Result<()> {
+        let (val_loss, val_acc) = self.engine.evaluate(params, &self.val)?;
+        let (train_loss, _) = self.engine.evaluate(params, &self.train_probe)?;
+        metrics.push(EvalPoint {
+            round,
+            sim_time,
+            total_client_steps,
+            bits_up,
+            bits_down,
+            val_loss,
+            val_acc,
+            train_loss,
+        });
+        Ok(())
+    }
+}
+
+/// Extract a sub-dataset by indices (used for the train-loss probe).
+pub fn subset(data: &Dataset, idx: &[usize]) -> Dataset {
+    let mut features = Vec::with_capacity(idx.len() * data.dim);
+    let mut labels = Vec::with_capacity(idx.len());
+    for &i in idx {
+        features.extend_from_slice(data.feature_row(i));
+        labels.push(data.labels[i]);
+    }
+    Dataset { features, labels, dim: data.dim, num_classes: data.num_classes }
+}
+
+/// Analytic E[H_i]: a client is sampled every ~(swt+sit)·n/s time units in
+/// expectation; it completes steps at rate λ_i, capped at K.
+pub fn expected_steps_per_interaction(
+    cfg: &ExperimentConfig,
+    clocks: &[ClientClock],
+) -> Vec<f64> {
+    let interval =
+        (cfg.timing.swt + cfg.timing.sit) * cfg.n as f64 / cfg.s as f64;
+    clocks
+        .iter()
+        .map(|c| (c.rate() * interval).min(cfg.k as f64).max(1e-6))
+        .collect()
+}
+
+/// Build the quantizer the config asks for. For the lattice scheme γ is
+/// derived from an expected model-distance bound unless overridden:
+/// distance between server and client models is O(η·K·‖grad‖) per the
+/// potential argument; we use 2·η·K as a conservative default for the
+/// O(1)-gradient synthetic tasks.
+pub fn build_quantizer(cfg: &ExperimentConfig, dim: usize) -> Box<dyn Quantizer> {
+    match cfg.quantizer {
+        QuantizerKind::None => Box::new(IdentityQuantizer),
+        QuantizerKind::Qsgd { bits } => Box::new(QsgdQuantizer::new(bits)),
+        QuantizerKind::Lattice { bits } => {
+            let gamma = cfg.lattice_gamma.unwrap_or_else(|| {
+                // Server↔client model distance is O(η·K·‖grad‖); 4x covers
+                // the non-i.i.d. drift (calibrated in EXPERIMENTS.md §Quant).
+                let dist_bound = 4.0 * cfg.lr as f64 * cfg.k as f64;
+                lattice_gamma_for(dist_bound, bits, dim)
+            });
+            Box::new(LatticeQuantizer::new(bits, gamma))
+        }
+    }
+}
+
+/// Run the configured experiment end to end.
+pub fn run(cfg: &ExperimentConfig) -> Result<RunMetrics> {
+    run_with_artifacts(cfg, DEFAULT_ARTIFACTS_DIR)
+}
+
+pub fn run_with_artifacts(cfg: &ExperimentConfig, artifacts: &str) -> Result<RunMetrics> {
+    let mut ctx = FlRun::with_artifacts(cfg, artifacts)?;
+    match cfg.algorithm {
+        Algorithm::QuAFL => algorithms::quafl::run(&mut ctx),
+        Algorithm::FedAvg => algorithms::fedavg::run(&mut ctx),
+        Algorithm::FedBuff => algorithms::fedbuff::run(&mut ctx),
+        Algorithm::Baseline => algorithms::baseline::run(&mut ctx),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TimingConfig;
+
+    fn small_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            n: 8,
+            s: 3,
+            k: 4,
+            rounds: 4,
+            train_samples: 256,
+            val_samples: 64,
+            eval_every: 2,
+            batch: 16,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn flrun_builds() {
+        let ctx = FlRun::new(&small_cfg()).unwrap();
+        assert_eq!(ctx.shards.len(), 8);
+        assert_eq!(ctx.clocks.len(), 8);
+        assert_eq!(ctx.expected_h.len(), 8);
+        assert_eq!(ctx.train.len(), 256);
+        assert!(ctx.train_probe.len() <= 512);
+    }
+
+    #[test]
+    fn expected_h_respects_speed_and_cap() {
+        let cfg = ExperimentConfig {
+            n: 10,
+            s: 5,
+            k: 10,
+            timing: TimingConfig { slow_fraction: 0.5, ..Default::default() },
+            ..small_cfg()
+        };
+        let clocks = build_clocks(cfg.n, &cfg.timing, 1);
+        let h = expected_steps_per_interaction(&cfg, &clocks);
+        // interval = 11*10/5 = 22; fast rate .5 => 11 capped at 10;
+        // slow rate .125 => 2.75.
+        for (c, &hi) in clocks.iter().zip(&h) {
+            if c.slow {
+                assert!((hi - 2.75).abs() < 1e-9, "slow H={hi}");
+            } else {
+                assert_eq!(hi, 10.0, "fast capped at K");
+            }
+        }
+    }
+
+    #[test]
+    fn quantizer_built_matches_kind() {
+        let mut cfg = small_cfg();
+        cfg.quantizer = QuantizerKind::Lattice { bits: 10 };
+        assert_eq!(build_quantizer(&cfg, 1000).name(), "lattice");
+        cfg.quantizer = QuantizerKind::Qsgd { bits: 8 };
+        assert_eq!(build_quantizer(&cfg, 1000).name(), "qsgd");
+        cfg.quantizer = QuantizerKind::None;
+        assert_eq!(build_quantizer(&cfg, 1000).name(), "identity");
+    }
+
+    #[test]
+    fn subset_extracts_rows() {
+        let ctx = FlRun::new(&small_cfg()).unwrap();
+        let sub = subset(&ctx.train, &[3, 5]);
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.feature_row(0), ctx.train.feature_row(3));
+        assert_eq!(sub.labels[1], ctx.train.labels[5]);
+    }
+}

@@ -1,0 +1,150 @@
+//! Datasets and heterogeneous partitioning — the LEAF-benchmark substitute
+//! (DESIGN.md §3). Synthetic classification families with controllable
+//! difficulty + the paper's partitioning modes: fixed random i.i.d. split
+//! (MNIST/FMNIST/CIFAR experiments) and pure non-i.i.d. by-class split
+//! (CelebA experiments), plus a Dirichlet(α) partitioner for ablations.
+
+pub mod partition;
+pub mod synthetic;
+
+pub use partition::{partition, Partition, PartitionKind};
+pub use synthetic::{SynthSpec, SynthFamily};
+
+use crate::util::rng::Rng;
+
+/// A dense classification dataset. Features are row-major
+/// `(num_samples, dim)`; labels are class ids `< num_classes`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub features: Vec<f32>,
+    pub labels: Vec<u32>,
+    pub dim: usize,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn feature_row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Materialize a batch (x row-major, y one-hot) from sample indices.
+    pub fn gather_batch(&self, idx: &[usize]) -> Batch {
+        let mut x = Vec::with_capacity(idx.len() * self.dim);
+        let mut y = vec![0f32; idx.len() * self.num_classes];
+        for (row, &i) in idx.iter().enumerate() {
+            x.extend_from_slice(self.feature_row(i));
+            y[row * self.num_classes + self.labels[i] as usize] = 1.0;
+        }
+        Batch { x, y, batch: idx.len(), dim: self.dim, classes: self.num_classes }
+    }
+
+    /// Class histogram (used by partition tests and heterogeneity stats).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.num_classes];
+        for &l in &self.labels {
+            c[l as usize] += 1;
+        }
+        c
+    }
+}
+
+/// A materialized minibatch in the layout the engines expect.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// (batch, dim) row-major features
+    pub x: Vec<f32>,
+    /// (batch, classes) row-major one-hot labels
+    pub y: Vec<f32>,
+    pub batch: usize,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+/// A client's view of the training set: indices into the shared dataset
+/// plus an independent sampling stream (clients sample i.i.d. from their
+/// local distribution, matching the paper's stochastic-gradient model).
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub indices: Vec<usize>,
+    rng: Rng,
+}
+
+impl Shard {
+    pub fn new(indices: Vec<usize>, rng: Rng) -> Self {
+        assert!(!indices.is_empty(), "empty shard");
+        Shard { indices, rng }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Draw a batch of local sample indices with replacement.
+    pub fn sample_batch(&mut self, batch: usize) -> Vec<usize> {
+        (0..batch)
+            .map(|_| self.indices[self.rng.gen_range(self.indices.len())])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            features: (0..12).map(|v| v as f32).collect(),
+            labels: vec![0, 1, 2, 0],
+            dim: 3,
+            num_classes: 3,
+        }
+    }
+
+    #[test]
+    fn gather_batch_layout() {
+        let d = tiny();
+        let b = d.gather_batch(&[1, 3]);
+        assert_eq!(b.batch, 2);
+        assert_eq!(b.x, vec![3.0, 4.0, 5.0, 9.0, 10.0, 11.0]);
+        assert_eq!(b.y, vec![0.0, 1.0, 0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn class_counts() {
+        assert_eq!(tiny().class_counts(), vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn shard_sampling_stays_in_shard() {
+        let mut s = Shard::new(vec![2, 5, 7], Rng::new(1));
+        for _ in 0..50 {
+            for i in s.sample_batch(4) {
+                assert!([2, 5, 7].contains(&i));
+            }
+        }
+    }
+
+    #[test]
+    fn shard_sampling_covers_all_indices() {
+        let mut s = Shard::new(vec![1, 2, 3, 4], Rng::new(2));
+        let mut seen = [false; 5];
+        for _ in 0..100 {
+            for i in s.sample_batch(2) {
+                seen[i] = true;
+            }
+        }
+        assert!(seen[1] && seen[2] && seen[3] && seen[4]);
+    }
+}

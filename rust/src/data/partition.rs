@@ -1,0 +1,237 @@
+//! Client data partitioning — the data-heterogeneity axis of the paper.
+//!
+//! - `Iid`: fixed random split, each client gets a 1/n partition
+//!   (the paper's MNIST/FMNIST/CIFAR setup, Appendix A.2).
+//! - `ByClass`: samples sorted by class, carved into n contiguous shards —
+//!   each client sees a non-overlapping subset of classes (the paper's
+//!   "pure non-i.i.d." CelebA setup).
+//! - `Dirichlet(α)`: standard intermediate-heterogeneity knob; per class,
+//!   sample proportions over clients from Dir(α) (small α → concentrated).
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PartitionKind {
+    Iid,
+    ByClass,
+    Dirichlet(f64),
+}
+
+impl PartitionKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "iid" => Ok(PartitionKind::Iid),
+            "by-class" | "byclass" | "noniid" => Ok(PartitionKind::ByClass),
+            other => {
+                if let Some(rest) = other.strip_prefix("dirichlet:") {
+                    rest.parse::<f64>()
+                        .map(PartitionKind::Dirichlet)
+                        .map_err(|_| format!("bad dirichlet alpha in {other:?}"))
+                } else {
+                    Err(format!(
+                        "unknown partition {other:?} (iid | by-class | dirichlet:ALPHA)"
+                    ))
+                }
+            }
+        }
+    }
+}
+
+/// Per-client index lists into the dataset.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub shards: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    /// Fraction of label mass a client holds on its own classes vs the
+    /// global distribution — a scalar heterogeneity diagnostic in [0, 1]:
+    /// 0 for a perfectly i.i.d. split, →1 for fully class-disjoint shards.
+    pub fn heterogeneity(&self, data: &Dataset) -> f64 {
+        let global = data.class_counts();
+        let total: usize = global.len();
+        let mut acc = 0.0;
+        for shard in &self.shards {
+            let mut local = vec![0usize; total];
+            for &i in shard {
+                local[data.labels[i] as usize] += 1;
+            }
+            // total-variation distance between local and global label dist
+            let gsum: f64 = global.iter().sum::<usize>() as f64;
+            let lsum: f64 = local.iter().sum::<usize>() as f64;
+            let tv: f64 = global
+                .iter()
+                .zip(&local)
+                .map(|(&g, &l)| (g as f64 / gsum - l as f64 / lsum).abs())
+                .sum::<f64>()
+                / 2.0;
+            acc += tv;
+        }
+        acc / self.shards.len() as f64
+    }
+}
+
+/// Split `data` into `n` shards.
+pub fn partition(data: &Dataset, n: usize, kind: PartitionKind, seed: u64) -> Partition {
+    assert!(n >= 1 && data.len() >= n, "need at least one sample per client");
+    let mut rng = Rng::new(seed);
+    let shards = match kind {
+        PartitionKind::Iid => {
+            let mut idx: Vec<usize> = (0..data.len()).collect();
+            rng.shuffle(&mut idx);
+            chunk_even(&idx, n)
+        }
+        PartitionKind::ByClass => {
+            // Stable sort by class, then contiguous equal chunks: clients
+            // get non-overlapping class ranges.
+            let mut idx: Vec<usize> = (0..data.len()).collect();
+            rng.shuffle(&mut idx); // randomize within class
+            idx.sort_by_key(|&i| data.labels[i]);
+            chunk_even(&idx, n)
+        }
+        PartitionKind::Dirichlet(alpha) => {
+            assert!(alpha > 0.0, "dirichlet alpha must be positive");
+            let mut shards = vec![Vec::new(); n];
+            // Per class, distribute its samples by Dir(alpha) proportions.
+            let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); data.num_classes];
+            for i in 0..data.len() {
+                by_class[data.labels[i] as usize].push(i);
+            }
+            for samples in by_class.iter_mut() {
+                rng.shuffle(samples);
+                let props = rng.dirichlet(alpha, n);
+                // Cumulative assignment preserving counts.
+                let mut start = 0usize;
+                let total = samples.len();
+                let mut acc = 0.0;
+                for (c, &p) in props.iter().enumerate() {
+                    acc += p;
+                    let end = if c == n - 1 {
+                        total
+                    } else {
+                        (acc * total as f64).round() as usize
+                    }
+                    .min(total);
+                    shards[c].extend_from_slice(&samples[start..end]);
+                    start = end;
+                }
+            }
+            // Guarantee non-empty shards: steal one sample from the largest.
+            for c in 0..n {
+                if shards[c].is_empty() {
+                    let donor = (0..n).max_by_key(|&j| shards[j].len()).unwrap();
+                    let sample = shards[donor].pop().unwrap();
+                    shards[c].push(sample);
+                }
+            }
+            shards
+        }
+    };
+    debug_assert_eq!(shards.iter().map(Vec::len).sum::<usize>(), data.len());
+    Partition { shards }
+}
+
+fn chunk_even(idx: &[usize], n: usize) -> Vec<Vec<usize>> {
+    let len = idx.len();
+    let base = len / n;
+    let extra = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for c in 0..n {
+        let size = base + usize::from(c < extra);
+        out.push(idx[start..start + size].to_vec());
+        start += size;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SynthFamily, SynthSpec};
+
+    fn data() -> Dataset {
+        SynthSpec::family(SynthFamily::Mnist, 400, 10, 1).generate().0
+    }
+
+    fn assert_is_partition(p: &Partition, len: usize) {
+        let mut seen = vec![false; len];
+        for shard in &p.shards {
+            assert!(!shard.is_empty());
+            for &i in shard {
+                assert!(!seen[i], "sample {i} in two shards");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some samples unassigned");
+    }
+
+    #[test]
+    fn iid_is_a_partition_with_even_sizes() {
+        let d = data();
+        let p = partition(&d, 7, PartitionKind::Iid, 3);
+        assert_is_partition(&p, d.len());
+        let sizes: Vec<usize> = p.shards.iter().map(Vec::len).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn by_class_is_a_partition_with_few_classes_per_client() {
+        let d = data();
+        let n = 10;
+        let p = partition(&d, n, PartitionKind::ByClass, 3);
+        assert_is_partition(&p, d.len());
+        for shard in &p.shards {
+            let mut classes: Vec<u32> = shard.iter().map(|&i| d.labels[i]).collect();
+            classes.sort_unstable();
+            classes.dedup();
+            assert!(classes.len() <= 3, "shard spans {} classes", classes.len());
+        }
+    }
+
+    #[test]
+    fn dirichlet_is_a_partition() {
+        let d = data();
+        for &alpha in &[0.1, 1.0, 100.0] {
+            let p = partition(&d, 8, PartitionKind::Dirichlet(alpha), 5);
+            assert_is_partition(&p, d.len());
+        }
+    }
+
+    #[test]
+    fn heterogeneity_ordering() {
+        // by-class > dirichlet(0.1) > dirichlet(100) ≈ iid
+        let d = data();
+        let h_iid = partition(&d, 10, PartitionKind::Iid, 7).heterogeneity(&d);
+        let h_dir01 =
+            partition(&d, 10, PartitionKind::Dirichlet(0.1), 7).heterogeneity(&d);
+        let h_class = partition(&d, 10, PartitionKind::ByClass, 7).heterogeneity(&d);
+        assert!(h_class > h_dir01, "class={h_class} dir={h_dir01}");
+        assert!(h_dir01 > h_iid, "dir={h_dir01} iid={h_iid}");
+        assert!(h_class > 0.8, "by-class should be near 1, got {h_class}");
+        assert!(h_iid < 0.35, "iid should be small, got {h_iid}");
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(PartitionKind::parse("iid").unwrap(), PartitionKind::Iid);
+        assert_eq!(
+            PartitionKind::parse("by-class").unwrap(),
+            PartitionKind::ByClass
+        );
+        assert_eq!(
+            PartitionKind::parse("dirichlet:0.5").unwrap(),
+            PartitionKind::Dirichlet(0.5)
+        );
+        assert!(PartitionKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = data();
+        let a = partition(&d, 5, PartitionKind::Dirichlet(0.5), 11);
+        let b = partition(&d, 5, PartitionKind::Dirichlet(0.5), 11);
+        assert_eq!(a.shards, b.shards);
+    }
+}

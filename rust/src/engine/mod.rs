@@ -1,0 +1,74 @@
+//! Training engines: the compute clients run for their local SGD steps.
+//!
+//! [`XlaEngine`] executes the AOT artifacts (L2/L1 JAX+Pallas lowered to
+//! HLO) on the PJRT CPU client — the production path proving the three
+//! layers compose. [`NativeEngine`] implements the same math in pure Rust;
+//! it cross-validates the XLA path (rust/tests/engine_parity.rs), runs the
+//! large figure sweeps fast, and keeps tests artifact-free.
+//!
+//! Both implement [`TrainEngine`] over *flat* parameter vectors — the
+//! representation the FL protocol averages and quantizes.
+
+pub mod native;
+pub mod xla;
+
+pub use native::NativeEngine;
+pub use xla::XlaEngine;
+
+use crate::data::{Batch, Dataset};
+use crate::model::ModelSpec;
+
+/// Abstract SGD engine over flat parameters.
+pub trait TrainEngine {
+    fn spec(&self) -> &ModelSpec;
+
+    /// One SGD step (fwd + bwd + update) in place; returns the batch loss.
+    /// `batch.batch` must equal [`TrainEngine::train_batch`].
+    fn train_step(
+        &mut self,
+        params: &mut [f32],
+        batch: &Batch,
+        lr: f32,
+    ) -> anyhow::Result<f32>;
+
+    /// A burst of consecutive SGD steps (one per batch), in place; returns
+    /// the summed loss. Engines override this to amortize per-call
+    /// overhead (the XLA engine dispatches ONE fused K-step module —
+    /// §Perf L2); the default just loops `train_step`.
+    fn train_steps(
+        &mut self,
+        params: &mut [f32],
+        batches: &[Batch],
+        lr: f32,
+    ) -> anyhow::Result<f32> {
+        let mut loss_sum = 0.0;
+        for b in batches {
+            loss_sum += self.train_step(params, b, lr)?;
+        }
+        Ok(loss_sum)
+    }
+
+    /// Mean loss and accuracy over a dataset.
+    fn evaluate(&mut self, params: &[f32], data: &Dataset) -> anyhow::Result<(f64, f64)>;
+
+    /// Fixed train batch size (XLA artifacts are shape-specialized).
+    fn train_batch(&self) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Build the engine selected by the config. XLA needs `artifacts/`
+/// (`make artifacts`); native works anywhere.
+pub fn build_engine(
+    model: &str,
+    use_xla: bool,
+    artifacts_dir: &str,
+    batch: usize,
+) -> anyhow::Result<Box<dyn TrainEngine>> {
+    let spec = ModelSpec::by_name(model).map_err(anyhow::Error::msg)?;
+    if use_xla {
+        Ok(Box::new(XlaEngine::new(artifacts_dir, &spec)?))
+    } else {
+        Ok(Box::new(NativeEngine::new(spec, batch)))
+    }
+}

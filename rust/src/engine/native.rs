@@ -1,0 +1,351 @@
+//! Pure-Rust MLP engine — same math as python/compile/model.py
+//! (dense → relu → … → dense → mean softmax cross-entropy, plain SGD).
+//!
+//! Exists to (a) cross-validate the XLA artifact path step-for-step,
+//! (b) run large figure sweeps quickly, (c) keep unit tests hermetic.
+//! Scratch buffers are reused across steps (zero allocation in the hot
+//! loop after warmup — see EXPERIMENTS.md §Perf).
+
+use super::TrainEngine;
+use crate::data::{Batch, Dataset};
+use crate::model::ModelSpec;
+
+pub struct NativeEngine {
+    spec: ModelSpec,
+    batch: usize,
+    /// per-layer activations: acts[0] = input, acts[l+1] = output of layer l
+    acts: Vec<Vec<f32>>,
+    /// per-layer pre-activation gradients (delta), same shapes as acts[1..]
+    deltas: Vec<Vec<f32>>,
+    /// softmax probabilities buffer
+    probs: Vec<f32>,
+}
+
+impl NativeEngine {
+    pub fn new(spec: ModelSpec, batch: usize) -> Self {
+        assert!(batch >= 1);
+        let acts = std::iter::once(batch * spec.sizes[0])
+            .chain((1..spec.sizes.len()).map(|i| batch * spec.sizes[i]))
+            .map(|n| vec![0f32; n])
+            .collect();
+        let deltas = (1..spec.sizes.len())
+            .map(|i| vec![0f32; batch * spec.sizes[i]])
+            .collect();
+        let probs = vec![0f32; batch * spec.num_classes()];
+        NativeEngine { spec, batch, acts, deltas, probs }
+    }
+
+    /// logits = forward(params, x); fills self.acts. `b` = rows used.
+    fn forward(&mut self, params: &[f32], x: &[f32], b: usize) {
+        let sizes = &self.spec.sizes;
+        self.acts[0][..b * sizes[0]].copy_from_slice(&x[..b * sizes[0]]);
+        let segs = self.spec.segments();
+        let n_layers = self.spec.num_layers();
+        for l in 0..n_layers {
+            let (w_off, w_shape) = &segs[2 * l];
+            let (b_off, _) = &segs[2 * l + 1];
+            let (fan_in, fan_out) = (w_shape[0], w_shape[1]);
+            let w = &params[*w_off..*w_off + fan_in * fan_out];
+            let bias = &params[*b_off..*b_off + fan_out];
+            let (inp, out) = {
+                // split_at_mut around layer l
+                let (lo, hi) = self.acts.split_at_mut(l + 1);
+                (&lo[l], &mut hi[0])
+            };
+            // out = inp @ w + bias  (row-major, ikj loop order)
+            for r in 0..b {
+                let orow = &mut out[r * fan_out..(r + 1) * fan_out];
+                orow.copy_from_slice(bias);
+                let irow = &inp[r * fan_in..(r + 1) * fan_in];
+                for (i, &iv) in irow.iter().enumerate() {
+                    if iv == 0.0 {
+                        continue;
+                    }
+                    let wrow = &w[i * fan_out..(i + 1) * fan_out];
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += iv * wv;
+                    }
+                }
+            }
+            if l < n_layers - 1 {
+                for v in out[..b * fan_out].iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Softmax + mean xent on acts.last(); fills self.probs; returns loss.
+    fn loss_and_probs(&mut self, y: &[f32], b: usize) -> f32 {
+        let c = self.spec.num_classes();
+        let logits = self.acts.last().unwrap();
+        let mut loss = 0f64;
+        for r in 0..b {
+            let row = &logits[r * c..(r + 1) * c];
+            let yrow = &y[r * c..(r + 1) * c];
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut s = 0f64;
+            for (j, &v) in row.iter().enumerate() {
+                let e = ((v - m) as f64).exp();
+                self.probs[r * c + j] = e as f32;
+                s += e;
+            }
+            let ls = s.ln() as f32;
+            for j in 0..c {
+                self.probs[r * c + j] = (self.probs[r * c + j] as f64 / s) as f32;
+                // xent contribution: -y * logp
+                if yrow[j] != 0.0 {
+                    loss += (yrow[j] * (m + ls - row[j])) as f64;
+                }
+            }
+        }
+        (loss / b as f64) as f32
+    }
+
+    /// Backward + SGD update. Requires forward + loss_and_probs done.
+    fn backward_update(&mut self, params: &mut [f32], y: &[f32], lr: f32, b: usize) {
+        let segs = self.spec.segments();
+        let n_layers = self.spec.num_layers();
+        let c = self.spec.num_classes();
+        // delta_last = (probs - y)/b
+        {
+            let d = &mut self.deltas[n_layers - 1];
+            let inv_b = 1.0 / b as f32;
+            for i in 0..b * c {
+                d[i] = (self.probs[i] - y[i]) * inv_b;
+            }
+        }
+        // Walk layers backwards.
+        for l in (0..n_layers).rev() {
+            let (w_off, w_shape) = segs[2 * l].clone();
+            let (b_off, _) = segs[2 * l + 1].clone();
+            let (fan_in, fan_out) = (w_shape[0], w_shape[1]);
+            // delta for previous layer (before relu mask): d_prev = d @ W^T
+            if l > 0 {
+                let (dprev, d) = {
+                    let (lo, hi) = self.deltas.split_at_mut(l);
+                    (&mut lo[l - 1], &hi[0])
+                };
+                let w = &params[w_off..w_off + fan_in * fan_out];
+                let prev_act = &self.acts[l];
+                for r in 0..b {
+                    let drow = &d[r * fan_out..(r + 1) * fan_out];
+                    let prow = &mut dprev[r * fan_in..(r + 1) * fan_in];
+                    for (i, pv) in prow.iter_mut().enumerate() {
+                        // relu mask: gradient flows only where act > 0
+                        if prev_act[r * fan_in + i] <= 0.0 {
+                            *pv = 0.0;
+                            continue;
+                        }
+                        let wrow = &w[i * fan_out..(i + 1) * fan_out];
+                        let mut acc = 0f32;
+                        for (dv, wv) in drow.iter().zip(wrow) {
+                            acc += dv * wv;
+                        }
+                        *pv = acc;
+                    }
+                }
+            }
+            // SGD update: W -= lr * A^T d ; bias -= lr * sum_rows(d)
+            let d = &self.deltas[l];
+            let a = &self.acts[l];
+            let w = &mut params[w_off..w_off + fan_in * fan_out];
+            for r in 0..b {
+                let arow = &a[r * fan_in..(r + 1) * fan_in];
+                let drow = &d[r * fan_out..(r + 1) * fan_out];
+                for (i, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let scale = lr * av;
+                    let wrow = &mut w[i * fan_out..(i + 1) * fan_out];
+                    for (wv, &dv) in wrow.iter_mut().zip(drow) {
+                        *wv -= scale * dv;
+                    }
+                }
+            }
+            let bias = &mut params[b_off..b_off + fan_out];
+            for r in 0..b {
+                let drow = &d[r * fan_out..(r + 1) * fan_out];
+                for (bv, &dv) in bias.iter_mut().zip(drow) {
+                    *bv -= lr * dv;
+                }
+            }
+        }
+    }
+}
+
+impl TrainEngine for NativeEngine {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn train_step(
+        &mut self,
+        params: &mut [f32],
+        batch: &Batch,
+        lr: f32,
+    ) -> anyhow::Result<f32> {
+        anyhow::ensure!(
+            batch.batch == self.batch,
+            "native engine built for batch {}, got {}",
+            self.batch,
+            batch.batch
+        );
+        anyhow::ensure!(params.len() == self.spec.num_params());
+        let b = batch.batch;
+        self.forward(params, &batch.x, b);
+        let loss = self.loss_and_probs(&batch.y, b);
+        self.backward_update(params, &batch.y, lr, b);
+        Ok(loss)
+    }
+
+    fn evaluate(&mut self, params: &[f32], data: &Dataset) -> anyhow::Result<(f64, f64)> {
+        anyhow::ensure!(!data.is_empty());
+        let c = self.spec.num_classes();
+        let mut loss_sum = 0f64;
+        let mut correct = 0usize;
+        let chunk = self.batch;
+        let mut i = 0;
+        while i < data.len() {
+            let hi = (i + chunk).min(data.len());
+            let idx: Vec<usize> = (i..hi).collect();
+            let batch = data.gather_batch(&idx);
+            let b = batch.batch;
+            self.forward(params, &batch.x, b);
+            loss_sum += self.loss_and_probs(&batch.y, b) as f64 * b as f64;
+            let logits = self.acts.last().unwrap();
+            for r in 0..b {
+                let row = &logits[r * c..(r + 1) * c];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred as u32 == data.labels[i + r] {
+                    correct += 1;
+                }
+            }
+            i = hi;
+        }
+        Ok((loss_sum / data.len() as f64, correct as f64 / data.len() as f64))
+    }
+
+    fn train_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SynthFamily, SynthSpec};
+
+    fn setup() -> (NativeEngine, Vec<f32>, crate::data::Dataset) {
+        let spec = ModelSpec::by_name("mlp").unwrap();
+        let params = spec.init_params(7);
+        let engine = NativeEngine::new(spec, 32);
+        let (train, _) = SynthSpec::family(SynthFamily::Mnist, 256, 64, 3).generate();
+        (engine, params, train)
+    }
+
+    #[test]
+    fn loss_starts_near_log_c() {
+        let (mut e, params, data) = setup();
+        let (loss, acc) = e.evaluate(&params, &data).unwrap();
+        // He-uniform init gives logits of O(1) std, so the initial loss
+        // sits near (but above) ln(10) ≈ 2.30.
+        assert!(loss > 1.8 && loss < 4.5, "loss={loss}");
+        assert!(acc < 0.35, "random init should be near chance, acc={acc}");
+    }
+
+    #[test]
+    fn sgd_reduces_loss_and_improves_accuracy() {
+        let (mut e, mut params, data) = setup();
+        let (loss0, _) = e.evaluate(&params, &data).unwrap();
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..60 {
+            let idx: Vec<usize> = (0..32).map(|_| rng.gen_range(data.len())).collect();
+            let batch = data.gather_batch(&idx);
+            e.train_step(&mut params, &batch, 0.1).unwrap();
+        }
+        let (loss1, acc1) = e.evaluate(&params, &data).unwrap();
+        assert!(loss1 < loss0 * 0.7, "loss {loss0} -> {loss1}");
+        assert!(acc1 > 0.5, "acc after training = {acc1}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        // Spot-check d loss/d param via central differences on a tiny model.
+        let spec = ModelSpec::new("tiny", vec![6, 4, 3]);
+        let mut params = spec.init_params(11);
+        let (data, _) = SynthSpec {
+            dim: 6,
+            classes: 3,
+            train: 8,
+            val: 1,
+            margin: 1.0,
+            noise: 0.5,
+            style_rank: 1,
+            style_scale: 0.1,
+            label_noise: 0.0,
+            seed: 2,
+        }
+        .generate();
+        let idx: Vec<usize> = (0..8).collect();
+        let batch = data.gather_batch(&idx);
+        let mut engine = NativeEngine::new(spec.clone(), 8);
+        // Analytic gradient = (params - params_after)/lr with tiny lr.
+        let lr = 1e-3f32;
+        let mut stepped = params.clone();
+        engine.train_step(&mut stepped, &batch, lr).unwrap();
+        let eval_loss = |p: &[f32], engine: &mut NativeEngine| -> f64 {
+            engine.forward(p, &batch.x, 8);
+            engine.loss_and_probs(&batch.y, 8) as f64
+        };
+        let eps = 1e-2f32;
+        for &pi in &[0usize, 5, 24, 27, 30, params.len() - 1] {
+            let analytic = (params[pi] - stepped[pi]) / lr;
+            let orig = params[pi];
+            params[pi] = orig + eps;
+            let lp = eval_loss(&params, &mut engine);
+            params[pi] = orig - eps;
+            let lm = eval_loss(&params, &mut engine);
+            params[pi] = orig;
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (analytic - numeric).abs() < 2e-2 + 0.05 * numeric.abs(),
+                "param {pi}: analytic {analytic} vs numeric {numeric}"
+            );
+        }
+    }
+
+    #[test]
+    fn train_step_rejects_wrong_batch() {
+        let (mut e, mut params, data) = setup();
+        let idx: Vec<usize> = (0..16).collect();
+        let batch = data.gather_batch(&idx);
+        assert!(e.train_step(&mut params, &batch, 0.1).is_err());
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let (mut e1, mut p1, data) = setup();
+        let spec = ModelSpec::by_name("mlp").unwrap();
+        let mut e2 = NativeEngine::new(spec, 32);
+        let mut p2 = p1.clone();
+        let idx: Vec<usize> = (0..32).collect();
+        let batch = data.gather_batch(&idx);
+        let l1 = e1.train_step(&mut p1, &batch, 0.05).unwrap();
+        let l2 = e2.train_step(&mut p2, &batch, 0.05).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(p1, p2);
+    }
+}

@@ -1,0 +1,502 @@
+//! Figure harness: regenerates every figure in the paper's evaluation
+//! (body Figures 1–6, appendix Figures 7–16) as CSV series with the same
+//! axes the paper plots. DESIGN.md §5 is the authoritative index.
+//!
+//! Datasets are the synthetic LEAF substitutes (DESIGN.md §3); the claim
+//! being reproduced is the *shape* of each comparison (orderings,
+//! crossovers, robustness), not absolute accuracies.
+//!
+//! Default scale is reduced so `quafl figures` completes on a laptop core
+//! in minutes; `--paper-scale` restores the paper's n/s/rounds.
+
+use anyhow::{Context, Result};
+
+use crate::config::{
+    Algorithm, AveragingMode, ExperimentConfig, QuantizerKind,
+};
+use crate::coordinator;
+use crate::data::{PartitionKind, SynthFamily};
+use crate::metrics::RunMetrics;
+use crate::util::csv::CsvWriter;
+
+/// One experimental arm of a figure.
+pub struct Arm {
+    pub label: String,
+    pub cfg: ExperimentConfig,
+}
+
+pub fn list() -> Vec<&'static str> {
+    vec![
+        "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
+        "fig9", "fig10", "fig11", "fig13", "fig15", "fig16",
+    ]
+}
+
+/// Run a figure by id, writing one CSV per arm plus a summary row file.
+pub fn run_figure(id: &str, out_dir: &str, paper_scale: bool) -> Result<()> {
+    let arms = arms_for(id, paper_scale)
+        .with_context(|| format!("unknown figure {id:?} (known: {:?})", list()))?;
+    std::fs::create_dir_all(out_dir)?;
+    let mut summary = CsvWriter::create(
+        format!("{out_dir}/{id}_summary.csv"),
+        &[
+            "arm", "final_acc", "final_val_loss", "final_train_loss",
+            "sim_time", "total_bits", "p_zero_progress", "mean_h",
+            "time_to_acc50",
+        ],
+    )?;
+    for arm in arms {
+        let t0 = std::time::Instant::now();
+        let metrics = coordinator::run(&arm.cfg)
+            .with_context(|| format!("{id} arm {}", arm.label))?;
+        let path = format!("{out_dir}/{id}_{}.csv", arm.label);
+        metrics.write_csv(&path)?;
+        summary.row_strs(&[
+            arm.label.clone(),
+            format!("{:.4}", metrics.final_acc()),
+            format!("{:.4}", metrics.final_loss()),
+            format!(
+                "{:.4}",
+                metrics.points.last().map(|p| p.train_loss).unwrap_or(f64::NAN)
+            ),
+            format!(
+                "{:.1}",
+                metrics.points.last().map(|p| p.sim_time).unwrap_or(0.0)
+            ),
+            format!("{}", metrics.total_bits()),
+            format!("{:.3}", metrics.zero_progress_fraction()),
+            format!("{:.2}", metrics.mean_observed_steps()),
+            metrics
+                .time_to_accuracy(0.5)
+                .map(|t| format!("{t:.1}"))
+                .unwrap_or_else(|| "never".into()),
+        ])?;
+        eprintln!(
+            "[figures] {id}/{}: acc={:.3} ({}s)",
+            arm.label,
+            metrics.final_acc(),
+            t0.elapsed().as_secs()
+        );
+    }
+    summary.flush()?;
+    Ok(())
+}
+
+/// Convenience for tests and the summary table in EXPERIMENTS.md.
+pub fn run_arms(arms: Vec<Arm>) -> Result<Vec<(String, RunMetrics)>> {
+    arms.into_iter()
+        .map(|a| coordinator::run(&a.cfg).map(|m| (a.label, m)))
+        .collect()
+}
+
+fn scale(paper: bool, small: usize, full: usize) -> usize {
+    if paper {
+        full
+    } else {
+        small
+    }
+}
+
+/// Base config shared by the figure experiments.
+fn base(paper: bool) -> ExperimentConfig {
+    ExperimentConfig {
+        rounds: scale(paper, 60, 300),
+        train_samples: scale(paper, 4000, 20_000),
+        val_samples: 1024,
+        eval_every: scale(paper, 10, 20),
+        ..Default::default()
+    }
+}
+
+pub fn arms_for(id: &str, paper: bool) -> Option<Vec<Arm>> {
+    let b = base(paper);
+    let arms = match id {
+        // Fig 1: peers s ∈ {10,20,30,40}, n=100, 14-bit, non-iid, 30% slow.
+        "fig1" => {
+            let n = scale(paper, 40, 100);
+            [1usize, 2, 3, 4]
+                .iter()
+                .map(|&m| {
+                    let s = scale(paper, 4, 10) * m;
+                    Arm {
+                        label: format!("s{s}"),
+                        cfg: ExperimentConfig {
+                            algorithm: Algorithm::QuAFL,
+                            n,
+                            s,
+                            family: SynthFamily::Celeb,
+                            partition: PartitionKind::ByClass,
+                            quantizer: QuantizerKind::Lattice { bits: 14 },
+                            timing: crate::config::TimingConfig {
+                                slow_fraction: 0.3,
+                                ..Default::default()
+                            },
+                            // non-iid needs a longer horizon for the s
+                            // ordering to separate from noise
+                            rounds: b.rounds * 3,
+                            eval_every: b.eval_every * 3,
+                            ..b.clone()
+                        },
+                    }
+                })
+                .collect()
+        }
+        // Fig 2: bits b ∈ {8,10,12,32}, n=40, s=5, iid mnist.
+        "fig2" => [8u8, 10, 12, 32]
+            .iter()
+            .map(|&bits| Arm {
+                label: format!("b{bits}"),
+                cfg: ExperimentConfig {
+                    algorithm: Algorithm::QuAFL,
+                    n: scale(paper, 20, 40),
+                    s: 5,
+                    quantizer: if bits == 32 {
+                        QuantizerKind::None
+                    } else {
+                        QuantizerKind::Lattice { bits }
+                    },
+                    ..b.clone()
+                },
+            })
+            .collect(),
+        // Fig 3: QuAFL (weighted + unweighted) vs FedAvg vs baseline, in
+        // simulated time, hard family, 25% slow.
+        "fig3" => {
+            let mk = |label: &str, algo: Algorithm, weighted: bool| Arm {
+                label: label.into(),
+                cfg: ExperimentConfig {
+                    algorithm: algo,
+                    weighted,
+                    family: SynthFamily::Hard,
+                    n: 20,
+                    s: 5,
+                    quantizer: QuantizerKind::Lattice { bits: 12 },
+                    ..b.clone()
+                },
+            };
+            vec![
+                mk("quafl_weighted", Algorithm::QuAFL, true),
+                mk("quafl", Algorithm::QuAFL, false),
+                Arm {
+                    label: "fedavg".into(),
+                    cfg: ExperimentConfig {
+                        algorithm: Algorithm::FedAvg,
+                        family: SynthFamily::Hard,
+                        n: 20,
+                        s: 5,
+                        quantizer: QuantizerKind::None,
+                        ..b.clone()
+                    },
+                },
+                Arm {
+                    label: "baseline".into(),
+                    cfg: ExperimentConfig {
+                        algorithm: Algorithm::Baseline,
+                        family: SynthFamily::Hard,
+                        n: 20,
+                        s: 5,
+                        rounds: b.rounds * 10,
+                        eval_every: b.eval_every * 10,
+                        ..b.clone()
+                    },
+                },
+            ]
+        }
+        // Fig 4: averaging variants on non-iid celeb.
+        "fig4" => [
+            ("both", AveragingMode::Both),
+            ("server_only", AveragingMode::ServerOnly),
+            ("client_only", AveragingMode::ClientOnly),
+        ]
+        .iter()
+        .map(|(label, mode)| Arm {
+            label: label.to_string(),
+            cfg: ExperimentConfig {
+                algorithm: Algorithm::QuAFL,
+                averaging: *mode,
+                n: scale(paper, 40, 100),
+                s: scale(paper, 8, 10),
+                family: SynthFamily::Celeb,
+                partition: PartitionKind::ByClass,
+                quantizer: QuantizerKind::Lattice { bits: 14 },
+                ..b.clone()
+            },
+        })
+        .collect(),
+        // Fig 5: lattice vs QSGD inside QuAFL, mnist.
+        "fig5" => vec![
+            Arm {
+                label: "lattice".into(),
+                cfg: ExperimentConfig {
+                    quantizer: QuantizerKind::Lattice { bits: 10 },
+                    ..b.clone()
+                },
+            },
+            Arm {
+                label: "qsgd".into(),
+                cfg: ExperimentConfig {
+                    quantizer: QuantizerKind::Qsgd { bits: 10 },
+                    // QSGD on raw models needs a gentler lr to stay stable
+                    // (the paper: "we had to perform careful tuning").
+                    lr: 0.05,
+                    ..b.clone()
+                },
+            },
+        ],
+        // Fig 6: QuAFL ± quantization vs FedBuff ± QSGD, sim time.
+        "fig6" => vec![
+            Arm {
+                label: "quafl_lattice14".into(),
+                cfg: ExperimentConfig {
+                    quantizer: QuantizerKind::Lattice { bits: 14 },
+                    family: SynthFamily::Hard,
+                    ..b.clone()
+                },
+            },
+            Arm {
+                label: "quafl_fp32".into(),
+                cfg: ExperimentConfig {
+                    quantizer: QuantizerKind::None,
+                    family: SynthFamily::Hard,
+                    ..b.clone()
+                },
+            },
+            Arm {
+                label: "fedbuff_fp32".into(),
+                cfg: ExperimentConfig {
+                    algorithm: Algorithm::FedBuff,
+                    quantizer: QuantizerKind::None,
+                    family: SynthFamily::Hard,
+                    ..b.clone()
+                },
+            },
+            Arm {
+                label: "fedbuff_qsgd14".into(),
+                cfg: ExperimentConfig {
+                    algorithm: Algorithm::FedBuff,
+                    quantizer: QuantizerKind::Qsgd { bits: 14 },
+                    family: SynthFamily::Hard,
+                    ..b.clone()
+                },
+            },
+        ],
+        // Fig 7: K ∈ {5,10,20} (paper: FMNIST → hard family).
+        "fig7" => [5usize, 10, 20]
+            .iter()
+            .map(|&k| Arm {
+                label: format!("K{k}"),
+                cfg: ExperimentConfig {
+                    k,
+                    family: SynthFamily::Hard,
+                    ..b.clone()
+                },
+            })
+            .collect(),
+        // Fig 8: s ∈ {4,8,16}.
+        "fig8" => [4usize, 8, 16]
+            .iter()
+            .map(|&s| Arm {
+                label: format!("s{s}"),
+                cfg: ExperimentConfig {
+                    s,
+                    n: 20.max(s),
+                    family: SynthFamily::Hard,
+                    ..b.clone()
+                },
+            })
+            .collect(),
+        // Fig 9: server waiting time sweep.
+        "fig9" => [2.0f64, 10.0, 30.0]
+            .iter()
+            .map(|&swt| Arm {
+                label: format!("swt{}", swt as i64),
+                cfg: ExperimentConfig {
+                    timing: crate::config::TimingConfig {
+                        swt,
+                        ..Default::default()
+                    },
+                    family: SynthFamily::Hard,
+                    ..b.clone()
+                },
+            })
+            .collect(),
+        // Fig 10: rounds-axis comparison baseline vs FedAvg vs QuAFL.
+        "fig10" => vec![
+            Arm {
+                label: "baseline".into(),
+                cfg: ExperimentConfig {
+                    algorithm: Algorithm::Baseline,
+                    family: SynthFamily::Hard,
+                    ..b.clone()
+                },
+            },
+            Arm {
+                label: "fedavg".into(),
+                cfg: ExperimentConfig {
+                    algorithm: Algorithm::FedAvg,
+                    quantizer: QuantizerKind::None,
+                    family: SynthFamily::Hard,
+                    ..b.clone()
+                },
+            },
+            Arm {
+                label: "quafl".into(),
+                cfg: ExperimentConfig {
+                    family: SynthFamily::Hard,
+                    ..b.clone()
+                },
+            },
+        ],
+        // Fig 11/12: time vs acc & loss across algorithm variants (the CSV
+        // carries both columns, so one run covers both panels).
+        "fig11" | "fig12" => vec![
+            Arm {
+                label: "quafl_lattice".into(),
+                cfg: ExperimentConfig {
+                    family: SynthFamily::Hard,
+                    quantizer: QuantizerKind::Lattice { bits: 10 },
+                    ..b.clone()
+                },
+            },
+            Arm {
+                label: "quafl_fp32".into(),
+                cfg: ExperimentConfig {
+                    family: SynthFamily::Hard,
+                    quantizer: QuantizerKind::None,
+                    ..b.clone()
+                },
+            },
+            Arm {
+                label: "fedavg".into(),
+                cfg: ExperimentConfig {
+                    algorithm: Algorithm::FedAvg,
+                    family: SynthFamily::Hard,
+                    quantizer: QuantizerKind::None,
+                    ..b.clone()
+                },
+            },
+            Arm {
+                label: "baseline".into(),
+                cfg: ExperimentConfig {
+                    algorithm: Algorithm::Baseline,
+                    family: SynthFamily::Hard,
+                    rounds: b.rounds * 10,
+                    eval_every: b.eval_every * 10,
+                    ..b.clone()
+                },
+            },
+        ],
+        // Fig 13/14: large fleet (paper n=300, s=30).
+        "fig13" | "fig14" => vec![Arm {
+            label: "n300".into(),
+            cfg: ExperimentConfig {
+                n: scale(paper, 60, 300),
+                s: scale(paper, 6, 30),
+                family: SynthFamily::Hard,
+                train_samples: scale(paper, 6000, 30_000),
+                quantizer: QuantizerKind::Lattice { bits: 10 },
+                ..b.clone()
+            },
+        }],
+        // Fig 15: full convergence, n=20, s=5 — all methods to plateau.
+        "fig15" => {
+            let rounds = scale(paper, 150, 1000);
+            vec![
+                Arm {
+                    label: "quafl".into(),
+                    cfg: ExperimentConfig { rounds, ..b.clone() },
+                },
+                Arm {
+                    label: "fedavg".into(),
+                    cfg: ExperimentConfig {
+                        algorithm: Algorithm::FedAvg,
+                        quantizer: QuantizerKind::None,
+                        rounds,
+                        ..b.clone()
+                    },
+                },
+                Arm {
+                    label: "baseline".into(),
+                    cfg: ExperimentConfig {
+                        algorithm: Algorithm::Baseline,
+                        rounds: rounds * 10,
+                        eval_every: b.eval_every * 10,
+                        ..b.clone()
+                    },
+                },
+            ]
+        }
+        // Fig 16: FedBuff+QSGD vs QuAFL+lattice at equal bit width.
+        "fig16" => vec![
+            Arm {
+                label: "quafl_lattice10".into(),
+                cfg: ExperimentConfig {
+                    quantizer: QuantizerKind::Lattice { bits: 10 },
+                    partition: PartitionKind::ByClass,
+                    family: SynthFamily::Celeb,
+                    ..b.clone()
+                },
+            },
+            Arm {
+                label: "fedbuff_qsgd10".into(),
+                cfg: ExperimentConfig {
+                    algorithm: Algorithm::FedBuff,
+                    quantizer: QuantizerKind::Qsgd { bits: 10 },
+                    partition: PartitionKind::ByClass,
+                    family: SynthFamily::Celeb,
+                    ..b.clone()
+                },
+            },
+        ],
+        _ => return None,
+    };
+    Some(arms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_listed_figure_has_arms_and_valid_configs() {
+        for id in list() {
+            for paper in [false, true] {
+                let arms = arms_for(id, paper).unwrap_or_else(|| {
+                    panic!("figure {id} has no arms");
+                });
+                assert!(!arms.is_empty());
+                for arm in arms {
+                    arm.cfg
+                        .validate()
+                        .unwrap_or_else(|e| panic!("{id}/{}: {e}", arm.label));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_figure_is_none() {
+        assert!(arms_for("fig99", false).is_none());
+    }
+
+    #[test]
+    fn fig1_sweeps_s_with_fixed_n() {
+        let arms = arms_for("fig1", false).unwrap();
+        let ss: Vec<usize> = arms.iter().map(|a| a.cfg.s).collect();
+        assert_eq!(ss, vec![4, 8, 12, 16]);
+        assert!(arms.iter().all(|a| a.cfg.partition == PartitionKind::ByClass));
+    }
+
+    #[test]
+    fn fig2_includes_fp32_arm() {
+        let arms = arms_for("fig2", false).unwrap();
+        assert!(arms.iter().any(|a| a.cfg.quantizer == QuantizerKind::None));
+    }
+
+    #[test]
+    fn fig16_same_bit_width_across_algorithms() {
+        let arms = arms_for("fig16", false).unwrap();
+        assert_eq!(arms[0].cfg.quantizer.bits(), arms[1].cfg.quantizer.bits());
+        assert_eq!(arms[1].cfg.algorithm, Algorithm::FedBuff);
+    }
+}

@@ -1,0 +1,36 @@
+//! # QuAFL — Quantized Asynchronous Federated Learning
+//!
+//! Rust + JAX + Pallas reproduction of *"Communication-Efficient Federated
+//! Learning With Data and Client Heterogeneity"* (Zakerinia, Talaei,
+//! Nadiradze, Alistarh — ISTA, 2022).
+//!
+//! Layer map (see DESIGN.md):
+//!
+//! - **L3 (this crate)** — the paper's system contribution: the QuAFL
+//!   server/client protocol ([`algorithms::quafl`]), its baselines
+//!   (FedAvg, FedBuff, sequential SGD), the lattice/QSGD quantizers
+//!   ([`quant`]), the discrete-event timing simulation ([`sim`]), dataset
+//!   synthesis + heterogeneous partitioning ([`data`]), and the experiment
+//!   coordinator + figure harness ([`coordinator`], [`figures`]).
+//! - **L2/L1 (build-time Python)** — the client model's fwd/bwd/update as
+//!   JAX functions over Pallas kernels, AOT-lowered once to
+//!   `artifacts/*.hlo.txt`; [`runtime`] loads and [`engine::XlaEngine`]
+//!   executes them via PJRT. Python is never on the simulation path.
+//!
+//! The crate is fully self-contained after `make artifacts`.
+
+pub mod algorithms;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod figures;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod util;
+
+pub use config::ExperimentConfig;

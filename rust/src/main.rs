@@ -1,0 +1,159 @@
+//! `quafl` CLI — the launcher.
+//!
+//! Subcommands:
+//!   run      — run one experiment (algorithm × data × quantizer × timing)
+//!   figures  — regenerate the paper's figures as CSV series
+//!   info     — print artifact/platform/runtime information
+//!
+//! Examples:
+//!   quafl run --algorithm quafl --n 100 --s 10 --quantizer lattice:14 \
+//!             --partition by-class --rounds 200 --out results/run.csv
+//!   quafl figures --out-dir results [--paper-scale] [fig1 fig2 ...]
+//!   quafl info
+
+use quafl::config::ExperimentConfig;
+use quafl::coordinator;
+use quafl::figures;
+use quafl::util::cli;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::parse(&argv);
+    let code = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("info") => cmd_info(),
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}");
+            usage();
+            2
+        }
+        None => {
+            usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    eprintln!(
+        "usage: quafl <run|figures|info> [options]\n\
+         \n\
+         run options (defaults in parentheses):\n\
+         \x20 --algorithm quafl|fedavg|fedbuff|baseline (quafl)\n\
+         \x20 --n INT clients (20)        --s INT sampled/round (5)\n\
+         \x20 --k INT max local steps (10) --lr FLOAT (0.1)\n\
+         \x20 --rounds INT (100)          --model mlp|mlp_wide|mlp_deep\n\
+         \x20 --family mnist|hard|celeb   --partition iid|by-class|dirichlet:A\n\
+         \x20 --quantizer none|lattice:B|qsgd:B (lattice:10)\n\
+         \x20 --averaging both|server-only|client-only\n\
+         \x20 --weighted                  --swt/--sit FLOAT\n\
+         \x20 --slow-fraction FLOAT (0.25) --batch INT (32)\n\
+         \x20 --seed INT --xla --gamma FLOAT --out FILE.csv\n\
+         \n\
+         figures options: --out-dir DIR (results) --paper-scale [ids...]\n"
+    );
+}
+
+fn cmd_run(args: &cli::Args) -> i32 {
+    if let Err(e) = args.check_known(ExperimentConfig::CLI_KEYS) {
+        eprintln!("{e}");
+        return 2;
+    }
+    let cfg = match ExperimentConfig::from_args(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    eprintln!(
+        "[quafl] {} n={} s={} K={} rounds={} model={} quant={:?} part={:?} engine={}",
+        cfg.algorithm.name(),
+        cfg.n,
+        cfg.s,
+        cfg.k,
+        cfg.rounds,
+        cfg.model,
+        cfg.quantizer,
+        cfg.partition,
+        if cfg.use_xla { "xla" } else { "native" },
+    );
+    let t0 = std::time::Instant::now();
+    match coordinator::run(&cfg) {
+        Ok(metrics) => {
+            for p in &metrics.points {
+                println!(
+                    "round={:<6} time={:<10.1} steps={:<8} val_loss={:.4} val_acc={:.4} train_loss={:.4}",
+                    p.round, p.sim_time, p.total_client_steps, p.val_loss,
+                    p.val_acc, p.train_loss
+                );
+            }
+            println!(
+                "final: acc={:.4} loss={:.4} bits_total={} P[H=0]={:.3} meanH={:.2} wall={:.1}s",
+                metrics.final_acc(),
+                metrics.final_loss(),
+                metrics.total_bits(),
+                metrics.zero_progress_fraction(),
+                metrics.mean_observed_steps(),
+                t0.elapsed().as_secs_f64()
+            );
+            if let Some(out) = args.get("out") {
+                if let Err(e) = metrics.write_csv(out) {
+                    eprintln!("writing {out}: {e}");
+                    return 1;
+                }
+                eprintln!("[quafl] wrote {out}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("run failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_figures(args: &cli::Args) -> i32 {
+    let out_dir = args.get_str("out-dir", "results");
+    let paper = args.flag("paper-scale");
+    let ids: Vec<String> = if args.positional.is_empty() {
+        figures::list().iter().map(|s| s.to_string()).collect()
+    } else {
+        args.positional.clone()
+    };
+    for id in &ids {
+        eprintln!("[figures] {id} ...");
+        if let Err(e) = figures::run_figure(id, &out_dir, paper) {
+            eprintln!("figure {id} failed: {e:#}");
+            return 1;
+        }
+    }
+    0
+}
+
+fn cmd_info() -> i32 {
+    println!("quafl {} — QuAFL reproduction", env!("CARGO_PKG_VERSION"));
+    match quafl::runtime::Runtime::new(coordinator::DEFAULT_ARTIFACTS_DIR) {
+        Ok(rt) => {
+            println!("pjrt platform: {}", rt.platform());
+            println!(
+                "artifacts: train_batch={} eval_batch={}",
+                rt.meta.train_batch, rt.meta.eval_batch
+            );
+            for (name, m) in &rt.meta.models {
+                println!(
+                    "  model {name}: sizes={:?} d={} files=({}, {})",
+                    m.sizes, m.num_params, m.train_step_file, m.eval_file
+                );
+            }
+            0
+        }
+        Err(e) => {
+            println!("artifacts not available: {e:#}");
+            println!("run `make artifacts` first; native engine still works.");
+            0
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Metrics: the series every figure plots — validation loss/accuracy (and
+//! train loss) against simulated time, server rounds, total client steps,
+//! and cumulative communication bits.
+
+use crate::util::csv::CsvWriter;
+
+/// One evaluation point.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalPoint {
+    pub round: usize,
+    pub sim_time: f64,
+    pub total_client_steps: u64,
+    pub bits_up: u64,
+    pub bits_down: u64,
+    pub val_loss: f64,
+    pub val_acc: f64,
+    /// loss on a fixed training subsample (the paper's train-loss curves)
+    pub train_loss: f64,
+}
+
+/// Full run record.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub label: String,
+    pub points: Vec<EvalPoint>,
+    /// count of sampled interactions where the client had zero progress
+    pub zero_progress_interactions: u64,
+    pub total_interactions: u64,
+    /// mean observed local steps per interaction (H empirical)
+    pub sum_observed_steps: u64,
+    /// per-round potential Φ_t = ‖X_t − μ_t‖² + Σᵢ‖Xⁱ − μ_t‖² (paper
+    /// Lemma 3.4) — populated only when `ExperimentConfig::track_potential`
+    pub potential: Vec<f64>,
+}
+
+impl RunMetrics {
+    pub fn new(label: &str) -> Self {
+        RunMetrics { label: label.to_string(), ..Default::default() }
+    }
+
+    pub fn push(&mut self, p: EvalPoint) {
+        self.points.push(p);
+    }
+
+    pub fn final_acc(&self) -> f64 {
+        self.points.last().map(|p| p.val_acc).unwrap_or(0.0)
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.points.last().map(|p| p.val_loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.points
+            .last()
+            .map(|p| p.bits_up + p.bits_down)
+            .unwrap_or(0)
+    }
+
+    /// Empirical P[H_i = 0] over interactions (paper reports 27% for slow
+    /// clients in the Figure 1 setup).
+    pub fn zero_progress_fraction(&self) -> f64 {
+        if self.total_interactions == 0 {
+            return 0.0;
+        }
+        self.zero_progress_interactions as f64 / self.total_interactions as f64
+    }
+
+    /// Mean observed steps per interaction (empirical H).
+    pub fn mean_observed_steps(&self) -> f64 {
+        if self.total_interactions == 0 {
+            return 0.0;
+        }
+        self.sum_observed_steps as f64 / self.total_interactions as f64
+    }
+
+    /// First simulated time at which validation accuracy reached `target`,
+    /// if ever — the "time-to-accuracy" headline metric.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.val_acc >= target)
+            .map(|p| p.sim_time)
+    }
+
+    pub const CSV_HEADER: &'static [&'static str] = &[
+        "round",
+        "sim_time",
+        "client_steps",
+        "bits_up",
+        "bits_down",
+        "val_loss",
+        "val_acc",
+        "train_loss",
+    ];
+
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(path, Self::CSV_HEADER)?;
+        for p in &self.points {
+            w.row(&[
+                p.round as f64,
+                p.sim_time,
+                p.total_client_steps as f64,
+                p.bits_up as f64,
+                p.bits_down as f64,
+                p.val_loss,
+                p.val_acc,
+                p.train_loss,
+            ])?;
+        }
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(round: usize, t: f64, acc: f64) -> EvalPoint {
+        EvalPoint {
+            round,
+            sim_time: t,
+            total_client_steps: round as u64 * 10,
+            bits_up: 100,
+            bits_down: 100,
+            val_loss: 1.0 - acc,
+            val_acc: acc,
+            train_loss: 1.0 - acc,
+        }
+    }
+
+    #[test]
+    fn time_to_accuracy() {
+        let mut m = RunMetrics::new("x");
+        m.push(pt(0, 0.0, 0.1));
+        m.push(pt(10, 5.0, 0.5));
+        m.push(pt(20, 9.0, 0.8));
+        assert_eq!(m.time_to_accuracy(0.5), Some(5.0));
+        assert_eq!(m.time_to_accuracy(0.9), None);
+        assert_eq!(m.final_acc(), 0.8);
+    }
+
+    #[test]
+    fn zero_progress_fraction() {
+        let mut m = RunMetrics::new("x");
+        m.total_interactions = 100;
+        m.zero_progress_interactions = 27;
+        m.sum_observed_steps = 410;
+        assert!((m.zero_progress_fraction() - 0.27).abs() < 1e-12);
+        assert!((m.mean_observed_steps() - 4.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut m = RunMetrics::new("x");
+        m.push(pt(0, 0.0, 0.1));
+        m.push(pt(5, 2.0, 0.2));
+        let dir = std::env::temp_dir().join("quafl_metrics_test");
+        let path = dir.join("m.csv");
+        m.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("round,sim_time"));
+        assert!(text.lines().next().unwrap().ends_with("train_loss"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

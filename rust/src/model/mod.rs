@@ -1,0 +1,184 @@
+//! Model specifications and flat parameter vectors.
+//!
+//! The FL protocol treats the model as a flat `Vec<f32>` of dimension d
+//! (that is what gets averaged and quantized); the engines view it as a
+//! sequence of (W_i, b_i) layer tensors. `ModelSpec` owns the mapping and
+//! must agree with `python/compile/model.py::MODELS` — the runtime
+//! cross-checks against `artifacts/meta.json` at load time.
+
+use crate::util::rng::Rng;
+
+/// An MLP architecture: `sizes = [input, hidden..., classes]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub sizes: Vec<usize>,
+}
+
+impl ModelSpec {
+    pub fn new(name: &str, sizes: Vec<usize>) -> Self {
+        assert!(sizes.len() >= 2, "model needs input and output sizes");
+        ModelSpec { name: name.to_string(), sizes }
+    }
+
+    /// The model zoo — must match python/compile/model.py.
+    pub fn by_name(name: &str) -> Result<Self, String> {
+        let sizes = match name {
+            "mlp" => vec![784, 32, 10],
+            "mlp_wide" => vec![784, 256, 10],
+            "mlp_deep" => vec![784, 256, 128, 10],
+            other => return Err(format!("unknown model {other:?}")),
+        };
+        Ok(ModelSpec::new(name, sizes))
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.sizes[0]
+    }
+
+    pub fn num_classes(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.sizes.len() - 1
+    }
+
+    /// Total parameter dimension d.
+    pub fn num_params(&self) -> usize {
+        (0..self.num_layers())
+            .map(|i| self.sizes[i] * self.sizes[i + 1] + self.sizes[i + 1])
+            .sum()
+    }
+
+    /// Flat-layout segments in AOT argument order: w0, b0, w1, b1, ...
+    /// Each entry is (offset, shape) with shape.len() in {1, 2}.
+    pub fn segments(&self) -> Vec<(usize, Vec<usize>)> {
+        let mut out = Vec::new();
+        let mut off = 0;
+        for i in 0..self.num_layers() {
+            let (fan_in, fan_out) = (self.sizes[i], self.sizes[i + 1]);
+            out.push((off, vec![fan_in, fan_out]));
+            off += fan_in * fan_out;
+            out.push((off, vec![fan_out]));
+            off += fan_out;
+        }
+        out
+    }
+
+    /// He-uniform init over the flat vector (bound sqrt(6/fan_in) for
+    /// weights, zero biases) — same family as the python-side init.
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut p = vec![0f32; self.num_params()];
+        for i in 0..self.num_layers() {
+            let (off, shape) = self.segments()[2 * i].clone();
+            let fan_in = shape[0];
+            let bound = (6.0 / fan_in as f64).sqrt();
+            for v in &mut p[off..off + shape.iter().product::<usize>()] {
+                *v = rng.uniform(-bound, bound) as f32;
+            }
+            // biases stay zero
+        }
+        p
+    }
+}
+
+/// Flat parameter vector with elementwise helpers used by the averaging
+/// steps of the algorithms. Kept free-function style to work on plain
+/// slices (the hot loop avoids allocation by mutating in place).
+pub mod params {
+    /// y += alpha * x
+    pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+        assert_eq!(y.len(), x.len());
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+    }
+
+    /// y = alpha * y
+    pub fn scale(y: &mut [f32], alpha: f32) {
+        for yi in y.iter_mut() {
+            *yi *= alpha;
+        }
+    }
+
+    /// out = sum_i w_i * x_i (convex combination if weights sum to 1)
+    pub fn weighted_sum(terms: &[(&[f32], f32)]) -> Vec<f32> {
+        assert!(!terms.is_empty());
+        let n = terms[0].0.len();
+        let mut out = vec![0f32; n];
+        for (x, w) in terms {
+            assert_eq!(x.len(), n);
+            for (o, &xi) in out.iter_mut().zip(x.iter()) {
+                *o += w * xi;
+            }
+        }
+        out
+    }
+
+    /// y = x - s (elementwise), returning new vector.
+    pub fn sub(x: &[f32], s: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), s.len());
+        x.iter().zip(s).map(|(&a, &b)| a - b).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_matches_python_dims() {
+        // num_params values asserted against python (compile.model.num_params).
+        assert_eq!(ModelSpec::by_name("mlp").unwrap().num_params(), 25_450);
+        assert_eq!(ModelSpec::by_name("mlp_wide").unwrap().num_params(), 203_530);
+        assert_eq!(ModelSpec::by_name("mlp_deep").unwrap().num_params(), 235_146);
+        assert!(ModelSpec::by_name("nope").is_err());
+    }
+
+    #[test]
+    fn segments_cover_flat_vector_exactly() {
+        let m = ModelSpec::by_name("mlp_deep").unwrap();
+        let segs = m.segments();
+        let mut expected_off = 0;
+        for (off, shape) in &segs {
+            assert_eq!(*off, expected_off);
+            expected_off += shape.iter().product::<usize>();
+        }
+        assert_eq!(expected_off, m.num_params());
+    }
+
+    #[test]
+    fn init_is_deterministic_and_bounded() {
+        let m = ModelSpec::by_name("mlp").unwrap();
+        let a = m.init_params(42);
+        let b = m.init_params(42);
+        assert_eq!(a, b);
+        let bound = (6.0f32 / 784.0).sqrt();
+        // First segment is w0 with fan_in 784.
+        assert!(a[..784 * 32].iter().all(|&v| v.abs() <= bound));
+        // b0 is zero.
+        let (b0_off, _) = m.segments()[1].clone();
+        assert!(a[b0_off..b0_off + 32].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn init_differs_across_seeds() {
+        let m = ModelSpec::by_name("mlp").unwrap();
+        assert_ne!(m.init_params(1), m.init_params(2));
+    }
+
+    #[test]
+    fn params_helpers() {
+        use params::*;
+        let mut y = vec![1.0f32, 2.0];
+        axpy(&mut y, 2.0, &[1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 4.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![1.5, 2.0]);
+        let w = weighted_sum(&[(&[2.0, 0.0], 0.5), (&[0.0, 4.0], 0.25)]);
+        assert_eq!(w, vec![1.0, 1.0]);
+        assert_eq!(sub(&[3.0, 3.0], &[1.0, 2.0]), vec![2.0, 1.0]);
+    }
+}

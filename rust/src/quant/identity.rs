@@ -1,0 +1,55 @@
+//! Identity "quantizer": full-precision passthrough (32 bits/coordinate).
+//! Used for the uncompressed arms of experiments (FedAvg, QuAFL b=32) so
+//! every algorithm goes through the same message/bit-accounting path.
+
+use super::{QuantMessage, Quantizer};
+
+#[derive(Clone, Debug, Default)]
+pub struct IdentityQuantizer;
+
+impl Quantizer for IdentityQuantizer {
+    fn encode(&self, x: &[f32], seed: u64) -> QuantMessage {
+        let mut payload = Vec::with_capacity(x.len() * 4);
+        for &v in x {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        QuantMessage { bits: x.len() * 32 + 64, payload, dim: x.len(), seed }
+    }
+
+    fn decode(&self, msg: &QuantMessage, _key: &[f32]) -> Vec<f32> {
+        msg.payload
+            .chunks_exact(4)
+            .take(msg.dim)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+
+    fn bits_per_coord(&self) -> f64 {
+        32.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_roundtrip() {
+        let q = IdentityQuantizer;
+        let x = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE, 1e30];
+        let y = q.decode(&q.encode(&x, 0), &x);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn key_is_ignored() {
+        let q = IdentityQuantizer;
+        let x = vec![3.0f32; 7];
+        let key = vec![-100.0f32; 7];
+        assert_eq!(q.decode(&q.encode(&x, 1), &key), x);
+    }
+}

@@ -1,0 +1,119 @@
+//! Communication compression (paper §2.2 "Fully-Quantized Communication").
+//!
+//! Two families, matching the paper's comparison (Figures 5/16):
+//!
+//! - [`lattice::LatticeQuantizer`] — the position-aware lattice scheme of
+//!   Davies et al. [7] as the paper instantiates it: a seeded random
+//!   rotation (sign flip ∘ Hadamard) followed by per-coordinate modular
+//!   b-bit stochastic quantization on a grid of spacing γ. `Enc(x)` does
+//!   not depend on the decoder; `Dec(key, Enc(x))` resolves the modular
+//!   wraparound *toward the decoder's key*, so the error depends only on
+//!   γ — and correct decoding needs only that x and key are close
+//!   (Lemma 3.1's "decoding key" semantics). This is why QuAFL can always
+//!   send compressed *models* rather than updates.
+//! - [`qsgd::QsgdQuantizer`] — the standard norm-scaled stochastic
+//!   quantizer [1]; its error is proportional to ‖x‖, the property the
+//!   paper shows is problematic for model transmission.
+//!
+//! [`identity::IdentityQuantizer`] (32-bit passthrough) completes the grid
+//! for "no quantization" arms of the experiments.
+
+pub mod identity;
+pub mod lattice;
+pub mod qsgd;
+
+pub use identity::IdentityQuantizer;
+pub use lattice::{LatticeQuantizer, lattice_gamma_for};
+pub use qsgd::QsgdQuantizer;
+
+/// An encoded vector in flight between server and client.
+#[derive(Clone, Debug)]
+pub struct QuantMessage {
+    /// packed payload
+    pub payload: Vec<u8>,
+    /// exact number of meaningful bits in `payload` plus side info
+    /// (seed/γ/norm headers) — this is what the bit-accounting reports
+    pub bits: usize,
+    /// original (unpadded) dimension
+    pub dim: usize,
+    /// shared-randomness seed for the rotation
+    pub seed: u64,
+}
+
+/// Server↔client codec. `encode` must not depend on the decoder's state;
+/// `decode` receives the decoder's local model as `key` (position-aware
+/// schemes use it, oblivious schemes ignore it).
+pub trait Quantizer: Send + Sync {
+    fn encode(&self, x: &[f32], seed: u64) -> QuantMessage;
+    fn decode(&self, msg: &QuantMessage, key: &[f32]) -> Vec<f32>;
+    fn name(&self) -> &'static str;
+    /// Nominal bits per coordinate (for reporting; exact counts are in the
+    /// messages themselves).
+    fn bits_per_coord(&self) -> f64;
+}
+
+/// Convenience: encode then decode (what one directed transfer does).
+pub fn roundtrip(q: &dyn Quantizer, x: &[f32], key: &[f32], seed: u64) -> (Vec<f32>, usize) {
+    let msg = q.encode(x, seed);
+    let bits = msg.bits;
+    (q.decode(&msg, key), bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randvec(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal() as f32 * scale).collect()
+    }
+
+    /// All quantizers agree on the trait contract: output dim == input dim,
+    /// bits accounted > 0, decode is deterministic given the message.
+    #[test]
+    fn trait_contract_all_quantizers() {
+        let qs: Vec<Box<dyn Quantizer>> = vec![
+            Box::new(LatticeQuantizer::new(10, 0.05)),
+            Box::new(QsgdQuantizer::new(10)),
+            Box::new(IdentityQuantizer),
+        ];
+        let x = randvec(301, 1, 1.0);
+        let key = x.iter().map(|v| v + 0.01).collect::<Vec<_>>();
+        for q in &qs {
+            let msg = q.encode(&x, 42);
+            assert_eq!(msg.dim, x.len(), "{}", q.name());
+            assert!(msg.bits > 0);
+            let d1 = q.decode(&msg, &key);
+            let d2 = q.decode(&msg, &key);
+            assert_eq!(d1.len(), x.len());
+            assert_eq!(d1, d2, "{} decode must be deterministic", q.name());
+        }
+    }
+
+    #[test]
+    fn identity_bits_are_32_per_coord_plus_header() {
+        let q = IdentityQuantizer;
+        let x = randvec(100, 2, 1.0);
+        let msg = q.encode(&x, 0);
+        assert!(msg.bits >= 3200);
+        assert!(msg.bits < 3200 + 128);
+    }
+
+    #[test]
+    fn lattice_beats_qsgd_for_model_transmission() {
+        // The paper's core argument: for a vector with large norm but small
+        // distance to the decoder's key, the position-aware scheme's error
+        // is tiny while QSGD's error scales with the norm.
+        let n = 4096;
+        let base = randvec(n, 3, 10.0); // big-norm "model"
+        let x: Vec<f32> = base.iter().map(|v| v + 0.001).collect();
+        let lat = LatticeQuantizer::new(8, 0.01);
+        let qs = QsgdQuantizer::new(8);
+        let (dl, _) = roundtrip(&lat, &x, &base, 7);
+        let (dq, _) = roundtrip(&qs, &x, &base, 7);
+        let el = crate::util::stats::l2_dist(&dl, &x);
+        let eq = crate::util::stats::l2_dist(&dq, &x);
+        assert!(el * 10.0 < eq, "lattice err {el} vs qsgd err {eq}");
+    }
+}

@@ -1,0 +1,162 @@
+//! QSGD quantizer (Alistarh et al. [1]) — the norm-scaled stochastic
+//! baseline the paper compares against (Figures 5 and 16).
+//!
+//! Encode: transmit ‖x‖₂ (32 bits) plus, per coordinate, a sign bit and a
+//! stochastically-rounded level ℓ ∈ {0..s} with s = 2^{b−1}−1 levels, so
+//! each coordinate costs b bits. Decode ignores the key (oblivious):
+//! x̂ᵢ = sign·(ℓ/s)·‖x‖.
+//!
+//! Unbiased, but the per-message error is Θ(‖x‖/√s per coordinate) — when
+//! the payload is a *model* (not a small update) this error is huge, which
+//! is exactly the failure mode the paper demonstrates for naive
+//! quantization of FedAvg-style transmissions.
+
+use super::{QuantMessage, Quantizer};
+use crate::util::bits::{BitReader, BitWriter};
+use crate::util::rng::Rng;
+use crate::util::stats::l2_norm;
+
+#[derive(Clone, Debug)]
+pub struct QsgdQuantizer {
+    /// total bits per coordinate (1 sign + b-1 level bits), 2..=16
+    pub bits: u8,
+}
+
+impl QsgdQuantizer {
+    pub fn new(bits: u8) -> Self {
+        assert!((2..=16).contains(&bits), "qsgd bits must be in 2..=16");
+        QsgdQuantizer { bits }
+    }
+
+    fn levels(&self) -> u32 {
+        (1u32 << (self.bits - 1)) - 1
+    }
+}
+
+impl Quantizer for QsgdQuantizer {
+    fn encode(&self, x: &[f32], seed: u64) -> QuantMessage {
+        let norm = l2_norm(x) as f32;
+        let s = self.levels();
+        let mut w = BitWriter::with_capacity_bits(x.len() * self.bits as usize + 32);
+        w.write_f32(norm);
+        let mut rng = Rng::new(seed ^ 0x0517_D00D);
+        if norm > 0.0 {
+            let inv_norm = s as f64 / norm as f64;
+            for &v in x {
+                let sign = (v < 0.0) as u32;
+                let t = v.abs() as f64 * inv_norm;
+                let fl = t.floor();
+                let level =
+                    (fl as u32 + (rng.next_f64() < (t - fl)) as u32).min(s);
+                // single packed write: sign bit | level
+                w.write(sign | (level << 1), self.bits);
+            }
+        } else {
+            for _ in x {
+                w.write(0, self.bits);
+            }
+        }
+        let bits = w.len_bits() + 64;
+        let (payload, _) = w.into_bytes();
+        QuantMessage { payload, bits, dim: x.len(), seed }
+    }
+
+    fn decode(&self, msg: &QuantMessage, _key: &[f32]) -> Vec<f32> {
+        let mut r = BitReader::new(&msg.payload);
+        let norm = r.read_f32();
+        let s = self.levels() as f32;
+        (0..msg.dim)
+            .map(|_| {
+                let packed = r.read(self.bits);
+                let sign = if packed & 1 == 1 { -1.0f32 } else { 1.0 };
+                let level = (packed >> 1) as f32;
+                sign * (level / s) * norm
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "qsgd"
+    }
+
+    fn bits_per_coord(&self) -> f64 {
+        self.bits as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::{l2_dist, l2_norm};
+
+    fn randvec(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_theory() {
+        // QSGD error per coord <= norm/s, so L2 error <= norm*sqrt(n)/s.
+        let q = QsgdQuantizer::new(8);
+        let n = 1024;
+        let x = randvec(n, 1, 1.0);
+        let y = q.decode(&q.encode(&x, 5), &x);
+        let bound = l2_norm(&x) * (n as f64).sqrt() / q.levels() as f64;
+        let err = l2_dist(&x, &y);
+        assert!(err <= bound, "err={err} bound={bound}");
+    }
+
+    #[test]
+    fn unbiased() {
+        let q = QsgdQuantizer::new(4);
+        let n = 64;
+        let x = randvec(n, 2, 1.0);
+        let trials = 600;
+        let mut acc = vec![0f64; n];
+        for t in 0..trials {
+            for (a, v) in acc.iter_mut().zip(q.decode(&q.encode(&x, t), &x)) {
+                *a += v as f64;
+            }
+        }
+        let mean: Vec<f32> = acc.iter().map(|a| (*a / trials as f64) as f32).collect();
+        let bias = l2_dist(&mean, &x);
+        assert!(bias < 0.3, "bias={bias}");
+    }
+
+    #[test]
+    fn zero_vector_roundtrips() {
+        let q = QsgdQuantizer::new(8);
+        let x = vec![0f32; 33];
+        let y = q.decode(&q.encode(&x, 1), &x);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn error_scales_with_norm() {
+        // The documented failure mode: same shape, 100x norm => ~100x error.
+        let q = QsgdQuantizer::new(8);
+        let x = randvec(512, 3, 1.0);
+        let xl: Vec<f32> = x.iter().map(|v| v * 100.0).collect();
+        let e1 = l2_dist(&q.decode(&q.encode(&x, 9), &x), &x);
+        let e2 = l2_dist(&q.decode(&q.encode(&xl, 9), &xl), &xl);
+        assert!(e2 > e1 * 30.0, "e1={e1} e2={e2}");
+    }
+
+    #[test]
+    fn bits_accounting_exact() {
+        let q = QsgdQuantizer::new(8);
+        let msg = q.encode(&randvec(100, 1, 1.0), 2);
+        assert_eq!(msg.bits, 100 * 8 + 32 + 64);
+    }
+
+    #[test]
+    fn max_magnitude_coord_hits_top_level() {
+        let q = QsgdQuantizer::new(8);
+        // One-hot: normalized magnitude of the hot coord is exactly 1.
+        let mut x = vec![0f32; 16];
+        x[3] = -2.5;
+        let y = q.decode(&q.encode(&x, 1), &x);
+        assert!((y[3] + 2.5).abs() < 1e-6, "{}", y[3]);
+    }
+}

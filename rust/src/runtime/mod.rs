@@ -1,0 +1,224 @@
+//! PJRT runtime: loads the AOT artifacts emitted by `python/compile/aot.py`
+//! and compiles them on the CPU PJRT client (`xla` crate).
+//!
+//! Interchange format is HLO **text** — `HloModuleProto::from_text_file`
+//! reassigns instruction ids, sidestepping the 64-bit-id protos jax ≥ 0.5
+//! emits that xla_extension 0.5.1 rejects (see /opt/xla-example/README.md).
+//!
+//! One `Runtime` per process; executables are compiled once and cached.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Parsed `artifacts/meta.json`.
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub sizes: Vec<usize>,
+    pub num_params: usize,
+    /// (name, shape) in flat argument order (w0, b0, w1, b1, ...)
+    pub param_shapes: Vec<(String, Vec<usize>)>,
+    pub train_step_file: String,
+    pub eval_file: String,
+    /// fused K-step artifact (§Perf L2), if emitted
+    pub train_k_file: Option<String>,
+    pub k_max: Option<usize>,
+}
+
+impl Meta {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let j = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let models_j = j
+            .get("models")
+            .and_then(Json::as_obj)
+            .context("meta.json: missing models")?;
+        let mut models = BTreeMap::new();
+        for (name, m) in models_j {
+            let sizes = m
+                .get("sizes")
+                .and_then(Json::as_arr)
+                .context("model sizes")?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect();
+            let param_shapes = m
+                .get("param_shapes")
+                .and_then(Json::as_arr)
+                .context("param_shapes")?
+                .iter()
+                .map(|p| {
+                    let pname = p.get("name").and_then(Json::as_str).unwrap_or("");
+                    let shape = p
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|a| {
+                            a.iter().map(|v| v.as_usize().unwrap_or(0)).collect()
+                        })
+                        .unwrap_or_default();
+                    (pname.to_string(), shape)
+                })
+                .collect();
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    sizes,
+                    num_params: m
+                        .get("num_params")
+                        .and_then(Json::as_usize)
+                        .context("num_params")?,
+                    param_shapes,
+                    train_step_file: m
+                        .get("train_step")
+                        .and_then(Json::as_str)
+                        .context("train_step")?
+                        .to_string(),
+                    eval_file: m
+                        .get("eval")
+                        .and_then(Json::as_str)
+                        .context("eval")?
+                        .to_string(),
+                    train_k_file: m
+                        .get("train_k")
+                        .and_then(Json::as_str)
+                        .map(str::to_string),
+                    k_max: m.get("k_max").and_then(Json::as_usize),
+                },
+            );
+        }
+        Ok(Meta {
+            train_batch: j
+                .get("train_batch")
+                .and_then(Json::as_usize)
+                .context("train_batch")?,
+            eval_batch: j
+                .get("eval_batch")
+                .and_then(Json::as_usize)
+                .context("eval_batch")?,
+            models,
+        })
+    }
+}
+
+/// PJRT CPU client + artifact directory + compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub meta: Meta,
+}
+
+impl Runtime {
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let meta = Meta::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Runtime { client, dir, meta })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))
+    }
+
+    /// Execute with literal inputs; unwraps the single tuple output into
+    /// its elements (aot.py lowers with return_tuple=True).
+    pub fn execute(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))
+    }
+
+    /// Build an f32 literal of the given shape from a slice.
+    pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let numel: usize = dims.iter().product();
+        anyhow::ensure!(numel == data.len(), "literal shape/data mismatch");
+        let lit = xla::Literal::vec1(data);
+        if dims.len() == 1 {
+            return Ok(lit);
+        }
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims_i64)
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime construction and execution against real artifacts is covered
+    // in rust/tests/integration.rs (requires `make artifacts`). Here we
+    // test the metadata parsing in isolation.
+
+    #[test]
+    fn meta_parse_roundtrip() {
+        let dir = std::env::temp_dir().join("quafl_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{
+              "train_batch": 32, "eval_batch": 256,
+              "models": {
+                "mlp": {
+                  "sizes": [784, 32, 10],
+                  "num_params": 25450,
+                  "param_shapes": [
+                    {"name": "w0", "shape": [784, 32]},
+                    {"name": "b0", "shape": [32]},
+                    {"name": "w1", "shape": [32, 10]},
+                    {"name": "b1", "shape": [10]}
+                  ],
+                  "train_step": "mlp_train_step.hlo.txt",
+                  "eval": "mlp_eval.hlo.txt"
+                }
+              }
+            }"#,
+        )
+        .unwrap();
+        let meta = Meta::load(&dir).unwrap();
+        assert_eq!(meta.train_batch, 32);
+        let mlp = &meta.models["mlp"];
+        assert_eq!(mlp.sizes, vec![784, 32, 10]);
+        assert_eq!(mlp.param_shapes.len(), 4);
+        assert_eq!(mlp.param_shapes[0].1, vec![784, 32]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn meta_missing_file_is_actionable() {
+        let err = Meta::load(Path::new("/nonexistent-quafl")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

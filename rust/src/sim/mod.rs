@@ -1,0 +1,217 @@
+//! Discrete-event timing simulation (paper Appendix A.2).
+//!
+//! Each client's local-step durations are i.i.d. Exp(λ) draws: λ = 1/2 for
+//! fast clients (mean 2) and λ = 1/8 for slow clients (mean 8); a
+//! configurable fraction of clients is slow. The server's clock advances
+//! by `sit` per round plus `swt` between rounds.
+//!
+//! The key query the algorithms make is: *given that I last synchronized
+//! at time t0, how many local steps (≤ K) have I completed by time t1?*
+//! `ClientClock::steps_completed` answers it by materializing the step
+//! process lazily — draws are consumed only as simulated time passes, so
+//! the process is consistent across queries (memoryless arrivals are NOT
+//! redrawn; the next step's remaining time is preserved, which makes the
+//! process exactly a renewal process interrupted at interaction times).
+
+use crate::config::TimingConfig;
+use crate::util::rng::Rng;
+
+/// One client's compute-time process.
+#[derive(Clone, Debug)]
+pub struct ClientClock {
+    pub slow: bool,
+    lambda: f64,
+    rng: Rng,
+    /// absolute time at which the client's *current* step will finish
+    next_finish: f64,
+    /// absolute time the client (re)started its local computation
+    epoch: f64,
+    /// steps completed since `epoch`
+    done_since_epoch: usize,
+}
+
+impl ClientClock {
+    pub fn new(slow: bool, timing: &TimingConfig, rng: Rng) -> Self {
+        let lambda = if slow { timing.slow_lambda } else { timing.fast_lambda };
+        let mut c = ClientClock {
+            slow,
+            lambda,
+            rng,
+            next_finish: 0.0,
+            epoch: 0.0,
+            done_since_epoch: 0,
+        };
+        c.next_finish = c.draw();
+        c
+    }
+
+    fn draw(&mut self) -> f64 {
+        self.rng.exponential(self.lambda)
+    }
+
+    /// Expected steps per unit time × interval — analytic helper for H_i
+    /// estimation (E[steps in Δt] = λΔt for an unclamped renewal process).
+    pub fn rate(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Advance the process to absolute time `now` and return how many
+    /// steps completed since the last restart, capped at `k`. Does not
+    /// restart the process.
+    pub fn steps_completed(&mut self, now: f64, k: usize) -> usize {
+        while self.done_since_epoch < k && self.next_finish <= now {
+            self.done_since_epoch += 1;
+            let d = self.draw();
+            self.next_finish += d;
+        }
+        self.done_since_epoch
+    }
+
+    /// Restart local computation at absolute time `now` (the client just
+    /// finished a server interaction and begins K fresh steps). The
+    /// in-flight step is abandoned and a fresh one starts — matching the
+    //  algorithm, where the client begins steps on the *new* model.
+    pub fn restart(&mut self, now: f64) {
+        self.epoch = now;
+        self.done_since_epoch = 0;
+        let d = self.draw();
+        self.next_finish = now + d;
+    }
+
+    /// Absolute time at which the client will have finished `k` steps from
+    /// its current epoch (used by the synchronous FedAvg round and by
+    /// FedBuff's completion events). Advances the process.
+    pub fn finish_time_for(&mut self, k: usize) -> f64 {
+        while self.done_since_epoch < k {
+            self.done_since_epoch += 1;
+            if self.done_since_epoch < k {
+                let d = self.draw();
+                self.next_finish += d;
+            }
+        }
+        self.next_finish
+    }
+}
+
+/// Build the fleet of client clocks: the first ⌈slow_fraction·n⌉ client
+/// ids are slow (deterministic given n; which *data shard* those ids hold
+/// is already randomized by partitioning).
+pub fn build_clocks(n: usize, timing: &TimingConfig, seed: u64) -> Vec<ClientClock> {
+    let n_slow = (timing.slow_fraction * n as f64).round() as usize;
+    (0..n)
+        .map(|i| {
+            let rng = Rng::new(crate::util::rng::derive_seed(seed, 0x5EED_0000 + i as u64));
+            ClientClock::new(i < n_slow, timing, rng)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timing() -> TimingConfig {
+        TimingConfig::default()
+    }
+
+    #[test]
+    fn steps_monotone_in_time_and_capped() {
+        let t = timing();
+        let mut c = ClientClock::new(false, &t, Rng::new(1));
+        let s1 = c.steps_completed(10.0, 100);
+        let s2 = c.steps_completed(20.0, 100);
+        assert!(s2 >= s1);
+        let s3 = c.steps_completed(1e9, 7);
+        assert_eq!(s3, 7, "cap at K");
+    }
+
+    #[test]
+    fn fast_mean_rate_is_half_per_unit() {
+        // fast lambda = 1/2 => mean step time 2 => ~50 steps in 100 units.
+        let t = timing();
+        let mut total = 0usize;
+        let trials = 200;
+        for seed in 0..trials {
+            let mut c = ClientClock::new(false, &t, Rng::new(seed));
+            total += c.steps_completed(100.0, 10_000);
+        }
+        let mean = total as f64 / trials as f64;
+        assert!((mean - 50.0).abs() < 2.0, "mean={mean}");
+    }
+
+    #[test]
+    fn slow_clients_are_4x_slower() {
+        let t = timing();
+        let (mut fast_total, mut slow_total) = (0usize, 0usize);
+        for seed in 0..200 {
+            let mut f = ClientClock::new(false, &t, Rng::new(seed));
+            let mut s = ClientClock::new(true, &t, Rng::new(seed + 1000));
+            fast_total += f.steps_completed(200.0, 100_000);
+            slow_total += s.steps_completed(200.0, 100_000);
+        }
+        let ratio = fast_total as f64 / slow_total as f64;
+        assert!((ratio - 4.0).abs() < 0.4, "ratio={ratio}");
+    }
+
+    #[test]
+    fn restart_resets_progress() {
+        let t = timing();
+        let mut c = ClientClock::new(false, &t, Rng::new(3));
+        let _ = c.steps_completed(50.0, 1000);
+        c.restart(50.0);
+        assert_eq!(c.steps_completed(50.0, 1000), 0);
+        assert!(c.steps_completed(51.0, 1000) <= 2);
+    }
+
+    #[test]
+    fn zero_steps_possible_right_after_restart() {
+        // The paper stresses H_i = 0 interactions (27% for slow clients in
+        // Fig 1's setup). Immediately-after-restart queries must see 0.
+        let t = timing();
+        let mut c = ClientClock::new(true, &t, Rng::new(4));
+        c.restart(10.0);
+        assert_eq!(c.steps_completed(10.0, 10), 0);
+    }
+
+    #[test]
+    fn finish_time_consistent_with_steps() {
+        let t = timing();
+        let mut a = ClientClock::new(false, &t, Rng::new(5));
+        let mut b = ClientClock::new(false, &t, Rng::new(5));
+        let mut c = ClientClock::new(false, &t, Rng::new(5));
+        let ft = a.finish_time_for(10);
+        // Sibling clocks (same seed) must count exactly 10 steps at that
+        // instant, and 9 an instant before (fresh clock — the step count
+        // is monotone within one clock, so the past can't be re-queried).
+        assert_eq!(b.steps_completed(ft, 100), 10);
+        assert_eq!(c.steps_completed(ft - 1e-9, 100), 9);
+    }
+
+    #[test]
+    fn build_clocks_slow_fraction() {
+        let mut t = timing();
+        t.slow_fraction = 0.3;
+        let clocks = build_clocks(100, &t, 7);
+        assert_eq!(clocks.iter().filter(|c| c.slow).count(), 30);
+        assert_eq!(clocks.len(), 100);
+    }
+
+    #[test]
+    fn probability_of_zero_progress_slow_clients() {
+        // Reproduce the paper's observation: with swt=10, slow clients
+        // (mean step 8) show a sizeable P[H=0] when polled one interval
+        // after restart. P[Exp(1/8) > 10] = e^{-10/8} ≈ 0.287.
+        let t = timing();
+        let trials = 2000;
+        let mut zeros = 0;
+        for seed in 0..trials {
+            let mut c = ClientClock::new(true, &t, Rng::new(seed));
+            c.restart(0.0);
+            if c.steps_completed(10.0, 100) == 0 {
+                zeros += 1;
+            }
+        }
+        let p = zeros as f64 / trials as f64;
+        assert!((p - 0.287).abs() < 0.04, "P[H=0]={p}");
+    }
+}

@@ -1,0 +1,140 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Wall-clock timing with warmup, fixed-duration sampling, and
+//! criterion-style reporting (mean ± std, p50/p95, throughput). Bench
+//! binaries (`cargo bench`) build on this; results for EXPERIMENTS.md
+//! §Perf are copied from its output.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{percentile, Welford};
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub iters: u64,
+    /// optional units-per-iteration for throughput reporting
+    pub units: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<40} {:>12} ± {:>10}  p50 {:>12} p95 {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        );
+        if let Some((units, label)) = self.units {
+            let per_sec = units / (self.mean_ns / 1e9);
+            s.push_str(&format!("  {} {label}/s", fmt_count(per_sec)));
+        }
+        s
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+pub fn fmt_count(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}K", v / 1e3)
+    } else {
+        format!("{v:.1}")
+    }
+}
+
+/// Time `f` repeatedly: `warmup` then sample for ~`sample_secs` wall
+/// seconds (at least 5 iterations). Returns stats over per-iter times.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_cfg(name, 3, 1.0, None, &mut f)
+}
+
+/// Benchmark with declared per-iteration units (bytes, steps, rounds...).
+pub fn bench_units<F: FnMut()>(
+    name: &str,
+    units: f64,
+    label: &'static str,
+    mut f: F,
+) -> BenchResult {
+    bench_cfg(name, 3, 1.0, Some((units, label)), &mut f)
+}
+
+pub fn bench_cfg(
+    name: &str,
+    warmup: usize,
+    sample_secs: f64,
+    units: Option<(f64, &'static str)>,
+    f: &mut dyn FnMut(),
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut w = Welford::new();
+    let mut samples = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs_f64(sample_secs);
+    while Instant::now() < deadline || samples.len() < 5 {
+        let t0 = Instant::now();
+        f();
+        let ns = t0.elapsed().as_nanos() as f64;
+        w.push(ns);
+        samples.push(ns);
+        if samples.len() >= 100_000 {
+            break;
+        }
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_ns: w.mean(),
+        std_ns: w.std(),
+        p50_ns: percentile(&samples, 50.0),
+        p95_ns: percentile(&samples, 95.0),
+        iters: w.count(),
+        units,
+    };
+    println!("{}", r.report());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0u64;
+        let r = bench_cfg("noop", 1, 0.01, None, &mut || {
+            count += 1;
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns >= 0.0);
+        assert!(count as u64 >= r.iters);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ns(500.0), "500.0ns");
+        assert_eq!(fmt_ns(1500.0), "1.50µs");
+        assert_eq!(fmt_ns(2.5e6), "2.500ms");
+        assert_eq!(fmt_count(2.5e6), "2.50M");
+    }
+}

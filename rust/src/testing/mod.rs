@@ -1,0 +1,132 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check` runs a property over `cases` randomized inputs drawn from a
+//! generator; on failure it retries the failing seed with a binary-search
+//! style "shrink by regeneration at smaller size" pass and reports the
+//! smallest reproduction seed + size it found. Deterministic given the
+//! base seed, so failures are reproducible from the log line.
+
+pub mod bench;
+
+use crate::util::rng::Rng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    /// maximum "size" hint passed to the generator (e.g. vector length)
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE, max_size: 1024 }
+    }
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` cases with sizes ramping from 1 to
+/// `cfg.max_size`. The property returns `Err(msg)` to signal failure.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        // Ramp sizes so early failures are small; always include max_size.
+        let size = if cfg.cases <= 1 {
+            cfg.max_size
+        } else {
+            1 + case * (cfg.max_size - 1) / (cfg.cases - 1)
+        };
+        let case_seed = crate::util::rng::derive_seed(cfg.seed, case as u64);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Shrink: try smaller sizes with the same seed.
+            let mut best = (size, msg.clone());
+            let mut lo = 1usize;
+            let mut hi = size;
+            while lo < hi {
+                let mid = lo + (hi - lo) / 2;
+                let mut r2 = Rng::new(case_seed);
+                match prop(&mut r2, mid) {
+                    Err(m) => {
+                        best = (mid, m);
+                        hi = mid;
+                    }
+                    Ok(()) => {
+                        lo = mid + 1;
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, \
+                 smallest failing size {}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Assert helper returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Approximate float comparison for properties.
+pub fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always_ok", PropConfig { cases: 10, ..Default::default() }, |_, _| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "smallest failing size")]
+    fn failing_property_shrinks() {
+        check(
+            "fails_above_16",
+            PropConfig { cases: 8, max_size: 100, ..Default::default() },
+            |_, size| {
+                if size > 16 {
+                    Err(format!("size {size} too big"))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn sizes_ramp_to_max() {
+        let mut max_seen = 0;
+        check(
+            "ramp",
+            PropConfig { cases: 5, max_size: 50, ..Default::default() },
+            |_, size| {
+                max_seen = max_seen.max(size);
+                Ok(())
+            },
+        );
+        assert_eq!(max_seen, 50);
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6));
+        assert!(!close(1.0, 2.0, 1e-6));
+    }
+}

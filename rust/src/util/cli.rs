@@ -1,0 +1,135 @@
+//! Tiny CLI argument parser (no clap in the offline build).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value] [--key=value] ...`
+//! Unknown keys are an error (surfaced with the set of known keys), which
+//! keeps experiment definitions honest.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: Vec<String>,
+    pub kv: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+pub fn parse(argv: &[String]) -> Args {
+    let mut args = Args::default();
+    let mut it = argv.iter().peekable();
+    // First non-flag token is the subcommand.
+    if let Some(first) = it.peek() {
+        if !first.starts_with('-') {
+            args.subcommand = Some(it.next().unwrap().clone());
+        }
+    }
+    while let Some(tok) = it.next() {
+        if let Some(stripped) = tok.strip_prefix("--") {
+            if let Some(eq) = stripped.find('=') {
+                args.kv.insert(
+                    stripped[..eq].to_string(),
+                    stripped[eq + 1..].to_string(),
+                );
+            } else if it
+                .peek()
+                .map(|n| !n.starts_with("--"))
+                .unwrap_or(false)
+            {
+                args.kv.insert(stripped.to_string(), it.next().unwrap().clone());
+            } else {
+                args.flags.push(stripped.to_string());
+            }
+        } else {
+            args.positional.push(tok.clone());
+        }
+    }
+    args
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Error out on keys/flags outside the allowed set (typo guard).
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.kv.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown option --{k}; known options: {}",
+                    known.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_kv_flags() {
+        let a = parse(&sv(&[
+            "figures", "--out-dir", "results", "--paper-scale",
+            "--n=40", "fig1",
+        ]));
+        assert_eq!(a.subcommand.as_deref(), Some("figures"));
+        assert_eq!(a.get("out-dir"), Some("results"));
+        assert!(a.flag("paper-scale"));
+        assert_eq!(a.get_usize("n", 0), 40);
+        assert_eq!(a.positional, vec!["fig1".to_string()]);
+    }
+
+    #[test]
+    fn typed_getters_defaults() {
+        let a = parse(&sv(&["run"]));
+        assert_eq!(a.get_usize("rounds", 100), 100);
+        assert_eq!(a.get_f64("lr", 0.5), 0.5);
+        assert_eq!(a.get_str("model", "mlp"), "mlp");
+    }
+
+    #[test]
+    fn check_known_catches_typo() {
+        let a = parse(&sv(&["run", "--roundz", "5"]));
+        assert!(a.check_known(&["rounds"]).is_err());
+        assert!(a.check_known(&["roundz"]).is_ok());
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse(&sv(&["run", "--lr", "-0.5"]));
+        assert_eq!(a.get_f64("lr", 0.0), -0.5);
+    }
+}

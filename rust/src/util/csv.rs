@@ -1,0 +1,84 @@
+//! Minimal CSV writer for figure/metric series. Columns are fixed at
+//! construction; rows are f64 (formatted compactly) or strings.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    ncols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, ncols: header.len() })
+    }
+
+    pub fn row(&mut self, vals: &[f64]) -> std::io::Result<()> {
+        assert_eq!(vals.len(), self.ncols, "csv row arity mismatch");
+        let s: Vec<String> = vals.iter().map(|v| fmt_f64(*v)).collect();
+        writeln!(self.out, "{}", s.join(","))
+    }
+
+    pub fn row_strs(&mut self, vals: &[String]) -> std::io::Result<()> {
+        assert_eq!(vals.len(), self.ncols, "csv row arity mismatch");
+        writeln!(self.out, "{}", vals.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Compact float formatting: integers without trailing .0, otherwise up to
+/// 6 significant decimals.
+pub fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        let s = format!("{v:.6}");
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_compact() {
+        assert_eq!(fmt_f64(3.0), "3");
+        assert_eq!(fmt_f64(0.5), "0.5");
+        assert_eq!(fmt_f64(0.123456789), "0.123457");
+        assert_eq!(fmt_f64(-2.0), "-2");
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("quafl_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&[1.0, 2.5]).unwrap();
+            w.flush().unwrap();
+        }
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content, "a,b\n1,2.5\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let dir = std::env::temp_dir().join("quafl_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        let _ = w.row(&[1.0]);
+    }
+}

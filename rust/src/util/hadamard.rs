@@ -1,0 +1,169 @@
+//! In-place fast Walsh–Hadamard transform (FWHT) — the rotation half of
+//! the lattice quantizer's random rotation (random sign flip ∘ Hadamard),
+//! the practical instantiation of Davies et al. [7] used by the paper
+//! ("a random rotation followed by direct quantization").
+//!
+//! `fwht` computes H_n x (unnormalized); with the 1/sqrt(n) scale applied
+//! it is orthonormal and self-inverse. Length must be a power of two — the
+//! quantizer zero-pads to the next power of two.
+
+/// Unnormalized in-place FWHT. `x.len()` must be a power of two.
+pub fn fwht(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fwht: len {n} not a power of two");
+    let mut h = 1;
+    while h < n {
+        let stride = h * 2;
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += stride;
+        }
+        h = stride;
+    }
+}
+
+/// Orthonormal FWHT: H_n / sqrt(n). Self-inverse.
+pub fn fwht_normalized(x: &mut [f32]) {
+    let n = x.len();
+    fwht(x);
+    let scale = 1.0 / (n as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// Apply the seeded random-sign diagonal D (±1 per coordinate) in place.
+/// Both encoder and decoder derive the same signs from the shared seed.
+pub fn sign_flip(x: &mut [f32], seed: u64) {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    // Consume sign bits in batches of 64.
+    let mut i = 0;
+    while i < x.len() {
+        let bits = rng.next_u64();
+        let upto = (x.len() - i).min(64);
+        for j in 0..upto {
+            if (bits >> j) & 1 == 1 {
+                x[i + j] = -x[i + j];
+            }
+        }
+        i += upto;
+    }
+}
+
+/// Forward random rotation R = (1/sqrt(n)) H D: sign flip then FWHT.
+pub fn rotate(x: &mut [f32], seed: u64) {
+    sign_flip(x, seed);
+    fwht_normalized(x);
+}
+
+/// Inverse rotation R^{-1} = D H (1/sqrt(n)): FWHT then sign flip.
+pub fn rotate_inverse(x: &mut [f32], seed: u64) {
+    fwht_normalized(x);
+    sign_flip(x, seed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal() as f32).collect()
+    }
+
+    fn l2(x: &[f32]) -> f64 {
+        x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    #[test]
+    fn fwht_matches_naive_n8() {
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let mut y = x.clone();
+        fwht(&mut y);
+        // Naive H_8 multiply.
+        let mut expect = vec![0f32; 8];
+        for (i, e) in expect.iter_mut().enumerate() {
+            for (j, &v) in x.iter().enumerate() {
+                let sign = if (i & j).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
+                *e += sign * v;
+            }
+        }
+        assert_eq!(y, expect);
+    }
+
+    #[test]
+    fn normalized_is_self_inverse() {
+        for &n in &[1usize, 2, 8, 64, 1024] {
+            let x = randvec(n, 42);
+            let mut y = x.clone();
+            fwht_normalized(&mut y);
+            fwht_normalized(&mut y);
+            for (a, b) in x.iter().zip(&y) {
+                assert!((a - b).abs() < 1e-4, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_l2_norm() {
+        for &n in &[8usize, 256, 4096] {
+            let x = randvec(n, 7);
+            let before = l2(&x);
+            let mut y = x.clone();
+            rotate(&mut y, 123);
+            let after = l2(&y);
+            assert!(
+                (before - after).abs() / before < 1e-5,
+                "n={n} {before} {after}"
+            );
+        }
+    }
+
+    #[test]
+    fn rotate_then_inverse_is_identity() {
+        let x = randvec(512, 3);
+        let mut y = x.clone();
+        rotate(&mut y, 999);
+        rotate_inverse(&mut y, 999);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn different_seeds_give_different_rotations() {
+        let x = randvec(256, 5);
+        let mut a = x.clone();
+        let mut b = x.clone();
+        rotate(&mut a, 1);
+        rotate(&mut b, 2);
+        let diff = a.iter().zip(&b).filter(|(p, q)| (*p - *q).abs() > 1e-6).count();
+        assert!(diff > 200);
+    }
+
+    #[test]
+    fn rotation_spreads_spike() {
+        // A one-hot vector must spread to ~uniform magnitude — the property
+        // that makes per-coordinate quantization error dimension-friendly.
+        let n = 1024;
+        let mut x = vec![0f32; n];
+        x[17] = 1.0;
+        rotate(&mut x, 77);
+        let maxabs = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        assert!(maxabs < 5.0 / (n as f32).sqrt(), "maxabs={maxabs}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_pow2_panics() {
+        let mut x = vec![0f32; 12];
+        fwht(&mut x);
+    }
+}

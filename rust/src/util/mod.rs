@@ -1,0 +1,45 @@
+//! Dependency-free utilities: RNG + distributions, fast Walsh–Hadamard
+//! transform, bit packing, CSV/JSON writers, CLI parsing, stats.
+//!
+//! No `rand`/`serde`/`clap` — this environment builds offline with only
+//! the `xla` and `anyhow` crates, so these substrates are implemented here
+//! and unit-tested in place.
+
+pub mod bits;
+pub mod cli;
+pub mod csv;
+pub mod hadamard;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Round `x` up to the next multiple of `m` (m > 0).
+pub fn round_up(x: usize, m: usize) -> usize {
+    x.div_ceil(m) * m
+}
+
+/// Next power of two >= x (x >= 1).
+pub fn next_pow2(x: usize) -> usize {
+    x.next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn next_pow2_basics() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(1024), 1024);
+        assert_eq!(next_pow2(1025), 2048);
+    }
+}

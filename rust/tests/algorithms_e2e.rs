@@ -1,0 +1,321 @@
+//! End-to-end algorithm behaviour on the native engine (fast, hermetic):
+//! every protocol converges on the easy family, the paper's qualitative
+//! orderings hold, and the bit accounting matches the quantizer math.
+
+use quafl::config::{
+    Algorithm, AveragingMode, ExperimentConfig, QuantizerKind, TimingConfig,
+};
+use quafl::coordinator;
+use quafl::data::PartitionKind;
+
+fn base() -> ExperimentConfig {
+    ExperimentConfig {
+        n: 10,
+        s: 4,
+        k: 6,
+        rounds: 40,
+        eval_every: 40,
+        train_samples: 1500,
+        val_samples: 512,
+        seed: 5,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn quafl_converges_iid() {
+    let m = coordinator::run(&base()).unwrap();
+    assert!(m.final_acc() > 0.9, "acc={}", m.final_acc());
+    assert!(m.final_loss() < 0.5, "loss={}", m.final_loss());
+}
+
+#[test]
+fn fedavg_converges_iid() {
+    let cfg = ExperimentConfig {
+        algorithm: Algorithm::FedAvg,
+        quantizer: QuantizerKind::None,
+        ..base()
+    };
+    let m = coordinator::run(&cfg).unwrap();
+    assert!(m.final_acc() > 0.9, "acc={}", m.final_acc());
+}
+
+#[test]
+fn fedbuff_converges_iid() {
+    let cfg = ExperimentConfig {
+        algorithm: Algorithm::FedBuff,
+        quantizer: QuantizerKind::None,
+        ..base()
+    };
+    let m = coordinator::run(&cfg).unwrap();
+    assert!(m.final_acc() > 0.9, "acc={}", m.final_acc());
+}
+
+#[test]
+fn baseline_converges() {
+    let cfg = ExperimentConfig {
+        algorithm: Algorithm::Baseline,
+        rounds: 400,
+        eval_every: 400,
+        ..base()
+    };
+    let m = coordinator::run(&cfg).unwrap();
+    assert!(m.final_acc() > 0.9, "acc={}", m.final_acc());
+}
+
+#[test]
+fn quafl_converges_non_iid_with_slow_clients() {
+    // The headline robustness claim: by-class data + 30% slow clients.
+    let cfg = ExperimentConfig {
+        partition: PartitionKind::ByClass,
+        rounds: 80,
+        eval_every: 80,
+        timing: TimingConfig { slow_fraction: 0.3, ..Default::default() },
+        ..base()
+    };
+    let m = coordinator::run(&cfg).unwrap();
+    assert!(m.final_acc() > 0.6, "non-iid acc={}", m.final_acc());
+    // Some interactions must show partial/zero progress (asynchrony real).
+    assert!(m.mean_observed_steps() < cfg.k as f64);
+}
+
+#[test]
+fn quafl_wallclock_beats_fedavg_at_same_accuracy() {
+    // Figure 3/11's claim: in simulated time, non-blocking QuAFL reaches a
+    // given accuracy earlier than synchronous FedAvg when slow clients
+    // exist (FedAvg pays max-of-K-steps every round).
+    let mut quafl_cfg = ExperimentConfig {
+        rounds: 60,
+        eval_every: 5,
+        ..base()
+    };
+    quafl_cfg.timing.slow_fraction = 0.3;
+    let quafl_m = coordinator::run(&quafl_cfg).unwrap();
+    let fedavg_cfg = ExperimentConfig {
+        algorithm: Algorithm::FedAvg,
+        quantizer: QuantizerKind::None,
+        ..quafl_cfg
+    };
+    let fedavg_m = coordinator::run(&fedavg_cfg).unwrap();
+    let target = 0.9;
+    let tq = quafl_m.time_to_accuracy(target);
+    let tf = fedavg_m.time_to_accuracy(target);
+    assert!(tq.is_some(), "quafl never hit {target}");
+    if let (Some(tq), Some(tf)) = (tq, tf) {
+        assert!(
+            tq < tf,
+            "quafl time-to-acc {tq} should beat fedavg {tf}"
+        );
+    }
+}
+
+#[test]
+fn quantized_quafl_tracks_fp32_within_tolerance() {
+    // ≥3x compression without significant loss (Figure 2's claim):
+    // lattice b=10 final accuracy within 5 points of fp32.
+    let fp = coordinator::run(&ExperimentConfig {
+        quantizer: QuantizerKind::None,
+        ..base()
+    })
+    .unwrap();
+    let q10 = coordinator::run(&ExperimentConfig {
+        quantizer: QuantizerKind::Lattice { bits: 10 },
+        ..base()
+    })
+    .unwrap();
+    assert!(
+        q10.final_acc() > fp.final_acc() - 0.05,
+        "b10 {} vs fp32 {}",
+        q10.final_acc(),
+        fp.final_acc()
+    );
+    // And it must actually deliver the paper's >3x compression.
+    let ratio = fp.total_bits() as f64 / q10.total_bits() as f64;
+    assert!(ratio > 3.0, "compression ratio {ratio}");
+}
+
+#[test]
+fn bits_accounting_matches_quantizer_math() {
+    let cfg = ExperimentConfig {
+        rounds: 4,
+        eval_every: 4,
+        quantizer: QuantizerKind::Lattice { bits: 10 },
+        ..base()
+    };
+    let m = coordinator::run(&cfg).unwrap();
+    let d = quafl::quant::lattice::padded_dim(25_450); // mlp wire dim
+    let per_msg = (d * 10 + 32 + 64) as u64;
+    // Per round: s uplinks + s downlinks.
+    let expect = per_msg * (cfg.s as u64) * 2 * cfg.rounds as u64;
+    assert_eq!(m.total_bits(), expect);
+}
+
+#[test]
+fn averaging_ablation_runs_all_modes() {
+    for mode in [
+        AveragingMode::Both,
+        AveragingMode::ServerOnly,
+        AveragingMode::ClientOnly,
+    ] {
+        let cfg = ExperimentConfig { averaging: mode, rounds: 10, ..base() };
+        let m = coordinator::run(&cfg).unwrap();
+        assert!(m.final_loss().is_finite(), "{mode:?}");
+    }
+}
+
+#[test]
+fn weighted_variant_runs_and_converges() {
+    let cfg = ExperimentConfig {
+        weighted: true,
+        timing: TimingConfig { slow_fraction: 0.3, ..Default::default() },
+        ..base()
+    };
+    let m = coordinator::run(&cfg).unwrap();
+    assert!(m.final_acc() > 0.85, "weighted acc={}", m.final_acc());
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let a = coordinator::run(&base()).unwrap();
+    let b = coordinator::run(&base()).unwrap();
+    assert_eq!(a.final_acc(), b.final_acc());
+    assert_eq!(a.total_bits(), b.total_bits());
+    let c = coordinator::run(&ExperimentConfig { seed: 6, ..base() }).unwrap();
+    assert_ne!(a.final_loss(), c.final_loss());
+}
+
+#[test]
+fn quantization_degradation_quafl_not_worse_than_fedbuff() {
+    // Figure 16's transferable claim: adding quantization costs QuAFL
+    // (position-aware lattice) no more accuracy than it costs FedBuff
+    // (norm-scaled QSGD on updates), in the non-iid heterogeneous-speed
+    // setting. (Absolute cross-algorithm accuracy depends on compute
+    // budget; the quantization *interaction* is the invariant.)
+    let common = ExperimentConfig {
+        partition: PartitionKind::ByClass,
+        family: quafl::data::SynthFamily::Hard,
+        rounds: 60,
+        eval_every: 60,
+        timing: TimingConfig { slow_fraction: 0.3, ..Default::default() },
+        ..base()
+    };
+    let run = |algo: Algorithm, quant: QuantizerKind| {
+        coordinator::run(&ExperimentConfig {
+            algorithm: algo,
+            quantizer: quant,
+            ..common.clone()
+        })
+        .unwrap()
+        .final_acc()
+    };
+    let q_fp = run(Algorithm::QuAFL, QuantizerKind::None);
+    let q_lat = run(Algorithm::QuAFL, QuantizerKind::Lattice { bits: 10 });
+    let f_fp = run(Algorithm::FedBuff, QuantizerKind::None);
+    let f_qsgd = run(Algorithm::FedBuff, QuantizerKind::Qsgd { bits: 10 });
+    let quafl_cost = q_fp - q_lat;
+    let fedbuff_cost = f_fp - f_qsgd;
+    assert!(
+        quafl_cost <= fedbuff_cost + 0.03,
+        "quantization cost: quafl {quafl_cost:.4} (fp {q_fp:.3} -> {q_lat:.3}) \
+         vs fedbuff {fedbuff_cost:.4} (fp {f_fp:.3} -> {f_qsgd:.3})"
+    );
+    // Quantized QuAFL must remain close to its fp32 self (lattice works).
+    assert!(quafl_cost < 0.05, "lattice cost too high: {quafl_cost}");
+}
+
+#[test]
+fn potential_stays_bounded_lemma_3_4() {
+    // Empirical check of Lemma 3.4's contraction: the potential
+    // Φ_t = ‖X_t − μ_t‖² + Σ‖Xⁱ − μ_t‖² must stay bounded over a run —
+    // it cannot grow without bound even under non-iid data and slow
+    // clients. We check the last-quarter max is not larger than the
+    // overall max (no late-run blowup) and that all values are finite.
+    let cfg = ExperimentConfig {
+        partition: PartitionKind::ByClass,
+        rounds: 60,
+        eval_every: 60,
+        track_potential: true,
+        timing: TimingConfig { slow_fraction: 0.3, ..Default::default() },
+        ..base()
+    };
+    let m = coordinator::run(&cfg).unwrap();
+    assert_eq!(m.potential.len(), cfg.rounds);
+    assert!(m.potential.iter().all(|p| p.is_finite() && *p >= 0.0));
+    let overall_max = m.potential.iter().cloned().fold(0.0, f64::max);
+    let tail_max = m.potential[45..].iter().cloned().fold(0.0, f64::max);
+    assert!(
+        tail_max <= overall_max * 1.01,
+        "potential blew up late: tail {tail_max} vs max {overall_max}"
+    );
+    // And it should be small relative to the model norm scale (~O(1)).
+    assert!(overall_max < 100.0, "potential too large: {overall_max}");
+}
+
+#[test]
+fn failure_injection_truncated_message_panics_not_corrupts() {
+    // A truncated payload must fail loudly (BitReader overrun), never
+    // silently decode garbage.
+    use quafl::quant::{LatticeQuantizer, Quantizer};
+    let q = LatticeQuantizer::new(8, 0.01);
+    let x = vec![0.5f32; 100];
+    let mut msg = q.encode(&x, 1);
+    msg.payload.truncate(msg.payload.len() / 2);
+    let res = std::panic::catch_unwind(|| q.decode(&msg, &x));
+    assert!(res.is_err(), "truncated decode must panic");
+}
+
+#[test]
+fn failure_injection_wrong_key_dimension_panics() {
+    use quafl::quant::{LatticeQuantizer, Quantizer};
+    let q = LatticeQuantizer::new(8, 0.01);
+    let x = vec![0.5f32; 64];
+    let msg = q.encode(&x, 1);
+    let bad_key = vec![0.5f32; 32];
+    let res = std::panic::catch_unwind(|| q.decode(&msg, &bad_key));
+    assert!(res.is_err());
+}
+
+#[test]
+fn dirichlet_partition_end_to_end() {
+    let cfg = ExperimentConfig {
+        partition: PartitionKind::Dirichlet(0.3),
+        ..base()
+    };
+    let m = coordinator::run(&cfg).unwrap();
+    assert!(m.final_acc() > 0.7, "dirichlet acc={}", m.final_acc());
+}
+
+#[test]
+fn single_client_degenerates_to_local_sgd() {
+    // n = s = 1: QuAFL degenerates to (interrupted) local SGD with
+    // averaging weight 1/2 — must still converge.
+    let cfg = ExperimentConfig {
+        n: 1,
+        s: 1,
+        rounds: 80,
+        eval_every: 80,
+        quantizer: QuantizerKind::None,
+        ..base()
+    };
+    let m = coordinator::run(&cfg).unwrap();
+    assert!(m.final_acc() > 0.85, "acc={}", m.final_acc());
+}
+
+#[test]
+fn zero_progress_interactions_are_observed_with_high_poll_rate() {
+    // Poll fast (small swt) so slow clients often have H=0 — the paper's
+    // robustness scenario.
+    let mut cfg = base();
+    cfg.timing.swt = 1.0;
+    cfg.timing.slow_fraction = 0.5;
+    cfg.rounds = 60;
+    cfg.eval_every = 60;
+    let m = coordinator::run(&cfg).unwrap();
+    assert!(
+        m.zero_progress_fraction() > 0.05,
+        "expected zero-progress interactions, got {}",
+        m.zero_progress_fraction()
+    );
+    // ...and the run must still converge despite them.
+    assert!(m.final_acc() > 0.8, "acc={}", m.final_acc());
+}

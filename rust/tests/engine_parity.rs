@@ -1,0 +1,113 @@
+//! Engine parity: the XLA artifact path (Pallas kernels → JAX → HLO →
+//! PJRT) and the native Rust engine implement the *same* training math.
+//! Same params + same batches ⇒ near-identical losses and parameters,
+//! step for step. This is the strongest cross-layer correctness signal in
+//! the repo: it transitively checks the Pallas kernels, the hand-written
+//! custom_vjp backward, the AOT lowering, the HLO text round-trip, the
+//! PJRT marshaling, and the native implementation against each other.
+
+use quafl::data::{SynthFamily, SynthSpec};
+use quafl::engine::{NativeEngine, TrainEngine, XlaEngine};
+use quafl::model::ModelSpec;
+use quafl::util::stats::{l2_norm, max_abs_diff};
+
+const ARTIFACTS: &str = "artifacts";
+
+fn artifacts_available() -> bool {
+    std::path::Path::new(ARTIFACTS).join("meta.json").exists()
+}
+
+#[test]
+fn step_for_step_parity_mlp() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let spec = ModelSpec::by_name("mlp").unwrap();
+    let mut xla = XlaEngine::new(ARTIFACTS, &spec).unwrap();
+    let mut native = NativeEngine::new(spec.clone(), 32);
+    let mut p_xla = spec.init_params(11);
+    let mut p_native = p_xla.clone();
+    let (train, _) = SynthSpec::family(SynthFamily::Hard, 512, 32, 21).generate();
+
+    let mut rng = quafl::util::rng::Rng::new(33);
+    for step in 0..10 {
+        let idx: Vec<usize> = (0..32).map(|_| rng.gen_range(train.len())).collect();
+        let batch = train.gather_batch(&idx);
+        let lx = xla.train_step(&mut p_xla, &batch, 0.1).unwrap();
+        let ln = native.train_step(&mut p_native, &batch, 0.1).unwrap();
+        assert!(
+            (lx - ln).abs() < 1e-3 * (1.0 + ln.abs()),
+            "step {step}: xla loss {lx} vs native {ln}"
+        );
+        let scale = l2_norm(&p_native).max(1.0) as f32;
+        let diff = max_abs_diff(&p_xla, &p_native);
+        assert!(
+            diff < 2e-4 * scale,
+            "step {step}: param divergence {diff} (scale {scale})"
+        );
+    }
+}
+
+#[test]
+fn parity_holds_for_deep_model() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let spec = ModelSpec::by_name("mlp_deep").unwrap();
+    let mut xla = XlaEngine::new(ARTIFACTS, &spec).unwrap();
+    let mut native = NativeEngine::new(spec.clone(), 32);
+    let mut p_xla = spec.init_params(5);
+    let mut p_native = p_xla.clone();
+    let (train, _) = SynthSpec::family(SynthFamily::Mnist, 256, 32, 8).generate();
+    let idx: Vec<usize> = (0..32).collect();
+    let batch = train.gather_batch(&idx);
+    for step in 0..3 {
+        let lx = xla.train_step(&mut p_xla, &batch, 0.05).unwrap();
+        let ln = native.train_step(&mut p_native, &batch, 0.05).unwrap();
+        assert!(
+            (lx - ln).abs() < 2e-3 * (1.0 + ln.abs()),
+            "step {step}: {lx} vs {ln}"
+        );
+    }
+    let diff = max_abs_diff(&p_xla, &p_native);
+    assert!(diff < 1e-3, "deep model divergence {diff}");
+}
+
+#[test]
+fn full_quafl_run_agrees_across_engines() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // Same config/seed through the whole coordinator: final accuracy from
+    // the two engines must agree closely (trajectories are identical
+    // modulo float accumulation order).
+    use quafl::config::ExperimentConfig;
+    let mut cfg = ExperimentConfig {
+        n: 6,
+        s: 2,
+        k: 3,
+        rounds: 8,
+        eval_every: 8,
+        train_samples: 512,
+        val_samples: 256,
+        seed: 77,
+        ..Default::default()
+    };
+    cfg.use_xla = false;
+    let native = quafl::coordinator::run(&cfg).unwrap();
+    cfg.use_xla = true;
+    let xla = quafl::coordinator::run(&cfg).unwrap();
+    let (a, b) = (native.final_acc(), xla.final_acc());
+    assert!(
+        (a - b).abs() < 0.05,
+        "native acc {a} vs xla acc {b}"
+    );
+    let (la, lb) = (native.final_loss(), xla.final_loss());
+    assert!(
+        (la - lb).abs() < 0.05 * (1.0 + la.abs()),
+        "native loss {la} vs xla loss {lb}"
+    );
+}

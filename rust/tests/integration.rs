@@ -1,0 +1,163 @@
+//! Integration over the runtime + AOT artifacts: loads the HLO text the
+//! python compile path emitted, executes it via PJRT, and checks the
+//! numerics against the native engine's math. Requires `make artifacts`.
+
+use quafl::data::{SynthFamily, SynthSpec};
+use quafl::engine::{NativeEngine, TrainEngine, XlaEngine};
+use quafl::model::ModelSpec;
+use quafl::runtime::Runtime;
+
+const ARTIFACTS: &str = "artifacts";
+
+fn artifacts_available() -> bool {
+    std::path::Path::new(ARTIFACTS).join("meta.json").exists()
+}
+
+#[test]
+fn runtime_loads_meta_and_compiles_every_model() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new(ARTIFACTS).unwrap();
+    assert_eq!(rt.platform(), "cpu");
+    assert!(rt.meta.models.contains_key("mlp"));
+    for (name, m) in &rt.meta.models {
+        let spec = ModelSpec::by_name(name).unwrap();
+        assert_eq!(m.sizes, spec.sizes, "{name}");
+        assert_eq!(m.num_params, spec.num_params(), "{name}");
+        // Compiling must succeed for both artifacts.
+        rt.compile(&m.train_step_file)
+            .unwrap_or_else(|e| panic!("{name} train: {e:#}"));
+        rt.compile(&m.eval_file)
+            .unwrap_or_else(|e| panic!("{name} eval: {e:#}"));
+    }
+}
+
+#[test]
+fn xla_train_step_executes_and_decreases_loss() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let spec = ModelSpec::by_name("mlp").unwrap();
+    let mut engine = XlaEngine::new(ARTIFACTS, &spec).unwrap();
+    let mut params = spec.init_params(3);
+    let (train, _) = SynthSpec::family(SynthFamily::Mnist, 256, 32, 5).generate();
+    let idx: Vec<usize> = (0..32).collect();
+    let batch = train.gather_batch(&idx);
+    let mut losses = Vec::new();
+    for _ in 0..5 {
+        losses.push(engine.train_step(&mut params, &batch, 0.2).unwrap());
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.8),
+        "losses={losses:?}"
+    );
+    assert!(params.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn xla_eval_matches_native_eval() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let spec = ModelSpec::by_name("mlp").unwrap();
+    let params = spec.init_params(7);
+    let (_, val) = SynthSpec::family(SynthFamily::Mnist, 64, 512, 9).generate();
+    let mut xla = XlaEngine::new(ARTIFACTS, &spec).unwrap();
+    let mut native = NativeEngine::new(spec.clone(), 32);
+    let (xl, xa) = xla.evaluate(&params, &val).unwrap();
+    let (nl, na) = native.evaluate(&params, &val).unwrap();
+    assert!((xl - nl).abs() < 1e-3, "xla loss {xl} vs native {nl}");
+    assert!((xa - na).abs() < 1e-3, "xla acc {xa} vs native {na}");
+}
+
+#[test]
+fn xla_rejects_wrong_batch_size() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let spec = ModelSpec::by_name("mlp").unwrap();
+    let mut engine = XlaEngine::new(ARTIFACTS, &spec).unwrap();
+    let mut params = spec.init_params(1);
+    let (train, _) = SynthSpec::family(SynthFamily::Mnist, 64, 16, 2).generate();
+    let idx: Vec<usize> = (0..16).collect();
+    let batch = train.gather_batch(&idx);
+    assert!(engine.train_step(&mut params, &batch, 0.1).is_err());
+}
+
+#[test]
+fn fused_train_k_matches_sequential_steps() {
+    // The §Perf L2 fused-burst artifact must be numerically identical to
+    // h sequential train_step dispatches (same batches).
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let spec = ModelSpec::by_name("mlp").unwrap();
+    let mut engine = XlaEngine::new(ARTIFACTS, &spec).unwrap();
+    let (train, _) = SynthSpec::family(SynthFamily::Hard, 512, 32, 7).generate();
+    let batches: Vec<_> = (0..7)
+        .map(|i| {
+            let idx: Vec<usize> = (i * 32..(i + 1) * 32).collect();
+            train.gather_batch(&idx)
+        })
+        .collect();
+    let init = spec.init_params(9);
+
+    let mut p_seq = init.clone();
+    let mut loss_seq = 0.0f32;
+    for b in &batches {
+        loss_seq += engine.train_step(&mut p_seq, b, 0.05).unwrap();
+    }
+    let mut p_fused = init.clone();
+    let loss_fused = engine.train_steps(&mut p_fused, &batches, 0.05).unwrap();
+
+    assert!(
+        (loss_seq - loss_fused).abs() < 1e-3 * (1.0 + loss_seq.abs()),
+        "loss {loss_seq} vs fused {loss_fused}"
+    );
+    let diff = quafl::util::stats::max_abs_diff(&p_seq, &p_fused);
+    assert!(diff < 1e-4, "fused/sequential divergence {diff}");
+}
+
+#[test]
+fn fused_train_k_chunks_bursts_longer_than_k_max() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let spec = ModelSpec::by_name("mlp").unwrap();
+    let mut engine = XlaEngine::new(ARTIFACTS, &spec).unwrap();
+    let (train, _) = SynthSpec::family(SynthFamily::Mnist, 512, 32, 2).generate();
+    // 15 batches > k_max=10: must chunk and still decrease loss.
+    let batches: Vec<_> = (0..15)
+        .map(|i| {
+            let idx: Vec<usize> = (i * 32..(i + 1) * 32).collect();
+            train.gather_batch(&idx)
+        })
+        .collect();
+    let mut params = spec.init_params(2);
+    let first = engine.train_steps(&mut params, &batches[..1], 0.2).unwrap();
+    let _ = engine.train_steps(&mut params, &batches, 0.2).unwrap();
+    let last = engine.train_steps(&mut params, &batches[..1], 0.2).unwrap();
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn eval_handles_non_multiple_dataset_sizes() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // 300 samples with eval batch 256 exercises the wrap-around path.
+    let spec = ModelSpec::by_name("mlp").unwrap();
+    let params = spec.init_params(4);
+    let (_, val) = SynthSpec::family(SynthFamily::Mnist, 32, 300, 3).generate();
+    let mut xla = XlaEngine::new(ARTIFACTS, &spec).unwrap();
+    let (loss, acc) = xla.evaluate(&params, &val).unwrap();
+    assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+}

@@ -1,0 +1,208 @@
+//! Property tests over the quantizers (proptest substitute: the in-crate
+//! mini harness `quafl::testing`). These encode Lemma 3.1's guarantees:
+//! unbiasedness, bounded error, decodability within the model-distance
+//! radius, and exact bit accounting — across randomized dims, scales,
+//! bit-widths and seeds.
+
+use quafl::prop_assert;
+use quafl::quant::lattice::padded_dim;
+use quafl::quant::{
+    lattice_gamma_for, IdentityQuantizer, LatticeQuantizer, QsgdQuantizer,
+    Quantizer,
+};
+use quafl::testing::{check, PropConfig};
+use quafl::util::rng::Rng;
+use quafl::util::stats::{l2_dist, l2_norm};
+
+fn randvec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+#[test]
+fn prop_lattice_error_bound_self_key() {
+    // ‖Q(x) − x‖ ≤ γ·√d′ when decoding against x itself (Lemma 3.1 (2)).
+    check(
+        "lattice_error_bound",
+        PropConfig { cases: 40, max_size: 3000, ..Default::default() },
+        |rng, size| {
+            let bits = 4 + (rng.gen_range(8)) as u8;
+            let gamma = 10f32.powi(rng.gen_range(5) as i32 - 4);
+            let q = LatticeQuantizer::new(bits, gamma);
+            let x = randvec(rng, size, 1.0);
+            let y = q.decode(&q.encode(&x, rng.next_u64()), &x);
+            let bound = gamma as f64 * (padded_dim(size) as f64).sqrt();
+            let err = l2_dist(&x, &y);
+            prop_assert!(
+                err <= bound + 1e-6,
+                "err {err} > bound {bound} (bits={bits} gamma={gamma} d={size})"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lattice_decodes_within_radius() {
+    // If ‖x − key‖ ≤ dist and γ = lattice_gamma_for(dist, ...), decoding
+    // recovers the encoder's grid point: error stays ≤ γ√d′ even though
+    // the key differs from x (position-aware decoding).
+    check(
+        "lattice_radius",
+        PropConfig { cases: 30, max_size: 4096, ..Default::default() },
+        |rng, size| {
+            let size = size.max(8);
+            let bits = 6 + (rng.gen_range(7)) as u8;
+            let dist = 0.01 + rng.next_f64() * 2.0;
+            let gamma = lattice_gamma_for(dist, bits, size);
+            let q = LatticeQuantizer::new(bits, gamma);
+            let x = randvec(rng, size, 1.0);
+            let dir = randvec(rng, size, 1.0);
+            let dn = l2_norm(&dir).max(1e-12);
+            let key: Vec<f32> = x
+                .iter()
+                .zip(&dir)
+                .map(|(v, d)| v + d * (dist / dn) as f32)
+                .collect();
+            let y = q.decode(&q.encode(&x, rng.next_u64()), &key);
+            let bound = gamma as f64 * (padded_dim(size) as f64).sqrt();
+            let err = l2_dist(&x, &y);
+            prop_assert!(
+                err <= bound * 1.01 + 1e-6,
+                "err {err} > {bound} (bits={bits} dist={dist:.3} d={size})"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lattice_bits_exact() {
+    check(
+        "lattice_bits",
+        PropConfig { cases: 20, max_size: 5000, ..Default::default() },
+        |rng, size| {
+            let bits = 2 + (rng.gen_range(12)) as u8;
+            let q = LatticeQuantizer::new(bits, 0.01);
+            let x = randvec(rng, size, 1.0);
+            let msg = q.encode(&x, 1);
+            let expect = padded_dim(size) * bits as usize + 32 + 64;
+            prop_assert!(
+                msg.bits == expect,
+                "bits {} != {expect} (b={bits}, d={size})",
+                msg.bits
+            );
+            prop_assert!(
+                msg.payload.len() * 8 >= msg.bits - 64,
+                "payload shorter than bit count"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_qsgd_error_bound() {
+    check(
+        "qsgd_error",
+        PropConfig { cases: 40, max_size: 4000, ..Default::default() },
+        |rng, size| {
+            let bits = 2 + (rng.gen_range(10)) as u8;
+            let q = QsgdQuantizer::new(bits);
+            let scale = 10f32.powi(rng.gen_range(5) as i32 - 2);
+            let x = randvec(rng, size, scale);
+            let y = q.decode(&q.encode(&x, rng.next_u64()), &x);
+            let s = ((1u32 << (bits - 1)) - 1) as f64;
+            let bound = l2_norm(&x) * (size as f64).sqrt() / s;
+            let err = l2_dist(&x, &y);
+            prop_assert!(err <= bound + 1e-6, "err {err} > bound {bound}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_all_quantizers_unbiased_small_dim() {
+    // Mean of repeated encodes ≈ x (stochastic rounding unbiasedness).
+    check(
+        "unbiased",
+        PropConfig { cases: 6, max_size: 48, ..Default::default() },
+        |rng, size| {
+            let size = size.max(4);
+            let x = randvec(rng, size, 1.0);
+            let qs: Vec<Box<dyn Quantizer>> = vec![
+                Box::new(LatticeQuantizer::new(5, 0.1)),
+                Box::new(QsgdQuantizer::new(4)),
+            ];
+            for q in qs {
+                let trials = 500u64;
+                let mut acc = vec![0f64; size];
+                for t in 0..trials {
+                    let y = q.decode(&q.encode(&x, rng.next_u64() ^ t), &x);
+                    for (a, v) in acc.iter_mut().zip(&y) {
+                        *a += *v as f64;
+                    }
+                }
+                let mean: Vec<f32> =
+                    acc.iter().map(|a| (*a / trials as f64) as f32).collect();
+                let bias = l2_dist(&mean, &x);
+                let tol = 0.05 * (size as f64).sqrt().max(1.0)
+                    * l2_norm(&x).max(1.0)
+                    / (trials as f64).sqrt()
+                    * 10.0;
+                prop_assert!(
+                    bias < tol.max(0.05),
+                    "{}: bias {bias} > {tol}",
+                    q.name()
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_identity_lossless_any_values() {
+    check(
+        "identity_lossless",
+        PropConfig { cases: 20, max_size: 2000, ..Default::default() },
+        |rng, size| {
+            let q = IdentityQuantizer;
+            let x: Vec<f32> = (0..size)
+                .map(|_| f32::from_bits(rng.next_u32()))
+                .map(|v| if v.is_nan() { 0.0 } else { v })
+                .collect();
+            let y = q.decode(&q.encode(&x, 0), &x);
+            prop_assert!(
+                x.iter().zip(&y).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "identity not bit-exact"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lattice_roundtrip_through_rotation_seeds() {
+    // Decoding with the wrong seed must NOT give the right answer (the
+    // rotation is part of the shared randomness contract).
+    check(
+        "lattice_seed_contract",
+        PropConfig { cases: 10, max_size: 512, ..Default::default() },
+        |rng, size| {
+            let size = size.max(64);
+            let q = LatticeQuantizer::new(8, 0.01);
+            let x = randvec(rng, size, 1.0);
+            let mut msg = q.encode(&x, 42);
+            let good = q.decode(&msg, &x);
+            msg.seed = 43; // tamper
+            let bad = q.decode(&msg, &x);
+            let egood = l2_dist(&good, &x);
+            let ebad = l2_dist(&bad, &x);
+            prop_assert!(
+                ebad > egood * 10.0,
+                "wrong-seed decode suspiciously good: {ebad} vs {egood}"
+            );
+            Ok(())
+        },
+    );
+}
