@@ -13,6 +13,9 @@ fn main() {
         s: 5,
         k: 10,
         rounds: 10,
+        // Pin one worker so the rows measure serial per-round cost and stay
+        // comparable across machines; bench_round owns the workers sweep.
+        workers: 1,
         eval_every: 1_000_000,
         train_samples: 2000,
         val_samples: 256,

@@ -22,6 +22,7 @@ fn main() {
             s: 5,
             k: 10,
             rounds: 10,
+            workers: 1,
             eval_every: 1_000_000, // never evaluate inside the bench
             train_samples: 2000,
             val_samples: 256,
@@ -30,6 +31,33 @@ fn main() {
         bench_units(
             &format!("{} 10 rounds (n=20 s=5 K=10, engine incl)", algo.name()),
             10.0,
+            "rounds",
+            || {
+                std::hint::black_box(coordinator::run(&cfg).unwrap());
+            },
+        );
+    }
+
+    // Parallel client-execution scaling (§exec): QuAFL at the paper's
+    // large-fleet scale (n=300, s=32) across worker counts. Trajectories
+    // are bit-identical across rows; only wall-clock changes. The
+    // acceptance target is >= 2x speedup at workers=8 vs workers=1.
+    for workers in [1usize, 2, 4, 8] {
+        let cfg = ExperimentConfig {
+            algorithm: Algorithm::QuAFL,
+            n: 300,
+            s: 32,
+            k: 10,
+            rounds: 2,
+            workers,
+            eval_every: 1_000_000,
+            train_samples: 6000,
+            val_samples: 256,
+            ..Default::default()
+        };
+        bench_units(
+            &format!("quafl scaling n=300 s=32 K=10 workers={workers} (2 rounds)"),
+            2.0,
             "rounds",
             || {
                 std::hint::black_box(coordinator::run(&cfg).unwrap());

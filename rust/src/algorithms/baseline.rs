@@ -3,11 +3,17 @@
 //! optimization step per round. Fastest per-round convergence, slowest in
 //! wall-clock — the anchor for the time-vs-rounds comparisons
 //! (Figures 3, 10–15).
+//!
+//! Routed through the same [`crate::exec`] fan-out as the federated
+//! protocols (one single-step task per round — degenerates to the serial
+//! path on the primary engine) so all four algorithms share one execution
+//! substrate.
 
 use anyhow::Result;
 
 use crate::coordinator::FlRun;
 use crate::data::Shard;
+use crate::exec::ClientTask;
 use crate::metrics::RunMetrics;
 use crate::util::rng::{derive_seed, Rng};
 
@@ -15,7 +21,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     let cfg = ctx.cfg.clone();
     let mut metrics = RunMetrics::new("baseline");
 
-    let mut x = ctx.engine.spec().init_params(derive_seed(cfg.seed, 0x1417));
+    let mut x = ctx.spec.init_params(derive_seed(cfg.seed, 0x1417));
     // The baseline node sees the whole training set.
     let all: Vec<usize> = (0..ctx.train.len()).collect();
     let mut shard = Shard::new(all, Rng::new(derive_seed(cfg.seed, 0xBA5E)));
@@ -29,10 +35,12 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
 
     for t in 0..cfg.rounds {
         now += step_rng.exponential(cfg.timing.slow_lambda);
-        let idx = shard.sample_batch(cfg.batch);
-        let batch = ctx.train.gather_batch(&idx);
-        ctx.engine.train_step(&mut x, &batch, cfg.lr)?;
-        total_steps += 1;
+        let task =
+            ClientTask::gather(0, x, &mut shard, &ctx.train, cfg.batch, 1, cfg.lr);
+        let mut results = ctx.pool.run_local_sgd(vec![task])?;
+        let r = results.pop().expect("one task in, one result out");
+        x = r.params;
+        total_steps += r.steps as u64;
         metrics.total_interactions += 1;
         metrics.sum_observed_steps += 1;
 

@@ -6,10 +6,14 @@
 //! K local steps; it then averages the returned models equally. The round
 //! duration is max_i(time for K steps) + sit, and swt = 0 (the server
 //! calls again immediately) — both straight from the paper.
+//!
+//! The s independent K-step bursts run through the [`crate::exec`]
+//! fan-out; the equal-weight average folds the returned models in sampled
+//! order, so the trajectory is bit-identical to the serial path.
 
 use anyhow::Result;
 
-use super::local_sgd;
+use super::make_task;
 use crate::coordinator::FlRun;
 use crate::metrics::RunMetrics;
 use crate::model::params;
@@ -17,10 +21,10 @@ use crate::util::rng::derive_seed;
 
 pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     let cfg = ctx.cfg.clone();
-    let d = ctx.engine.spec().num_params();
+    let d = ctx.spec.num_params();
     let mut metrics = RunMetrics::new("fedavg");
 
-    let mut x_server = ctx.engine.spec().init_params(derive_seed(cfg.seed, 0x1417));
+    let mut x_server = ctx.spec.init_params(derive_seed(cfg.seed, 0x1417));
     let mut now = 0f64;
     let mut bits_up = 0u64;
     let mut bits_down = 0u64;
@@ -35,9 +39,10 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         let sampled = ctx.rng.sample_distinct(cfg.n, cfg.s);
 
         // Synchronous barrier: the round takes as long as the slowest
-        // sampled client needs for its K steps.
+        // sampled client needs for its K steps. Pre-pass advances clocks
+        // and snapshots each client's K-step burst from X_t.
         let mut round_end = now;
-        let mut sum = vec![0f32; d];
+        let mut tasks = Vec::with_capacity(sampled.len());
         for &i in &sampled {
             ctx.clocks[i].restart(now);
             let finish = ctx.clocks[i].finish_time_for(cfg.k);
@@ -45,14 +50,18 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
 
             metrics.total_interactions += 1;
             metrics.sum_observed_steps += cfg.k as u64;
-
-            let mut x_i = x_server.clone();
-            local_sgd(ctx, i, &mut x_i, cfg.k)?;
             total_steps += cfg.k as u64;
-            params::axpy(&mut sum, 1.0 / cfg.s as f32, &x_i);
-
             bits_down += model_bits;
             bits_up += model_bits;
+
+            tasks.push(make_task(ctx, i, x_server.clone(), cfg.k, cfg.lr));
+        }
+
+        // Fan out the K-step bursts; average in sampled order.
+        let results = ctx.pool.run_local_sgd(tasks)?;
+        let mut sum = vec![0f32; d];
+        for r in &results {
+            params::axpy(&mut sum, 1.0 / cfg.s as f32, &r.params);
         }
         x_server = sum;
         now = round_end + cfg.timing.sit;

@@ -9,6 +9,17 @@
 //! of size Z; when full it applies X ← X − η_g·mean(Δ) and the round
 //! counter advances.
 //!
+//! Parallel structure: the server model only changes at aggregation
+//! boundaries, so the Z finish-events that fill one buffer are fully
+//! determined (which client, from which pulled snapshot, on which batches)
+//! *before* any of their SGD runs. The event-queue walk stays serial —
+//! popping events, advancing clocks, drawing batches, assigning per-
+//! message compression seeds in event order — and the Z K-step bursts +
+//! Δ compression fan out through [`crate::exec`]; the buffer then applies
+//! in event order (bit-identical to the serial path). A fast client can
+//! legitimately appear twice in one buffer; both its bursts land in event
+//! order because its batches were drawn serially.
+//!
 //! The paper's qualitative claim reproduced here: under heterogeneous
 //! speeds slow clients contribute systematically fewer buffer entries, so
 //! with non-i.i.d. data the model skews toward fast clients' distributions
@@ -19,9 +30,10 @@ use std::collections::BinaryHeap;
 
 use anyhow::Result;
 
-use super::local_sgd;
+use super::make_task;
 use crate::config::QuantizerKind;
 use crate::coordinator::FlRun;
+use crate::engine::TrainEngine;
 use crate::metrics::RunMetrics;
 use crate::model::params;
 use crate::quant::{QsgdQuantizer, Quantizer};
@@ -53,7 +65,7 @@ impl Ord for Finish {
 
 pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     let cfg = ctx.cfg.clone();
-    let d = ctx.engine.spec().num_params();
+    let d = ctx.spec.num_params();
     let mut metrics = RunMetrics::new("fedbuff");
 
     // FedBuff compresses *updates* with QSGD when quantization is on;
@@ -65,7 +77,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         QuantizerKind::None => None,
     };
 
-    let mut x_server = ctx.engine.spec().init_params(derive_seed(cfg.seed, 0x1417));
+    let mut x_server = ctx.spec.init_params(derive_seed(cfg.seed, 0x1417));
     // Every client starts computing on the init model at time 0.
     let mut pulled: Vec<Vec<f32>> = vec![x_server.clone(); cfg.n];
     let mut queue: BinaryHeap<Reverse<Finish>> = BinaryHeap::new();
@@ -75,7 +87,6 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         queue.push(Reverse(Finish { time: t, id: i }));
     }
 
-    let mut buffer: Vec<Vec<f32>> = Vec::with_capacity(cfg.fedbuff_buffer);
     let mut now = 0f64;
     let mut bits_up = 0u64;
     let mut bits_down = 0u64;
@@ -87,56 +98,73 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     ctx.eval_point(&mut metrics, 0, now, 0, 0, 0, &x_server)?;
 
     while aggregations < cfg.rounds {
-        let Reverse(Finish { time, id }) = queue.pop().expect("queue non-empty");
-        now = time;
+        // Serial event-queue walk: pop the Z finishes that fill this
+        // buffer, in event order. Each popped client materializes its
+        // burst (start snapshot + batch draws) and immediately re-pulls
+        // the current server model and restarts.
+        let mut tasks = Vec::with_capacity(cfg.fedbuff_buffer);
+        while tasks.len() < cfg.fedbuff_buffer {
+            let Reverse(Finish { time, id }) = queue.pop().expect("queue non-empty");
+            now = time;
+            metrics.total_interactions += 1;
+            metrics.sum_observed_steps += cfg.k as u64;
+            total_steps += cfg.k as u64;
 
-        // Client `id` finished K steps on its pulled snapshot: materialize.
-        let mut x_local = pulled[id].clone();
-        local_sgd(ctx, id, &mut x_local, cfg.k)?;
-        total_steps += cfg.k as u64;
-        metrics.total_interactions += 1;
-        metrics.sum_observed_steps += cfg.k as u64;
+            // Client `id` finished K steps on its pulled snapshot; it
+            // pulls the current model (uncompressed, as in [30]) and
+            // restarts immediately.
+            let start = std::mem::replace(&mut pulled[id], x_server.clone());
+            let mut task = make_task(ctx, id, start, cfg.k, cfg.lr);
+            if up_quant.is_some() {
+                msg_counter += 1;
+                task.seed = derive_seed(cfg.seed, 0xFB0F ^ msg_counter);
+            }
+            tasks.push(task);
 
-        // Δ = pulled - local (a descent direction scaled by η·h̃).
-        let mut delta = params::sub(&pulled[id], &x_local);
-        if let Some(q) = &up_quant {
-            msg_counter += 1;
-            let msg = q.encode(&delta, derive_seed(cfg.seed, 0xFB0F ^ msg_counter));
-            bits_up += msg.bits as u64;
-            delta = q.decode(&msg, &delta);
-        } else {
-            bits_up += model_bits;
+            bits_down += model_bits;
+            ctx.clocks[id].restart(now);
+            let t_next = ctx.clocks[id].finish_time_for(cfg.k);
+            queue.push(Reverse(Finish { time: t_next, id }));
         }
-        buffer.push(delta);
 
-        // Client pulls the current model (uncompressed, as in [30]) and
-        // restarts immediately.
-        pulled[id] = x_server.clone();
-        bits_down += model_bits;
-        ctx.clocks[id].restart(now);
-        let t_next = ctx.clocks[id].finish_time_for(cfg.k);
-        queue.push(Reverse(Finish { time: t_next, id }));
+        // Fan out the Z bursts; each worker also forms and (optionally)
+        // compresses its Δ = pulled − local with its pre-assigned seed.
+        let up_quant_ref = up_quant.as_ref();
+        let deltas = ctx.pool.map(tasks, |engine: &mut dyn TrainEngine, task| {
+            let mut x_local = task.params.clone();
+            engine.train_steps(&mut x_local, &task.batches, task.lr)?;
+            // Δ = pulled - local (a descent direction scaled by η·h̃).
+            let mut delta = params::sub(&task.params, &x_local);
+            let bits = if let Some(q) = up_quant_ref {
+                let msg = q.encode(&delta, task.seed);
+                let b = msg.bits as u64;
+                delta = q.decode(&msg, &delta);
+                b
+            } else {
+                model_bits
+            };
+            Ok((delta, bits))
+        })?;
 
-        // Server aggregates when the buffer fills.
-        if buffer.len() >= cfg.fedbuff_buffer {
-            let scale = cfg.fedbuff_server_lr / buffer.len() as f32;
-            for delta in buffer.drain(..) {
-                params::axpy(&mut x_server, -scale, &delta);
-            }
-            aggregations += 1;
-            now += cfg.timing.sit;
+        // Server aggregates the full buffer, applying Δs in event order.
+        let scale = cfg.fedbuff_server_lr / deltas.len() as f32;
+        for (delta, bits) in deltas {
+            bits_up += bits;
+            params::axpy(&mut x_server, -scale, &delta);
+        }
+        aggregations += 1;
+        now += cfg.timing.sit;
 
-            if aggregations % cfg.eval_every == 0 || aggregations == cfg.rounds {
-                ctx.eval_point(
-                    &mut metrics,
-                    aggregations,
-                    now,
-                    total_steps,
-                    bits_up,
-                    bits_down,
-                    &x_server,
-                )?;
-            }
+        if aggregations % cfg.eval_every == 0 || aggregations == cfg.rounds {
+            ctx.eval_point(
+                &mut metrics,
+                aggregations,
+                now,
+                total_steps,
+                bits_up,
+                bits_down,
+                &x_server,
+            )?;
         }
     }
     Ok(metrics)

@@ -11,6 +11,15 @@
 //! All four consume the same [`crate::coordinator::FlRun`] context and
 //! produce the same [`crate::metrics::RunMetrics`], so every figure
 //! compares like with like (same data, same engine, same timing model).
+//!
+//! Every protocol executes its per-round client work through the parallel
+//! fan-out subsystem ([`crate::exec`]): a serial pre-pass snapshots each
+//! sampled client's work into a [`crate::exec::ClientTask`] (advancing the
+//! per-client RNG streams in sampled/event order),
+//! [`crate::exec::EnginePool::map`] runs the tasks across `cfg.workers`
+//! engines, and the reduction folds results back **in task order** — so
+//! trajectories are bit-identical to the serial path for any worker count
+//! (rust/tests/parallel_parity.rs).
 
 pub mod baseline;
 pub mod fedavg;
@@ -18,37 +27,25 @@ pub mod fedbuff;
 pub mod quafl;
 
 use crate::coordinator::FlRun;
-use crate::data::Batch;
+use crate::exec::ClientTask;
 
-/// Run `h` local SGD steps from `params` on client `client_id`'s shard.
-/// Returns the summed training loss over the steps (diagnostics) — the
-/// resulting parameters are written in place.
-pub(crate) fn local_sgd(
+/// Snapshot client `client_id`'s next `h`-step SGD burst from `params`
+/// into a task, drawing its batches from the client's shard (the draw
+/// order is what makes the fan-out deterministic — see [`crate::exec`]).
+pub(crate) fn make_task(
     ctx: &mut FlRun,
     client_id: usize,
-    params: &mut [f32],
-    h: usize,
-) -> anyhow::Result<f32> {
-    local_sgd_lr(ctx, client_id, params, h, ctx.cfg.lr)
-}
-
-/// `local_sgd` with an explicit learning rate (the weighted QuAFL variant
-/// rescales η globally — see quafl.rs). The whole h-step burst goes
-/// through `TrainEngine::train_steps`, which the XLA engine fuses into a
-/// single PJRT dispatch (§Perf L2).
-pub(crate) fn local_sgd_lr(
-    ctx: &mut FlRun,
-    client_id: usize,
-    params: &mut [f32],
+    params: Vec<f32>,
     h: usize,
     lr: f32,
-) -> anyhow::Result<f32> {
-    let batch_size = ctx.cfg.batch;
-    let batches: Vec<Batch> = (0..h)
-        .map(|_| {
-            let idx = ctx.shards[client_id].sample_batch(batch_size);
-            ctx.train.gather_batch(&idx)
-        })
-        .collect();
-    ctx.engine.train_steps(params, &batches, lr)
+) -> ClientTask {
+    ClientTask::gather(
+        client_id,
+        params,
+        &mut ctx.shards[client_id],
+        &ctx.train,
+        ctx.cfg.batch,
+        h,
+        lr,
+    )
 }

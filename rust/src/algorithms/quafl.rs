@@ -22,27 +22,49 @@
 //! The Figure 4 ablation modes replace step 2/3's averaging:
 //! `ServerOnly` has clients adopt Q(X_t) outright; `ClientOnly` has the
 //! server adopt the mean of the received Q(Y^i).
+//!
+//! Step 2 is embarrassingly parallel across the sampled clients — each
+//! touches only its own model/shard/clock and decodes against round-
+//! constant keys (X_t, Enc(X_t)) — so it runs through the [`crate::exec`]
+//! fan-out: clocks/metrics/batch draws in a serial pre-pass, SGD + both
+//! coding directions in the workers, and the Σ Q(Y^i) accumulation in
+//! sampled order during the reduction (bit-identical for any
+//! `cfg.workers`).
 
 use anyhow::Result;
 
+use super::make_task;
 use crate::config::AveragingMode;
 use crate::coordinator::FlRun;
+use crate::engine::TrainEngine;
 use crate::metrics::RunMetrics;
 use crate::model::params;
+use crate::quant::Quantizer;
 use crate::util::rng::derive_seed;
 use crate::util::stats::l2_dist;
 
+/// One sampled client's fan-out output — everything the in-order
+/// reduction needs.
+struct ClientOutcome {
+    client_id: usize,
+    /// the server's decode of the client's reply, Q(Y^i)
+    q_y: Vec<f32>,
+    /// the client's next model X^i
+    x_next: Vec<f32>,
+    /// exact uplink cost of Enc(Y^i)
+    up_bits: u64,
+}
+
 pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     let cfg = ctx.cfg.clone();
-    let d = ctx.engine.spec().num_params();
+    let d = ctx.spec.num_params();
     let mut metrics = RunMetrics::new("quafl");
 
     // Initial models: server and all clients start from the same init
     // (the paper initializes everything to the same point).
-    let server_init = ctx.engine.spec().init_params(derive_seed(cfg.seed, 0x1417));
+    let server_init = ctx.spec.init_params(derive_seed(cfg.seed, 0x1417));
     let mut x_server = server_init.clone();
     let mut x_client: Vec<Vec<f32>> = vec![server_init.clone(); cfg.n];
-    let mut last_interaction = vec![0f64; cfg.n];
 
     // η_i = H_min / H_i (weighted variant); 1 otherwise. The paper's
     // theory pairs the dampening with a global rate η ∝ 1/H_min
@@ -79,52 +101,61 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         let sampled = ctx.rng.sample_distinct(cfg.n, cfg.s);
 
         // Server's outgoing message is encoded once per round.
-        let down_seed = derive_seed(cfg.seed, 0xD011 ^ (t as u64) << 24);
+        let down_seed = derive_seed(cfg.seed, 0xD011 ^ ((t as u64) << 24));
         let enc_x = ctx.quantizer.encode(&x_server, down_seed);
 
-        // Accumulate Σ Q(Y^i) while processing clients.
-        let mut sum_qy = vec![0f32; d];
+        // Serial pre-pass (sampled order): realize each client's partial
+        // progress on its clock, account it, and snapshot its SGD burst.
+        let mut tasks = Vec::with_capacity(sampled.len());
         for &i in &sampled {
-            // Realized partial progress since the client's last interaction.
             let h = ctx.clocks[i].steps_completed(now, cfg.k);
             metrics.total_interactions += 1;
             metrics.sum_observed_steps += h as u64;
             if h == 0 {
                 metrics.zero_progress_interactions += 1;
             }
+            total_steps += h as u64;
+            tasks.push(make_task(ctx, i, x_client[i].clone(), h, lr_eff));
+        }
 
+        // Fan out: local SGD, Y^i formation, and both directions of the
+        // quantized exchange. X_t and Enc(X_t) are round constants, so
+        // every worker decodes against exactly what the serial loop would.
+        let quantizer: &dyn Quantizer = ctx.quantizer.as_ref();
+        let x_server_key = &x_server;
+        let enc_x_ref = &enc_x;
+        let eta_ref = &eta;
+        let outcomes = ctx.pool.map(tasks, |engine: &mut dyn TrainEngine, task| {
+            let i = task.client_id;
             // Execute the h steps the client actually took (from X^i).
-            let mut x_sgd = x_client[i].clone();
-            if h > 0 {
-                super::local_sgd_lr(ctx, i, &mut x_sgd, h, lr_eff)?;
-                total_steps += h as u64;
+            let mut x_sgd = task.params.clone();
+            if !task.batches.is_empty() {
+                engine.train_steps(&mut x_sgd, &task.batches, task.lr)?;
             }
             // Y^i = X^i - η·η_i·h̃ = (1-η_i)·X^i + η_i·(SGD result).
-            let y_i = if eta[i] == 1.0 {
+            let y_i = if eta_ref[i] == 1.0 {
                 x_sgd
             } else {
-                let mut y = x_client[i].clone();
-                params::scale(&mut y, 1.0 - eta[i]);
-                params::axpy(&mut y, eta[i], &x_sgd);
+                let mut y = task.params.clone();
+                params::scale(&mut y, 1.0 - eta_ref[i]);
+                params::axpy(&mut y, eta_ref[i], &x_sgd);
                 y
             };
 
             // Upstream: Enc(Y^i), decoded by the server against X_t.
-            let up_seed = derive_seed(cfg.seed, (t as u64) << 20 | i as u64);
-            let enc_y = ctx.quantizer.encode(&y_i, up_seed);
-            bits_up += enc_y.bits as u64;
-            let q_y = ctx.quantizer.decode(&enc_y, &x_server);
-            params::axpy(&mut sum_qy, 1.0, &q_y);
+            let up_seed = derive_seed(cfg.seed, ((t as u64) << 20) | i as u64);
+            let enc_y = quantizer.encode(&y_i, up_seed);
+            let up_bits = enc_y.bits as u64;
+            let q_y = quantizer.decode(&enc_y, x_server_key);
 
             // Downstream: Enc(X_t), decoded by the client against X^i.
-            bits_down += enc_x.bits as u64;
-            let q_x = ctx.quantizer.decode(&enc_x, &x_client[i]);
+            let q_x = quantizer.decode(enc_x_ref, &task.params);
 
             // Client-side model update. The Figure 4 ablation *removes*
             // one side's averaging: in ServerOnly the client ignores the
             // server's message entirely and continues from its own
             // progress (no client-side averaging).
-            x_client[i] = match cfg.averaging {
+            let x_next = match cfg.averaging {
                 AveragingMode::Both | AveragingMode::ClientOnly => {
                     let mut m = q_x;
                     params::scale(&mut m, inv_s1);
@@ -133,10 +164,19 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
                 }
                 AveragingMode::ServerOnly => y_i,
             };
+            Ok(ClientOutcome { client_id: i, q_y, x_next, up_bits })
+        })?;
 
+        // In-order reduction: Σ Q(Y^i) accumulates in sampled order, so
+        // the floating-point sum matches the serial path bit for bit.
+        let mut sum_qy = vec![0f32; d];
+        for out in outcomes {
+            params::axpy(&mut sum_qy, 1.0, &out.q_y);
+            bits_up += out.up_bits;
+            bits_down += enc_x.bits as u64;
+            x_client[out.client_id] = out.x_next;
             // The client restarts its K local steps after the interaction.
-            last_interaction[i] = now + cfg.timing.sit;
-            ctx.clocks[i].restart(now + cfg.timing.sit);
+            ctx.clocks[out.client_id].restart(now + cfg.timing.sit);
         }
 
         // Server-side model update. ClientOnly removes the server's
@@ -193,7 +233,6 @@ pub fn server_client_discrepancy(x_server: &[f32], clients: &[Vec<f32>]) -> f64 
 /// verify the boundedness empirically.
 pub fn potential(x_server: &[f32], clients: &[Vec<f32>]) -> f64 {
     let n1 = (clients.len() + 1) as f32;
-    let d = x_server.len();
     let mut mu = x_server.to_vec();
     for c in clients {
         params::axpy(&mut mu, 1.0, c);
@@ -203,6 +242,5 @@ pub fn potential(x_server: &[f32], clients: &[Vec<f32>]) -> f64 {
     for c in clients {
         phi += l2_dist(c, &mu).powi(2);
     }
-    let _ = d;
     phi
 }

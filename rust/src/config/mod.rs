@@ -173,6 +173,11 @@ pub struct ExperimentConfig {
     /// record the paper's potential Φ_t each round (Lemma 3.4 diagnostic;
     /// costs O(n·d) per round, off by default)
     pub track_potential: bool,
+    /// worker threads for the parallel client-execution subsystem
+    /// ([`crate::exec`]); 0 = available parallelism. Trajectories are
+    /// bit-identical for every value (deterministic fan-out + ordered
+    /// reduction), so this is purely a wall-clock knob.
+    pub workers: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -201,6 +206,7 @@ impl Default for ExperimentConfig {
             use_xla: false,
             lattice_gamma: None,
             track_potential: false,
+            workers: 0,
         }
     }
 }
@@ -235,7 +241,7 @@ impl ExperimentConfig {
         "averaging", "weighted", "swt", "sit", "slow-fraction",
         "fast-lambda", "slow-lambda",
         "fedbuff-buffer", "fedbuff-server-lr", "eval-every", "batch",
-        "seed", "xla", "gamma", "out",
+        "seed", "xla", "gamma", "out", "workers",
     ];
 
     pub fn from_args(args: &Args) -> Result<Self, String> {
@@ -288,6 +294,7 @@ impl ExperimentConfig {
             c.lattice_gamma =
                 Some(g.parse().map_err(|_| format!("bad gamma {g:?}"))?);
         }
+        c.workers = args.get_usize("workers", c.workers);
         c.validate()?;
         Ok(c)
     }
@@ -312,6 +319,7 @@ mod tests {
         let a = cli::parse(&sv(&[
             "run", "--algorithm", "fedavg", "--n", "40", "--s", "8",
             "--quantizer", "qsgd:8", "--partition", "by-class", "--weighted",
+            "--workers", "4",
         ]));
         let c = ExperimentConfig::from_args(&a).unwrap();
         assert_eq!(c.algorithm, Algorithm::FedAvg);
@@ -320,21 +328,19 @@ mod tests {
         assert_eq!(c.quantizer, QuantizerKind::Qsgd { bits: 8 });
         assert_eq!(c.partition, PartitionKind::ByClass);
         assert!(c.weighted);
+        assert_eq!(c.workers, 4);
     }
 
     #[test]
     fn invalid_configs_rejected() {
-        let mut c = ExperimentConfig::default();
-        c.s = 0;
+        let base = ExperimentConfig::default();
+        let c = ExperimentConfig { s: 0, ..base.clone() };
         assert!(c.validate().is_err());
-        let mut c = ExperimentConfig::default();
-        c.s = c.n + 1;
+        let c = ExperimentConfig { s: base.n + 1, ..base.clone() };
         assert!(c.validate().is_err());
-        let mut c = ExperimentConfig::default();
-        c.k = 0;
+        let c = ExperimentConfig { k: 0, ..base.clone() };
         assert!(c.validate().is_err());
-        let mut c = ExperimentConfig::default();
-        c.lr = -1.0;
+        let c = ExperimentConfig { lr: -1.0, ..base };
         assert!(c.validate().is_err());
     }
 

@@ -11,7 +11,8 @@ use anyhow::{Context, Result};
 use crate::algorithms;
 use crate::config::{Algorithm, ExperimentConfig, QuantizerKind};
 use crate::data::{partition, Dataset, Shard, SynthSpec};
-use crate::engine::{build_engine, TrainEngine};
+use crate::engine::TrainEngine;
+use crate::exec::{EngineFactory, EnginePool};
 use crate::metrics::{EvalPoint, RunMetrics};
 use crate::model::ModelSpec;
 use crate::quant::{
@@ -27,13 +28,18 @@ pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
 /// Everything an algorithm needs to execute a run.
 pub struct FlRun {
     pub cfg: ExperimentConfig,
+    /// model architecture (also available via `pool.spec()`; duplicated
+    /// here so algorithms can read it while the pool is mutably borrowed)
+    pub spec: ModelSpec,
     pub train: Dataset,
     pub val: Dataset,
     /// fixed subsample of the training set for train-loss curves
     pub train_probe: Dataset,
     pub shards: Vec<Shard>,
     pub clocks: Vec<ClientClock>,
-    pub engine: Box<dyn TrainEngine>,
+    /// per-worker training engines + the deterministic fan-out primitive
+    /// (engine 0 doubles as the serial/eval engine)
+    pub pool: EnginePool,
     pub quantizer: Box<dyn Quantizer>,
     /// server-side sampling randomness
     pub rng: Rng,
@@ -77,13 +83,13 @@ impl FlRun {
 
         let clocks = build_clocks(cfg.n, &cfg.timing, derive_seed(cfg.seed, 0xC10C));
 
-        let engine = build_engine(&cfg.model, cfg.use_xla, artifacts, cfg.batch)
-            .context("building engine")?;
+        let factory = EngineFactory::new(&cfg.model, cfg.use_xla, artifacts, cfg.batch);
+        let pool = EnginePool::new(factory, cfg.workers).context("building engine")?;
         anyhow::ensure!(
-            engine.train_batch() == cfg.batch,
+            pool.train_batch() == cfg.batch,
             "engine batch {} != config batch {} (XLA artifacts fix the batch; \
              set --batch accordingly)",
-            engine.train_batch(),
+            pool.train_batch(),
             cfg.batch
         );
 
@@ -97,12 +103,13 @@ impl FlRun {
 
         Ok(FlRun {
             cfg: cfg.clone(),
+            spec,
             train,
             val,
             train_probe,
             shards,
             clocks,
-            engine,
+            pool,
             quantizer,
             rng: Rng::new(derive_seed(cfg.seed, 0x5E1EC7)),
             expected_h,
@@ -121,8 +128,9 @@ impl FlRun {
         bits_down: u64,
         params: &[f32],
     ) -> Result<()> {
-        let (val_loss, val_acc) = self.engine.evaluate(params, &self.val)?;
-        let (train_loss, _) = self.engine.evaluate(params, &self.train_probe)?;
+        let (val_loss, val_acc) = self.pool.primary().evaluate(params, &self.val)?;
+        let (train_loss, _) =
+            self.pool.primary().evaluate(params, &self.train_probe)?;
         metrics.push(EvalPoint {
             round,
             sim_time,

@@ -19,7 +19,13 @@ use crate::data::{Batch, Dataset};
 use crate::model::ModelSpec;
 
 /// Abstract SGD engine over flat parameters.
-pub trait TrainEngine {
+///
+/// `Send` is a supertrait so [`crate::exec::EnginePool`] can hand one
+/// engine instance to each worker thread of the parallel client-execution
+/// subsystem. Engines need not be `Sync`: a worker owns its engine
+/// exclusively for the duration of a fan-out, so interior scratch buffers
+/// (see [`NativeEngine`]) remain safe.
+pub trait TrainEngine: Send {
     fn spec(&self) -> &ModelSpec;
 
     /// One SGD step (fwd + bwd + update) in place; returns the batch loss.

@@ -10,7 +10,7 @@ use anyhow::{Context, Result};
 use super::TrainEngine;
 use crate::data::{Batch, Dataset};
 use crate::model::ModelSpec;
-use crate::runtime::Runtime;
+use crate::runtime::{stub as xla, Runtime};
 
 pub struct XlaEngine {
     spec: ModelSpec,

@@ -1,0 +1,360 @@
+//! Parallel client-execution subsystem: the per-round fan-out layer every
+//! algorithm runs its sampled clients through.
+//!
+//! The paper's headline experiments simulate up to 300 heterogeneous
+//! clients per round; executing each sampled client's local SGD serially
+//! makes wall-clock scale linearly with `s`. This module fans the per-
+//! client work out across an [`EnginePool`] — one [`TrainEngine`] instance
+//! per worker thread, built by an [`EngineFactory`] and reused across
+//! rounds — while keeping trajectories **bit-identical to the serial path
+//! for any worker count**. Three invariants make that hold:
+//!
+//! 1. *Serial pre-pass*: everything that consumes shared or ordered
+//!    randomness (client sampling, clock advancement, per-client batch
+//!    draws from the shard RNG streams) happens before the fan-out, in
+//!    sampled order, and is snapshotted into [`ClientTask`]s.
+//! 2. *Pure workers*: a worker's output depends only on its task and on
+//!    round-constant shared state (e.g. the server model a quantizer
+//!    decodes against) — engines are deterministic given (params, batches,
+//!    lr), and each client's state is touched by exactly one task.
+//! 3. *Ordered reduction*: [`EnginePool::map`] returns results in task
+//!    order, so the caller's floating-point accumulation order is exactly
+//!    the serial loop's.
+//!
+//! The worker count comes from `ExperimentConfig::workers` (`--workers`;
+//! 0 = available parallelism). `rust/tests/parallel_parity.rs` asserts the
+//! bit-identity for workers ∈ {1, 2, 8} on all four algorithms, and
+//! `benches/bench_round.rs` measures the scaling at n=300/s=32.
+
+use anyhow::Result;
+
+use crate::data::{Batch, Dataset, Shard};
+use crate::engine::{build_engine, TrainEngine};
+use crate::model::ModelSpec;
+
+/// Recipe for building one worker's engine. Cloneable and cheap; the
+/// expensive part (XLA artifact compilation, scratch allocation) happens in
+/// [`EngineFactory::build`], once per pool worker.
+#[derive(Clone, Debug)]
+pub struct EngineFactory {
+    pub model: String,
+    pub use_xla: bool,
+    pub artifacts_dir: String,
+    pub batch: usize,
+}
+
+impl EngineFactory {
+    pub fn new(model: &str, use_xla: bool, artifacts_dir: &str, batch: usize) -> Self {
+        EngineFactory {
+            model: model.to_string(),
+            use_xla,
+            artifacts_dir: artifacts_dir.to_string(),
+            batch,
+        }
+    }
+
+    pub fn build(&self) -> Result<Box<dyn TrainEngine>> {
+        build_engine(&self.model, self.use_xla, &self.artifacts_dir, self.batch)
+    }
+}
+
+/// One sampled client's unit of work: local SGD from `params` over the
+/// pre-drawn `batches` at rate `lr`. Batches are materialized in the
+/// serial pre-pass so the per-client RNG streams advance in sampled order
+/// regardless of how tasks are scheduled across workers.
+pub struct ClientTask {
+    pub client_id: usize,
+    /// starting model X^i (moved in; workers that need the pre-SGD point
+    /// clone before training)
+    pub params: Vec<f32>,
+    /// one batch per local step, in step order (`len() == h`)
+    pub batches: Vec<Batch>,
+    pub lr: f32,
+    /// per-task randomness stream, precomputed by the algorithm in event
+    /// order (e.g. FedBuff's per-message compression seed); 0 if unused
+    pub seed: u64,
+}
+
+impl ClientTask {
+    /// Snapshot a task: draw `h` batches from the client's shard (this
+    /// advances the shard's RNG exactly as the serial path would).
+    pub fn gather(
+        client_id: usize,
+        params: Vec<f32>,
+        shard: &mut Shard,
+        data: &Dataset,
+        batch_size: usize,
+        h: usize,
+        lr: f32,
+    ) -> Self {
+        let batches = (0..h)
+            .map(|_| data.gather_batch(&shard.sample_batch(batch_size)))
+            .collect();
+        ClientTask { client_id, params, batches, lr, seed: 0 }
+    }
+
+    /// Local steps this task performs.
+    pub fn steps(&self) -> usize {
+        self.batches.len()
+    }
+}
+
+/// Result of the plain local-SGD map ([`EnginePool::run_local_sgd`]).
+pub struct ClientResult {
+    pub client_id: usize,
+    /// model after `steps` local SGD steps
+    pub params: Vec<f32>,
+    /// summed training loss over the steps (diagnostics)
+    pub loss: f32,
+    pub steps: usize,
+}
+
+/// A pool of per-worker training engines plus the deterministic fan-out
+/// primitive. Engines are built lazily (the primary eagerly, workers on
+/// first parallel use) and reused across rounds.
+pub struct EnginePool {
+    factory: EngineFactory,
+    engines: Vec<Box<dyn TrainEngine>>,
+    workers: usize,
+}
+
+impl EnginePool {
+    /// `workers == 0` resolves to the machine's available parallelism.
+    pub fn new(factory: EngineFactory, workers: usize) -> Result<Self> {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            workers
+        };
+        let engines = vec![factory.build()?];
+        Ok(EnginePool { factory, engines, workers })
+    }
+
+    /// Resolved worker count (>= 1).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The primary engine — used for evaluation and any serial work.
+    pub fn primary(&mut self) -> &mut dyn TrainEngine {
+        self.engines[0].as_mut()
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        self.engines[0].spec()
+    }
+
+    pub fn train_batch(&self) -> usize {
+        self.engines[0].train_batch()
+    }
+
+    fn ensure_engines(&mut self, k: usize) -> Result<()> {
+        while self.engines.len() < k {
+            self.engines.push(self.factory.build()?);
+        }
+        Ok(())
+    }
+
+    /// Execute `f` over every task, fanned out across up to `workers`
+    /// threads (each with its own engine), and return the results **in
+    /// task order**. With one worker (or one task) this degenerates to the
+    /// plain serial loop on the primary engine; because workers are pure
+    /// (see module docs) the outputs are bit-identical either way.
+    ///
+    /// Tasks are split into contiguous chunks, one per worker; the
+    /// concatenation of per-worker outputs restores task order.
+    pub fn map<R, F>(&mut self, tasks: Vec<ClientTask>, f: F) -> Result<Vec<R>>
+    where
+        R: Send,
+        F: Fn(&mut dyn TrainEngine, ClientTask) -> Result<R> + Sync,
+    {
+        let n = tasks.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let workers = self.workers.min(n);
+        if workers <= 1 {
+            let mut out = Vec::with_capacity(n);
+            for task in tasks {
+                out.push(f(self.engines[0].as_mut(), task)?);
+            }
+            return Ok(out);
+        }
+        self.ensure_engines(workers)?;
+        let base = n / workers;
+        let extra = n % workers;
+        let mut it = tasks.into_iter();
+        let mut chunks: Vec<Vec<ClientTask>> = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let take = base + usize::from(w < extra);
+            chunks.push(it.by_ref().take(take).collect());
+        }
+        let f = &f;
+        let per_worker: Vec<Vec<Result<R>>> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(workers);
+            for (engine, chunk) in self.engines.iter_mut().zip(chunks) {
+                handles.push(scope.spawn(move || {
+                    chunk
+                        .into_iter()
+                        .map(|task| f(engine.as_mut(), task))
+                        .collect::<Vec<Result<R>>>()
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("engine worker panicked"))
+                .collect()
+        });
+        let mut out = Vec::with_capacity(n);
+        for chunk in per_worker {
+            for r in chunk {
+                out.push(r?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// The common fan-out: run each task's local SGD burst and return the
+    /// trained models (FedAvg, FedBuff, and the baseline use this; QuAFL
+    /// layers quantized coding on top via [`EnginePool::map`]).
+    pub fn run_local_sgd(&mut self, tasks: Vec<ClientTask>) -> Result<Vec<ClientResult>> {
+        self.map(tasks, |engine, task| {
+            let ClientTask { client_id, mut params, batches, lr, .. } = task;
+            let loss = if batches.is_empty() {
+                0.0
+            } else {
+                engine.train_steps(&mut params, &batches, lr)?
+            };
+            Ok(ClientResult { client_id, params, loss, steps: batches.len() })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SynthFamily, SynthSpec};
+    use crate::util::rng::Rng;
+
+    const BATCH: usize = 8;
+
+    fn factory() -> EngineFactory {
+        EngineFactory::new("mlp", false, "artifacts", BATCH)
+    }
+
+    fn setup(n_clients: usize) -> (Dataset, Vec<Shard>, Vec<f32>) {
+        let (train, _) = SynthSpec::family(SynthFamily::Mnist, 256, 16, 3).generate();
+        let mut rng = Rng::new(9);
+        let shards = (0..n_clients)
+            .map(|c| {
+                let idx: Vec<usize> = (0..train.len()).collect();
+                Shard::new(idx, rng.fork(c as u64))
+            })
+            .collect();
+        let params = ModelSpec::by_name("mlp").unwrap().init_params(7);
+        (train, shards, params)
+    }
+
+    fn make_tasks(
+        train: &Dataset,
+        shards: &mut [Shard],
+        params: &[f32],
+        per_client_h: &[usize],
+    ) -> Vec<ClientTask> {
+        per_client_h
+            .iter()
+            .enumerate()
+            .map(|(i, &h)| {
+                ClientTask::gather(i, params.to_vec(), &mut shards[i], train, BATCH, h, 0.1)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn workers_resolve_to_at_least_one() {
+        let pool = EnginePool::new(factory(), 0).unwrap();
+        assert!(pool.workers() >= 1);
+        let pool = EnginePool::new(factory(), 3).unwrap();
+        assert_eq!(pool.workers(), 3);
+    }
+
+    #[test]
+    fn gather_draws_h_batches_of_right_shape() {
+        let (train, mut shards, params) = setup(1);
+        let task =
+            ClientTask::gather(0, params, &mut shards[0], &train, BATCH, 5, 0.1);
+        assert_eq!(task.steps(), 5);
+        for b in &task.batches {
+            assert_eq!(b.batch, BATCH);
+            assert_eq!(b.dim, 784);
+        }
+    }
+
+    #[test]
+    fn map_preserves_task_order() {
+        let (train, mut shards, params) = setup(6);
+        let tasks = make_tasks(&train, &mut shards, &params, &[1, 0, 2, 1, 0, 3]);
+        let mut pool = EnginePool::new(factory(), 4).unwrap();
+        let ids = pool
+            .map(tasks, |_, task| Ok(task.client_id))
+            .unwrap();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn map_empty_tasks_is_empty() {
+        let mut pool = EnginePool::new(factory(), 2).unwrap();
+        let out: Vec<usize> = pool.map(Vec::new(), |_, t| Ok(t.client_id)).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        // The subsystem's core contract: identical outputs for any worker
+        // count, down to the bit.
+        let (train, mut shards, params) = setup(7);
+        let hs = [3usize, 0, 1, 4, 2, 1, 3];
+        let run = |workers: usize, shards: &mut [Shard]| {
+            let tasks = make_tasks(&train, shards, &params, &hs);
+            let mut pool = EnginePool::new(factory(), workers).unwrap();
+            pool.run_local_sgd(tasks).unwrap()
+        };
+        // Shard RNGs advance during gather; rebuild them per run.
+        let serial = run(1, &mut shards);
+        let (_, mut shards2, _) = setup(7);
+        let parallel = run(4, &mut shards2);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.client_id, b.client_id);
+            assert_eq!(a.steps, b.steps);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.params, b.params);
+        }
+    }
+
+    #[test]
+    fn zero_step_task_returns_params_unchanged() {
+        let (train, mut shards, params) = setup(1);
+        let tasks = make_tasks(&train, &mut shards, &params, &[0]);
+        let mut pool = EnginePool::new(factory(), 2).unwrap();
+        let out = pool.run_local_sgd(tasks).unwrap();
+        assert_eq!(out[0].params, params);
+        assert_eq!(out[0].loss, 0.0);
+        assert_eq!(out[0].steps, 0);
+    }
+
+    #[test]
+    fn worker_error_propagates() {
+        let (train, mut shards, params) = setup(5);
+        let tasks = make_tasks(&train, &mut shards, &params, &[1, 1, 1, 1, 1]);
+        let mut pool = EnginePool::new(factory(), 2).unwrap();
+        let res: Result<Vec<u8>> = pool.map(tasks, |_, task| {
+            if task.client_id == 3 {
+                anyhow::bail!("injected failure");
+            }
+            Ok(0)
+        });
+        assert!(res.is_err());
+        assert!(format!("{:#}", res.err().unwrap()).contains("injected"));
+    }
+}

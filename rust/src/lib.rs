@@ -12,10 +12,20 @@
 //!   ([`quant`]), the discrete-event timing simulation ([`sim`]), dataset
 //!   synthesis + heterogeneous partitioning ([`data`]), and the experiment
 //!   coordinator + figure harness ([`coordinator`], [`figures`]).
+//! - **L3-exec** — the parallel client-execution subsystem ([`exec`]):
+//!   an [`exec::EnginePool`] holds one engine per worker thread (built by
+//!   an [`exec::EngineFactory`]), and every algorithm's per-round client
+//!   work flows through its deterministic fan-out — serial pre-pass
+//!   (sampling, clocks, per-client batch draws) → `std::thread::scope`
+//!   map over [`exec::ClientTask`]s → reduction in sampled order. The
+//!   worker count is `ExperimentConfig::workers` (`--workers`, 0 = all
+//!   cores) and is purely a wall-clock knob: trajectories are
+//!   bit-identical for every value (rust/tests/parallel_parity.rs).
 //! - **L2/L1 (build-time Python)** — the client model's fwd/bwd/update as
 //!   JAX functions over Pallas kernels, AOT-lowered once to
 //!   `artifacts/*.hlo.txt`; [`runtime`] loads and [`engine::XlaEngine`]
-//!   executes them via PJRT. Python is never on the simulation path.
+//!   executes them via PJRT (the offline build stubs the PJRT bindings —
+//!   see [`runtime::stub`]). Python is never on the simulation path.
 //!
 //! The crate is fully self-contained after `make artifacts`.
 
@@ -24,6 +34,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod exec;
 pub mod figures;
 pub mod metrics;
 pub mod model;

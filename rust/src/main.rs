@@ -50,6 +50,7 @@ fn usage() {
          \x20 --averaging both|server-only|client-only\n\
          \x20 --weighted                  --swt/--sit FLOAT\n\
          \x20 --slow-fraction FLOAT (0.25) --batch INT (32)\n\
+         \x20 --workers INT client-exec threads (0 = all cores)\n\
          \x20 --seed INT --xla --gamma FLOAT --out FILE.csv\n\
          \n\
          figures options: --out-dir DIR (results) --paper-scale [ids...]\n"
@@ -69,7 +70,7 @@ fn cmd_run(args: &cli::Args) -> i32 {
         }
     };
     eprintln!(
-        "[quafl] {} n={} s={} K={} rounds={} model={} quant={:?} part={:?} engine={}",
+        "[quafl] {} n={} s={} K={} rounds={} model={} quant={:?} part={:?} engine={} workers={}",
         cfg.algorithm.name(),
         cfg.n,
         cfg.s,
@@ -79,6 +80,7 @@ fn cmd_run(args: &cli::Args) -> i32 {
         cfg.quantizer,
         cfg.partition,
         if cfg.use_xla { "xla" } else { "native" },
+        if cfg.workers == 0 { "auto".to_string() } else { cfg.workers.to_string() },
     );
     let t0 = std::time::Instant::now();
     match coordinator::run(&cfg) {

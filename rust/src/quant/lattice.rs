@@ -112,7 +112,7 @@ impl Quantizer for LatticeQuantizer {
         // Side info: γ travels with the message (32 bits); the seed is
         // carried in the message header (64 bits) — both counted.
         w.write_f32(self.gamma);
-        let mut rng = Rng::new(seed ^ 0x51AC_E5EED);
+        let mut rng = Rng::new(seed ^ 0x51ACE5EED);
         let mut buf = vec![0f32; ROT_BLOCK];
         for (bi, &(off, len, padded)) in blocks.iter().enumerate() {
             let v = &mut buf[..padded];

@@ -1,16 +1,24 @@
 //! PJRT runtime: loads the AOT artifacts emitted by `python/compile/aot.py`
-//! and compiles them on the CPU PJRT client (`xla` crate).
+//! and compiles them on the CPU PJRT client (`xla` bindings).
 //!
 //! Interchange format is HLO **text** — `HloModuleProto::from_text_file`
 //! reassigns instruction ids, sidestepping the 64-bit-id protos jax ≥ 0.5
 //! emits that xla_extension 0.5.1 rejects (see /opt/xla-example/README.md).
 //!
 //! One `Runtime` per process; executables are compiled once and cached.
+//!
+//! The offline build does not vendor the PJRT bindings; [`stub`] stands in
+//! with the same API and errors at client construction. Swap the alias
+//! below to the real crate to restore PJRT execution.
+
+pub mod stub;
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
+
+use self::stub as xla;
 
 use crate::util::json::{self, Json};
 

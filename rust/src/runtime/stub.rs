@@ -1,0 +1,128 @@
+//! Offline stand-in for the `xla` (PJRT) bindings crate.
+//!
+//! The build policy for this repository is "no external deps beyond
+//! `anyhow`" (the image builds fully offline), so the real PJRT bindings
+//! cannot be a Cargo dependency. This module mirrors the exact API surface
+//! [`crate::runtime`] and [`crate::engine::xla`] consume, and fails at the
+//! first *runtime* touchpoint ([`PjRtClient::cpu`]) with an actionable
+//! error. Everything still type-checks, so the XLA code path stays
+//! compiled, reviewed, and ready: vendoring the real bindings and swapping
+//! the two `use ... as xla` aliases back restores full PJRT execution.
+//!
+//! The native engine ([`crate::engine::NativeEngine`], the default) is
+//! unaffected; XLA integration tests skip themselves when `artifacts/` is
+//! absent.
+
+/// Error type matching the bindings' `{e:?}`-style reporting.
+pub struct Error(String);
+
+impl Error {
+    fn unavailable() -> Self {
+        Error(
+            "XLA/PJRT bindings are not vendored in this offline build; \
+             use the native engine (default) or vendor the `xla` crate \
+             (see rust/src/runtime/stub.rs)"
+                .to_string(),
+        )
+    }
+}
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] is the single entry point, and
+/// in the stub it always errors — no other method is reachable.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Parsed HLO module (the artifacts are HLO text files).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Computation wrapper handed to [`PjRtClient::compile`].
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Device buffer returned by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Host-side tensor literal.
+pub struct Literal;
+
+impl Literal {
+    pub fn scalar<T>(_v: T) -> Literal {
+        Literal
+    }
+
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_cpu_fails_with_actionable_error() {
+        let err = PjRtClient::cpu().err().unwrap();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("native engine"), "unhelpful error: {msg}");
+    }
+}

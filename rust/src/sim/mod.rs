@@ -70,7 +70,7 @@ impl ClientClock {
     /// Restart local computation at absolute time `now` (the client just
     /// finished a server interaction and begins K fresh steps). The
     /// in-flight step is abandoned and a fresh one starts — matching the
-    //  algorithm, where the client begins steps on the *new* model.
+    /// algorithm, where the client begins steps on the *new* model.
     pub fn restart(&mut self, now: f64) {
         self.epoch = now;
         self.done_since_epoch = 0;

@@ -127,7 +127,7 @@ mod tests {
         });
         assert!(r.iters >= 5);
         assert!(r.mean_ns >= 0.0);
-        assert!(count as u64 >= r.iters);
+        assert!(count >= r.iters);
     }
 
     #[test]

@@ -1,0 +1,163 @@
+//! Determinism/parity suite for the parallel client-execution subsystem
+//! (rust/src/exec): for every algorithm, the trajectory must be
+//! **bit-identical** for any worker count — same eval points (losses,
+//! accuracies, simulated times), same bit accounting, same step counts,
+//! same potential series. `workers = 1` is exactly the serial path, so
+//! equality against it proves the fan-out + in-order reduction changes
+//! nothing but wall-clock.
+
+use quafl::config::{Algorithm, ExperimentConfig, QuantizerKind, TimingConfig};
+use quafl::coordinator;
+use quafl::data::PartitionKind;
+use quafl::metrics::RunMetrics;
+
+fn base(algorithm: Algorithm) -> ExperimentConfig {
+    ExperimentConfig {
+        algorithm,
+        n: 10,
+        s: 4,
+        k: 4,
+        rounds: 6,
+        eval_every: 2,
+        train_samples: 512,
+        val_samples: 128,
+        batch: 16,
+        seed: 11,
+        timing: TimingConfig { slow_fraction: 0.3, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// Bitwise comparison of two runs (f64s compared by bit pattern — this is
+/// a determinism test, tolerances would defeat its purpose).
+fn assert_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.points.len(), b.points.len(), "{what}: eval point count");
+    for (p, q) in a.points.iter().zip(&b.points) {
+        assert_eq!(p.round, q.round, "{what}: round");
+        assert_eq!(
+            p.sim_time.to_bits(),
+            q.sim_time.to_bits(),
+            "{what}: sim_time at round {}",
+            p.round
+        );
+        assert_eq!(
+            p.total_client_steps, q.total_client_steps,
+            "{what}: steps at round {}",
+            p.round
+        );
+        assert_eq!(p.bits_up, q.bits_up, "{what}: bits_up at round {}", p.round);
+        assert_eq!(
+            p.bits_down, q.bits_down,
+            "{what}: bits_down at round {}",
+            p.round
+        );
+        assert_eq!(
+            p.val_loss.to_bits(),
+            q.val_loss.to_bits(),
+            "{what}: val_loss at round {} ({} vs {})",
+            p.round,
+            p.val_loss,
+            q.val_loss
+        );
+        assert_eq!(
+            p.val_acc.to_bits(),
+            q.val_acc.to_bits(),
+            "{what}: val_acc at round {}",
+            p.round
+        );
+        assert_eq!(
+            p.train_loss.to_bits(),
+            q.train_loss.to_bits(),
+            "{what}: train_loss at round {}",
+            p.round
+        );
+    }
+    assert_eq!(a.total_interactions, b.total_interactions, "{what}");
+    assert_eq!(
+        a.zero_progress_interactions, b.zero_progress_interactions,
+        "{what}"
+    );
+    assert_eq!(a.sum_observed_steps, b.sum_observed_steps, "{what}");
+    assert_eq!(a.potential.len(), b.potential.len(), "{what}: potential len");
+    for (i, (x, y)) in a.potential.iter().zip(&b.potential).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: potential[{i}]");
+    }
+}
+
+fn parity_for(cfg: ExperimentConfig) {
+    let serial = coordinator::run(&ExperimentConfig { workers: 1, ..cfg.clone() })
+        .expect("serial run");
+    assert!(
+        !serial.points.is_empty(),
+        "run produced no eval points — vacuous parity"
+    );
+    for workers in [2usize, 8] {
+        let par = coordinator::run(&ExperimentConfig { workers, ..cfg.clone() })
+            .expect("parallel run");
+        assert_identical(
+            &serial,
+            &par,
+            &format!("{} workers={workers}", cfg.algorithm.name()),
+        );
+    }
+}
+
+#[test]
+fn quafl_parity_across_worker_counts() {
+    parity_for(base(Algorithm::QuAFL));
+}
+
+#[test]
+fn quafl_parity_weighted_non_iid_with_potential() {
+    // Stress the richer code paths: speed weighting (η_i blending in the
+    // workers), by-class shards, and the Φ_t series.
+    parity_for(ExperimentConfig {
+        weighted: true,
+        partition: PartitionKind::ByClass,
+        track_potential: true,
+        ..base(Algorithm::QuAFL)
+    });
+}
+
+#[test]
+fn fedavg_parity_across_worker_counts() {
+    parity_for(ExperimentConfig {
+        quantizer: QuantizerKind::None,
+        ..base(Algorithm::FedAvg)
+    });
+}
+
+#[test]
+fn fedbuff_parity_across_worker_counts() {
+    // QSGD path: per-message compression seeds are assigned in event
+    // order, so the compressed deltas must also be bit-identical.
+    parity_for(ExperimentConfig {
+        quantizer: QuantizerKind::Qsgd { bits: 8 },
+        ..base(Algorithm::FedBuff)
+    });
+}
+
+#[test]
+fn fedbuff_parity_uncompressed() {
+    parity_for(ExperimentConfig {
+        quantizer: QuantizerKind::None,
+        ..base(Algorithm::FedBuff)
+    });
+}
+
+#[test]
+fn baseline_parity_across_worker_counts() {
+    parity_for(ExperimentConfig {
+        rounds: 12,
+        eval_every: 4,
+        ..base(Algorithm::Baseline)
+    });
+}
+
+#[test]
+fn workers_knob_leaves_config_validation_unaffected() {
+    for workers in [0usize, 1, 3, 64] {
+        let cfg = ExperimentConfig { workers, ..base(Algorithm::QuAFL) };
+        assert!(cfg.validate().is_ok(), "workers={workers}");
+    }
+}

@@ -1,0 +1,88 @@
+//! Lemma 3.4 property test: the paper proves the potential
+//! Φ_t = ‖X_t − μ_t‖² + Σᵢ‖Xⁱ − μ_t‖² contracts in expectation
+//! (supermartingale-style), which keeps server and client models within a
+//! bounded neighborhood — the closeness the lattice quantizer's decoding
+//! radius relies on. Here we check the empirical consequence across
+//! randomized small QuAFL configs (n, s, K, slow_fraction, seed drawn by
+//! the in-crate property harness): Φ_t stays finite, non-negative, small
+//! relative to the model scale, and shows no late-run divergence.
+
+use quafl::config::{ExperimentConfig, TimingConfig};
+use quafl::coordinator;
+use quafl::prop_assert;
+use quafl::testing::{check, PropConfig};
+
+#[test]
+fn prop_quafl_potential_stays_bounded() {
+    check(
+        "quafl_potential_bounded",
+        PropConfig { cases: 6, max_size: 12, seed: 0x03A4 },
+        |rng, size| {
+            // size ramps 1..=12 → fleets of 3..=14 clients.
+            let n = 2 + size;
+            let s = 1 + rng.gen_range(n.min(4));
+            let k = 1 + rng.gen_range(6);
+            let slow_fraction = rng.next_f64() * 0.6;
+            let cfg = ExperimentConfig {
+                n,
+                s,
+                k,
+                rounds: 24,
+                eval_every: 24,
+                train_samples: 512,
+                val_samples: 64,
+                batch: 16,
+                track_potential: true,
+                timing: TimingConfig { slow_fraction, ..Default::default() },
+                seed: rng.next_u64(),
+                ..Default::default()
+            };
+            let label = format!(
+                "n={n} s={s} K={k} slow={slow_fraction:.2} seed={:#x}",
+                cfg.seed
+            );
+            let m = coordinator::run(&cfg).map_err(|e| format!("{label}: {e:#}"))?;
+
+            prop_assert!(
+                m.potential.len() == cfg.rounds,
+                "{label}: potential series has {} entries, want {}",
+                m.potential.len(),
+                cfg.rounds
+            );
+            for (t, &phi) in m.potential.iter().enumerate() {
+                prop_assert!(
+                    phi.is_finite() && phi >= 0.0,
+                    "{label}: Φ_{t} = {phi} not finite/non-negative"
+                );
+            }
+            // Bounded: Φ sums n+1 squared distances of O(η·K)-scale model
+            // discrepancies; 100 is a generous model-scale ceiling that a
+            // divergent run blows through immediately.
+            let overall_max = m.potential.iter().cloned().fold(0.0, f64::max);
+            prop_assert!(
+                overall_max < 100.0,
+                "{label}: potential too large: {overall_max}"
+            );
+            // No late-run blowup: the last third never exceeds the overall
+            // max (contraction keeps the process from drifting upward).
+            let tail_start = cfg.rounds - cfg.rounds / 3;
+            let tail_max = m.potential[tail_start..]
+                .iter()
+                .cloned()
+                .fold(0.0, f64::max);
+            prop_assert!(
+                tail_max <= overall_max * 1.01,
+                "{label}: potential grew late: tail {tail_max} vs max {overall_max}"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn potential_function_matches_definition_on_tiny_input() {
+    // Sanity-pin the Φ implementation itself: one server at 1, one client
+    // at 0 (d = 1): μ = 1/2, Φ = (1/2)² + (1/2)² = 1/2.
+    let phi = quafl::algorithms::quafl::potential(&[1.0], &[vec![0.0]]);
+    assert!((phi - 0.5).abs() < 1e-9, "phi={phi}");
+}
