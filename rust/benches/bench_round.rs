@@ -6,6 +6,7 @@
 
 use quafl::config::{Algorithm, ExperimentConfig, QuantizerKind};
 use quafl::coordinator;
+use quafl::exec::{ClientTask, EngineFactory, EnginePool};
 use quafl::model::params;
 use quafl::quant::{LatticeQuantizer, Quantizer};
 use quafl::testing::bench::{bench, bench_units};
@@ -61,6 +62,48 @@ fn main() {
             "rounds",
             || {
                 std::hint::black_box(coordinator::run(&cfg).unwrap());
+            },
+        );
+    }
+
+    // Fan-out overhead at large s (§exec persistent pool): dispatch s
+    // no-op tasks through the pool and measure the pure orchestration
+    // cost. With the long-lived workers this is channel send/recv only —
+    // the per-round thread-spawn cost the scoped-thread implementation
+    // paid at s >= 100 is gone (compare a row against the workers=1
+    // serial loop: the gap is the entire fan-out overhead budget).
+    for (s, workers) in [(128usize, 1usize), (128, 8), (256, 8)] {
+        let mut pool = EnginePool::new(
+            EngineFactory::new("mlp", false, "artifacts", 32),
+            workers,
+        )
+        .unwrap();
+        // Warm the worker threads/engines outside the timed region.
+        let warm: Vec<ClientTask> = (0..s)
+            .map(|i| ClientTask {
+                client_id: i,
+                params: Vec::new(),
+                batches: Vec::new(),
+                lr: 0.1,
+                seed: 0,
+            })
+            .collect();
+        pool.run_local_sgd(warm).unwrap();
+        bench_units(
+            &format!("fan-out overhead s={s} workers={workers} (no-op tasks)"),
+            s as f64,
+            "tasks",
+            || {
+                let tasks: Vec<ClientTask> = (0..s)
+                    .map(|i| ClientTask {
+                        client_id: i,
+                        params: Vec::new(),
+                        batches: Vec::new(),
+                        lr: 0.1,
+                        seed: 0,
+                    })
+                    .collect();
+                std::hint::black_box(pool.run_local_sgd(tasks).unwrap());
             },
         );
     }

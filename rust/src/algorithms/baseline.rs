@@ -14,7 +14,7 @@ use anyhow::Result;
 use crate::coordinator::FlRun;
 use crate::data::Shard;
 use crate::exec::ClientTask;
-use crate::metrics::RunMetrics;
+use crate::metrics::{CommTally, RunMetrics};
 use crate::util::rng::{derive_seed, Rng};
 
 pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
@@ -29,9 +29,11 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     let mut step_rng = Rng::new(derive_seed(cfg.seed, 0xBA5E + 1));
 
     let mut now = 0f64;
-    let mut total_steps = 0u64;
+    // A single sequential node never communicates: the tally carries only
+    // its step count (bits and transport time stay 0).
+    let mut tally = CommTally::default();
 
-    ctx.eval_point(&mut metrics, 0, now, 0, 0, 0, &x)?;
+    ctx.eval_point(&mut metrics, 0, now, &tally, &x)?;
 
     for t in 0..cfg.rounds {
         now += step_rng.exponential(cfg.timing.slow_lambda);
@@ -40,12 +42,12 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         let mut results = ctx.pool.run_local_sgd(vec![task])?;
         let r = results.pop().expect("one task in, one result out");
         x = r.params;
-        total_steps += r.steps as u64;
+        tally.total_steps += r.steps as u64;
         metrics.total_interactions += 1;
         metrics.sum_observed_steps += 1;
 
         if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
-            ctx.eval_point(&mut metrics, t + 1, now, total_steps, 0, 0, &x)?;
+            ctx.eval_point(&mut metrics, t + 1, now, &tally, &x)?;
         }
     }
     Ok(metrics)

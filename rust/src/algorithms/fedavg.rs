@@ -1,11 +1,13 @@
 //! Synchronous FedAvg [25] — the paper's primary comparison point
 //! (Appendix A.2 simulation rules):
 //!
-//! Each round the server samples s clients, sends them its model
+//! Each round the server samples s reachable clients, sends them its model
 //! *uncompressed*, and blocks until the slowest of them completes exactly
 //! K local steps; it then averages the returned models equally. The round
-//! duration is max_i(time for K steps) + sit, and swt = 0 (the server
-//! calls again immediately) — both straight from the paper.
+//! duration is max_i(downlink_i + time for K steps + uplink_i) + sit, and
+//! swt = 0 (the server calls again immediately) — the transport terms are
+//! exactly 0.0 under the default `Ideal` profile, reproducing the paper's
+//! rule (and the pre-net trajectory) bit for bit.
 //!
 //! The s independent K-step bursts run through the [`crate::exec`]
 //! fan-out; the equal-weight average folds the returned models in sampled
@@ -15,7 +17,7 @@ use anyhow::Result;
 
 use super::make_task;
 use crate::coordinator::FlRun;
-use crate::metrics::RunMetrics;
+use crate::metrics::{CommTally, RunMetrics};
 use crate::model::params;
 use crate::util::rng::derive_seed;
 
@@ -26,56 +28,63 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
 
     let mut x_server = ctx.spec.init_params(derive_seed(cfg.seed, 0x1417));
     let mut now = 0f64;
-    let mut bits_up = 0u64;
-    let mut bits_down = 0u64;
-    let mut total_steps = 0u64;
+    let mut tally = CommTally::default();
 
-    ctx.eval_point(&mut metrics, 0, now, 0, 0, 0, &x_server)?;
+    ctx.eval_point(&mut metrics, 0, now, &tally, &x_server)?;
 
     // FedAvg transmits full-precision models in both directions.
     let model_bits = (d * 32) as u64;
 
     for t in 0..cfg.rounds {
-        let sampled = ctx.rng.sample_distinct(cfg.n, cfg.s);
+        let sampled = ctx.availability.sample(&mut ctx.rng, cfg.n, cfg.s, now);
+        if sampled.len() < cfg.s {
+            metrics.short_rounds += 1;
+        }
+        if sampled.is_empty() {
+            // Nobody reachable: the server idles one interaction slot.
+            now += cfg.timing.sit;
+            if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
+                ctx.eval_point(&mut metrics, t + 1, now, &tally, &x_server)?;
+            }
+            continue;
+        }
 
         // Synchronous barrier: the round takes as long as the slowest
-        // sampled client needs for its K steps. Pre-pass advances clocks
-        // and snapshots each client's K-step burst from X_t.
+        // sampled client needs to receive the model, run its K steps, and
+        // push the result back. Pre-pass advances clocks and snapshots
+        // each client's K-step burst from X_t.
         let mut round_end = now;
         let mut tasks = Vec::with_capacity(sampled.len());
         for &i in &sampled {
-            ctx.clocks[i].restart(now);
-            let finish = ctx.clocks[i].finish_time_for(cfg.k);
+            let down_t = ctx.transport.downlink_time(i, model_bits);
+            let up_t = ctx.transport.uplink_time(i, model_bits);
+            ctx.clocks[i].restart(now + down_t);
+            let finish = ctx.clocks[i].finish_time_for(cfg.k) + up_t;
             round_end = round_end.max(finish);
 
             metrics.total_interactions += 1;
             metrics.sum_observed_steps += cfg.k as u64;
-            total_steps += cfg.k as u64;
-            bits_down += model_bits;
-            bits_up += model_bits;
+            tally.total_steps += cfg.k as u64;
+            tally.bits_down += model_bits;
+            tally.bits_up += model_bits;
+            tally.comm_down_time += down_t;
+            tally.comm_up_time += up_t;
 
             tasks.push(make_task(ctx, i, x_server.clone(), cfg.k, cfg.lr));
         }
 
-        // Fan out the K-step bursts; average in sampled order.
+        // Fan out the K-step bursts; average in sampled order (weights
+        // follow the realized sample size, == s whenever all reachable).
         let results = ctx.pool.run_local_sgd(tasks)?;
         let mut sum = vec![0f32; d];
         for r in &results {
-            params::axpy(&mut sum, 1.0 / cfg.s as f32, &r.params);
+            params::axpy(&mut sum, 1.0 / sampled.len() as f32, &r.params);
         }
         x_server = sum;
         now = round_end + cfg.timing.sit;
 
         if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
-            ctx.eval_point(
-                &mut metrics,
-                t + 1,
-                now,
-                total_steps,
-                bits_up,
-                bits_down,
-                &x_server,
-            )?;
+            ctx.eval_point(&mut metrics, t + 1, now, &tally, &x_server)?;
         }
     }
     Ok(metrics)

@@ -3,14 +3,24 @@
 //!
 //! Clients run free: each pulls the current server model, performs exactly
 //! K local steps at its own speed, and pushes the update
-//! Δ = X_pulled − X_local at its finish time (optionally QSGD-compressed —
-//! FedBuff has no decoding key, so the *lattice* scheme is inapplicable,
-//! exactly as the paper notes). The server accumulates updates in a buffer
-//! of size Z; when full it applies X ← X − η_g·mean(Δ) and the round
-//! counter advances.
+//! Δ = X_pulled − X_local (optionally QSGD-compressed — FedBuff has no
+//! decoding key, so the *lattice* scheme is inapplicable, exactly as the
+//! paper notes). The server accumulates updates in a buffer of size Z;
+//! when full it applies X ← X − η_g·mean(Δ) and the round counter
+//! advances.
+//!
+//! Transport integration: a push *arrives* at its finish time plus the
+//! client's uplink time for the Δ's exact encoded size (QSGD sizes are a
+//! deterministic function of the dimension — `Quantizer::encoded_bits`,
+//! property-tested against the encoder in rust/tests/net_parity.rs — so
+//! the arrival is known when the event is scheduled); the re-pull starts
+//! after the model's downlink time, delayed to the client's next
+//! availability window if it churned off. Buffer order is *arrival*
+//! order. Under the default `Ideal` network every term is exactly 0.0 and
+//! the pre-net event schedule is reproduced bit for bit.
 //!
 //! Parallel structure: the server model only changes at aggregation
-//! boundaries, so the Z finish-events that fill one buffer are fully
+//! boundaries, so the Z arrival-events that fill one buffer are fully
 //! determined (which client, from which pulled snapshot, on which batches)
 //! *before* any of their SGD runs. The event-queue walk stays serial —
 //! popping events, advancing clocks, drawing batches, assigning per-
@@ -34,12 +44,12 @@ use super::make_task;
 use crate::config::QuantizerKind;
 use crate::coordinator::FlRun;
 use crate::engine::TrainEngine;
-use crate::metrics::RunMetrics;
+use crate::metrics::{CommTally, RunMetrics};
 use crate::model::params;
 use crate::quant::{QsgdQuantizer, Quantizer};
 use crate::util::rng::derive_seed;
 
-/// Event-queue entry: client `id` finishes its K steps at `time`.
+/// Event-queue entry: client `id`'s push arrives at the server at `time`.
 #[derive(PartialEq)]
 struct Finish {
     time: f64,
@@ -77,42 +87,51 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         QuantizerKind::None => None,
     };
 
+    let model_bits = (d * 32) as u64;
+    // Exact wire size of one Δ push — deterministic given d, so arrival
+    // times can be scheduled before the payload exists.
+    let delta_bits = match &up_quant {
+        Some(q) => q.encoded_bits(d) as u64,
+        None => model_bits,
+    };
+
     let mut x_server = ctx.spec.init_params(derive_seed(cfg.seed, 0x1417));
-    // Every client starts computing on the init model at time 0.
+    // Every client starts computing on the init model at time 0 (the
+    // initial broadcast is not priced, matching the paper's setup).
     let mut pulled: Vec<Vec<f32>> = vec![x_server.clone(); cfg.n];
     let mut queue: BinaryHeap<Reverse<Finish>> = BinaryHeap::new();
     for i in 0..cfg.n {
         ctx.clocks[i].restart(0.0);
-        let t = ctx.clocks[i].finish_time_for(cfg.k);
+        let t = ctx.clocks[i].finish_time_for(cfg.k)
+            + ctx.transport.uplink_time(i, delta_bits);
         queue.push(Reverse(Finish { time: t, id: i }));
     }
 
     let mut now = 0f64;
-    let mut bits_up = 0u64;
-    let mut bits_down = 0u64;
-    let mut total_steps = 0u64;
-    let model_bits = (d * 32) as u64;
+    let mut tally = CommTally::default();
     let mut aggregations = 0usize;
     let mut msg_counter = 0u64;
 
-    ctx.eval_point(&mut metrics, 0, now, 0, 0, 0, &x_server)?;
+    ctx.eval_point(&mut metrics, 0, now, &tally, &x_server)?;
 
     while aggregations < cfg.rounds {
-        // Serial event-queue walk: pop the Z finishes that fill this
-        // buffer, in event order. Each popped client materializes its
+        // Serial event-queue walk: pop the Z arrivals that fill this
+        // buffer, in arrival order. Each popped client materializes its
         // burst (start snapshot + batch draws) and immediately re-pulls
-        // the current server model and restarts.
+        // the current server model and restarts — delayed by the model's
+        // downlink time, and by the client's next availability window if
+        // it churned off.
         let mut tasks = Vec::with_capacity(cfg.fedbuff_buffer);
         while tasks.len() < cfg.fedbuff_buffer {
             let Reverse(Finish { time, id }) = queue.pop().expect("queue non-empty");
             now = time;
             metrics.total_interactions += 1;
             metrics.sum_observed_steps += cfg.k as u64;
-            total_steps += cfg.k as u64;
+            tally.total_steps += cfg.k as u64;
 
             // Client `id` finished K steps on its pulled snapshot; it
             // pulls the current model (uncompressed, as in [30]) and
-            // restarts immediately.
+            // restarts.
             let start = std::mem::replace(&mut pulled[id], x_server.clone());
             let mut task = make_task(ctx, id, start, cfg.k, cfg.lr);
             if up_quant.is_some() {
@@ -121,9 +140,14 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             }
             tasks.push(task);
 
-            bits_down += model_bits;
-            ctx.clocks[id].restart(now);
-            let t_next = ctx.clocks[id].finish_time_for(cfg.k);
+            let down_t = ctx.transport.downlink_time(id, model_bits);
+            let up_t = ctx.transport.uplink_time(id, delta_bits);
+            tally.bits_down += model_bits;
+            tally.comm_down_time += down_t;
+            tally.comm_up_time += up_t;
+            let resume = ctx.availability.next_up(id, now);
+            ctx.clocks[id].restart(resume + down_t);
+            let t_next = ctx.clocks[id].finish_time_for(cfg.k) + up_t;
             queue.push(Reverse(Finish { time: t_next, id }));
         }
 
@@ -149,22 +173,14 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         // Server aggregates the full buffer, applying Δs in event order.
         let scale = cfg.fedbuff_server_lr / deltas.len() as f32;
         for (delta, bits) in deltas {
-            bits_up += bits;
+            tally.bits_up += bits;
             params::axpy(&mut x_server, -scale, &delta);
         }
         aggregations += 1;
         now += cfg.timing.sit;
 
         if aggregations % cfg.eval_every == 0 || aggregations == cfg.rounds {
-            ctx.eval_point(
-                &mut metrics,
-                aggregations,
-                now,
-                total_steps,
-                bits_up,
-                bits_down,
-                &x_server,
-            )?;
+            ctx.eval_point(&mut metrics, aggregations, now, &tally, &x_server)?;
         }
     }
     Ok(metrics)

@@ -3,7 +3,9 @@
 //!
 //! Per server round t (server clock τ):
 //!
-//! 1. Sample S, |S| = s, uniformly at random.
+//! 1. Sample S, |S| <= s, uniformly from the *reachable* clients (the
+//!    [`crate::net`] availability process; under the default `Always`
+//!    process this is exactly the pre-net uniform draw of s clients).
 //! 2. For each i ∈ S (non-blocking — the client replies immediately):
 //!    - the client's realized progress is H_i = (steps its Exp(λ_i)
 //!      process completed since its last interaction, capped at K); those
@@ -17,7 +19,12 @@
 //!    - client update (averaging mode "both", the paper default):
 //!      X^i ← Q(X_t)/(s+1) + s/(s+1)·Y^i, then restarts K local steps.
 //! 3. Server update: X_{t+1} = (X_t + Σ_{i∈S} Q(Y^i))/(s+1).
-//! 4. τ += sit, then τ += swt before the next round.
+//! 4. τ += sit + (slowest sampled exchange), then τ += swt before the next
+//!    round. Each exchange is priced by the transport from its *actual*
+//!    encoded bits (Enc(X_t) down, Enc(Y^i) up); the round extends by the
+//!    max over the sampled clients since the exchanges overlap. Under the
+//!    default `Ideal` transport every cost is exactly 0.0, reproducing the
+//!    pre-net trajectory bit for bit.
 //!
 //! The Figure 4 ablation modes replace step 2/3's averaging:
 //! `ServerOnly` has clients adopt Q(X_t) outright; `ClientOnly` has the
@@ -37,7 +44,7 @@ use super::make_task;
 use crate::config::AveragingMode;
 use crate::coordinator::FlRun;
 use crate::engine::TrainEngine;
-use crate::metrics::RunMetrics;
+use crate::metrics::{CommTally, RunMetrics};
 use crate::model::params;
 use crate::quant::Quantizer;
 use crate::util::rng::derive_seed;
@@ -89,16 +96,31 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     };
 
     let mut now = 0f64;
-    let mut bits_up = 0u64;
-    let mut bits_down = 0u64;
-    let mut total_steps = 0u64;
-    let inv_s1 = 1.0 / (cfg.s as f32 + 1.0);
+    let mut tally = CommTally::default();
 
-    ctx.eval_point(&mut metrics, 0, now, 0, 0, 0, &x_server)?;
+    ctx.eval_point(&mut metrics, 0, now, &tally, &x_server)?;
 
     for t in 0..cfg.rounds {
         now += cfg.timing.swt;
-        let sampled = ctx.rng.sample_distinct(cfg.n, cfg.s);
+        let sampled = ctx.availability.sample(&mut ctx.rng, cfg.n, cfg.s, now);
+        if sampled.len() < cfg.s {
+            metrics.short_rounds += 1;
+        }
+        if sampled.is_empty() {
+            // Nobody reachable: the server idles this round.
+            now += cfg.timing.sit;
+            if cfg.track_potential {
+                metrics.potential.push(potential(&x_server, &x_client));
+            }
+            if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
+                ctx.eval_point(&mut metrics, t + 1, now, &tally, &x_server)?;
+            }
+            continue;
+        }
+        // With churn a round may run below the configured s; the averaging
+        // weight follows the realized sample size (equal to the configured
+        // one — hence bit-identical — whenever everyone is reachable).
+        let inv_s1 = 1.0 / (sampled.len() as f32 + 1.0);
 
         // Server's outgoing message is encoded once per round.
         let down_seed = derive_seed(cfg.seed, 0xD011 ^ ((t as u64) << 24));
@@ -114,7 +136,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             if h == 0 {
                 metrics.zero_progress_interactions += 1;
             }
-            total_steps += h as u64;
+            tally.total_steps += h as u64;
             tasks.push(make_task(ctx, i, x_client[i].clone(), h, lr_eff));
         }
 
@@ -159,7 +181,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
                 AveragingMode::Both | AveragingMode::ClientOnly => {
                     let mut m = q_x;
                     params::scale(&mut m, inv_s1);
-                    params::axpy(&mut m, cfg.s as f32 * inv_s1, &y_i);
+                    params::axpy(&mut m, sampled.len() as f32 * inv_s1, &y_i);
                     m
                 }
                 AveragingMode::ServerOnly => y_i,
@@ -168,15 +190,25 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         })?;
 
         // In-order reduction: Σ Q(Y^i) accumulates in sampled order, so
-        // the floating-point sum matches the serial path bit for bit.
+        // the floating-point sum matches the serial path bit for bit. Each
+        // exchange is priced from its actual bits; the exchanges overlap,
+        // so the round extends by the slowest one.
         let mut sum_qy = vec![0f32; d];
+        let mut round_comm = 0f64;
         for out in outcomes {
+            let down_t =
+                ctx.transport.downlink_time(out.client_id, enc_x.bits as u64);
+            let up_t = ctx.transport.uplink_time(out.client_id, out.up_bits);
+            round_comm = round_comm.max(down_t + up_t);
+            tally.comm_down_time += down_t;
+            tally.comm_up_time += up_t;
+            tally.bits_up += out.up_bits;
+            tally.bits_down += enc_x.bits as u64;
             params::axpy(&mut sum_qy, 1.0, &out.q_y);
-            bits_up += out.up_bits;
-            bits_down += enc_x.bits as u64;
             x_client[out.client_id] = out.x_next;
-            // The client restarts its K local steps after the interaction.
-            ctx.clocks[out.client_id].restart(now + cfg.timing.sit);
+            // The client restarts its K local steps once it has received
+            // and folded in the server's message.
+            ctx.clocks[out.client_id].restart(now + cfg.timing.sit + down_t);
         }
 
         // Server-side model update. ClientOnly removes the server's
@@ -189,26 +221,18 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             }
             AveragingMode::ClientOnly => {
                 x_server = sum_qy;
-                params::scale(&mut x_server, 1.0 / cfg.s as f32);
+                params::scale(&mut x_server, 1.0 / sampled.len() as f32);
             }
         }
 
-        now += cfg.timing.sit;
+        now += cfg.timing.sit + round_comm;
 
         if cfg.track_potential {
             metrics.potential.push(potential(&x_server, &x_client));
         }
 
         if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
-            ctx.eval_point(
-                &mut metrics,
-                t + 1,
-                now,
-                total_steps,
-                bits_up,
-                bits_down,
-                &x_server,
-            )?;
+            ctx.eval_point(&mut metrics, t + 1, now, &tally, &x_server)?;
         }
     }
     Ok(metrics)

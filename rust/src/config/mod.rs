@@ -4,6 +4,7 @@
 //! by the figure harness.
 
 use crate::data::{PartitionKind, SynthFamily};
+use crate::net::NetworkConfig;
 use crate::util::cli::Args;
 
 /// Which protocol to run (paper §4 comparisons).
@@ -178,6 +179,10 @@ pub struct ExperimentConfig {
     /// bit-identical for every value (deterministic fan-out + ordered
     /// reduction), so this is purely a wall-clock knob.
     pub workers: usize,
+    /// simulated network: link-pricing profile + availability process
+    /// ([`crate::net`]). The default (`Ideal` + `Always`) is a bit-exact
+    /// no-op on every trajectory.
+    pub net: NetworkConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -207,6 +212,7 @@ impl Default for ExperimentConfig {
             lattice_gamma: None,
             track_potential: false,
             workers: 0,
+            net: NetworkConfig::default(),
         }
     }
 }
@@ -231,10 +237,12 @@ impl ExperimentConfig {
         if self.algorithm == Algorithm::FedBuff && self.fedbuff_buffer == 0 {
             return Err("fedbuff buffer must be >= 1".into());
         }
+        self.net.validate()?;
         Ok(())
     }
 
-    /// Known CLI keys for the `run` subcommand.
+    /// Known CLI keys for the `run` subcommand, excluding the network
+    /// keys — use [`ExperimentConfig::cli_keys`] for the full set.
     pub const CLI_KEYS: &'static [&'static str] = &[
         "algorithm", "n", "s", "k", "lr", "rounds", "model", "family",
         "train-samples", "val-samples", "partition", "quantizer",
@@ -243,6 +251,15 @@ impl ExperimentConfig {
         "fedbuff-buffer", "fedbuff-server-lr", "eval-every", "batch",
         "seed", "xla", "gamma", "out", "workers",
     ];
+
+    /// The full `run` key set: [`ExperimentConfig::CLI_KEYS`] plus the
+    /// network keys owned by [`NetworkConfig::CLI_KEYS`] (single source —
+    /// a flag added to one parser cannot drift out of the typo guard).
+    pub fn cli_keys() -> Vec<&'static str> {
+        let mut keys = Self::CLI_KEYS.to_vec();
+        keys.extend_from_slice(NetworkConfig::CLI_KEYS);
+        keys
+    }
 
     pub fn from_args(args: &Args) -> Result<Self, String> {
         let mut c = ExperimentConfig::default();
@@ -274,8 +291,7 @@ impl ExperimentConfig {
         if let Some(a) = args.get("averaging") {
             c.averaging = AveragingMode::parse(a)?;
         }
-        c.weighted = args.flag("weighted")
-            || args.get("weighted").map(|v| v == "true").unwrap_or(false);
+        c.weighted = args.bool("weighted");
         c.timing.swt = args.get_f64("swt", c.timing.swt);
         c.timing.sit = args.get_f64("sit", c.timing.sit);
         c.timing.slow_fraction =
@@ -288,13 +304,13 @@ impl ExperimentConfig {
         c.eval_every = args.get_usize("eval-every", c.eval_every);
         c.batch = args.get_usize("batch", c.batch);
         c.seed = args.get_u64("seed", c.seed);
-        c.use_xla =
-            args.flag("xla") || args.get("xla").map(|v| v == "true").unwrap_or(false);
+        c.use_xla = args.bool("xla");
         if let Some(g) = args.get("gamma") {
             c.lattice_gamma =
                 Some(g.parse().map_err(|_| format!("bad gamma {g:?}"))?);
         }
         c.workers = args.get_usize("workers", c.workers);
+        c.net = NetworkConfig::from_args(args)?;
         c.validate()?;
         Ok(c)
     }
@@ -342,6 +358,24 @@ mod tests {
         assert!(c.validate().is_err());
         let c = ExperimentConfig { lr: -1.0, ..base };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn net_flags_parse_into_config() {
+        let a = cli::parse(&sv(&["run", "--net", "mobile", "--churn", "100/20"]));
+        let c = ExperimentConfig::from_args(&a).unwrap();
+        assert!(!c.net.profile.is_ideal());
+        assert!(matches!(
+            c.net.availability,
+            crate::net::AvailabilityKind::Churn { .. }
+        ));
+        // Defaults stay the bit-exact no-op.
+        assert!(ExperimentConfig::default().net.profile.is_ideal());
+        // The typo guard covers every network key without hand-copying.
+        let keys = ExperimentConfig::cli_keys();
+        for k in NetworkConfig::CLI_KEYS {
+            assert!(keys.contains(k), "missing net key {k}");
+        }
     }
 
     #[test]

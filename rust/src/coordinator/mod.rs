@@ -11,10 +11,10 @@ use anyhow::{Context, Result};
 use crate::algorithms;
 use crate::config::{Algorithm, ExperimentConfig, QuantizerKind};
 use crate::data::{partition, Dataset, Shard, SynthSpec};
-use crate::engine::TrainEngine;
 use crate::exec::{EngineFactory, EnginePool};
-use crate::metrics::{EvalPoint, RunMetrics};
+use crate::metrics::{CommTally, EvalPoint, RunMetrics};
 use crate::model::ModelSpec;
+use crate::net::{ClientAvailability, Transport};
 use crate::quant::{
     lattice_gamma_for, IdentityQuantizer, LatticeQuantizer, QsgdQuantizer,
     Quantizer,
@@ -41,6 +41,11 @@ pub struct FlRun {
     /// (engine 0 doubles as the serial/eval engine)
     pub pool: EnginePool,
     pub quantizer: Box<dyn Quantizer>,
+    /// prices every server↔client exchange from its actual encoded bits
+    /// ([`crate::net`]); the default `Ideal` profile prices exactly 0.0
+    pub transport: Box<dyn Transport>,
+    /// gates which clients are reachable at a given simulated time
+    pub availability: ClientAvailability,
     /// server-side sampling randomness
     pub rng: Rng,
     /// expected steps per interaction per client (H_i) — analytic, used by
@@ -100,6 +105,11 @@ impl FlRun {
 
         let expected_h = expected_steps_per_interaction(cfg, &clocks);
         let quantizer = build_quantizer(cfg, spec.num_params());
+        // Neither build consumes shared RNG state, so the default Ideal
+        // network leaves every downstream random stream untouched.
+        let transport = cfg.net.build_transport(cfg.n, derive_seed(cfg.seed, 0x4E70));
+        let availability =
+            cfg.net.build_availability(cfg.n, derive_seed(cfg.seed, 0x4E71));
 
         Ok(FlRun {
             cfg: cfg.clone(),
@@ -111,32 +121,35 @@ impl FlRun {
             clocks,
             pool,
             quantizer,
+            transport,
+            availability,
             rng: Rng::new(derive_seed(cfg.seed, 0x5E1EC7)),
             expected_h,
         })
     }
 
-    /// Evaluate server params; push an EvalPoint.
-    #[allow(clippy::too_many_arguments)]
+    /// Evaluate server params (validation set sharded across the engine
+    /// pool — bit-identical to a primary-only evaluation); push an
+    /// EvalPoint carrying the run's cumulative [`CommTally`].
     pub fn eval_point(
         &mut self,
         metrics: &mut RunMetrics,
         round: usize,
         sim_time: f64,
-        total_client_steps: u64,
-        bits_up: u64,
-        bits_down: u64,
+        tally: &CommTally,
         params: &[f32],
     ) -> Result<()> {
-        let (val_loss, val_acc) = self.pool.primary().evaluate(params, &self.val)?;
+        let (val_loss, val_acc) = self.pool.evaluate_sharded(params, &self.val)?;
         let (train_loss, _) =
-            self.pool.primary().evaluate(params, &self.train_probe)?;
+            self.pool.evaluate_sharded(params, &self.train_probe)?;
         metrics.push(EvalPoint {
             round,
             sim_time,
-            total_client_steps,
-            bits_up,
-            bits_down,
+            total_client_steps: tally.total_steps,
+            bits_up: tally.bits_up,
+            bits_down: tally.bits_down,
+            comm_up_time: tally.comm_up_time,
+            comm_down_time: tally.comm_down_time,
             val_loss,
             val_acc,
             train_loss,

@@ -54,11 +54,46 @@ pub trait TrainEngine: Send {
         Ok(loss_sum)
     }
 
-    /// Mean loss and accuracy over a dataset.
-    fn evaluate(&mut self, params: &[f32], data: &Dataset) -> anyhow::Result<(f64, f64)>;
+    /// Evaluate rows `lo..hi` of `data` in [`TrainEngine::eval_batch`]-
+    /// sized chunks (chunk boundaries are global: `lo` must sit on a
+    /// chunk boundary), returning one `(summed-loss contribution,
+    /// correct count)` pair per chunk.
+    ///
+    /// This is the primitive parallel evaluation builds on:
+    /// [`TrainEngine::evaluate`] is *definitionally* the in-order fold of
+    /// these pairs, so sharding a dataset across engines at chunk
+    /// boundaries and folding the concatenated chunk lists in global
+    /// order reproduces the unsharded result bit for bit
+    /// (`crate::exec::EnginePool::evaluate_sharded`).
+    fn evaluate_span(
+        &mut self,
+        params: &[f32],
+        data: &Dataset,
+        lo: usize,
+        hi: usize,
+    ) -> anyhow::Result<Vec<(f64, f64)>>;
+
+    /// Mean loss and accuracy over a dataset: the in-order fold of
+    /// [`TrainEngine::evaluate_span`] over the whole set.
+    fn evaluate(&mut self, params: &[f32], data: &Dataset) -> anyhow::Result<(f64, f64)> {
+        anyhow::ensure!(!data.is_empty());
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        for (l, c) in self.evaluate_span(params, data, 0, data.len())? {
+            loss_sum += l;
+            correct += c;
+        }
+        Ok((loss_sum / data.len() as f64, correct / data.len() as f64))
+    }
 
     /// Fixed train batch size (XLA artifacts are shape-specialized).
     fn train_batch(&self) -> usize;
+
+    /// Chunk size [`TrainEngine::evaluate`] walks a dataset with (the
+    /// artifact eval batch for XLA; the train batch for native).
+    fn eval_batch(&self) -> usize {
+        self.train_batch()
+    }
 
     fn name(&self) -> &'static str;
 }

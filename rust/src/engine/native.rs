@@ -202,21 +202,27 @@ impl TrainEngine for NativeEngine {
         Ok(loss)
     }
 
-    fn evaluate(&mut self, params: &[f32], data: &Dataset) -> anyhow::Result<(f64, f64)> {
-        anyhow::ensure!(!data.is_empty());
+    fn evaluate_span(
+        &mut self,
+        params: &[f32],
+        data: &Dataset,
+        lo: usize,
+        hi: usize,
+    ) -> anyhow::Result<Vec<(f64, f64)>> {
+        anyhow::ensure!(hi <= data.len() && lo <= hi);
         let c = self.spec.num_classes();
-        let mut loss_sum = 0f64;
-        let mut correct = 0usize;
         let chunk = self.batch;
-        let mut i = 0;
-        while i < data.len() {
-            let hi = (i + chunk).min(data.len());
-            let idx: Vec<usize> = (i..hi).collect();
+        let mut out = Vec::with_capacity((hi - lo).div_ceil(chunk.max(1)));
+        let mut i = lo;
+        while i < hi {
+            let end = (i + chunk).min(hi);
+            let idx: Vec<usize> = (i..end).collect();
             let batch = data.gather_batch(&idx);
             let b = batch.batch;
             self.forward(params, &batch.x, b);
-            loss_sum += self.loss_and_probs(&batch.y, b) as f64 * b as f64;
+            let loss = self.loss_and_probs(&batch.y, b) as f64 * b as f64;
             let logits = self.acts.last().unwrap();
+            let mut correct = 0usize;
             for r in 0..b {
                 let row = &logits[r * c..(r + 1) * c];
                 let pred = row
@@ -229,9 +235,10 @@ impl TrainEngine for NativeEngine {
                     correct += 1;
                 }
             }
-            i = hi;
+            out.push((loss, correct as f64));
+            i = end;
         }
-        Ok((loss_sum / data.len() as f64, correct as f64 / data.len() as f64))
+        Ok(out)
     }
 
     fn train_batch(&self) -> usize {

@@ -200,20 +200,26 @@ impl TrainEngine for XlaEngine {
         Ok(total_loss)
     }
 
-    fn evaluate(&mut self, params: &[f32], data: &Dataset) -> Result<(f64, f64)> {
-        anyhow::ensure!(!data.is_empty());
+    fn evaluate_span(
+        &mut self,
+        params: &[f32],
+        data: &Dataset,
+        lo: usize,
+        hi: usize,
+    ) -> Result<Vec<(f64, f64)>> {
+        anyhow::ensure!(hi <= data.len() && lo <= hi);
         let chunk = self.eval_batch;
-        let mut loss_sum = 0f64;
-        let mut correct = 0f64;
-        let mut counted = 0usize;
-        let mut i = 0;
-        while i < data.len() {
-            let hi = (i + chunk).min(data.len());
+        let mut out_pairs = Vec::with_capacity((hi - lo).div_ceil(chunk.max(1)));
+        let mut i = lo;
+        while i < hi {
+            let end = (i + chunk).min(hi);
             // The eval artifact is shape-specialized: pad the final chunk
-            // by wrapping around, then correct the sums for the overlap.
+            // by wrapping around the *full* dataset, then correct the sums
+            // for the overlap (same walk whether or not the set is
+            // sharded, so the chunk contributions are span-independent).
             let idx: Vec<usize> =
                 (i..i + chunk).map(|j| j % data.len().max(1)).collect();
-            let real = hi - i;
+            let real = end - i;
             let batch = data.gather_batch(&idx);
             let mut inputs = self.param_literals(params)?;
             inputs.push(Runtime::literal_f32(&batch.x, &[chunk, batch.dim])?);
@@ -227,27 +233,25 @@ impl TrainEngine for XlaEngine {
                 .to_vec::<f32>()
                 .map_err(|e| anyhow::anyhow!("{e:?}"))?[0] as f64;
             if real == chunk {
-                loss_sum += chunk_loss;
-                correct += chunk_correct;
+                out_pairs.push((chunk_loss, chunk_correct));
             } else {
-                // Re-evaluate the wrapped tail exactly via proportioning is
-                // not sound; instead subtract the wrapped samples by
-                // evaluating them natively is overkill — approximate by
-                // scaling. For exactness keep val sizes multiples of the
-                // eval batch (the default config does).
+                // Proportioning the wrapped tail is approximate; for
+                // exactness keep val sizes multiples of the eval batch
+                // (the default config does).
                 let frac = real as f64 / chunk as f64;
-                loss_sum += chunk_loss * frac;
-                correct += chunk_correct * frac;
+                out_pairs.push((chunk_loss * frac, chunk_correct * frac));
             }
-            counted += real;
-            i = hi;
+            i = end;
         }
-        debug_assert_eq!(counted, data.len());
-        Ok((loss_sum / data.len() as f64, correct / data.len() as f64))
+        Ok(out_pairs)
     }
 
     fn train_batch(&self) -> usize {
         self.train_batch
+    }
+
+    fn eval_batch(&self) -> usize {
+        self.eval_batch
     }
 
     fn name(&self) -> &'static str {

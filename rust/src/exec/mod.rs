@@ -5,9 +5,9 @@
 //! clients per round; executing each sampled client's local SGD serially
 //! makes wall-clock scale linearly with `s`. This module fans the per-
 //! client work out across an [`EnginePool`] — one [`TrainEngine`] instance
-//! per worker thread, built by an [`EngineFactory`] and reused across
-//! rounds — while keeping trajectories **bit-identical to the serial path
-//! for any worker count**. Three invariants make that hold:
+//! per worker thread, built by an [`EngineFactory`] — while keeping
+//! trajectories **bit-identical to the serial path for any worker count**.
+//! Three invariants make that hold:
 //!
 //! 1. *Serial pre-pass*: everything that consumes shared or ordered
 //!    randomness (client sampling, clock advancement, per-client batch
@@ -21,10 +21,25 @@
 //!    order, so the caller's floating-point accumulation order is exactly
 //!    the serial loop's.
 //!
+//! Workers are **long-lived threads fed over channels** (each builds its
+//! engine once, in-thread, on spawn): a fan-out dispatches one contiguous
+//! chunk of tasks per worker and runs chunk 0 on the caller's thread with
+//! the primary engine, so per-round spawn overhead is gone — measured by
+//! the `fan-out overhead` rows in `benches/bench_round.rs` at s >= 128.
+//!
+//! [`EnginePool::evaluate_sharded`] reuses the same machinery to shard
+//! evaluation: the dataset splits at eval-chunk boundaries, each worker
+//! returns per-chunk partial sums ([`TrainEngine::evaluate_span`]), and
+//! the fold walks the chunks in global order — bit-identical to a
+//! single-engine `evaluate` for every worker count.
+//!
 //! The worker count comes from `ExperimentConfig::workers` (`--workers`;
 //! 0 = available parallelism). `rust/tests/parallel_parity.rs` asserts the
 //! bit-identity for workers ∈ {1, 2, 8} on all four algorithms, and
 //! `benches/bench_round.rs` measures the scaling at n=300/s=32.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
 
 use anyhow::Result;
 
@@ -109,13 +124,67 @@ pub struct ClientResult {
     pub steps: usize,
 }
 
+/// A job shipped to a long-lived worker thread. The `'static` bound is
+/// erased borrow lifetime — see the SAFETY note in [`EnginePool::map`].
+type Job = Box<dyn FnOnce(&mut dyn TrainEngine) + Send + 'static>;
+
+/// Erase a job's borrow lifetime so it can cross the worker channel.
+///
+/// # Safety
+/// The caller must not return (or otherwise release the borrows the job
+/// captures) until the job has either run to completion or been dropped —
+/// [`EnginePool::map`] guarantees this by draining one result (or a
+/// disconnect) per dispatched job before returning, with a [`DrainGuard`]
+/// covering the unwinding path.
+unsafe fn erase_job_lifetime<'a>(
+    job: Box<dyn FnOnce(&mut dyn TrainEngine) + Send + 'a>,
+) -> Job {
+    std::mem::transmute(job)
+}
+
+/// Unwind guard for the erased borrows in [`EnginePool::map`]: dispatched
+/// jobs hold references into the caller's frame, so that frame must not
+/// be torn down — not even by a panic — until every dispatched job has
+/// either sent its result or dropped its sender. `drop` closes the
+/// guard's own sender first so a dead worker's lost job surfaces as a
+/// disconnect instead of a hang.
+struct DrainGuard<R> {
+    rx: mpsc::Receiver<(usize, Vec<Result<R>>)>,
+    tx: Option<mpsc::Sender<(usize, Vec<Result<R>>)>>,
+    outstanding: usize,
+}
+
+impl<R> Drop for DrainGuard<R> {
+    fn drop(&mut self) {
+        self.tx.take();
+        while self.outstanding > 0 {
+            match self.rx.recv() {
+                Ok(_) => self.outstanding -= 1,
+                // All senders gone: every job finished or was destroyed
+                // with its dead worker.
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+/// One long-lived worker: a channel feeding jobs to a thread that owns a
+/// private engine (built in-thread on spawn).
+struct Worker {
+    tx: Option<mpsc::Sender<Job>>,
+    handle: Option<JoinHandle<()>>,
+}
+
 /// A pool of per-worker training engines plus the deterministic fan-out
-/// primitive. Engines are built lazily (the primary eagerly, workers on
-/// first parallel use) and reused across rounds.
+/// primitive. The primary engine lives on the caller's thread (serial
+/// work, evaluation, chunk 0 of every fan-out); up to `workers - 1`
+/// persistent worker threads are spawned lazily on first parallel use and
+/// reused across rounds.
 pub struct EnginePool {
     factory: EngineFactory,
-    engines: Vec<Box<dyn TrainEngine>>,
+    primary: Box<dyn TrainEngine>,
     workers: usize,
+    pool: Vec<Worker>,
 }
 
 impl EnginePool {
@@ -126,31 +195,58 @@ impl EnginePool {
         } else {
             workers
         };
-        let engines = vec![factory.build()?];
-        Ok(EnginePool { factory, engines, workers })
+        let primary = factory.build()?;
+        Ok(EnginePool { factory, primary, workers, pool: Vec::new() })
     }
 
-    /// Resolved worker count (>= 1).
+    /// Resolved worker count (>= 1, including the caller's thread).
     pub fn workers(&self) -> usize {
         self.workers
     }
 
     /// The primary engine — used for evaluation and any serial work.
     pub fn primary(&mut self) -> &mut dyn TrainEngine {
-        self.engines[0].as_mut()
+        self.primary.as_mut()
     }
 
     pub fn spec(&self) -> &ModelSpec {
-        self.engines[0].spec()
+        self.primary.spec()
     }
 
     pub fn train_batch(&self) -> usize {
-        self.engines[0].train_batch()
+        self.primary.train_batch()
     }
 
-    fn ensure_engines(&mut self, k: usize) -> Result<()> {
-        while self.engines.len() < k {
-            self.engines.push(self.factory.build()?);
+    /// Spawn persistent workers up to `k` of them. Each builds its engine
+    /// in-thread (construction cost paid once per worker, not per round);
+    /// a build failure ends the thread and surfaces as a dead-worker error
+    /// on the fan-out that tried to use it.
+    fn ensure_workers(&mut self, k: usize) -> Result<()> {
+        while self.pool.len() < k {
+            let idx = self.pool.len();
+            let factory = self.factory.clone();
+            let (tx, rx) = mpsc::channel::<Job>();
+            let handle = std::thread::Builder::new()
+                .name(format!("engine-worker-{idx}"))
+                .spawn(move || {
+                    let mut engine = match factory.build() {
+                        Ok(e) => e,
+                        Err(e) => {
+                            // The pool reports a generic dead-worker error
+                            // on dispatch; the cause is only known here.
+                            eprintln!(
+                                "[exec] engine worker {idx}: engine \
+                                 construction failed: {e:#}"
+                            );
+                            return;
+                        }
+                    };
+                    while let Ok(job) = rx.recv() {
+                        job(engine.as_mut());
+                    }
+                })
+                .map_err(|e| anyhow::anyhow!("spawning engine worker: {e}"))?;
+            self.pool.push(Worker { tx: Some(tx), handle: Some(handle) });
         }
         Ok(())
     }
@@ -161,12 +257,14 @@ impl EnginePool {
     /// plain serial loop on the primary engine; because workers are pure
     /// (see module docs) the outputs are bit-identical either way.
     ///
-    /// Tasks are split into contiguous chunks, one per worker; the
-    /// concatenation of per-worker outputs restores task order.
-    pub fn map<R, F>(&mut self, tasks: Vec<ClientTask>, f: F) -> Result<Vec<R>>
+    /// Tasks are split into contiguous chunks, one per thread (chunk 0
+    /// runs on the caller's thread); the concatenation of per-chunk
+    /// outputs restores task order.
+    pub fn map<T, R, F>(&mut self, tasks: Vec<T>, f: F) -> Result<Vec<R>>
     where
+        T: Send,
         R: Send,
-        F: Fn(&mut dyn TrainEngine, ClientTask) -> Result<R> + Sync,
+        F: Fn(&mut dyn TrainEngine, T) -> Result<R> + Sync,
     {
         let n = tasks.len();
         if n == 0 {
@@ -176,38 +274,93 @@ impl EnginePool {
         if workers <= 1 {
             let mut out = Vec::with_capacity(n);
             for task in tasks {
-                out.push(f(self.engines[0].as_mut(), task)?);
+                out.push(f(self.primary.as_mut(), task)?);
             }
             return Ok(out);
         }
-        self.ensure_engines(workers)?;
+        self.ensure_workers(workers - 1)?;
+
+        // Same contiguous chunking as the serial split would use.
         let base = n / workers;
         let extra = n % workers;
         let mut it = tasks.into_iter();
-        let mut chunks: Vec<Vec<ClientTask>> = Vec::with_capacity(workers);
+        let mut chunks: Vec<Vec<T>> = Vec::with_capacity(workers);
         for w in 0..workers {
             let take = base + usize::from(w < extra);
             chunks.push(it.by_ref().take(take).collect());
         }
-        let f = &f;
-        let per_worker: Vec<Vec<Result<R>>> = std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(workers);
-            for (engine, chunk) in self.engines.iter_mut().zip(chunks) {
-                handles.push(scope.spawn(move || {
-                    chunk
-                        .into_iter()
-                        .map(|task| f(engine.as_mut(), task))
-                        .collect::<Vec<Result<R>>>()
-                }));
+        let mut chunks = chunks.into_iter();
+        let chunk0 = chunks.next().expect("chunk 0 exists");
+
+        let (res_tx, res_rx) = mpsc::channel::<(usize, Vec<Result<R>>)>();
+        let mut guard =
+            DrainGuard { rx: res_rx, tx: Some(res_tx), outstanding: 0 };
+        let fref = &f;
+        let mut dead_worker: Option<usize> = None;
+        for (w, chunk) in chunks.enumerate() {
+            if dead_worker.is_some() {
+                // Don't create further jobs; their tasks are dropped here
+                // and the error is reported after the live jobs drain.
+                break;
             }
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("engine worker panicked"))
-                .collect()
-        });
+            let res_tx = guard.tx.as_ref().expect("sender open").clone();
+            let job: Box<dyn FnOnce(&mut dyn TrainEngine) + Send + '_> =
+                Box::new(move |engine| {
+                    let out: Vec<Result<R>> =
+                        chunk.into_iter().map(|t| fref(engine, t)).collect();
+                    let _ = res_tx.send((w, out));
+                });
+            // SAFETY: the job borrows `f` and whatever `f` captures. Every
+            // dispatched job either sends its result or drops its sender
+            // when its worker dies, and this frame blocks until each
+            // dispatched job has done one or the other — on the normal
+            // path via the collection loop below, on the panic path via
+            // `DrainGuard::drop` — so no borrow outlives this call,
+            // making the lifetime erasure sound.
+            let job: Job = unsafe { erase_job_lifetime(job) };
+            match self.pool[w].tx.as_ref().expect("worker channel").send(job) {
+                Ok(()) => guard.outstanding += 1,
+                Err(_) => dead_worker = Some(w),
+            }
+        }
+
+        // Chunk 0 on the caller's thread while the workers run theirs.
+        let out0: Vec<Result<R>> = chunk0
+            .into_iter()
+            .map(|t| f(self.primary.as_mut(), t))
+            .collect();
+
+        let mut per_chunk: Vec<Option<Vec<Result<R>>>> =
+            (0..workers - 1).map(|_| None).collect();
+        let mut disconnected = false;
+        guard.tx.take();
+        while guard.outstanding > 0 {
+            match guard.rx.recv() {
+                Ok((w, out)) => {
+                    guard.outstanding -= 1;
+                    per_chunk[w] = Some(out);
+                }
+                Err(_) => {
+                    disconnected = true;
+                    guard.outstanding = 0;
+                }
+            }
+        }
+        // Both paths are the same failure observed at different moments
+        // (a worker died building its engine or panicked in a job); the
+        // root cause is printed to stderr by the worker thread itself.
+        anyhow::ensure!(
+            dead_worker.is_none() && !disconnected,
+            "an engine worker died (engine construction failure or panic — \
+             see stderr for the cause)"
+        );
+
         let mut out = Vec::with_capacity(n);
-        for chunk in per_worker {
-            for r in chunk {
+        for r in out0 {
+            out.push(r?);
+        }
+        for chunk in per_chunk {
+            for r in chunk.expect("all dispatched chunks received") {
                 out.push(r?);
             }
         }
@@ -227,6 +380,63 @@ impl EnginePool {
             };
             Ok(ClientResult { client_id, params, loss, steps: batches.len() })
         })
+    }
+
+    /// Parallel evaluation: shard `data` across the pool in contiguous
+    /// spans aligned to [`TrainEngine::eval_batch`] boundaries and fold
+    /// the per-chunk partial sums in **global chunk order** — bit-identical
+    /// to `primary().evaluate(params, data)` for every worker count (see
+    /// [`TrainEngine::evaluate_span`]).
+    pub fn evaluate_sharded(
+        &mut self,
+        params: &[f32],
+        data: &Dataset,
+    ) -> Result<(f64, f64)> {
+        anyhow::ensure!(!data.is_empty());
+        let chunk = self.primary.eval_batch().max(1);
+        let n_chunks = data.len().div_ceil(chunk);
+        let shards = self.workers.min(n_chunks);
+        if shards <= 1 {
+            return self.primary.evaluate(params, data);
+        }
+        let base = n_chunks / shards;
+        let extra = n_chunks % shards;
+        let mut spans: Vec<(usize, usize)> = Vec::with_capacity(shards);
+        let mut at = 0usize;
+        for w in 0..shards {
+            let take = base + usize::from(w < extra);
+            let lo = at * chunk;
+            let hi = ((at + take) * chunk).min(data.len());
+            spans.push((lo, hi));
+            at += take;
+        }
+        let partials = self.map(spans, |engine, (lo, hi)| {
+            engine.evaluate_span(params, data, lo, hi)
+        })?;
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        for span in partials {
+            for (l, c) in span {
+                loss_sum += l;
+                correct += c;
+            }
+        }
+        Ok((loss_sum / data.len() as f64, correct / data.len() as f64))
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        // Closing the channels ends the worker loops; join afterwards so
+        // shutdown is clean even if a worker is mid-job.
+        for w in &mut self.pool {
+            w.tx.take();
+        }
+        for w in &mut self.pool {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
     }
 }
 
@@ -304,8 +514,24 @@ mod tests {
     #[test]
     fn map_empty_tasks_is_empty() {
         let mut pool = EnginePool::new(factory(), 2).unwrap();
-        let out: Vec<usize> = pool.map(Vec::new(), |_, t| Ok(t.client_id)).unwrap();
+        let out: Vec<usize> =
+            pool.map(Vec::<ClientTask>::new(), |_, t| Ok(t.client_id)).unwrap();
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn workers_persist_across_fan_outs() {
+        // The persistent pool's contract: repeated fan-outs reuse the same
+        // threads (no per-round spawns), and results stay in order.
+        let (train, mut shards, params) = setup(6);
+        let mut pool = EnginePool::new(factory(), 3).unwrap();
+        for _ in 0..5 {
+            let tasks = make_tasks(&train, &mut shards, &params, &[1, 1, 1, 1, 1, 1]);
+            let ids = pool.map(tasks, |_, t| Ok(t.client_id)).unwrap();
+            assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+        }
+        // 3 threads total => 2 spawned workers, reused every round.
+        assert_eq!(pool.pool.len(), 2);
     }
 
     #[test]
@@ -356,5 +582,28 @@ mod tests {
         });
         assert!(res.is_err());
         assert!(format!("{:#}", res.err().unwrap()).contains("injected"));
+    }
+
+    #[test]
+    fn sharded_eval_matches_primary_bitwise() {
+        // The parallel-evaluation contract: same (loss, acc) bits as the
+        // single-engine path, for several worker counts and for dataset
+        // sizes that do / don't divide the eval chunk.
+        let (train, _, params) = setup(1);
+        for workers in [1usize, 2, 3, 8] {
+            let mut pool = EnginePool::new(factory(), workers).unwrap();
+            let (l_ser, a_ser) = pool.primary().evaluate(&params, &train).unwrap();
+            let (l_par, a_par) = pool.evaluate_sharded(&params, &train).unwrap();
+            assert_eq!(l_ser.to_bits(), l_par.to_bits(), "workers={workers}");
+            assert_eq!(a_ser.to_bits(), a_par.to_bits(), "workers={workers}");
+        }
+        // Ragged tail: 100 rows over chunk size 8.
+        let idx: Vec<usize> = (0..100).collect();
+        let ragged = crate::coordinator::subset(&train, &idx);
+        let mut pool = EnginePool::new(factory(), 4).unwrap();
+        let (l_ser, a_ser) = pool.primary().evaluate(&params, &ragged).unwrap();
+        let (l_par, a_par) = pool.evaluate_sharded(&params, &ragged).unwrap();
+        assert_eq!(l_ser.to_bits(), l_par.to_bits());
+        assert_eq!(a_ser.to_bits(), a_par.to_bits());
     }
 }

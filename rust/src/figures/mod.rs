@@ -7,7 +7,32 @@
 //! crossovers, robustness), not absolute accuracies.
 //!
 //! Default scale is reduced so `quafl figures` completes on a laptop core
-//! in minutes; `--paper-scale` restores the paper's n/s/rounds.
+//! in minutes; `--paper-scale` restores the paper's n/s/rounds, and
+//! `--smoke` clamps every arm to a seconds-scale run (the CI figure-smoke
+//! job).
+//!
+//! ## §net — simulated-network arms (DESIGN.md §5 index)
+//!
+//! Two arms beyond the paper, enabled by the [`crate::net`] subsystem:
+//!
+//! - **`net_bw`** — bandwidth-skew sweep: QuAFL ± lattice quantization and
+//!   uncompressed FedAvg under the `ideal` vs `mobile` profiles (Pareto
+//!   uplink, skewed lognormal downlink). Under `ideal` the compressed and
+//!   uncompressed QuAFL arms finish at the same simulated time; under
+//!   `mobile` the uncompressed arms pay the full model's uplink every
+//!   exchange and the sim-time ordering flips — the paper's communication-
+//!   efficiency claim made visible on the time axis. Per-phase
+//!   communication time is in each CSV (`comm_up_time`/`comm_down_time`).
+//! - **`net_churn`** — availability sweep at the paper's large-fleet scale
+//!   (n=300, s=30 with `--paper-scale`): always-on vs mild/heavy
+//!   dropout-rejoin churn vs 50% duty-cycle windows. `short_rounds` in the
+//!   summary counts rounds that ran under-strength.
+//!
+//! The same axes are scriptable as a grid via `quafl sweep`
+//! (`--algorithms`, `--quantizers`, `--nets`, `--seeds` — see
+//! [`run_sweep`]), with the network flags `--net`, `--net-up`,
+//! `--net-down`, `--net-latency`, `--churn A/B`, `--duty P/F` accepted by
+//! `run` and `sweep` alike.
 
 use anyhow::{Context, Result};
 
@@ -17,6 +42,7 @@ use crate::config::{
 use crate::coordinator;
 use crate::data::{PartitionKind, SynthFamily};
 use crate::metrics::RunMetrics;
+use crate::net::{AvailabilityKind, NetProfile, NetworkConfig};
 use crate::util::csv::CsvWriter;
 
 /// One experimental arm of a figure.
@@ -28,55 +54,173 @@ pub struct Arm {
 pub fn list() -> Vec<&'static str> {
     vec![
         "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
-        "fig9", "fig10", "fig11", "fig13", "fig15", "fig16",
+        "fig9", "fig10", "fig11", "fig13", "fig15", "fig16", "net_bw",
+        "net_churn",
+    ]
+}
+
+/// Clamp an arm to a seconds-scale run: same code paths, tiny horizon.
+/// Used by `--smoke` (the CI figure-smoke job).
+pub fn smoke_cfg(mut cfg: ExperimentConfig) -> ExperimentConfig {
+    cfg.n = cfg.n.min(8);
+    cfg.s = cfg.s.min(3).min(cfg.n);
+    cfg.k = cfg.k.min(5);
+    cfg.rounds = cfg.rounds.min(4);
+    cfg.eval_every = cfg.eval_every.min(4);
+    cfg.train_samples = cfg.train_samples.min(512);
+    cfg.val_samples = cfg.val_samples.min(128);
+    cfg
+}
+
+/// Headline columns shared by every summary CSV (figures and sweep);
+/// [`summary_core_cells`] produces the matching row slice.
+const SUMMARY_CORE_HEADER: &[&str] = &[
+    "final_acc", "final_val_loss", "sim_time", "total_bits", "comm_up_time",
+    "comm_down_time", "short_rounds", "time_to_acc50",
+];
+
+/// One formatted cell per [`SUMMARY_CORE_HEADER`] column.
+fn summary_core_cells(m: &RunMetrics) -> Vec<String> {
+    let last = m.points.last().copied();
+    vec![
+        format!("{:.4}", m.final_acc()),
+        format!("{:.4}", m.final_loss()),
+        format!("{:.1}", last.map(|p| p.sim_time).unwrap_or(0.0)),
+        format!("{}", m.total_bits()),
+        format!("{:.2}", last.map(|p| p.comm_up_time).unwrap_or(0.0)),
+        format!("{:.2}", last.map(|p| p.comm_down_time).unwrap_or(0.0)),
+        format!("{}", m.short_rounds),
+        m.time_to_accuracy(0.5)
+            .map(|t| format!("{t:.1}"))
+            .unwrap_or_else(|| "never".into()),
     ]
 }
 
 /// Run a figure by id, writing one CSV per arm plus a summary row file.
-pub fn run_figure(id: &str, out_dir: &str, paper_scale: bool) -> Result<()> {
+pub fn run_figure(
+    id: &str,
+    out_dir: &str,
+    paper_scale: bool,
+    smoke: bool,
+) -> Result<()> {
     let arms = arms_for(id, paper_scale)
         .with_context(|| format!("unknown figure {id:?} (known: {:?})", list()))?;
     std::fs::create_dir_all(out_dir)?;
-    let mut summary = CsvWriter::create(
-        format!("{out_dir}/{id}_summary.csv"),
-        &[
-            "arm", "final_acc", "final_val_loss", "final_train_loss",
-            "sim_time", "total_bits", "p_zero_progress", "mean_h",
-            "time_to_acc50",
-        ],
-    )?;
+    let mut header: Vec<&str> = vec!["arm"];
+    header.extend_from_slice(SUMMARY_CORE_HEADER);
+    header.extend_from_slice(&["final_train_loss", "p_zero_progress", "mean_h"]);
+    let mut summary =
+        CsvWriter::create(format!("{out_dir}/{id}_summary.csv"), &header)?;
     for arm in arms {
         let t0 = std::time::Instant::now();
-        let metrics = coordinator::run(&arm.cfg)
+        let cfg = if smoke { smoke_cfg(arm.cfg) } else { arm.cfg };
+        let metrics = coordinator::run(&cfg)
             .with_context(|| format!("{id} arm {}", arm.label))?;
         let path = format!("{out_dir}/{id}_{}.csv", arm.label);
         metrics.write_csv(&path)?;
-        summary.row_strs(&[
-            arm.label.clone(),
-            format!("{:.4}", metrics.final_acc()),
-            format!("{:.4}", metrics.final_loss()),
-            format!(
-                "{:.4}",
-                metrics.points.last().map(|p| p.train_loss).unwrap_or(f64::NAN)
-            ),
-            format!(
-                "{:.1}",
-                metrics.points.last().map(|p| p.sim_time).unwrap_or(0.0)
-            ),
-            format!("{}", metrics.total_bits()),
-            format!("{:.3}", metrics.zero_progress_fraction()),
-            format!("{:.2}", metrics.mean_observed_steps()),
-            metrics
-                .time_to_accuracy(0.5)
-                .map(|t| format!("{t:.1}"))
-                .unwrap_or_else(|| "never".into()),
-        ])?;
+        let mut row = vec![arm.label.clone()];
+        row.extend(summary_core_cells(&metrics));
+        row.push(format!(
+            "{:.4}",
+            metrics.points.last().map(|p| p.train_loss).unwrap_or(f64::NAN)
+        ));
+        row.push(format!("{:.3}", metrics.zero_progress_fraction()));
+        row.push(format!("{:.2}", metrics.mean_observed_steps()));
+        summary.row_strs(&row)?;
         eprintln!(
             "[figures] {id}/{}: acc={:.3} ({}s)",
             arm.label,
             metrics.final_acc(),
             t0.elapsed().as_secs()
         );
+    }
+    summary.flush()?;
+    Ok(())
+}
+
+/// The axes of one `quafl sweep` grid: the cross product of algorithms ×
+/// quantizers × network profiles × seeds, over a shared base config.
+pub struct SweepSpec {
+    pub algorithms: Vec<Algorithm>,
+    pub quantizers: Vec<QuantizerKind>,
+    /// (label, config) pairs — labels name the CSV files and summary rows
+    pub nets: Vec<(String, NetworkConfig)>,
+    pub seeds: Vec<u64>,
+}
+
+/// Short label for a quantizer choice in file names / summary rows.
+pub fn quant_label(q: &QuantizerKind) -> String {
+    match q {
+        QuantizerKind::Lattice { bits } => format!("lattice{bits}"),
+        QuantizerKind::Qsgd { bits } => format!("qsgd{bits}"),
+        QuantizerKind::None => "fp32".into(),
+    }
+}
+
+/// Grid runner behind `quafl sweep`: one run per cell, one CSV per cell
+/// plus a `sweep_summary.csv` with the headline numbers (simulated time,
+/// exact bits, per-phase communication time, under-strength rounds).
+pub fn run_sweep(
+    base: &ExperimentConfig,
+    spec: &SweepSpec,
+    out_dir: &str,
+) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut header: Vec<&str> = vec!["algorithm", "quantizer", "net", "seed"];
+    header.extend_from_slice(SUMMARY_CORE_HEADER);
+    let mut summary =
+        CsvWriter::create(format!("{out_dir}/sweep_summary.csv"), &header)?;
+    let mut seen = std::collections::BTreeSet::new();
+    for algo in &spec.algorithms {
+        for quant in &spec.quantizers {
+            // FedAvg and the baseline ignore the quantizer axis entirely
+            // (full-precision models / no communication); collapse their
+            // cells so the grid doesn't emit duplicate runs labeled as
+            // distinct compressed arms.
+            let quant = match algo {
+                Algorithm::FedAvg | Algorithm::Baseline => QuantizerKind::None,
+                _ => *quant,
+            };
+            for (net_label, net) in &spec.nets {
+                for &seed in &spec.seeds {
+                    let label = format!(
+                        "{}_{}_{}_s{}",
+                        algo.name(),
+                        quant_label(&quant),
+                        net_label,
+                        seed
+                    );
+                    if !seen.insert(label.clone()) {
+                        continue;
+                    }
+                    let cfg = ExperimentConfig {
+                        algorithm: *algo,
+                        quantizer: quant,
+                        net: net.clone(),
+                        seed,
+                        ..base.clone()
+                    };
+                    let t0 = std::time::Instant::now();
+                    let metrics = coordinator::run(&cfg)
+                        .with_context(|| format!("sweep cell {label}"))?;
+                    metrics.write_csv(&format!("{out_dir}/sweep_{label}.csv"))?;
+                    let mut row = vec![
+                        algo.name().to_string(),
+                        quant_label(&quant),
+                        net_label.clone(),
+                        format!("{seed}"),
+                    ];
+                    row.extend(summary_core_cells(&metrics));
+                    summary.row_strs(&row)?;
+                    eprintln!(
+                        "[sweep] {label}: acc={:.3} sim_time={:.1} ({}s)",
+                        metrics.final_acc(),
+                        metrics.points.last().map(|p| p.sim_time).unwrap_or(0.0),
+                        t0.elapsed().as_secs()
+                    );
+                }
+            }
+        }
     }
     summary.flush()?;
     Ok(())
@@ -426,6 +570,80 @@ pub fn arms_for(id: &str, paper: bool) -> Option<Vec<Arm>> {
                 },
             ]
         }
+        // §net net_bw: bandwidth-skew sweep — ideal vs mobile (Pareto
+        // uplink) for QuAFL ± compression and uncompressed FedAvg. Under
+        // ideal the compressed/uncompressed QuAFL arms tie on sim-time;
+        // under mobile the uncompressed arms pay ~2.5x the uplink bits per
+        // exchange (plus the straggler tail) and the ordering flips.
+        "net_bw" => {
+            let mobile = NetworkConfig {
+                profile: NetProfile::preset("mobile").expect("preset"),
+                availability: AvailabilityKind::Always,
+            };
+            let ideal = NetworkConfig::default();
+            let mk = |label: &str,
+                      algorithm: Algorithm,
+                      quantizer: QuantizerKind,
+                      net: &NetworkConfig| Arm {
+                label: label.into(),
+                cfg: ExperimentConfig {
+                    algorithm,
+                    quantizer,
+                    net: net.clone(),
+                    family: SynthFamily::Hard,
+                    ..b.clone()
+                },
+            };
+            let l10 = QuantizerKind::Lattice { bits: 10 };
+            vec![
+                mk("quafl_l10_ideal", Algorithm::QuAFL, l10, &ideal),
+                mk("quafl_fp32_ideal", Algorithm::QuAFL, QuantizerKind::None, &ideal),
+                mk("quafl_l10_mobile", Algorithm::QuAFL, l10, &mobile),
+                mk("quafl_fp32_mobile", Algorithm::QuAFL, QuantizerKind::None, &mobile),
+                mk("fedavg_fp32_mobile", Algorithm::FedAvg, QuantizerKind::None, &mobile),
+            ]
+        }
+        // §net net_churn: availability sweep at the paper's large-fleet
+        // scale (n=300/s=30 with --paper-scale). Transport stays ideal so
+        // the churn effect is isolated; short_rounds lands in the summary.
+        "net_churn" => {
+            let n = scale(paper, 60, 300);
+            let s = scale(paper, 6, 30);
+            let avails: [(&str, AvailabilityKind); 4] = [
+                ("always", AvailabilityKind::Always),
+                (
+                    "churn_mild",
+                    AvailabilityKind::Churn { mean_up: 200.0, mean_down: 50.0 },
+                ),
+                (
+                    "churn_heavy",
+                    AvailabilityKind::Churn { mean_up: 60.0, mean_down: 60.0 },
+                ),
+                (
+                    "duty50",
+                    AvailabilityKind::DutyCycle { period: 120.0, on_fraction: 0.5 },
+                ),
+            ];
+            avails
+                .into_iter()
+                .map(|(label, availability)| Arm {
+                    label: label.to_string(),
+                    cfg: ExperimentConfig {
+                        algorithm: Algorithm::QuAFL,
+                        n,
+                        s,
+                        family: SynthFamily::Hard,
+                        train_samples: scale(paper, 6000, 30_000),
+                        quantizer: QuantizerKind::Lattice { bits: 10 },
+                        net: NetworkConfig {
+                            profile: NetProfile::Ideal,
+                            availability,
+                        },
+                        ..b.clone()
+                    },
+                })
+                .collect()
+        }
         // Fig 16: FedBuff+QSGD vs QuAFL+lattice at equal bit width.
         "fig16" => vec![
             Arm {
@@ -477,6 +695,51 @@ mod tests {
     #[test]
     fn unknown_figure_is_none() {
         assert!(arms_for("fig99", false).is_none());
+    }
+
+    #[test]
+    fn smoke_clamp_keeps_every_figure_valid() {
+        for id in list() {
+            for arm in arms_for(id, true).unwrap() {
+                let cfg = smoke_cfg(arm.cfg);
+                cfg.validate()
+                    .unwrap_or_else(|e| panic!("{id}/{}: {e}", arm.label));
+                assert!(cfg.rounds <= 4);
+                assert!(cfg.n <= 8);
+            }
+        }
+    }
+
+    #[test]
+    fn net_bw_mixes_ideal_and_mobile() {
+        let arms = arms_for("net_bw", false).unwrap();
+        assert_eq!(arms.len(), 5);
+        let ideal = arms.iter().filter(|a| a.cfg.net.profile.is_ideal()).count();
+        assert_eq!(ideal, 2);
+        assert!(arms.iter().any(|a| {
+            a.cfg.algorithm == Algorithm::FedAvg && !a.cfg.net.profile.is_ideal()
+        }));
+    }
+
+    #[test]
+    fn net_churn_sweeps_availability_at_fleet_scale() {
+        let arms = arms_for("net_churn", true).unwrap();
+        assert_eq!(arms.len(), 4);
+        assert!(arms.iter().all(|a| a.cfg.n == 300 && a.cfg.s == 30));
+        assert!(arms
+            .iter()
+            .any(|a| matches!(a.cfg.net.availability, AvailabilityKind::Churn { .. })));
+        assert!(arms.iter().any(|a| matches!(
+            a.cfg.net.availability,
+            AvailabilityKind::DutyCycle { .. }
+        )));
+    }
+
+    #[test]
+    fn quant_labels() {
+        assert_eq!(quant_label(&QuantizerKind::Lattice { bits: 10 }), "lattice10");
+        assert_eq!(quant_label(&QuantizerKind::Qsgd { bits: 8 }), "qsgd8");
+        assert_eq!(quant_label(&QuantizerKind::None), "fp32");
     }
 
     #[test]

@@ -12,15 +12,26 @@
 //!   ([`quant`]), the discrete-event timing simulation ([`sim`]), dataset
 //!   synthesis + heterogeneous partitioning ([`data`]), and the experiment
 //!   coordinator + figure harness ([`coordinator`], [`figures`]).
+//! - **L3-net** — the simulated transport & client-availability subsystem
+//!   ([`net`]): per-client uplink/downlink bandwidth and latency drawn
+//!   from constant/lognormal/Pareto mixtures, a [`net::Transport`] that
+//!   prices every exchange from the *actual* encoded bit counts, and a
+//!   churn/duty-cycle availability process that gates sampling. The
+//!   default `Ideal` profile is a bit-exact no-op
+//!   (rust/tests/net_parity.rs), so the subsystem opens the
+//!   bandwidth-skew/churn scenario axis without touching any existing
+//!   trajectory.
 //! - **L3-exec** — the parallel client-execution subsystem ([`exec`]):
 //!   an [`exec::EnginePool`] holds one engine per worker thread (built by
-//!   an [`exec::EngineFactory`]), and every algorithm's per-round client
-//!   work flows through its deterministic fan-out — serial pre-pass
-//!   (sampling, clocks, per-client batch draws) → `std::thread::scope`
-//!   map over [`exec::ClientTask`]s → reduction in sampled order. The
-//!   worker count is `ExperimentConfig::workers` (`--workers`, 0 = all
-//!   cores) and is purely a wall-clock knob: trajectories are
-//!   bit-identical for every value (rust/tests/parallel_parity.rs).
+//!   an [`exec::EngineFactory`]; workers are long-lived threads fed over
+//!   channels), and every algorithm's per-round client work flows through
+//!   its deterministic fan-out — serial pre-pass (sampling, clocks,
+//!   per-client batch draws) → chunked map over [`exec::ClientTask`]s →
+//!   reduction in sampled order. Evaluation shards the validation set
+//!   across the same pool with an order-preserving fold. The worker count
+//!   is `ExperimentConfig::workers` (`--workers`, 0 = all cores) and is
+//!   purely a wall-clock knob: trajectories are bit-identical for every
+//!   value (rust/tests/parallel_parity.rs).
 //! - **L2/L1 (build-time Python)** — the client model's fwd/bwd/update as
 //!   JAX functions over Pallas kernels, AOT-lowered once to
 //!   `artifacts/*.hlo.txt`; [`runtime`] loads and [`engine::XlaEngine`]
@@ -38,6 +49,7 @@ pub mod exec;
 pub mod figures;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod quant;
 pub mod runtime;
 pub mod sim;

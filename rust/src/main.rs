@@ -1,27 +1,38 @@
 //! `quafl` CLI — the launcher.
 //!
 //! Subcommands:
-//!   run      — run one experiment (algorithm × data × quantizer × timing)
-//!   figures  — regenerate the paper's figures as CSV series
+//!   run      — run one experiment (algorithm × data × quantizer × timing
+//!              × network)
+//!   figures  — regenerate the paper's figures (+ §net arms) as CSV series
+//!   sweep    — grid runner: algorithms × quantizers × nets × seeds
 //!   info     — print artifact/platform/runtime information
 //!
 //! Examples:
 //!   quafl run --algorithm quafl --n 100 --s 10 --quantizer lattice:14 \
 //!             --partition by-class --rounds 200 --out results/run.csv
-//!   quafl figures --out-dir results [--paper-scale] [fig1 fig2 ...]
+//!   quafl run --net mobile --churn 200/50 --rounds 100
+//!   quafl figures --out-dir results [--paper-scale|--smoke] [fig1 net_bw ...]
+//!   quafl sweep --algorithms quafl,fedavg --quantizers lattice:10,none \
+//!               --nets ideal,mobile --seeds 1,2 --out-dir results/sweep
 //!   quafl info
 
-use quafl::config::ExperimentConfig;
+use quafl::config::{Algorithm, ExperimentConfig, QuantizerKind};
 use quafl::coordinator;
 use quafl::figures;
+use quafl::net::NetworkConfig;
 use quafl::util::cli;
+
+/// Options that never take a value (declared so trailing positionals —
+/// e.g. `figures --smoke fig2` — are not swallowed as flag values).
+const BOOL_FLAGS: &[&str] = &["smoke", "paper-scale", "weighted", "xla"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = cli::parse(&argv);
+    let args = cli::parse_with_bool_flags(&argv, BOOL_FLAGS);
     let code = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("figures") => cmd_figures(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("info") => cmd_info(),
         Some(other) => {
             eprintln!("unknown subcommand {other:?}");
@@ -38,7 +49,7 @@ fn main() {
 
 fn usage() {
     eprintln!(
-        "usage: quafl <run|figures|info> [options]\n\
+        "usage: quafl <run|figures|sweep|info> [options]\n\
          \n\
          run options (defaults in parentheses):\n\
          \x20 --algorithm quafl|fedavg|fedbuff|baseline (quafl)\n\
@@ -52,13 +63,122 @@ fn usage() {
          \x20 --slow-fraction FLOAT (0.25) --batch INT (32)\n\
          \x20 --workers INT client-exec threads (0 = all cores)\n\
          \x20 --seed INT --xla --gamma FLOAT --out FILE.csv\n\
+         network (defaults: ideal transport, always-on clients):\n\
+         \x20 --net ideal|broadband|mobile|DIST  (DIST = const:V |\n\
+         \x20       lognormal:MEDIAN/SIGMA | pareto:SCALE/SHAPE | mix:P+A+B,\n\
+         \x20       bits per sim-time unit, applied to both directions)\n\
+         \x20 --net-up/--net-down/--net-latency DIST  per-component override\n\
+         \x20 --churn MEAN_UP/MEAN_DOWN   exponential dropout/rejoin churn\n\
+         \x20 --duty PERIOD/ON_FRACTION   periodic availability windows\n\
          \n\
-         figures options: --out-dir DIR (results) --paper-scale [ids...]\n"
+         figures options: --out-dir DIR (results) --paper-scale|--smoke [ids...]\n\
+         \n\
+         sweep options: run options (base config) plus\n\
+         \x20 --algorithms A,B,..  --quantizers Q1,Q2,..\n\
+         \x20 --nets N1,N2,.. (each: preset|DIST) --seeds S1,S2,..\n\
+         \x20 --out-dir DIR (results/sweep)\n"
     );
 }
 
+fn cmd_sweep(args: &cli::Args) -> i32 {
+    let mut known = ExperimentConfig::cli_keys();
+    known.extend_from_slice(&[
+        "algorithms", "quantizers", "nets", "seeds", "out-dir",
+    ]);
+    if let Err(e) = args.check_known(&known) {
+        eprintln!("{e}");
+        return 2;
+    }
+    let base = match ExperimentConfig::from_args(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let parse_list = |key: &str| -> Option<Vec<String>> {
+        args.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    };
+    let spec = (|| -> Result<figures::SweepSpec, String> {
+        let algorithms = match parse_list("algorithms") {
+            Some(items) => items
+                .iter()
+                .map(|s| Algorithm::parse(s))
+                .collect::<Result<Vec<_>, _>>()?,
+            None => vec![base.algorithm],
+        };
+        let quantizers = match parse_list("quantizers") {
+            Some(items) => items
+                .iter()
+                .map(|s| QuantizerKind::parse(s))
+                .collect::<Result<Vec<_>, _>>()?,
+            None => vec![base.quantizer],
+        };
+        // Availability comes from the base flags (--churn/--duty) and
+        // applies to every cell; its suffix stays visible in each label.
+        let avail_suffix = base.net.availability_suffix();
+        let nets = match parse_list("nets") {
+            Some(items) => items
+                .iter()
+                .map(|s| {
+                    NetworkConfig::profile_from_str(s).map(|profile| {
+                        (
+                            format!(
+                                "{}{avail_suffix}",
+                                s.replace([':', '/', '+'], "-")
+                            ),
+                            NetworkConfig {
+                                profile,
+                                availability: base.net.availability.clone(),
+                            },
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+            None => vec![(base.net.label(), base.net.clone())],
+        };
+        let seeds = match parse_list("seeds") {
+            Some(items) => items
+                .iter()
+                .map(|s| {
+                    s.parse::<u64>().map_err(|_| format!("bad seed {s:?}"))
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+            None => vec![base.seed],
+        };
+        Ok(figures::SweepSpec { algorithms, quantizers, nets, seeds })
+    })();
+    let spec = match spec {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("sweep error: {e}");
+            return 2;
+        }
+    };
+    let out_dir = args.get_str("out-dir", "results/sweep");
+    let cells = spec.algorithms.len()
+        * spec.quantizers.len()
+        * spec.nets.len()
+        * spec.seeds.len();
+    eprintln!(
+        "[sweep] {cells} cells ({} algorithms x {} quantizers x {} nets x {} seeds) -> {out_dir}",
+        spec.algorithms.len(),
+        spec.quantizers.len(),
+        spec.nets.len(),
+        spec.seeds.len()
+    );
+    match figures::run_sweep(&base, &spec, &out_dir) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("sweep failed: {e:#}");
+            1
+        }
+    }
+}
+
 fn cmd_run(args: &cli::Args) -> i32 {
-    if let Err(e) = args.check_known(ExperimentConfig::CLI_KEYS) {
+    if let Err(e) = args.check_known(&ExperimentConfig::cli_keys()) {
         eprintln!("{e}");
         return 2;
     }
@@ -70,7 +190,7 @@ fn cmd_run(args: &cli::Args) -> i32 {
         }
     };
     eprintln!(
-        "[quafl] {} n={} s={} K={} rounds={} model={} quant={:?} part={:?} engine={} workers={}",
+        "[quafl] {} n={} s={} K={} rounds={} model={} quant={:?} part={:?} engine={} workers={} net={}",
         cfg.algorithm.name(),
         cfg.n,
         cfg.s,
@@ -81,6 +201,7 @@ fn cmd_run(args: &cli::Args) -> i32 {
         cfg.partition,
         if cfg.use_xla { "xla" } else { "native" },
         if cfg.workers == 0 { "auto".to_string() } else { cfg.workers.to_string() },
+        cfg.net.label(),
     );
     let t0 = std::time::Instant::now();
     match coordinator::run(&cfg) {
@@ -93,10 +214,12 @@ fn cmd_run(args: &cli::Args) -> i32 {
                 );
             }
             println!(
-                "final: acc={:.4} loss={:.4} bits_total={} P[H=0]={:.3} meanH={:.2} wall={:.1}s",
+                "final: acc={:.4} loss={:.4} bits_total={} comm_time={:.1} short_rounds={} P[H=0]={:.3} meanH={:.2} wall={:.1}s",
                 metrics.final_acc(),
                 metrics.final_loss(),
                 metrics.total_bits(),
+                metrics.total_comm_time(),
+                metrics.short_rounds,
                 metrics.zero_progress_fraction(),
                 metrics.mean_observed_steps(),
                 t0.elapsed().as_secs_f64()
@@ -118,8 +241,17 @@ fn cmd_run(args: &cli::Args) -> i32 {
 }
 
 fn cmd_figures(args: &cli::Args) -> i32 {
+    if let Err(e) = args.check_known(&["out-dir", "paper-scale", "smoke"]) {
+        eprintln!("{e}");
+        return 2;
+    }
     let out_dir = args.get_str("out-dir", "results");
-    let paper = args.flag("paper-scale");
+    let paper = args.bool("paper-scale");
+    let smoke = args.bool("smoke");
+    if paper && smoke {
+        eprintln!("--paper-scale and --smoke are mutually exclusive");
+        return 2;
+    }
     let ids: Vec<String> = if args.positional.is_empty() {
         figures::list().iter().map(|s| s.to_string()).collect()
     } else {
@@ -127,7 +259,7 @@ fn cmd_figures(args: &cli::Args) -> i32 {
     };
     for id in &ids {
         eprintln!("[figures] {id} ...");
-        if let Err(e) = figures::run_figure(id, &out_dir, paper) {
+        if let Err(e) = figures::run_figure(id, &out_dir, paper, smoke) {
             eprintln!("figure {id} failed: {e:#}");
             return 1;
         }

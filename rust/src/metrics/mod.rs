@@ -1,8 +1,22 @@
 //! Metrics: the series every figure plots — validation loss/accuracy (and
 //! train loss) against simulated time, server rounds, total client steps,
-//! and cumulative communication bits.
+//! cumulative communication bits, and per-phase communication time (what
+//! the [`crate::net`] transport charged for uplinks vs downlinks).
 
 use crate::util::csv::CsvWriter;
+
+/// Cumulative per-run accounting the algorithms carry between eval
+/// points: client steps, exact communication bits, and the simulated
+/// transmission time the transport charged, split by phase (up = client →
+/// server). Under the default `Ideal` network both time fields stay 0.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommTally {
+    pub total_steps: u64,
+    pub bits_up: u64,
+    pub bits_down: u64,
+    pub comm_up_time: f64,
+    pub comm_down_time: f64,
+}
 
 /// One evaluation point.
 #[derive(Clone, Copy, Debug)]
@@ -12,6 +26,10 @@ pub struct EvalPoint {
     pub total_client_steps: u64,
     pub bits_up: u64,
     pub bits_down: u64,
+    /// cumulative simulated uplink transmission time
+    pub comm_up_time: f64,
+    /// cumulative simulated downlink transmission time
+    pub comm_down_time: f64,
     pub val_loss: f64,
     pub val_acc: f64,
     /// loss on a fixed training subsample (the paper's train-loss curves)
@@ -31,6 +49,9 @@ pub struct RunMetrics {
     /// per-round potential Φ_t = ‖X_t − μ_t‖² + Σᵢ‖Xⁱ − μ_t‖² (paper
     /// Lemma 3.4) — populated only when `ExperimentConfig::track_potential`
     pub potential: Vec<f64>,
+    /// rounds where fewer than the configured `s` clients were reachable
+    /// (churn/duty-cycle visibility; 0 under `Always` availability)
+    pub short_rounds: u64,
 }
 
 impl RunMetrics {
@@ -83,6 +104,14 @@ impl RunMetrics {
             .map(|p| p.sim_time)
     }
 
+    /// Total simulated communication time charged by the transport.
+    pub fn total_comm_time(&self) -> f64 {
+        self.points
+            .last()
+            .map(|p| p.comm_up_time + p.comm_down_time)
+            .unwrap_or(0.0)
+    }
+
     pub const CSV_HEADER: &'static [&'static str] = &[
         "round",
         "sim_time",
@@ -92,6 +121,8 @@ impl RunMetrics {
         "val_loss",
         "val_acc",
         "train_loss",
+        "comm_up_time",
+        "comm_down_time",
     ];
 
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
@@ -106,6 +137,8 @@ impl RunMetrics {
                 p.val_loss,
                 p.val_acc,
                 p.train_loss,
+                p.comm_up_time,
+                p.comm_down_time,
             ])?;
         }
         w.flush()
@@ -123,6 +156,8 @@ mod tests {
             total_client_steps: round as u64 * 10,
             bits_up: 100,
             bits_down: 100,
+            comm_up_time: round as f64 * 0.5,
+            comm_down_time: round as f64 * 0.25,
             val_loss: 1.0 - acc,
             val_acc: acc,
             train_loss: 1.0 - acc,
@@ -161,7 +196,15 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 3);
         assert!(text.starts_with("round,sim_time"));
-        assert!(text.lines().next().unwrap().ends_with("train_loss"));
+        assert!(text.lines().next().unwrap().ends_with("comm_down_time"));
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn comm_time_accumulates() {
+        let mut m = RunMetrics::new("x");
+        m.push(pt(0, 0.0, 0.1));
+        m.push(pt(4, 2.0, 0.2));
+        assert!((m.total_comm_time() - 3.0).abs() < 1e-12);
     }
 }

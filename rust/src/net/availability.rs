@@ -1,0 +1,346 @@
+//! Client-availability process: gates which clients the server can reach
+//! at a given simulated time.
+//!
+//! Two non-trivial models, both seeded and lazily materialized (state
+//! advances only as simulated time passes, so replays are exact):
+//!
+//! - **Churn** — per-client alternating renewal process: exponential
+//!   up-times and down-times (dropout/rejoin). Clients start up.
+//! - **Duty cycle** — deterministic periodic windows with a per-client
+//!   random phase: client `i` is reachable while
+//!   `(t + phase_i) mod period < on_fraction * period` (think charging /
+//!   nightly-connectivity windows).
+//!
+//! The default [`AvailabilityKind::Always`] routes sampling through the
+//! exact pre-net RNG path (`Rng::sample_distinct`), so default-profile
+//! trajectories stay bit-identical.
+//!
+//! Queries must be non-decreasing in `t` per client (they are: every
+//! algorithm's clock is monotone), matching the lazy churn walk.
+
+use crate::util::rng::{derive_seed, Rng};
+
+/// Which availability process gates the fleet.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AvailabilityKind {
+    /// every client reachable at all times (default)
+    Always,
+    /// alternating Exp(1/mean_up) up-times and Exp(1/mean_down) down-times
+    Churn { mean_up: f64, mean_down: f64 },
+    /// periodic windows: up while (t + phase_i) mod period < on * period
+    DutyCycle { period: f64, on_fraction: f64 },
+}
+
+impl AvailabilityKind {
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            AvailabilityKind::Always => Ok(()),
+            AvailabilityKind::Churn { mean_up, mean_down } => {
+                if *mean_up <= 0.0 || *mean_down <= 0.0 {
+                    return Err(format!(
+                        "churn means ({mean_up}, {mean_down}) must be > 0"
+                    ));
+                }
+                Ok(())
+            }
+            AvailabilityKind::DutyCycle { period, on_fraction } => {
+                if *period <= 0.0 {
+                    return Err(format!("duty period {period} must be > 0"));
+                }
+                if !(0.0 < *on_fraction && *on_fraction <= 1.0) {
+                    return Err(format!(
+                        "duty on-fraction {on_fraction} must be in (0, 1]"
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AvailabilityKind::Always => "always",
+            AvailabilityKind::Churn { .. } => "churn",
+            AvailabilityKind::DutyCycle { .. } => "duty",
+        }
+    }
+}
+
+/// One client's lazily-materialized churn walk.
+#[derive(Clone, Debug)]
+struct ChurnState {
+    up: bool,
+    /// absolute time of the next up/down transition
+    next_switch: f64,
+    rng: Rng,
+}
+
+/// The fleet's availability process (one state per client for churn; one
+/// phase per client for duty cycles).
+pub struct ClientAvailability {
+    kind: AvailabilityKind,
+    churn: Vec<ChurnState>,
+    phases: Vec<f64>,
+}
+
+impl ClientAvailability {
+    pub fn new(kind: AvailabilityKind, n: usize, seed: u64) -> Self {
+        let mut churn = Vec::new();
+        let mut phases = Vec::new();
+        match &kind {
+            AvailabilityKind::Always => {}
+            AvailabilityKind::Churn { mean_up, .. } => {
+                churn = (0..n)
+                    .map(|i| {
+                        let mut rng = Rng::new(derive_seed(
+                            seed,
+                            0xC0A0_0000 + i as u64,
+                        ));
+                        let first = rng.exponential(1.0 / mean_up);
+                        ChurnState { up: true, next_switch: first, rng }
+                    })
+                    .collect();
+            }
+            AvailabilityKind::DutyCycle { period, .. } => {
+                phases = (0..n)
+                    .map(|i| {
+                        let mut rng = Rng::new(derive_seed(
+                            seed,
+                            0xD07C_0000 + i as u64,
+                        ));
+                        rng.uniform(0.0, *period)
+                    })
+                    .collect();
+            }
+        }
+        ClientAvailability { kind, churn, phases }
+    }
+
+    pub fn kind(&self) -> &AvailabilityKind {
+        &self.kind
+    }
+
+    /// True when no process gates the fleet (the exact pre-net path).
+    pub fn is_always(&self) -> bool {
+        self.kind == AvailabilityKind::Always
+    }
+
+    fn advance_churn(&mut self, i: usize, t: f64) {
+        let (mean_up, mean_down) = match self.kind {
+            AvailabilityKind::Churn { mean_up, mean_down } => (mean_up, mean_down),
+            _ => unreachable!("advance_churn outside churn mode"),
+        };
+        let st = &mut self.churn[i];
+        while st.next_switch <= t {
+            st.up = !st.up;
+            let mean = if st.up { mean_up } else { mean_down };
+            st.next_switch += st.rng.exponential(1.0 / mean);
+        }
+    }
+
+    /// Is client `i` reachable at time `t`? (`t` non-decreasing per client)
+    pub fn is_up(&mut self, i: usize, t: f64) -> bool {
+        match &self.kind {
+            AvailabilityKind::Always => true,
+            AvailabilityKind::Churn { .. } => {
+                self.advance_churn(i, t);
+                self.churn[i].up
+            }
+            AvailabilityKind::DutyCycle { period, on_fraction } => {
+                (t + self.phases[i]).rem_euclid(*period) < on_fraction * period
+            }
+        }
+    }
+
+    /// Earliest time >= `t` at which client `i` is reachable. Returns `t`
+    /// itself (bitwise) when the client is already up — the `Always` path
+    /// is therefore an exact no-op.
+    pub fn next_up(&mut self, i: usize, t: f64) -> f64 {
+        match &self.kind {
+            AvailabilityKind::Always => t,
+            AvailabilityKind::Churn { .. } => {
+                self.advance_churn(i, t);
+                if self.churn[i].up {
+                    t
+                } else {
+                    self.churn[i].next_switch
+                }
+            }
+            AvailabilityKind::DutyCycle { period, on_fraction } => {
+                let r = (t + self.phases[i]).rem_euclid(*period);
+                if r < on_fraction * period {
+                    t
+                } else {
+                    t + (period - r)
+                }
+            }
+        }
+    }
+
+    /// Sample up to `s` distinct reachable clients at time `t`. With
+    /// `Always` this is exactly `rng.sample_distinct(n, s)` — same RNG
+    /// stream, same result as the pre-net code. Otherwise the reachable
+    /// subset is enumerated first and the draw happens inside it; if the
+    /// subset has <= `s` members they are all returned (a short round).
+    pub fn sample(
+        &mut self,
+        rng: &mut Rng,
+        n: usize,
+        s: usize,
+        t: f64,
+    ) -> Vec<usize> {
+        if self.is_always() {
+            return rng.sample_distinct(n, s);
+        }
+        let up: Vec<usize> = (0..n).filter(|&i| self.is_up(i, t)).collect();
+        if up.len() <= s {
+            return up;
+        }
+        rng.sample_distinct(up.len(), s)
+            .into_iter()
+            .map(|j| up[j])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_matches_plain_sampling_stream() {
+        let mut av = ClientAvailability::new(AvailabilityKind::Always, 20, 1);
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        for t in 0..10 {
+            assert_eq!(
+                av.sample(&mut r1, 20, 6, t as f64),
+                r2.sample_distinct(20, 6)
+            );
+        }
+        assert_eq!(av.next_up(3, 17.5).to_bits(), 17.5f64.to_bits());
+        assert!(av.is_up(0, 0.0));
+    }
+
+    #[test]
+    fn churn_replays_identically() {
+        let kind = AvailabilityKind::Churn { mean_up: 30.0, mean_down: 10.0 };
+        let mut a = ClientAvailability::new(kind.clone(), 8, 9);
+        let mut b = ClientAvailability::new(kind, 8, 9);
+        for step in 0..200 {
+            let t = step as f64 * 1.7;
+            for i in 0..8 {
+                assert_eq!(a.is_up(i, t), b.is_up(i, t), "client {i} at {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn churn_seed_changes_trajectory() {
+        let kind = AvailabilityKind::Churn { mean_up: 20.0, mean_down: 20.0 };
+        let mut a = ClientAvailability::new(kind.clone(), 8, 1);
+        let mut b = ClientAvailability::new(kind, 8, 2);
+        let mut diff = 0;
+        for step in 0..100 {
+            let t = step as f64 * 5.0;
+            for i in 0..8 {
+                if a.is_up(i, t) != b.is_up(i, t) {
+                    diff += 1;
+                }
+            }
+        }
+        assert!(diff > 0, "different seeds must give different churn");
+    }
+
+    #[test]
+    fn churn_long_run_fraction_matches_means() {
+        // Stationary availability = mean_up / (mean_up + mean_down).
+        let kind = AvailabilityKind::Churn { mean_up: 30.0, mean_down: 10.0 };
+        let mut av = ClientAvailability::new(kind, 200, 5);
+        let mut up = 0usize;
+        let mut total = 0usize;
+        for step in 1..=400 {
+            let t = step as f64 * 7.0;
+            for i in 0..200 {
+                total += 1;
+                if av.is_up(i, t) {
+                    up += 1;
+                }
+            }
+        }
+        let frac = up as f64 / total as f64;
+        assert!((frac - 0.75).abs() < 0.05, "availability {frac}");
+    }
+
+    #[test]
+    fn churn_next_up_is_consistent() {
+        let kind = AvailabilityKind::Churn { mean_up: 5.0, mean_down: 5.0 };
+        let mut av = ClientAvailability::new(kind.clone(), 4, 3);
+        let mut chk = ClientAvailability::new(kind, 4, 3);
+        for step in 0..100 {
+            let t = step as f64 * 2.3;
+            for i in 0..4 {
+                let nu = av.next_up(i, t);
+                assert!(nu >= t);
+                // The sibling process must agree the client is up there
+                // (just after, for the boundary case of an exact switch).
+                assert!(chk.is_up(i, nu + 1e-9), "client {i}: next_up {nu}");
+            }
+        }
+    }
+
+    #[test]
+    fn duty_cycle_windows() {
+        let kind =
+            AvailabilityKind::DutyCycle { period: 10.0, on_fraction: 0.5 };
+        let mut av = ClientAvailability::new(kind, 3, 7);
+        for i in 0..3 {
+            // Over one full period the client is up about half the time.
+            let up = (0..1000)
+                .filter(|k| av.is_up(i, *k as f64 * 0.01))
+                .count();
+            assert!((up as f64 / 1000.0 - 0.5).abs() < 0.02, "duty {up}");
+            // next_up always lands inside a window.
+            for k in 0..40 {
+                let t = k as f64 * 0.7;
+                let nu = av.next_up(i, t);
+                assert!(av.is_up(i, nu + 1e-9), "t={t} nu={nu}");
+                assert!(nu >= t && nu <= t + 10.0);
+            }
+        }
+    }
+
+    #[test]
+    fn gated_sampling_returns_only_reachable_clients() {
+        let kind =
+            AvailabilityKind::DutyCycle { period: 10.0, on_fraction: 0.3 };
+        let mut av = ClientAvailability::new(kind, 30, 11);
+        let mut rng = Rng::new(1);
+        for k in 0..30 {
+            let t = k as f64 * 3.1;
+            let picked = av.sample(&mut rng, 30, 10, t);
+            assert!(picked.len() <= 10);
+            let mut sorted = picked.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), picked.len(), "distinct");
+            for &i in &picked {
+                assert!(av.is_up(i, t), "client {i} sampled while down");
+            }
+        }
+    }
+
+    #[test]
+    fn validate_kinds() {
+        assert!(AvailabilityKind::Always.validate().is_ok());
+        assert!(AvailabilityKind::Churn { mean_up: 0.0, mean_down: 1.0 }
+            .validate()
+            .is_err());
+        assert!(AvailabilityKind::DutyCycle { period: 10.0, on_fraction: 0.0 }
+            .validate()
+            .is_err());
+        assert!(AvailabilityKind::DutyCycle { period: 10.0, on_fraction: 1.0 }
+            .validate()
+            .is_ok());
+    }
+}

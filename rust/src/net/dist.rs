@@ -1,0 +1,240 @@
+//! Scalar distributions for per-client link parameters (bandwidth,
+//! latency): constant, lognormal, Pareto, and two-component mixtures of
+//! those. Every draw is an explicit-seed `Rng` call, so a network profile
+//! materializes identically on every run.
+//!
+//! CLI grammar (no commas — comma separates *lists* of profiles in the
+//! sweep runner, so component separators are `:` and `/`, mixtures `+`):
+//!
+//! ```text
+//! const:V               always V
+//! lognormal:MEDIAN/SIGMA  MEDIAN * exp(SIGMA * N(0,1))
+//! pareto:SCALE/SHAPE    SCALE / U^(1/SHAPE)   (heavy tail for SHAPE <~ 2)
+//! mix:P+DIST_A+DIST_B   DIST_A with probability P, else DIST_B
+//! ```
+//!
+//! Inside a mixture, write exponents without a sign (`1e5`, not `1e+5`) —
+//! `+` is the component separator.
+
+use crate::util::rng::Rng;
+
+/// A seeded scalar distribution.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dist {
+    /// degenerate point mass
+    Const(f64),
+    /// `median * exp(sigma * N(0,1))` — the classic bandwidth-skew model
+    LogNormal { median: f64, sigma: f64 },
+    /// `scale / U^(1/shape)` — heavy-tailed (infinite variance for
+    /// shape <= 2), the straggler-link model
+    Pareto { scale: f64, shape: f64 },
+    /// draw from `a` with probability `p`, else from `b`
+    Mix { p: f64, a: Box<Dist>, b: Box<Dist> },
+}
+
+impl Dist {
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match self {
+            Dist::Const(v) => *v,
+            Dist::LogNormal { median, sigma } => {
+                median * (sigma * rng.normal()).exp()
+            }
+            Dist::Pareto { scale, shape } => {
+                // U in (0, 1]: 1 - next_f64() avoids U = 0.
+                let u = 1.0 - rng.next_f64();
+                scale / u.powf(1.0 / shape)
+            }
+            Dist::Mix { p, a, b } => {
+                if rng.next_f64() < *p {
+                    a.sample(rng)
+                } else {
+                    b.sample(rng)
+                }
+            }
+        }
+    }
+
+    /// Parse the CLI grammar (module docs). Mixture components must be
+    /// non-mixture distributions.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if let Some(rest) = s.strip_prefix("mix:") {
+            let parts: Vec<&str> = rest.split('+').collect();
+            if parts.len() != 3 {
+                return Err(format!(
+                    "mixture must be mix:P+DIST_A+DIST_B, got {s:?} \
+                     (write exponents without a sign: 1e5, not 1e+5)"
+                ));
+            }
+            let p: f64 = parts[0]
+                .parse()
+                .map_err(|_| format!("bad mixture weight {:?}", parts[0]))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("mixture weight {p} outside [0, 1]"));
+            }
+            let a = Dist::parse_simple(parts[1])?;
+            let b = Dist::parse_simple(parts[2])?;
+            return Ok(Dist::Mix { p, a: Box::new(a), b: Box::new(b) });
+        }
+        Dist::parse_simple(s)
+    }
+
+    fn parse_simple(s: &str) -> Result<Self, String> {
+        let num = |t: &str| -> Result<f64, String> {
+            t.parse().map_err(|_| format!("bad number {t:?} in dist {s:?}"))
+        };
+        if let Some(rest) = s.strip_prefix("const:") {
+            return Ok(Dist::Const(num(rest)?));
+        }
+        if let Some(rest) = s.strip_prefix("lognormal:") {
+            let (m, sg) = rest
+                .split_once('/')
+                .ok_or_else(|| format!("lognormal:MEDIAN/SIGMA, got {s:?}"))?;
+            return Ok(Dist::LogNormal { median: num(m)?, sigma: num(sg)? });
+        }
+        if let Some(rest) = s.strip_prefix("pareto:") {
+            let (sc, sh) = rest
+                .split_once('/')
+                .ok_or_else(|| format!("pareto:SCALE/SHAPE, got {s:?}"))?;
+            return Ok(Dist::Pareto { scale: num(sc)?, shape: num(sh)? });
+        }
+        Err(format!(
+            "unknown distribution {s:?} \
+             (const:V | lognormal:M/S | pareto:SC/SH | mix:P+A+B)"
+        ))
+    }
+
+    /// All parameters positive / well-formed, and every possible draw > 0
+    /// when `strictly_positive` (bandwidths must be; latencies may be 0).
+    pub fn validate(&self, strictly_positive: bool) -> Result<(), String> {
+        match self {
+            Dist::Const(v) => {
+                if *v < 0.0 || (strictly_positive && *v <= 0.0) {
+                    return Err(format!("const value {v} must be positive"));
+                }
+            }
+            Dist::LogNormal { median, sigma } => {
+                if *median <= 0.0 {
+                    return Err(format!("lognormal median {median} must be > 0"));
+                }
+                if *sigma < 0.0 {
+                    return Err(format!("lognormal sigma {sigma} must be >= 0"));
+                }
+            }
+            Dist::Pareto { scale, shape } => {
+                if *scale <= 0.0 || *shape <= 0.0 {
+                    return Err(format!(
+                        "pareto scale/shape ({scale}, {shape}) must be > 0"
+                    ));
+                }
+            }
+            Dist::Mix { p, a, b } => {
+                if !(0.0..=1.0).contains(p) {
+                    return Err(format!("mixture weight {p} outside [0, 1]"));
+                }
+                a.validate(strictly_positive)?;
+                b.validate(strictly_positive)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_simple() {
+        assert_eq!(Dist::parse("const:1e5").unwrap(), Dist::Const(1e5));
+        assert_eq!(
+            Dist::parse("lognormal:2e5/0.5").unwrap(),
+            Dist::LogNormal { median: 2e5, sigma: 0.5 }
+        );
+        assert_eq!(
+            Dist::parse("pareto:5e4/1.5").unwrap(),
+            Dist::Pareto { scale: 5e4, shape: 1.5 }
+        );
+        assert!(Dist::parse("triangular:1/2").is_err());
+        assert!(Dist::parse("lognormal:1e5").is_err());
+    }
+
+    #[test]
+    fn parse_mixture() {
+        let d = Dist::parse("mix:0.3+const:1e5+const:1e7").unwrap();
+        match d {
+            Dist::Mix { p, a, b } => {
+                assert_eq!(p, 0.3);
+                assert_eq!(*a, Dist::Const(1e5));
+                assert_eq!(*b, Dist::Const(1e7));
+            }
+            other => panic!("expected mixture, got {other:?}"),
+        }
+        assert!(Dist::parse("mix:0.3+const:1").is_err());
+        assert!(Dist::parse("mix:1.5+const:1+const:2").is_err());
+    }
+
+    #[test]
+    fn const_is_exact_and_deterministic() {
+        let d = Dist::Const(7.25);
+        let mut r = Rng::new(1);
+        for _ in 0..10 {
+            assert_eq!(d.sample(&mut r), 7.25);
+        }
+    }
+
+    #[test]
+    fn lognormal_median_is_median() {
+        let d = Dist::LogNormal { median: 100.0, sigma: 1.0 };
+        let mut r = Rng::new(2);
+        let n = 20_000;
+        let below = (0..n).filter(|_| d.sample(&mut r) < 100.0).count();
+        let frac = below as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.02, "P[X < median] = {frac}");
+    }
+
+    #[test]
+    fn pareto_bounded_below_by_scale_and_heavy_tailed() {
+        let d = Dist::Pareto { scale: 10.0, shape: 1.5 };
+        let mut r = Rng::new(3);
+        let draws: Vec<f64> = (0..20_000).map(|_| d.sample(&mut r)).collect();
+        assert!(draws.iter().all(|&x| x >= 10.0));
+        // P[X > 4*scale] = 4^{-shape} = 0.125 for shape = 1.5.
+        let tail = draws.iter().filter(|&&x| x > 40.0).count() as f64
+            / draws.len() as f64;
+        assert!((tail - 0.125).abs() < 0.02, "tail mass {tail}");
+    }
+
+    #[test]
+    fn mixture_weights_respected() {
+        let d = Dist::parse("mix:0.25+const:1+const:2").unwrap();
+        let mut r = Rng::new(4);
+        let n = 20_000;
+        let low = (0..n).filter(|_| d.sample(&mut r) == 1.0).count();
+        let frac = low as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "component-A mass {frac}");
+    }
+
+    #[test]
+    fn sampling_is_seed_deterministic() {
+        let d = Dist::parse("mix:0.5+lognormal:1e5/0.7+pareto:2e4/1.2").unwrap();
+        let a: Vec<f64> = {
+            let mut r = Rng::new(9);
+            (0..50).map(|_| d.sample(&mut r)).collect()
+        };
+        let b: Vec<f64> = {
+            let mut r = Rng::new(9);
+            (0..50).map(|_| d.sample(&mut r)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn validate_rejects_bad_parameters() {
+        assert!(Dist::Const(0.0).validate(true).is_err());
+        assert!(Dist::Const(0.0).validate(false).is_ok());
+        assert!(Dist::Const(-1.0).validate(false).is_err());
+        assert!(Dist::LogNormal { median: 0.0, sigma: 1.0 }.validate(true).is_err());
+        assert!(Dist::Pareto { scale: 1.0, shape: 0.0 }.validate(true).is_err());
+        assert!(Dist::parse("const:5").unwrap().validate(true).is_ok());
+    }
+}

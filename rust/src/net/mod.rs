@@ -1,0 +1,349 @@
+//! Simulated transport & client-availability subsystem.
+//!
+//! The paper's headline claim is *communication* efficiency, yet a
+//! timing-only simulation prices every exchange at zero and makes the
+//! compressed and uncompressed protocols indistinguishable on the
+//! sim-time axis. This subsystem closes that gap:
+//!
+//! - [`transport::Transport`] converts each exchange's **actual encoded
+//!   bit count** (what the quantizer produced, not a nominal d·32) into
+//!   simulated transmission time, per client and per direction;
+//! - [`dist::Dist`] draws per-client uplink/downlink bandwidth and latency
+//!   from constant / lognormal / Pareto mixtures (bandwidth skew,
+//!   straggler links);
+//! - [`availability::ClientAvailability`] gates sampling with a
+//!   dropout/rejoin churn process or duty-cycle windows.
+//!
+//! Everything is seeded and deterministic, and the default
+//! [`NetProfile::Ideal`] + [`AvailabilityKind::Always`] combination is a
+//! **bit-exact no-op**: costs are exactly `0.0`, sampling uses the exact
+//! pre-net RNG path, so every existing trajectory is reproduced bit for
+//! bit (`rust/tests/net_parity.rs`).
+//!
+//! CLI surface (the `run`, `figures` and `sweep` subcommands):
+//!
+//! ```text
+//! --net ideal|broadband|mobile|DIST   preset or symmetric bandwidth dist
+//! --net-up DIST / --net-down DIST     per-direction bandwidth (bits/unit)
+//! --net-latency DIST                  per-message latency floor
+//! --churn MEAN_UP/MEAN_DOWN           exponential dropout/rejoin churn
+//! --duty PERIOD/ON_FRACTION           periodic availability windows
+//! ```
+//!
+//! Distances are simulated-time units (the unit of `swt`/`sit` and the
+//! Exp(λ) step times); bandwidths are bits per unit. For scale: the mlp's
+//! fp32 model is ~0.8 Mbit and its 10-bit lattice encoding ~0.33 Mbit, so
+//! a 1e5 bits/unit uplink prices them at ~8 vs ~3.3 units against the
+//! default swt = 10.
+
+pub mod availability;
+pub mod dist;
+pub mod transport;
+
+pub use availability::{AvailabilityKind, ClientAvailability};
+pub use dist::Dist;
+pub use transport::{IdealTransport, Link, SimTransport, Transport};
+
+use crate::util::cli::Args;
+use crate::util::rng::derive_seed;
+
+/// Link-pricing profile: how per-client bandwidths/latencies materialize.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NetProfile {
+    /// zero-cost network (default; bit-exact no-op on trajectories)
+    Ideal,
+    /// per-client links drawn from the given distributions at setup
+    Custom { up_bw: Dist, down_bw: Dist, latency: Dist },
+}
+
+impl NetProfile {
+    /// Named presets (documented units: bits per simulated-time unit).
+    ///
+    /// - `broadband`: mild lognormal skew, fast symmetric-ish links —
+    ///   communication is noticeable but rarely dominates.
+    /// - `mobile`: Pareto uplink (heavy straggler tail) + slower, skewed
+    ///   downlink + higher latency — uplink cost dominates rounds, the
+    ///   regime where compressed and uncompressed protocols reorder.
+    pub fn preset(name: &str) -> Option<NetProfile> {
+        match name {
+            "ideal" => Some(NetProfile::Ideal),
+            "broadband" => Some(NetProfile::Custom {
+                up_bw: Dist::LogNormal { median: 1e6, sigma: 0.5 },
+                down_bw: Dist::LogNormal { median: 4e6, sigma: 0.5 },
+                latency: Dist::Const(0.05),
+            }),
+            "mobile" => Some(NetProfile::Custom {
+                up_bw: Dist::Pareto { scale: 5e4, shape: 1.5 },
+                down_bw: Dist::LogNormal { median: 2e5, sigma: 1.0 },
+                latency: Dist::Const(0.2),
+            }),
+            _ => None,
+        }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        *self == NetProfile::Ideal
+    }
+}
+
+/// Everything the coordinator needs to materialize the network: a link
+/// profile plus an availability process. Defaults to the bit-exact no-op.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkConfig {
+    pub profile: NetProfile,
+    pub availability: AvailabilityKind,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        NetworkConfig {
+            profile: NetProfile::Ideal,
+            availability: AvailabilityKind::Always,
+        }
+    }
+}
+
+impl NetworkConfig {
+    /// CLI keys this subsystem owns (merged into the run/sweep key sets).
+    pub const CLI_KEYS: &'static [&'static str] =
+        &["net", "net-up", "net-down", "net-latency", "churn", "duty"];
+
+    /// Parse `--net NAME|DIST`, one NetworkConfig per string — also the
+    /// grammar of each entry of the sweep runner's `--nets` list. A bare
+    /// dist applies symmetrically with zero latency.
+    pub fn profile_from_str(s: &str) -> Result<NetProfile, String> {
+        if let Some(p) = NetProfile::preset(s) {
+            return Ok(p);
+        }
+        let d = Dist::parse(s).map_err(|e| {
+            format!("--net {s:?}: not a preset (ideal|broadband|mobile) and {e}")
+        })?;
+        Ok(NetProfile::Custom {
+            up_bw: d.clone(),
+            down_bw: d,
+            latency: Dist::Const(0.0),
+        })
+    }
+
+    /// Parse `A/B` pairs (`--churn 200/50`, `--duty 100/0.5`).
+    fn pair(key: &str, s: &str) -> Result<(f64, f64), String> {
+        let (a, b) = s
+            .split_once('/')
+            .ok_or_else(|| format!("--{key} expects A/B, got {s:?}"))?;
+        let pa = a.parse().map_err(|_| format!("--{key}: bad number {a:?}"))?;
+        let pb = b.parse().map_err(|_| format!("--{key}: bad number {b:?}"))?;
+        Ok((pa, pb))
+    }
+
+    /// Build from CLI args (run/figures/sweep subcommands). Fine-grained
+    /// `--net-up/--net-down/--net-latency` override preset components.
+    pub fn from_args(args: &Args) -> Result<Self, String> {
+        // Every network key takes a value; a bare `--churn` would
+        // otherwise parse as a flag, pass the typo guard, and silently
+        // leave the default Ideal/Always network in place.
+        for key in Self::CLI_KEYS {
+            if args.flag(key) {
+                return Err(format!("--{key} requires a value"));
+            }
+        }
+        let mut cfg = NetworkConfig::default();
+        if let Some(net) = args.get("net") {
+            cfg.profile = Self::profile_from_str(net)?;
+        }
+        let overrides = [
+            args.get("net-up"),
+            args.get("net-down"),
+            args.get("net-latency"),
+        ];
+        if overrides.iter().any(Option::is_some) {
+            // Start from the current profile's components (Ideal resolves
+            // to unlimited bandwidth / zero latency) and patch.
+            let (mut up, mut down, mut lat) = match cfg.profile {
+                NetProfile::Ideal => (
+                    Dist::Const(f64::INFINITY),
+                    Dist::Const(f64::INFINITY),
+                    Dist::Const(0.0),
+                ),
+                NetProfile::Custom { up_bw, down_bw, latency } => {
+                    (up_bw, down_bw, latency)
+                }
+            };
+            if let Some(s) = overrides[0] {
+                up = Dist::parse(s)?;
+            }
+            if let Some(s) = overrides[1] {
+                down = Dist::parse(s)?;
+            }
+            if let Some(s) = overrides[2] {
+                lat = Dist::parse(s)?;
+            }
+            cfg.profile =
+                NetProfile::Custom { up_bw: up, down_bw: down, latency: lat };
+        }
+        if let Some(s) = args.get("churn") {
+            let (mean_up, mean_down) = Self::pair("churn", s)?;
+            cfg.availability = AvailabilityKind::Churn { mean_up, mean_down };
+        }
+        if let Some(s) = args.get("duty") {
+            if args.get("churn").is_some() {
+                return Err("--churn and --duty are mutually exclusive".into());
+            }
+            let (period, on_fraction) = Self::pair("duty", s)?;
+            cfg.availability =
+                AvailabilityKind::DutyCycle { period, on_fraction };
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if let NetProfile::Custom { up_bw, down_bw, latency } = &self.profile {
+            up_bw.validate(true)?;
+            down_bw.validate(true)?;
+            latency.validate(false)?;
+        }
+        self.availability.validate()
+    }
+
+    /// `""` when always-on, else `"+churn"`/`"+duty"` — appended to
+    /// profile tokens in labels so gated availability is never invisible.
+    pub fn availability_suffix(&self) -> String {
+        match &self.availability {
+            AvailabilityKind::Always => String::new(),
+            a => format!("+{}", a.name()),
+        }
+    }
+
+    /// Short label for figure arms / sweep rows.
+    pub fn label(&self) -> String {
+        let p = match &self.profile {
+            NetProfile::Ideal => "ideal",
+            NetProfile::Custom { .. } => "custom",
+        };
+        format!("{p}{}", self.availability_suffix())
+    }
+
+    /// Materialize the per-client links. Consumes no shared RNG state, so
+    /// building the network never perturbs the rest of the experiment.
+    pub fn build_transport(&self, n: usize, seed: u64) -> Box<dyn Transport> {
+        match &self.profile {
+            NetProfile::Ideal => Box::new(IdealTransport),
+            NetProfile::Custom { up_bw, down_bw, latency } => {
+                Box::new(SimTransport::draw(
+                    n,
+                    up_bw,
+                    down_bw,
+                    latency,
+                    derive_seed(seed, 0x7A45),
+                ))
+            }
+        }
+    }
+
+    /// Materialize the availability process (seeded independently of the
+    /// transport draws).
+    pub fn build_availability(&self, n: usize, seed: u64) -> ClientAvailability {
+        ClientAvailability::new(
+            self.availability.clone(),
+            n,
+            derive_seed(seed, 0xA4A1),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn default_is_ideal_always() {
+        let c = NetworkConfig::default();
+        assert!(c.profile.is_ideal());
+        assert_eq!(c.availability, AvailabilityKind::Always);
+        assert!(c.validate().is_ok());
+        assert_eq!(c.label(), "ideal");
+    }
+
+    #[test]
+    fn presets_parse_and_validate() {
+        for name in ["ideal", "broadband", "mobile"] {
+            let p = NetProfile::preset(name).unwrap();
+            let c = NetworkConfig {
+                profile: p,
+                availability: AvailabilityKind::Always,
+            };
+            assert!(c.validate().is_ok(), "{name}");
+        }
+        assert!(NetProfile::preset("dialup").is_none());
+    }
+
+    #[test]
+    fn from_args_full_surface() {
+        let a = cli::parse(&sv(&[
+            "run", "--net", "mobile", "--net-latency", "const:0.5", "--churn",
+            "200/50",
+        ]));
+        let c = NetworkConfig::from_args(&a).unwrap();
+        match &c.profile {
+            NetProfile::Custom { latency, .. } => {
+                assert_eq!(*latency, Dist::Const(0.5));
+            }
+            other => panic!("expected custom, got {other:?}"),
+        }
+        assert_eq!(
+            c.availability,
+            AvailabilityKind::Churn { mean_up: 200.0, mean_down: 50.0 }
+        );
+        assert_eq!(c.label(), "custom+churn");
+    }
+
+    #[test]
+    fn from_args_bare_dist_is_symmetric() {
+        let a = cli::parse(&sv(&["run", "--net", "const:1e5"]));
+        let c = NetworkConfig::from_args(&a).unwrap();
+        match &c.profile {
+            NetProfile::Custom { up_bw, down_bw, latency } => {
+                assert_eq!(*up_bw, Dist::Const(1e5));
+                assert_eq!(*down_bw, Dist::Const(1e5));
+                assert_eq!(*latency, Dist::Const(0.0));
+            }
+            other => panic!("expected custom, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn from_args_rejects_conflicts_and_garbage() {
+        let a = cli::parse(&sv(&["run", "--churn", "10/5", "--duty", "10/0.5"]));
+        assert!(NetworkConfig::from_args(&a).is_err());
+        let a = cli::parse(&sv(&["run", "--net", "warp-drive"]));
+        assert!(NetworkConfig::from_args(&a).is_err());
+        let a = cli::parse(&sv(&["run", "--churn", "10,5"]));
+        assert!(NetworkConfig::from_args(&a).is_err());
+        // A forgotten value must error, not silently fall back to Ideal.
+        let a = cli::parse(&sv(&["run", "--churn"]));
+        assert!(NetworkConfig::from_args(&a).is_err());
+    }
+
+    #[test]
+    fn ideal_transport_from_config_prices_zero() {
+        let c = NetworkConfig::default();
+        let t = c.build_transport(4, 1);
+        assert_eq!(t.uplink_time(0, 1 << 30).to_bits(), 0f64.to_bits());
+    }
+
+    #[test]
+    fn custom_transport_prices_positive() {
+        let c = NetworkConfig {
+            profile: NetProfile::preset("mobile").unwrap(),
+            availability: AvailabilityKind::Always,
+        };
+        let t = c.build_transport(4, 1);
+        assert!(t.uplink_time(0, 1_000_000) > 0.0);
+        assert!(t.downlink_time(3, 1_000_000) > 0.0);
+    }
+}

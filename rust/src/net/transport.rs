@@ -1,0 +1,166 @@
+//! Transport pricing: convert *actual* encoded message sizes into
+//! simulated transmission time, per client and per direction.
+//!
+//! The contract with the algorithms is strict: every server↔client
+//! exchange is priced from the exact bit count the quantizer encoder
+//! produced for that message (`QuantMessage::bits`, or the analytic
+//! `Quantizer::encoded_bits` when the send time must be known before the
+//! payload is materialized — the two are property-tested equal in
+//! `rust/tests/net_parity.rs`). [`IdealTransport`] prices everything at
+//! exactly `0.0`, which makes the default network profile a bit-exact
+//! no-op on every trajectory.
+
+use crate::util::rng::{derive_seed, Rng};
+
+use super::dist::Dist;
+
+/// Prices one directed transfer. `Sync` so the coordinator can share it
+/// with worker threads if an algorithm ever prices inside a fan-out.
+pub trait Transport: Send + Sync {
+    /// Simulated time for `bits` to travel server → client `i`.
+    fn downlink_time(&self, client: usize, bits: u64) -> f64;
+    /// Simulated time for `bits` to travel client `i` → server.
+    fn uplink_time(&self, client: usize, bits: u64) -> f64;
+    fn name(&self) -> &'static str;
+}
+
+/// The zero-cost network: every exchange is instantaneous. Default — and
+/// deliberately `0.0` (not "very fast") so `t + cost` is bitwise `t` and
+/// pre-net trajectories are reproduced exactly.
+pub struct IdealTransport;
+
+impl Transport for IdealTransport {
+    fn downlink_time(&self, _client: usize, _bits: u64) -> f64 {
+        0.0
+    }
+
+    fn uplink_time(&self, _client: usize, _bits: u64) -> f64 {
+        0.0
+    }
+
+    fn name(&self) -> &'static str {
+        "ideal"
+    }
+}
+
+/// One client's link: fixed for the run (bandwidth skew is a per-client
+/// property; per-message jitter comes from message sizes and the latency
+/// floor).
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    /// uplink bandwidth, bits per simulated-time unit
+    pub up_bw: f64,
+    /// downlink bandwidth, bits per simulated-time unit
+    pub down_bw: f64,
+    /// per-message latency floor, either direction
+    pub latency: f64,
+}
+
+/// Per-client links drawn once from the profile's distributions at setup
+/// (seeded — the same profile + seed materializes the same fleet).
+pub struct SimTransport {
+    links: Vec<Link>,
+}
+
+/// Floor that keeps a pathological draw from producing infinite transfer
+/// times (bits / bw stays finite).
+const MIN_BANDWIDTH: f64 = 1e-6;
+
+impl SimTransport {
+    pub fn draw(
+        n: usize,
+        up_bw: &Dist,
+        down_bw: &Dist,
+        latency: &Dist,
+        seed: u64,
+    ) -> Self {
+        let links = (0..n)
+            .map(|i| {
+                let mut rng =
+                    Rng::new(derive_seed(seed, 0x4E70_0000 + i as u64));
+                Link {
+                    up_bw: up_bw.sample(&mut rng).max(MIN_BANDWIDTH),
+                    down_bw: down_bw.sample(&mut rng).max(MIN_BANDWIDTH),
+                    latency: latency.sample(&mut rng).max(0.0),
+                }
+            })
+            .collect();
+        SimTransport { links }
+    }
+
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+}
+
+impl Transport for SimTransport {
+    fn downlink_time(&self, client: usize, bits: u64) -> f64 {
+        let l = &self.links[client];
+        l.latency + bits as f64 / l.down_bw
+    }
+
+    fn uplink_time(&self, client: usize, bits: u64) -> f64 {
+        let l = &self.links[client];
+        l.latency + bits as f64 / l.up_bw
+    }
+
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_is_exactly_zero() {
+        let t = IdealTransport;
+        assert_eq!(t.uplink_time(3, u64::MAX).to_bits(), 0f64.to_bits());
+        assert_eq!(t.downlink_time(0, 0).to_bits(), 0f64.to_bits());
+    }
+
+    #[test]
+    fn sim_prices_latency_plus_serialization() {
+        let t = SimTransport {
+            links: vec![Link { up_bw: 100.0, down_bw: 400.0, latency: 0.5 }],
+        };
+        assert!((t.uplink_time(0, 1000) - 10.5).abs() < 1e-12);
+        assert!((t.downlink_time(0, 1000) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn draw_is_seed_deterministic_and_per_client() {
+        let up = Dist::Pareto { scale: 1e4, shape: 1.5 };
+        let down = Dist::LogNormal { median: 1e6, sigma: 0.5 };
+        let lat = Dist::Const(0.1);
+        let a = SimTransport::draw(16, &up, &down, &lat, 7);
+        let b = SimTransport::draw(16, &up, &down, &lat, 7);
+        for (x, y) in a.links().iter().zip(b.links()) {
+            assert_eq!(x.up_bw.to_bits(), y.up_bw.to_bits());
+            assert_eq!(x.down_bw.to_bits(), y.down_bw.to_bits());
+            assert_eq!(x.latency, y.latency);
+        }
+        // Different clients get independent draws (bandwidth skew).
+        let distinct: std::collections::BTreeSet<u64> =
+            a.links().iter().map(|l| l.up_bw.to_bits()).collect();
+        assert!(distinct.len() > 8, "per-client draws should differ");
+        let c = SimTransport::draw(16, &up, &down, &lat, 8);
+        assert_ne!(
+            a.links()[0].up_bw.to_bits(),
+            c.links()[0].up_bw.to_bits()
+        );
+    }
+
+    #[test]
+    fn zero_bandwidth_draw_is_floored() {
+        let t = SimTransport::draw(
+            1,
+            &Dist::Const(0.0),
+            &Dist::Const(0.0),
+            &Dist::Const(0.0),
+            1,
+        );
+        assert!(t.uplink_time(0, 1_000_000).is_finite());
+    }
+}

@@ -31,6 +31,10 @@ impl Quantizer for IdentityQuantizer {
     fn bits_per_coord(&self) -> f64 {
         32.0
     }
+
+    fn encoded_bits(&self, dim: usize) -> usize {
+        dim * 32 + 64
+    }
 }
 
 #[cfg(test)]

@@ -173,6 +173,11 @@ impl Quantizer for LatticeQuantizer {
     fn bits_per_coord(&self) -> f64 {
         self.bits as f64
     }
+
+    /// γ header (32) + b bits per *padded* coordinate + seed header (64)
+    fn encoded_bits(&self, dim: usize) -> usize {
+        padded_dim(dim) * self.bits as usize + 32 + 64
+    }
 }
 
 #[inline]

@@ -50,6 +50,13 @@ pub trait Quantizer: Send + Sync {
     /// Nominal bits per coordinate (for reporting; exact counts are in the
     /// messages themselves).
     fn bits_per_coord(&self) -> f64;
+    /// Exact wire size of `encode` for a `dim`-vector, *before* the
+    /// payload exists. Every scheme's size is a deterministic function of
+    /// the dimension (property-tested equal to `encode(..).bits` in
+    /// rust/tests/net_parity.rs), which lets the [`crate::net`] transport
+    /// schedule a transfer's arrival ahead of materializing it (FedBuff's
+    /// event queue needs this).
+    fn encoded_bits(&self, dim: usize) -> usize;
 }
 
 /// Convenience: encode then decode (what one directed transfer does).
@@ -84,6 +91,12 @@ mod tests {
             let msg = q.encode(&x, 42);
             assert_eq!(msg.dim, x.len(), "{}", q.name());
             assert!(msg.bits > 0);
+            assert_eq!(
+                msg.bits,
+                q.encoded_bits(x.len()),
+                "{}: analytic size must match the encoder",
+                q.name()
+            );
             let d1 = q.decode(&msg, &key);
             let d2 = q.decode(&msg, &key);
             assert_eq!(d1.len(), x.len());

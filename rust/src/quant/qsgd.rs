@@ -82,6 +82,11 @@ impl Quantizer for QsgdQuantizer {
     fn bits_per_coord(&self) -> f64 {
         self.bits as f64
     }
+
+    /// norm header (32) + b bits/coordinate + seed header (64)
+    fn encoded_bits(&self, dim: usize) -> usize {
+        dim * self.bits as usize + 32 + 64
+    }
 }
 
 #[cfg(test)]

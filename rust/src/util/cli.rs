@@ -15,6 +15,15 @@ pub struct Args {
 }
 
 pub fn parse(argv: &[String]) -> Args {
+    parse_with_bool_flags(argv, &[])
+}
+
+/// Like [`parse`], but the named keys never consume a value: with
+/// `bool_flags = ["smoke"]`, `--smoke fig2` keeps `fig2` positional
+/// instead of swallowing it as the flag's value. (The generic grammar
+/// cannot tell a boolean flag from a key expecting a value, so commands
+/// with trailing positionals declare their booleans explicitly.)
+pub fn parse_with_bool_flags(argv: &[String], bool_flags: &[&str]) -> Args {
     let mut args = Args::default();
     let mut it = argv.iter().peekable();
     // First non-flag token is the subcommand.
@@ -30,6 +39,18 @@ pub fn parse(argv: &[String]) -> Args {
                     stripped[..eq].to_string(),
                     stripped[eq + 1..].to_string(),
                 );
+            } else if bool_flags.contains(&stripped) {
+                // A declared boolean still accepts an explicit value
+                // (`--weighted false`); anything else stays positional.
+                if it
+                    .peek()
+                    .map(|n| n.as_str() == "true" || n.as_str() == "false")
+                    .unwrap_or(false)
+                {
+                    args.kv.insert(stripped.to_string(), it.next().unwrap().clone());
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
             } else if it
                 .peek()
                 .map(|n| !n.starts_with("--"))
@@ -49,6 +70,13 @@ pub fn parse(argv: &[String]) -> Args {
 impl Args {
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
+    }
+
+    /// Boolean option: the bare `--name` flag form, or an explicit
+    /// `--name=true|false` / `--name true|false` value. The single home
+    /// of the flag-or-"true" idiom — subcommands must not re-implement it.
+    pub fn bool(&self, name: &str) -> bool {
+        self.flag(name) || self.get(name).map(|v| v == "true").unwrap_or(false)
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -131,5 +159,36 @@ mod tests {
     fn negative_numbers_as_values() {
         let a = parse(&sv(&["run", "--lr", "-0.5"]));
         assert_eq!(a.get_f64("lr", 0.0), -0.5);
+    }
+
+    #[test]
+    fn declared_bool_flags_do_not_swallow_positionals() {
+        let a = parse_with_bool_flags(
+            &sv(&["figures", "--smoke", "fig2", "fig1", "--out-dir", "x"]),
+            &["smoke", "paper-scale"],
+        );
+        assert!(a.bool("smoke"));
+        assert!(!a.bool("paper-scale"));
+        assert_eq!(a.positional, vec!["fig2".to_string(), "fig1".to_string()]);
+        assert_eq!(a.get("out-dir"), Some("x"));
+        // Without the declaration the old behavior stands.
+        let b = parse(&sv(&["figures", "--smoke", "fig2"]));
+        assert_eq!(b.get("smoke"), Some("fig2"));
+    }
+
+    #[test]
+    fn declared_bool_flags_keep_explicit_values() {
+        // `--weighted false` must stay an explicit negative, not flip to
+        // an asserted flag with a stray positional.
+        let a = parse_with_bool_flags(
+            &sv(&["run", "--weighted", "false", "--xla", "true", "--smoke"]),
+            &["weighted", "xla", "smoke"],
+        );
+        assert!(!a.bool("weighted"));
+        assert!(a.bool("xla"));
+        assert!(a.bool("smoke"));
+        assert!(a.positional.is_empty());
+        let b = parse_with_bool_flags(&sv(&["run", "--smoke=true"]), &["smoke"]);
+        assert!(b.bool("smoke"));
     }
 }

@@ -1,0 +1,76 @@
+//! Shared helpers for the integration-test binaries (not itself a test
+//! target — Cargo treats `tests/common/` as a plain module directory).
+
+use quafl::metrics::RunMetrics;
+
+/// Bitwise comparison of two runs: every eval-point field (f64s compared
+/// by bit pattern — these are determinism tests, tolerances would defeat
+/// their purpose), the interaction counters, and the potential series.
+/// The single definition keeps the parallel-parity and net-parity suites
+/// asserting the same notion of "identical trajectory".
+pub fn assert_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.points.len(), b.points.len(), "{what}: eval point count");
+    for (p, q) in a.points.iter().zip(&b.points) {
+        assert_eq!(p.round, q.round, "{what}: round");
+        assert_eq!(
+            p.sim_time.to_bits(),
+            q.sim_time.to_bits(),
+            "{what}: sim_time at round {}",
+            p.round
+        );
+        assert_eq!(
+            p.total_client_steps, q.total_client_steps,
+            "{what}: steps at round {}",
+            p.round
+        );
+        assert_eq!(p.bits_up, q.bits_up, "{what}: bits_up at round {}", p.round);
+        assert_eq!(
+            p.bits_down, q.bits_down,
+            "{what}: bits_down at round {}",
+            p.round
+        );
+        assert_eq!(
+            p.comm_up_time.to_bits(),
+            q.comm_up_time.to_bits(),
+            "{what}: comm_up_time at round {}",
+            p.round
+        );
+        assert_eq!(
+            p.comm_down_time.to_bits(),
+            q.comm_down_time.to_bits(),
+            "{what}: comm_down_time at round {}",
+            p.round
+        );
+        assert_eq!(
+            p.val_loss.to_bits(),
+            q.val_loss.to_bits(),
+            "{what}: val_loss at round {} ({} vs {})",
+            p.round,
+            p.val_loss,
+            q.val_loss
+        );
+        assert_eq!(
+            p.val_acc.to_bits(),
+            q.val_acc.to_bits(),
+            "{what}: val_acc at round {}",
+            p.round
+        );
+        assert_eq!(
+            p.train_loss.to_bits(),
+            q.train_loss.to_bits(),
+            "{what}: train_loss at round {}",
+            p.round
+        );
+    }
+    assert_eq!(a.total_interactions, b.total_interactions, "{what}");
+    assert_eq!(
+        a.zero_progress_interactions, b.zero_progress_interactions,
+        "{what}"
+    );
+    assert_eq!(a.sum_observed_steps, b.sum_observed_steps, "{what}");
+    assert_eq!(a.short_rounds, b.short_rounds, "{what}: short_rounds");
+    assert_eq!(a.potential.len(), b.potential.len(), "{what}: potential len");
+    for (i, (x, y)) in a.potential.iter().zip(&b.potential).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: potential[{i}]");
+    }
+}

@@ -1,0 +1,262 @@
+//! Parity + property suite for the simulated transport & availability
+//! subsystem (rust/src/net):
+//!
+//! 1. The default `Ideal` profile must be a **bit-exact no-op**: a config
+//!    that never names the network must produce the same trajectory as an
+//!    explicit infinite-bandwidth/zero-latency custom profile, and a
+//!    priced network must change *only* the time axis (identical losses,
+//!    bits and round structure) when availability stays `Always`.
+//! 2. Transport-reported bits equal the quantizer encoder's actual output
+//!    length for QSGD / lattice / identity (the property FedBuff's event
+//!    scheduling relies on).
+//! 3. Seeded churn replays identically across runs (run-level; the
+//!    worker-count invariance lives in parallel_parity.rs).
+//! 4. Under a skewed-bandwidth profile the sim-time ordering between
+//!    compressed QuAFL and the uncompressed baseline flips — the scenario
+//!    axis the subsystem exists to open.
+
+mod common;
+
+use common::assert_identical;
+use quafl::config::{Algorithm, ExperimentConfig, QuantizerKind, TimingConfig};
+use quafl::coordinator;
+use quafl::metrics::RunMetrics;
+use quafl::net::{
+    AvailabilityKind, ClientAvailability, Dist, NetProfile, NetworkConfig,
+};
+use quafl::quant::{
+    IdentityQuantizer, LatticeQuantizer, QsgdQuantizer, Quantizer,
+};
+use quafl::util::rng::Rng;
+
+fn base(algorithm: Algorithm) -> ExperimentConfig {
+    ExperimentConfig {
+        algorithm,
+        n: 10,
+        s: 4,
+        k: 4,
+        rounds: 6,
+        eval_every: 2,
+        train_samples: 512,
+        val_samples: 128,
+        batch: 16,
+        seed: 11,
+        workers: 2,
+        timing: TimingConfig { slow_fraction: 0.3, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// An explicitly-materialized network that prices everything at zero:
+/// infinite bandwidth, zero latency, always-on clients. Must be
+/// indistinguishable from the `Ideal` fast path.
+fn explicit_free_net() -> NetworkConfig {
+    NetworkConfig {
+        profile: NetProfile::Custom {
+            up_bw: Dist::Const(f64::INFINITY),
+            down_bw: Dist::Const(f64::INFINITY),
+            latency: Dist::Const(0.0),
+        },
+        availability: AvailabilityKind::Always,
+    }
+}
+
+#[test]
+fn ideal_equals_explicit_free_network_all_algorithms() {
+    for algorithm in [
+        Algorithm::QuAFL,
+        Algorithm::FedAvg,
+        Algorithm::FedBuff,
+        Algorithm::Baseline,
+    ] {
+        let ideal = coordinator::run(&base(algorithm)).expect("ideal run");
+        let free = coordinator::run(&ExperimentConfig {
+            net: explicit_free_net(),
+            ..base(algorithm)
+        })
+        .expect("free-net run");
+        assert!(!ideal.points.is_empty());
+        assert_identical(&ideal, &free, algorithm.name());
+        // And the free network charged nothing.
+        assert_eq!(ideal.total_comm_time(), 0.0);
+        assert_eq!(free.total_comm_time(), 0.0);
+        assert_eq!(ideal.short_rounds, 0);
+    }
+}
+
+#[test]
+fn priced_network_slows_time_but_not_traffic_for_quafl() {
+    // With Always availability the sampling stream and per-message wire
+    // sizes are independent of link speeds (sizes are dim-deterministic),
+    // so the exact bit tallies must match the free network's while the
+    // time axis stretches. (Client *step* progress legitimately differs:
+    // slower rounds give the Exp(λ) clocks more wall-time per round.)
+    let ideal = coordinator::run(&base(Algorithm::QuAFL)).unwrap();
+    let slow = coordinator::run(&ExperimentConfig {
+        net: NetworkConfig {
+            profile: NetProfile::Custom {
+                up_bw: Dist::Const(1e5),
+                down_bw: Dist::Const(4e5),
+                latency: Dist::Const(0.1),
+            },
+            availability: AvailabilityKind::Always,
+        },
+        ..base(Algorithm::QuAFL)
+    })
+    .unwrap();
+    assert_eq!(ideal.points.len(), slow.points.len());
+    for (p, q) in ideal.points.iter().zip(&slow.points) {
+        assert_eq!(p.round, q.round);
+        assert_eq!(p.bits_up, q.bits_up, "identical traffic");
+        assert_eq!(p.bits_down, q.bits_down);
+        if p.round > 0 {
+            assert!(
+                q.sim_time > p.sim_time,
+                "round {}: priced time {} must exceed free time {}",
+                p.round,
+                q.sim_time,
+                p.sim_time
+            );
+            assert!(q.comm_up_time > 0.0 && q.comm_down_time > 0.0);
+        }
+    }
+    assert_eq!(slow.short_rounds, 0, "Always availability: no short rounds");
+}
+
+#[test]
+fn transport_bits_match_encoder_output_for_all_quantizers() {
+    // The bits the transport prices (Quantizer::encoded_bits) must equal
+    // the encoder's actual wire size, for every scheme and for dims around
+    // padding boundaries.
+    let quantizers: Vec<Box<dyn Quantizer>> = vec![
+        Box::new(IdentityQuantizer),
+        Box::new(QsgdQuantizer::new(8)),
+        Box::new(QsgdQuantizer::new(14)),
+        Box::new(LatticeQuantizer::new(10, 0.01)),
+        Box::new(LatticeQuantizer::new(4, 0.05)),
+    ];
+    let mut rng = Rng::new(3);
+    for dim in [1usize, 7, 64, 100, 1023, 1024, 1025, 4096, 5000] {
+        let x: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        for q in &quantizers {
+            let msg = q.encode(&x, 42 + dim as u64);
+            assert_eq!(
+                msg.bits,
+                q.encoded_bits(dim),
+                "{} dim={dim}: encoder produced {} bits, analytic says {}",
+                q.name(),
+                msg.bits,
+                q.encoded_bits(dim)
+            );
+        }
+    }
+}
+
+#[test]
+fn churn_run_replays_identically() {
+    let cfg = ExperimentConfig {
+        net: NetworkConfig {
+            profile: NetProfile::preset("mobile").expect("preset"),
+            availability: AvailabilityKind::Churn {
+                mean_up: 10.0,
+                mean_down: 90.0,
+            },
+        },
+        rounds: 20,
+        ..base(Algorithm::QuAFL)
+    };
+    let a = coordinator::run(&cfg).unwrap();
+    let b = coordinator::run(&cfg).unwrap();
+    assert_identical(&a, &b, "churn replay");
+    // Heavy churn must actually bite: some rounds run under-strength.
+    assert!(a.short_rounds > 0, "expected short rounds under heavy churn");
+}
+
+#[test]
+fn churn_process_replay_is_independent_of_query_granularity() {
+    // The lazy walk materializes transitions from the same seeded stream
+    // no matter how often it is polled.
+    let kind = AvailabilityKind::Churn { mean_up: 25.0, mean_down: 10.0 };
+    let mut coarse = ClientAvailability::new(kind.clone(), 6, 77);
+    let mut fine = ClientAvailability::new(kind, 6, 77);
+    // Fine polls at 0.5; coarse only at multiples of 5.0.
+    for step in 0..400 {
+        let t = step as f64 * 0.5;
+        let f = (0..6).map(|i| fine.is_up(i, t)).collect::<Vec<_>>();
+        if step % 10 == 0 {
+            let c = (0..6).map(|i| coarse.is_up(i, t)).collect::<Vec<_>>();
+            assert_eq!(f, c, "t={t}");
+        }
+    }
+}
+
+#[test]
+fn bandwidth_skew_flips_sim_time_ordering() {
+    // The acceptance scenario: compressed QuAFL vs the uncompressed
+    // protocol. On an ideal network the uncompressed QuAFL run finishes
+    // the same rounds in the same simulated time; on a constrained uplink
+    // the compressed run finishes first, by roughly the compression ratio.
+    let slow_net = NetworkConfig {
+        profile: NetProfile::Custom {
+            up_bw: Dist::Const(5e4),
+            down_bw: Dist::Const(2e5),
+            latency: Dist::Const(0.1),
+        },
+        availability: AvailabilityKind::Always,
+    };
+    let lattice = ExperimentConfig {
+        quantizer: QuantizerKind::Lattice { bits: 10 },
+        ..base(Algorithm::QuAFL)
+    };
+    let fp32 = ExperimentConfig {
+        quantizer: QuantizerKind::None,
+        ..base(Algorithm::QuAFL)
+    };
+    let t_end = |m: &RunMetrics| m.points.last().unwrap().sim_time;
+
+    let ideal_lattice = coordinator::run(&lattice).unwrap();
+    let ideal_fp32 = coordinator::run(&fp32).unwrap();
+    assert_eq!(
+        t_end(&ideal_lattice).to_bits(),
+        t_end(&ideal_fp32).to_bits(),
+        "free network: identical round schedule regardless of payload"
+    );
+
+    let slow_lattice = coordinator::run(&ExperimentConfig {
+        net: slow_net.clone(),
+        ..lattice
+    })
+    .unwrap();
+    let slow_fp32 =
+        coordinator::run(&ExperimentConfig { net: slow_net, ..fp32 }).unwrap();
+    assert!(
+        t_end(&slow_lattice) < t_end(&slow_fp32),
+        "constrained uplink: compressed {} should beat uncompressed {}",
+        t_end(&slow_lattice),
+        t_end(&slow_fp32)
+    );
+    // The gap must reflect the >2.5x wire-size difference, not noise.
+    let comm_ratio =
+        slow_fp32.total_comm_time() / slow_lattice.total_comm_time();
+    assert!(comm_ratio > 2.0, "comm-time ratio {comm_ratio}");
+}
+
+#[test]
+fn duty_cycle_gates_sampling_end_to_end() {
+    let m = coordinator::run(&ExperimentConfig {
+        net: NetworkConfig {
+            profile: NetProfile::Ideal,
+            availability: AvailabilityKind::DutyCycle {
+                period: 40.0,
+                on_fraction: 0.25,
+            },
+        },
+        rounds: 12,
+        ..base(Algorithm::QuAFL)
+    })
+    .unwrap();
+    // With only ~25% of 10 clients reachable at any instant, most rounds
+    // cannot fill s=4.
+    assert!(m.short_rounds > 0, "duty cycle never produced a short round");
+    assert!(m.final_loss().is_finite());
+}

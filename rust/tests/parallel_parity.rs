@@ -6,10 +6,13 @@
 //! equality against it proves the fan-out + in-order reduction changes
 //! nothing but wall-clock.
 
+mod common;
+
+use common::assert_identical;
 use quafl::config::{Algorithm, ExperimentConfig, QuantizerKind, TimingConfig};
 use quafl::coordinator;
 use quafl::data::PartitionKind;
-use quafl::metrics::RunMetrics;
+use quafl::net::{AvailabilityKind, NetProfile, NetworkConfig};
 
 fn base(algorithm: Algorithm) -> ExperimentConfig {
     ExperimentConfig {
@@ -25,62 +28,6 @@ fn base(algorithm: Algorithm) -> ExperimentConfig {
         seed: 11,
         timing: TimingConfig { slow_fraction: 0.3, ..Default::default() },
         ..Default::default()
-    }
-}
-
-/// Bitwise comparison of two runs (f64s compared by bit pattern — this is
-/// a determinism test, tolerances would defeat its purpose).
-fn assert_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
-    assert_eq!(a.points.len(), b.points.len(), "{what}: eval point count");
-    for (p, q) in a.points.iter().zip(&b.points) {
-        assert_eq!(p.round, q.round, "{what}: round");
-        assert_eq!(
-            p.sim_time.to_bits(),
-            q.sim_time.to_bits(),
-            "{what}: sim_time at round {}",
-            p.round
-        );
-        assert_eq!(
-            p.total_client_steps, q.total_client_steps,
-            "{what}: steps at round {}",
-            p.round
-        );
-        assert_eq!(p.bits_up, q.bits_up, "{what}: bits_up at round {}", p.round);
-        assert_eq!(
-            p.bits_down, q.bits_down,
-            "{what}: bits_down at round {}",
-            p.round
-        );
-        assert_eq!(
-            p.val_loss.to_bits(),
-            q.val_loss.to_bits(),
-            "{what}: val_loss at round {} ({} vs {})",
-            p.round,
-            p.val_loss,
-            q.val_loss
-        );
-        assert_eq!(
-            p.val_acc.to_bits(),
-            q.val_acc.to_bits(),
-            "{what}: val_acc at round {}",
-            p.round
-        );
-        assert_eq!(
-            p.train_loss.to_bits(),
-            q.train_loss.to_bits(),
-            "{what}: train_loss at round {}",
-            p.round
-        );
-    }
-    assert_eq!(a.total_interactions, b.total_interactions, "{what}");
-    assert_eq!(
-        a.zero_progress_interactions, b.zero_progress_interactions,
-        "{what}"
-    );
-    assert_eq!(a.sum_observed_steps, b.sum_observed_steps, "{what}");
-    assert_eq!(a.potential.len(), b.potential.len(), "{what}: potential len");
-    for (i, (x, y)) in a.potential.iter().zip(&b.potential).enumerate() {
-        assert_eq!(x.to_bits(), y.to_bits(), "{what}: potential[{i}]");
     }
 }
 
@@ -151,6 +98,44 @@ fn baseline_parity_across_worker_counts() {
         rounds: 12,
         eval_every: 4,
         ..base(Algorithm::Baseline)
+    });
+}
+
+/// A non-trivial network profile: priced transport + churn availability.
+fn lossy_net() -> NetworkConfig {
+    NetworkConfig {
+        profile: NetProfile::preset("mobile").expect("preset"),
+        availability: AvailabilityKind::Churn { mean_up: 60.0, mean_down: 30.0 },
+    }
+}
+
+#[test]
+fn quafl_parity_under_transport_and_churn() {
+    // The net subsystem runs entirely in the serial pre-pass/reduction, so
+    // a seeded churn + bandwidth profile must replay bit-identically
+    // across worker counts too.
+    parity_for(ExperimentConfig {
+        net: lossy_net(),
+        rounds: 10,
+        ..base(Algorithm::QuAFL)
+    });
+}
+
+#[test]
+fn fedavg_parity_under_transport_and_churn() {
+    parity_for(ExperimentConfig {
+        quantizer: QuantizerKind::None,
+        net: lossy_net(),
+        ..base(Algorithm::FedAvg)
+    });
+}
+
+#[test]
+fn fedbuff_parity_under_transport_and_churn() {
+    parity_for(ExperimentConfig {
+        quantizer: QuantizerKind::Qsgd { bits: 8 },
+        net: lossy_net(),
+        ..base(Algorithm::FedBuff)
     });
 }
 
