@@ -9,6 +9,8 @@
 //! path on the primary engine) so all four algorithms share one execution
 //! substrate.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::coordinator::FlRun;
@@ -30,15 +32,28 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
 
     let mut now = 0f64;
     // A single sequential node never communicates: the tally carries only
-    // its step count (bits and transport time stay 0).
-    let mut tally = CommTally::default();
+    // its step count (bits and transport time stay 0). Its one resident
+    // model is the node's own.
+    let mut tally = CommTally {
+        peak_model_bytes: (x.len() * 4) as u64,
+        ..Default::default()
+    };
 
     ctx.eval_point(&mut metrics, 0, now, &tally, &x)?;
 
     for t in 0..cfg.rounds {
         now += step_rng.exponential(cfg.timing.slow_lambda);
-        let task =
-            ClientTask::gather(0, x, &mut shard, &ctx.train, cfg.batch, 1, cfg.lr);
+        // The task holds the sole reference, so the worker's unwrap
+        // mutates the model in place without a copy.
+        let task = ClientTask::gather(
+            0,
+            Arc::new(x),
+            &mut shard,
+            &ctx.train,
+            cfg.batch,
+            1,
+            cfg.lr,
+        );
         let mut results = ctx.pool.run_local_sgd(vec![task])?;
         let r = results.pop().expect("one task in, one result out");
         x = r.params;

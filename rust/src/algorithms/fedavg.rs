@@ -13,6 +13,8 @@
 //! fan-out; the equal-weight average folds the returned models in sampled
 //! order, so the trajectory is bit-identical to the serial path.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::make_task;
@@ -28,7 +30,16 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
 
     let mut x_server = ctx.spec.init_params(derive_seed(cfg.seed, 0x1417));
     let mut now = 0f64;
-    let mut tally = CommTally::default();
+    // FedAvg clients are stateless between rounds: resident client-model
+    // state is the round's shared broadcast snapshot (one allocation for
+    // all s sampled clients) plus, at the reduction boundary, the s
+    // returned models — tracked per round below. `--price-init-broadcast`
+    // is a no-op here: every downlink, including round 0's, is priced
+    // already.
+    let mut tally = CommTally {
+        peak_model_bytes: (d * 4) as u64,
+        ..Default::default()
+    };
 
     ctx.eval_point(&mut metrics, 0, now, &tally, &x_server)?;
 
@@ -55,6 +66,9 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         // each client's K-step burst from X_t.
         let mut round_end = now;
         let mut tasks = Vec::with_capacity(sampled.len());
+        // One broadcast snapshot shared by every sampled client's task;
+        // each worker deep-copies it once for its K-step burst.
+        let x_round = Arc::new(x_server.clone());
         for &i in &sampled {
             let down_t = ctx.transport.downlink_time(i, model_bits);
             let up_t = ctx.transport.uplink_time(i, model_bits);
@@ -70,12 +84,18 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             tally.comm_down_time += down_t;
             tally.comm_up_time += up_t;
 
-            tasks.push(make_task(ctx, i, x_server.clone(), cfg.k, cfg.lr));
+            tasks.push(make_task(ctx, i, x_round.clone(), cfg.k, cfg.lr));
         }
 
         // Fan out the K-step bursts; average in sampled order (weights
         // follow the realized sample size, == s whenever all reachable).
         let results = ctx.pool.run_local_sgd(tasks)?;
+        // Reduction-boundary high-water mark (same boundary QuAFL and
+        // FedBuff measure at): the shared broadcast snapshot plus the s
+        // returned client models held for averaging.
+        tally.peak_model_bytes = tally
+            .peak_model_bytes
+            .max(((results.len() + 1) * d * 4) as u64);
         let mut sum = vec![0f32; d];
         for r in &results {
             params::axpy(&mut sum, 1.0 / sampled.len() as f32, &r.params);

@@ -19,6 +19,13 @@
 //! order. Under the default `Ideal` network every term is exactly 0.0 and
 //! the pre-net event schedule is reproduced bit for bit.
 //!
+//! Memory: pulled snapshots live in the CoW fleet store
+//! ([`crate::fleet`]) — every client pulling between the same two
+//! aggregations shares *one* allocation of the server snapshot current at
+//! its pull (instead of each `x_server.clone()`), so resident
+//! client-model bytes scale with the number of referenced snapshots, not
+//! with n.
+//!
 //! Parallel structure: the server model only changes at aggregation
 //! boundaries, so the Z arrival-events that fill one buffer are fully
 //! determined (which client, from which pulled snapshot, on which batches)
@@ -37,6 +44,7 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -96,19 +104,43 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     };
 
     let mut x_server = ctx.spec.init_params(derive_seed(cfg.seed, 0x1417));
+    // Pulled snapshots live in the CoW fleet store: every client
+    // references the shared init until it re-pulls, and clients pulling
+    // between the same two aggregations share one server-snapshot
+    // allocation ([`crate::fleet`]).
+    let mut fleet = ctx.fleet_store(x_server.clone());
+    // The snapshot clients pull until the next aggregation — starts as
+    // the store's shared base (the init).
+    let mut server_snap: Arc<Vec<f32>> = fleet.snapshot(0);
+
+    let mut now = 0f64;
+    // At t=0 the live snapshot aliases the store's base, so the store's
+    // own count is the whole resident set.
+    let mut tally = CommTally {
+        peak_model_bytes: fleet.peak_bytes(),
+        ..Default::default()
+    };
+
     // Every client starts computing on the init model at time 0 (the
-    // initial broadcast is not priced, matching the paper's setup).
-    let mut pulled: Vec<Vec<f32>> = vec![x_server.clone(); cfg.n];
+    // initial broadcast is free by default, matching the paper's setup;
+    // `--price-init-broadcast` charges it and delays each client's first
+    // burst by its own downlink time).
     let mut queue: BinaryHeap<Reverse<Finish>> = BinaryHeap::new();
     for i in 0..cfg.n {
-        ctx.clocks[i].restart(0.0);
+        let recv = if cfg.price_init_broadcast {
+            let t = ctx.transport.downlink_time(i, model_bits);
+            tally.bits_down += model_bits;
+            tally.comm_down_time += t;
+            t
+        } else {
+            0.0
+        };
+        ctx.clocks[i].restart(recv);
         let t = ctx.clocks[i].finish_time_for(cfg.k)
             + ctx.transport.uplink_time(i, delta_bits);
         queue.push(Reverse(Finish { time: t, id: i }));
     }
 
-    let mut now = 0f64;
-    let mut tally = CommTally::default();
     let mut aggregations = 0usize;
     let mut msg_counter = 0u64;
 
@@ -131,8 +163,10 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
 
             // Client `id` finished K steps on its pulled snapshot; it
             // pulls the current model (uncompressed, as in [30]) and
-            // restarts.
-            let start = std::mem::replace(&mut pulled[id], x_server.clone());
+            // restarts. The pull aliases the shared server snapshot — no
+            // model floats are copied here.
+            let start = fleet.snapshot(id);
+            fleet.set_shared(id, server_snap.clone());
             let mut task = make_task(ctx, id, start, cfg.k, cfg.lr);
             if up_quant.is_some() {
                 msg_counter += 1;
@@ -151,14 +185,38 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             queue.push(Reverse(Finish { time: t_next, id }));
         }
 
+        // High-water measurement at the buffer boundary, where residency
+        // peaks: store residents + the live pull snapshot + popped start
+        // snapshots that already left the store but are still alive in
+        // the tasks (deduplicated by allocation — several tasks can hold
+        // the same epoch snapshot). Worker-side SGD scratch copies are
+        // deliberately excluded: transient compute state, identical under
+        // the dense layout.
+        let mut extra: Vec<usize> = tasks
+            .iter()
+            .filter(|t| !fleet.is_resident(&t.params))
+            .map(|t| Arc::as_ptr(&t.params) as usize)
+            .collect();
+        if !fleet.is_resident(&server_snap) {
+            extra.push(Arc::as_ptr(&server_snap) as usize);
+        }
+        extra.sort_unstable();
+        extra.dedup();
+        tally.peak_model_bytes = tally
+            .peak_model_bytes
+            .max(fleet.resident_bytes() + (extra.len() * d * 4) as u64)
+            .max(fleet.peak_bytes());
+
         // Fan out the Z bursts; each worker also forms and (optionally)
         // compresses its Δ = pulled − local with its pre-assigned seed.
         let up_quant_ref = up_quant.as_ref();
         let deltas = ctx.pool.map(tasks, |engine: &mut dyn TrainEngine, task| {
-            let mut x_local = task.params.clone();
+            // Deep-copy the shared pulled snapshot for the SGD burst —
+            // the fan-out's single materialization point.
+            let mut x_local = (*task.params).clone();
             engine.train_steps(&mut x_local, &task.batches, task.lr)?;
             // Δ = pulled - local (a descent direction scaled by η·h̃).
-            let mut delta = params::sub(&task.params, &x_local);
+            let mut delta = params::sub(task.params.as_slice(), &x_local);
             let bits = if let Some(q) = up_quant_ref {
                 let msg = q.encode(&delta, task.seed);
                 let b = msg.bits as u64;
@@ -178,6 +236,15 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         }
         aggregations += 1;
         now += cfg.timing.sit;
+        // Clients pulling from here until the next aggregation share this
+        // snapshot: one allocation, not Z (or n) clones of x_server. It
+        // is fresh, so at this instant it is exactly one allocation on
+        // top of the store's residents.
+        server_snap = Arc::new(x_server.clone());
+        tally.peak_model_bytes = tally
+            .peak_model_bytes
+            .max(fleet.resident_bytes() + (d * 4) as u64)
+            .max(fleet.peak_bytes());
 
         if aggregations % cfg.eval_every == 0 || aggregations == cfg.rounds {
             ctx.eval_point(&mut metrics, aggregations, now, &tally, &x_server)?;

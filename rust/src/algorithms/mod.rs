@@ -26,16 +26,20 @@ pub mod fedavg;
 pub mod fedbuff;
 pub mod quafl;
 
+use std::sync::Arc;
+
 use crate::coordinator::FlRun;
 use crate::exec::ClientTask;
 
 /// Snapshot client `client_id`'s next `h`-step SGD burst from `params`
 /// into a task, drawing its batches from the client's shard (the draw
 /// order is what makes the fan-out deterministic — see [`crate::exec`]).
+/// `params` is a shared CoW snapshot ([`crate::fleet`]); the worker
+/// deep-copies it once, so gathering s tasks allocates no model floats.
 pub(crate) fn make_task(
     ctx: &mut FlRun,
     client_id: usize,
-    params: Vec<f32>,
+    params: Arc<Vec<f32>>,
     h: usize,
     lr: f32,
 ) -> ClientTask {

@@ -68,10 +68,13 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     let mut metrics = RunMetrics::new("quafl");
 
     // Initial models: server and all clients start from the same init
-    // (the paper initializes everything to the same point).
+    // (the paper initializes everything to the same point). Client models
+    // live in the CoW fleet store: every client references the shared
+    // init until its first sampled interaction diverges it, so resident
+    // memory is O(touched·d), not O(n·d) ([`crate::fleet`]).
     let server_init = ctx.spec.init_params(derive_seed(cfg.seed, 0x1417));
     let mut x_server = server_init.clone();
-    let mut x_client: Vec<Vec<f32>> = vec![server_init.clone(); cfg.n];
+    let mut fleet = ctx.fleet_store(server_init);
 
     // η_i = H_min / H_i (weighted variant); 1 otherwise. The paper's
     // theory pairs the dampening with a global rate η ∝ 1/H_min
@@ -96,7 +99,13 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     };
 
     let mut now = 0f64;
-    let mut tally = CommTally::default();
+    let mut tally = CommTally {
+        peak_model_bytes: fleet.peak_bytes(),
+        ..Default::default()
+    };
+    if cfg.price_init_broadcast {
+        now += ctx.price_init_broadcast(&mut tally);
+    }
 
     ctx.eval_point(&mut metrics, 0, now, &tally, &x_server)?;
 
@@ -110,7 +119,9 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             // Nobody reachable: the server idles this round.
             now += cfg.timing.sit;
             if cfg.track_potential {
-                metrics.potential.push(potential(&x_server, &x_client));
+                metrics
+                    .potential
+                    .push(potential_view(&x_server, fleet.iter_dense()));
             }
             if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
                 ctx.eval_point(&mut metrics, t + 1, now, &tally, &x_server)?;
@@ -137,7 +148,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
                 metrics.zero_progress_interactions += 1;
             }
             tally.total_steps += h as u64;
-            tasks.push(make_task(ctx, i, x_client[i].clone(), h, lr_eff));
+            tasks.push(make_task(ctx, i, fleet.snapshot(i), h, lr_eff));
         }
 
         // Fan out: local SGD, Y^i formation, and both directions of the
@@ -150,7 +161,9 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         let outcomes = ctx.pool.map(tasks, |engine: &mut dyn TrainEngine, task| {
             let i = task.client_id;
             // Execute the h steps the client actually took (from X^i).
-            let mut x_sgd = task.params.clone();
+            // The deep copy of the shared snapshot happens here, in the
+            // worker — the fan-out's single materialization point.
+            let mut x_sgd = (*task.params).clone();
             if !task.batches.is_empty() {
                 engine.train_steps(&mut x_sgd, &task.batches, task.lr)?;
             }
@@ -158,7 +171,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             let y_i = if eta_ref[i] == 1.0 {
                 x_sgd
             } else {
-                let mut y = task.params.clone();
+                let mut y = (*task.params).clone();
                 params::scale(&mut y, 1.0 - eta_ref[i]);
                 params::axpy(&mut y, eta_ref[i], &x_sgd);
                 y
@@ -171,7 +184,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             let q_y = quantizer.decode(&enc_y, x_server_key);
 
             // Downstream: Enc(X_t), decoded by the client against X^i.
-            let q_x = quantizer.decode(enc_x_ref, &task.params);
+            let q_x = quantizer.decode(enc_x_ref, task.params.as_slice());
 
             // Client-side model update. The Figure 4 ablation *removes*
             // one side's averaging: in ServerOnly the client ignores the
@@ -189,6 +202,15 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             Ok(ClientOutcome { client_id: i, q_y, x_next, up_bits })
         })?;
 
+        // Reduction-boundary high-water mark (same boundary FedBuff and
+        // FedAvg measure at): store residents plus the s returned
+        // next-models not yet installed. Worker SGD scratch and decoded
+        // message buffers are excluded, as everywhere.
+        tally.peak_model_bytes = tally
+            .peak_model_bytes
+            .max(fleet.resident_bytes() + (outcomes.len() * d * 4) as u64)
+            .max(fleet.peak_bytes());
+
         // In-order reduction: Σ Q(Y^i) accumulates in sampled order, so
         // the floating-point sum matches the serial path bit for bit. Each
         // exchange is priced from its actual bits; the exchanges overlap,
@@ -205,7 +227,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             tally.bits_up += out.up_bits;
             tally.bits_down += enc_x.bits as u64;
             params::axpy(&mut sum_qy, 1.0, &out.q_y);
-            x_client[out.client_id] = out.x_next;
+            fleet.set(out.client_id, out.x_next);
             // The client restarts its K local steps once it has received
             // and folded in the server's message.
             ctx.clocks[out.client_id].restart(now + cfg.timing.sit + down_t);
@@ -226,9 +248,12 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         }
 
         now += cfg.timing.sit + round_comm;
+        tally.peak_model_bytes = tally.peak_model_bytes.max(fleet.peak_bytes());
 
         if cfg.track_potential {
-            metrics.potential.push(potential(&x_server, &x_client));
+            metrics
+                .potential
+                .push(potential_view(&x_server, fleet.iter_dense()));
         }
 
         if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
@@ -242,6 +267,20 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
 /// of client models (the paper's potential Φ_t tracks exactly this kind of
 /// discrepancy — Lemma 3.4 keeps it bounded).
 pub fn server_client_discrepancy(x_server: &[f32], clients: &[Vec<f32>]) -> f64 {
+    server_client_discrepancy_view(
+        x_server,
+        clients.iter().map(|c| c.as_slice()),
+    )
+}
+
+/// [`server_client_discrepancy`] over any client-order dense view —
+/// notably [`crate::fleet::ClientModelStore::iter_dense`], which folds
+/// the CoW store's shared base in plain iteration order, so the result
+/// is bit-identical to the eager `&[Vec<f32>]` layout's.
+pub fn server_client_discrepancy_view<'a, I>(x_server: &[f32], clients: I) -> f64
+where
+    I: Iterator<Item = &'a [f32]> + ExactSizeIterator,
+{
     let n = clients.len();
     let d = x_server.len();
     let mut mean = vec![0f32; d];
@@ -256,9 +295,19 @@ pub fn server_client_discrepancy(x_server: &[f32], clients: &[Vec<f32>]) -> f64 
 /// supermartingale-type contraction; `track_potential` lets experiments
 /// verify the boundedness empirically.
 pub fn potential(x_server: &[f32], clients: &[Vec<f32>]) -> f64 {
+    potential_view(x_server, clients.iter().map(|c| c.as_slice()))
+}
+
+/// [`potential`] over any client-order dense view (same float order as
+/// the eager layout — the two accumulate identical sums bit for bit; the
+/// fleet store's CoW sharing is invisible here).
+pub fn potential_view<'a, I>(x_server: &[f32], clients: I) -> f64
+where
+    I: Iterator<Item = &'a [f32]> + ExactSizeIterator + Clone,
+{
     let n1 = (clients.len() + 1) as f32;
     let mut mu = x_server.to_vec();
-    for c in clients {
+    for c in clients.clone() {
         params::axpy(&mut mu, 1.0, c);
     }
     params::scale(&mut mu, 1.0 / n1);

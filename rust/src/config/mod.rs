@@ -183,6 +183,19 @@ pub struct ExperimentConfig {
     /// ([`crate::net`]). The default (`Ideal` + `Always`) is a bit-exact
     /// no-op on every trajectory.
     pub net: NetworkConfig,
+    /// price the t=0 broadcast of the init model to all n clients
+    /// (`--price-init-broadcast`). Off by default, so every trajectory
+    /// and bit tally matches the paper's free-init setup exactly.
+    /// QuAFL/FedBuff charge n full-precision downlinks (and, on a priced
+    /// network, delay each client's first burst by its own downlink);
+    /// FedAvg already prices every round's downlink and the baseline
+    /// never communicates, so both ignore the flag.
+    pub price_init_broadcast: bool,
+    /// fully materialize every client model up front (`--dense-fleet`)
+    /// instead of the CoW fleet store ([`crate::fleet`]) — the reference
+    /// O(n·d) layout. Trajectories are bit-identical either way
+    /// (rust/tests/fleet_parity.rs); only `peak_model_bytes` differs.
+    pub dense_fleet: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -213,6 +226,8 @@ impl Default for ExperimentConfig {
             track_potential: false,
             workers: 0,
             net: NetworkConfig::default(),
+            price_init_broadcast: false,
+            dense_fleet: false,
         }
     }
 }
@@ -250,6 +265,7 @@ impl ExperimentConfig {
         "fast-lambda", "slow-lambda",
         "fedbuff-buffer", "fedbuff-server-lr", "eval-every", "batch",
         "seed", "xla", "gamma", "out", "workers",
+        "price-init-broadcast", "dense-fleet",
     ];
 
     /// The full `run` key set: [`ExperimentConfig::CLI_KEYS`] plus the
@@ -310,6 +326,8 @@ impl ExperimentConfig {
                 Some(g.parse().map_err(|_| format!("bad gamma {g:?}"))?);
         }
         c.workers = args.get_usize("workers", c.workers);
+        c.price_init_broadcast = args.bool("price-init-broadcast");
+        c.dense_fleet = args.bool("dense-fleet");
         c.net = NetworkConfig::from_args(args)?;
         c.validate()?;
         Ok(c)
@@ -376,6 +394,20 @@ mod tests {
         for k in NetworkConfig::CLI_KEYS {
             assert!(keys.contains(k), "missing net key {k}");
         }
+    }
+
+    #[test]
+    fn fleet_flags_parse_and_default_off() {
+        let d = ExperimentConfig::default();
+        assert!(!d.price_init_broadcast);
+        assert!(!d.dense_fleet);
+        let a = cli::parse_with_bool_flags(
+            &sv(&["run", "--price-init-broadcast", "--dense-fleet"]),
+            &["price-init-broadcast", "dense-fleet"],
+        );
+        let c = ExperimentConfig::from_args(&a).unwrap();
+        assert!(c.price_init_broadcast);
+        assert!(c.dense_fleet);
     }
 
     #[test]

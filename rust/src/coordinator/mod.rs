@@ -12,6 +12,7 @@ use crate::algorithms;
 use crate::config::{Algorithm, ExperimentConfig, QuantizerKind};
 use crate::data::{partition, Dataset, Shard, SynthSpec};
 use crate::exec::{EngineFactory, EnginePool};
+use crate::fleet::ClientModelStore;
 use crate::metrics::{CommTally, EvalPoint, RunMetrics};
 use crate::model::ModelSpec;
 use crate::net::{ClientAvailability, Transport};
@@ -128,6 +129,37 @@ impl FlRun {
         })
     }
 
+    /// Build the per-client model store for this run: copy-on-write by
+    /// default (all clients share `base` until they diverge), or fully
+    /// materialized when `dense_fleet` asks for the reference O(n·d)
+    /// layout — rust/tests/fleet_parity.rs proves the two bit-identical.
+    pub fn fleet_store(&self, base: Vec<f32>) -> ClientModelStore {
+        ClientModelStore::with_mode(self.cfg.n, base, self.cfg.dense_fleet)
+    }
+
+    /// `--price-init-broadcast`: charge the t=0 broadcast of the
+    /// full-precision init model to all n clients. Every client's
+    /// downlink is accounted in the tally; the transfers overlap, so the
+    /// returned elapsed cost is the slowest one. A client whose link
+    /// prices the transfer at a positive time also restarts its
+    /// local-step process at its own receive time; under the default
+    /// `Ideal` transport every cost is exactly 0.0, the clocks are left
+    /// untouched, and only the bit tally changes.
+    pub fn price_init_broadcast(&mut self, tally: &mut CommTally) -> f64 {
+        let bits = (self.spec.num_params() * 32) as u64;
+        let mut slowest = 0f64;
+        for i in 0..self.cfg.n {
+            let t = self.transport.downlink_time(i, bits);
+            tally.bits_down += bits;
+            tally.comm_down_time += t;
+            if t > 0.0 {
+                self.clocks[i].restart(t);
+            }
+            slowest = slowest.max(t);
+        }
+        slowest
+    }
+
     /// Evaluate server params (validation set sharded across the engine
     /// pool — bit-identical to a primary-only evaluation); push an
     /// EvalPoint carrying the run's cumulative [`CommTally`].
@@ -150,6 +182,7 @@ impl FlRun {
             bits_down: tally.bits_down,
             comm_up_time: tally.comm_up_time,
             comm_down_time: tally.comm_down_time,
+            peak_model_bytes: tally.peak_model_bytes,
             val_loss,
             val_acc,
             train_loss,

@@ -39,6 +39,7 @@
 //! `benches/bench_round.rs` measures the scaling at n=300/s=32.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::Result;
@@ -79,9 +80,12 @@ impl EngineFactory {
 /// regardless of how tasks are scheduled across workers.
 pub struct ClientTask {
     pub client_id: usize,
-    /// starting model X^i (moved in; workers that need the pre-SGD point
-    /// clone before training)
-    pub params: Vec<f32>,
+    /// starting model X^i — an immutable shared snapshot (an `Arc` clone
+    /// of a [`crate::fleet::ClientModelStore`] entry, or of a per-round
+    /// broadcast). The worker that needs a mutable copy deep-copies once:
+    /// that clone is the fan-out's single materialization point, so
+    /// queuing s tasks costs s pointers, not s models.
+    pub params: Arc<Vec<f32>>,
     /// one batch per local step, in step order (`len() == h`)
     pub batches: Vec<Batch>,
     pub lr: f32,
@@ -95,7 +99,7 @@ impl ClientTask {
     /// advances the shard's RNG exactly as the serial path would).
     pub fn gather(
         client_id: usize,
-        params: Vec<f32>,
+        params: Arc<Vec<f32>>,
         shard: &mut Shard,
         data: &Dataset,
         batch_size: usize,
@@ -372,7 +376,11 @@ impl EnginePool {
     /// layers quantized coding on top via [`EnginePool::map`]).
     pub fn run_local_sgd(&mut self, tasks: Vec<ClientTask>) -> Result<Vec<ClientResult>> {
         self.map(tasks, |engine, task| {
-            let ClientTask { client_id, mut params, batches, lr, .. } = task;
+            let ClientTask { client_id, params, batches, lr, .. } = task;
+            // The single materialization point: unwrap a uniquely-held
+            // snapshot in place, deep-copy a shared one.
+            let mut params =
+                Arc::try_unwrap(params).unwrap_or_else(|a| (*a).clone());
             let loss = if batches.is_empty() {
                 0.0
             } else {
@@ -475,7 +483,15 @@ mod tests {
             .iter()
             .enumerate()
             .map(|(i, &h)| {
-                ClientTask::gather(i, params.to_vec(), &mut shards[i], train, BATCH, h, 0.1)
+                ClientTask::gather(
+                    i,
+                    Arc::new(params.to_vec()),
+                    &mut shards[i],
+                    train,
+                    BATCH,
+                    h,
+                    0.1,
+                )
             })
             .collect()
     }
@@ -491,8 +507,15 @@ mod tests {
     #[test]
     fn gather_draws_h_batches_of_right_shape() {
         let (train, mut shards, params) = setup(1);
-        let task =
-            ClientTask::gather(0, params, &mut shards[0], &train, BATCH, 5, 0.1);
+        let task = ClientTask::gather(
+            0,
+            Arc::new(params),
+            &mut shards[0],
+            &train,
+            BATCH,
+            5,
+            0.1,
+        );
         assert_eq!(task.steps(), 5);
         for b in &task.batches {
             assert_eq!(b.batch, BATCH);

@@ -27,6 +27,11 @@
 //!   (n=300, s=30 with `--paper-scale`): always-on vs mild/heavy
 //!   dropout-rejoin churn vs 50% duty-cycle windows. `short_rounds` in the
 //!   summary counts rounds that ran under-strength.
+//! - **`net_fleet`** — huge-fleet sweep beyond the paper's n=300 ceiling
+//!   (n=10⁴, s=30 with `--paper-scale`): QuAFL vs FedBuff vs FedAvg under
+//!   the `mobile` profile, feasible because the CoW fleet store
+//!   ([`crate::fleet`]) keeps resident client-model memory O(touched·d).
+//!   The summary's `peak_model_bytes` column quantifies it.
 //!
 //! The same axes are scriptable as a grid via `quafl sweep`
 //! (`--algorithms`, `--quantizers`, `--nets`, `--seeds` — see
@@ -55,7 +60,7 @@ pub fn list() -> Vec<&'static str> {
     vec![
         "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
         "fig9", "fig10", "fig11", "fig13", "fig15", "fig16", "net_bw",
-        "net_churn",
+        "net_churn", "net_fleet",
     ]
 }
 
@@ -74,9 +79,12 @@ pub fn smoke_cfg(mut cfg: ExperimentConfig) -> ExperimentConfig {
 
 /// Headline columns shared by every summary CSV (figures and sweep);
 /// [`summary_core_cells`] produces the matching row slice.
+/// `peak_model_bytes` makes fleet-scale memory (the CoW store's
+/// high-water mark, [`crate::fleet`]) visible in sweep output, not just
+/// in benches.
 const SUMMARY_CORE_HEADER: &[&str] = &[
     "final_acc", "final_val_loss", "sim_time", "total_bits", "comm_up_time",
-    "comm_down_time", "short_rounds", "time_to_acc50",
+    "comm_down_time", "short_rounds", "time_to_acc50", "peak_model_bytes",
 ];
 
 /// One formatted cell per [`SUMMARY_CORE_HEADER`] column.
@@ -93,6 +101,7 @@ fn summary_core_cells(m: &RunMetrics) -> Vec<String> {
         m.time_to_accuracy(0.5)
             .map(|t| format!("{t:.1}"))
             .unwrap_or_else(|| "never".into()),
+        format!("{}", m.peak_model_bytes()),
     ]
 }
 
@@ -644,6 +653,50 @@ pub fn arms_for(id: &str, paper: bool) -> Option<Vec<Arm>> {
                 })
                 .collect()
         }
+        // §net net_fleet: huge-fleet sweep the CoW fleet store unlocks —
+        // QuAFL vs FedBuff vs FedAvg at n=10⁴/s=30 (with --paper-scale;
+        // n=2000/s=16 at default scale) under the `mobile` profile. Only
+        // s clients are touched per round, so resident client-model
+        // memory stays O(touched·d); the summary's peak_model_bytes
+        // column shows it next to the dense layout's n·d·4.
+        "net_fleet" => {
+            let n = scale(paper, 2000, 10_000);
+            let s = scale(paper, 16, 30);
+            let mobile = NetworkConfig {
+                profile: NetProfile::preset("mobile").expect("preset"),
+                availability: AvailabilityKind::Always,
+            };
+            let mk = |label: &str,
+                      algorithm: Algorithm,
+                      quantizer: QuantizerKind| Arm {
+                label: label.into(),
+                cfg: ExperimentConfig {
+                    algorithm,
+                    quantizer,
+                    n,
+                    s,
+                    family: SynthFamily::Hard,
+                    train_samples: n.max(b.train_samples),
+                    rounds: scale(paper, 20, 40),
+                    eval_every: scale(paper, 10, 20),
+                    net: mobile.clone(),
+                    ..b.clone()
+                },
+            };
+            vec![
+                mk(
+                    "quafl_lattice10",
+                    Algorithm::QuAFL,
+                    QuantizerKind::Lattice { bits: 10 },
+                ),
+                mk(
+                    "fedbuff_qsgd10",
+                    Algorithm::FedBuff,
+                    QuantizerKind::Qsgd { bits: 10 },
+                ),
+                mk("fedavg_fp32", Algorithm::FedAvg, QuantizerKind::None),
+            ]
+        }
         // Fig 16: FedBuff+QSGD vs QuAFL+lattice at equal bit width.
         "fig16" => vec![
             Arm {
@@ -733,6 +786,23 @@ mod tests {
             a.cfg.net.availability,
             AvailabilityKind::DutyCycle { .. }
         )));
+    }
+
+    #[test]
+    fn net_fleet_reaches_ten_thousand_clients() {
+        let arms = arms_for("net_fleet", true).unwrap();
+        assert_eq!(arms.len(), 3);
+        assert!(arms.iter().all(|a| a.cfg.n == 10_000 && a.cfg.s == 30));
+        assert!(arms.iter().all(|a| !a.cfg.net.profile.is_ideal()));
+        assert!(arms.iter().all(|a| a.cfg.train_samples >= a.cfg.n));
+        let algos: Vec<Algorithm> =
+            arms.iter().map(|a| a.cfg.algorithm).collect();
+        assert!(algos.contains(&Algorithm::QuAFL));
+        assert!(algos.contains(&Algorithm::FedBuff));
+        assert!(algos.contains(&Algorithm::FedAvg));
+        // Default scale stays a huge fleet, small enough for a laptop.
+        let small = arms_for("net_fleet", false).unwrap();
+        assert!(small.iter().all(|a| a.cfg.n == 2000));
     }
 
     #[test]

@@ -1,0 +1,305 @@
+//! Copy-on-write fleet state: lazy client-model materialization.
+//!
+//! The paper's asynchronous, partial-participation design touches only s
+//! clients per round, yet the pre-fleet simulator eagerly allocated all n
+//! dense client models (`vec![init.clone(); n]`), making memory O(n·d)
+//! (~100 KB per client on the mlp) and blocking the ROADMAP's n≥10⁴
+//! sweeps. [`ClientModelStore`] removes that term: per-client models are
+//! held as `Arc<Vec<f32>>` snapshots, untouched clients reference one
+//! shared base allocation, and a model is deep-copied only when its
+//! client actually diverges — memory is O(touched·d), with
+//! touched ≤ min(n, s·rounds).
+//!
+//! The store's contract with the algorithms:
+//!
+//! - **Snapshots are cheap and immutable.** [`ClientModelStore::snapshot`]
+//!   hands out an `Arc` clone; the worker that needs a mutable copy for
+//!   its SGD burst deep-copies once ([`crate::exec`]'s single
+//!   materialization point). Nothing mutates through a snapshot.
+//! - **Writes are explicit.** [`ClientModelStore::set`] installs a
+//!   client's diverged model (its own allocation);
+//!   [`ClientModelStore::set_shared`] points a client at an existing
+//!   shared snapshot — FedBuff uses it so every client pulling between
+//!   the same two aggregations shares *one* allocation of the server
+//!   model instead of each cloning it.
+//! - **Dense reads preserve float order.**
+//!   [`ClientModelStore::iter_dense`] yields every client's model slice
+//!   in client order — shared or diverged is invisible to the consumer —
+//!   so the paper's potential Φ_t and the server/client discrepancy fold
+//!   in exactly the eager layout's order, keeping them bit-exact
+//!   (rust/tests/fleet_parity.rs).
+//! - **Residency is observable.** The store counts its distinct
+//!   allocations (pointer identity over the entries it owns) and tracks
+//!   the high-water mark; [`ClientModelStore::peak_bytes`] feeds the
+//!   `peak_model_bytes` metric surfaced in every CSV.
+//!
+//! The reference layout is still available: `dense` mode (the
+//! `--dense-fleet` knob) materializes every client up front and
+//! deep-copies on every shared write, reproducing the eager O(n·d)
+//! behaviour — the parity suite proves the two modes bit-identical on
+//! full QuAFL/FedBuff trajectories.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Per-client model storage with copy-on-write semantics (see the module
+/// docs). All models have one fixed dimension `dim`.
+pub struct ClientModelStore {
+    /// client i's current model — possibly an allocation shared with
+    /// other clients (the init base, or a pulled server snapshot)
+    entries: Vec<Arc<Vec<f32>>>,
+    /// distinct allocations currently referenced by `entries`:
+    /// allocation address → number of entries pointing at it. Tracked
+    /// pointers are kept alive by the entries that own them, so an
+    /// address can never be recycled while it is a key here.
+    refcounts: HashMap<usize, usize>,
+    dim: usize,
+    /// high-water mark of `refcounts.len()`
+    peak_models: usize,
+    /// reference layout: every write materializes (O(n·d), for parity)
+    dense: bool,
+}
+
+impl ClientModelStore {
+    /// CoW store: all `n` clients share the single `base` allocation.
+    pub fn new(n: usize, base: Vec<f32>) -> Self {
+        Self::with_mode(n, base, false)
+    }
+
+    /// Reference layout: every client gets its own copy of `base` up
+    /// front, and shared writes deep-copy (the pre-fleet behaviour).
+    pub fn new_dense(n: usize, base: Vec<f32>) -> Self {
+        Self::with_mode(n, base, true)
+    }
+
+    pub fn with_mode(n: usize, base: Vec<f32>, dense: bool) -> Self {
+        let dim = base.len();
+        let mut store = ClientModelStore {
+            entries: Vec::with_capacity(n),
+            refcounts: HashMap::new(),
+            dim,
+            peak_models: 0,
+            dense,
+        };
+        if dense {
+            for _ in 0..n {
+                let arc = Arc::new(base.clone());
+                store.retain(&arc);
+                store.entries.push(arc);
+            }
+        } else {
+            let shared = Arc::new(base);
+            for _ in 0..n {
+                store.retain(&shared);
+                store.entries.push(shared.clone());
+            }
+        }
+        store
+    }
+
+    /// Number of clients.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Model dimension d.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn is_dense(&self) -> bool {
+        self.dense
+    }
+
+    /// Client `i`'s current model, read-only.
+    pub fn get(&self, i: usize) -> &[f32] {
+        self.entries[i].as_slice()
+    }
+
+    /// Cheap immutable snapshot of client `i`'s model (an `Arc` clone —
+    /// no float is copied). The holder deep-copies if it needs to mutate.
+    pub fn snapshot(&self, i: usize) -> Arc<Vec<f32>> {
+        self.entries[i].clone()
+    }
+
+    /// Client `i` diverged: install `model` as its own allocation.
+    pub fn set(&mut self, i: usize, model: Vec<f32>) {
+        assert_eq!(model.len(), self.dim, "model dim mismatch");
+        let arc = Arc::new(model);
+        self.retain(&arc);
+        let old = std::mem::replace(&mut self.entries[i], arc);
+        self.release(&old);
+    }
+
+    /// Point client `i` at an existing shared snapshot (e.g. the server
+    /// model current at its pull) without copying. In dense mode this
+    /// deep-copies instead, reproducing the eager layout.
+    pub fn set_shared(&mut self, i: usize, model: Arc<Vec<f32>>) {
+        if self.dense {
+            self.set(i, (*model).clone());
+            return;
+        }
+        assert_eq!(model.len(), self.dim, "model dim mismatch");
+        self.retain(&model);
+        let old = std::mem::replace(&mut self.entries[i], model);
+        self.release(&old);
+    }
+
+    /// Every client's model slice, in client order — the dense view the
+    /// potential/discrepancy folds iterate. Shared and diverged entries
+    /// are indistinguishable to the consumer, so the float order (and
+    /// hence every accumulated sum) matches the eager layout bit for bit.
+    pub fn iter_dense(
+        &self,
+    ) -> impl Iterator<Item = &[f32]> + ExactSizeIterator + Clone + '_ {
+        self.entries.iter().map(|a| a.as_slice())
+    }
+
+    /// Whether `a`'s allocation currently backs one of the store's
+    /// entries. FedBuff uses this to count popped-but-unprocessed pull
+    /// snapshots: a client's old snapshot leaves the store at its re-pull
+    /// but stays alive inside its task until the fan-out consumes it.
+    pub fn is_resident(&self, a: &Arc<Vec<f32>>) -> bool {
+        self.refcounts.contains_key(&(Arc::as_ptr(a) as usize))
+    }
+
+    /// Distinct model allocations currently resident in the store.
+    pub fn resident_models(&self) -> usize {
+        self.refcounts.len()
+    }
+
+    /// Bytes those allocations occupy (f32 payload only).
+    pub fn resident_bytes(&self) -> u64 {
+        (self.refcounts.len() * self.dim * 4) as u64
+    }
+
+    /// High-water mark of [`ClientModelStore::resident_models`].
+    pub fn peak_models(&self) -> usize {
+        self.peak_models
+    }
+
+    /// High-water mark in bytes — the `peak_model_bytes` metric.
+    pub fn peak_bytes(&self) -> u64 {
+        (self.peak_models * self.dim * 4) as u64
+    }
+
+    /// Count `a` into the residency map and update the high-water mark —
+    /// the peak is observed here, at the moment of maximum overlap (a
+    /// write's new allocation coexists with the one it replaces until
+    /// [`ClientModelStore::release`] runs).
+    fn retain(&mut self, a: &Arc<Vec<f32>>) {
+        *self.refcounts.entry(Arc::as_ptr(a) as usize).or_insert(0) += 1;
+        self.note_peak();
+    }
+
+    fn release(&mut self, a: &Arc<Vec<f32>>) {
+        let key = Arc::as_ptr(a) as usize;
+        let c = self
+            .refcounts
+            .get_mut(&key)
+            .expect("released an allocation the store does not track");
+        *c -= 1;
+        if *c == 0 {
+            self.refcounts.remove(&key);
+        }
+    }
+
+    fn note_peak(&mut self) {
+        self.peak_models = self.peak_models.max(self.refcounts.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_store_shares_one_allocation() {
+        let store = ClientModelStore::new(100, vec![1.0, 2.0, 3.0]);
+        assert_eq!(store.len(), 100);
+        assert_eq!(store.dim(), 3);
+        assert_eq!(store.resident_models(), 1);
+        assert_eq!(store.resident_bytes(), 12);
+        for i in 0..100 {
+            assert_eq!(store.get(i), &[1.0, 2.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn dense_store_materializes_everyone() {
+        let store = ClientModelStore::new_dense(10, vec![0.5; 4]);
+        assert!(store.is_dense());
+        assert_eq!(store.resident_models(), 10);
+        assert_eq!(store.resident_bytes(), 10 * 16);
+    }
+
+    #[test]
+    fn set_diverges_only_the_touched_client() {
+        let mut store = ClientModelStore::new(8, vec![0.0; 2]);
+        store.set(3, vec![7.0, 8.0]);
+        assert_eq!(store.resident_models(), 2);
+        assert_eq!(store.get(3), &[7.0, 8.0]);
+        assert_eq!(store.get(2), &[0.0, 0.0]);
+        // Re-diverging the same client does not grow residency.
+        store.set(3, vec![9.0, 9.0]);
+        assert_eq!(store.resident_models(), 2);
+        // But the peak saw the transient overlap of old + new.
+        assert_eq!(store.peak_models(), 3);
+    }
+
+    #[test]
+    fn set_shared_aliases_without_copying() {
+        let mut store = ClientModelStore::new(4, vec![0.0; 2]);
+        store.set(0, vec![5.0, 5.0]);
+        let snap = store.snapshot(0);
+        store.set_shared(1, snap.clone());
+        store.set_shared(2, snap);
+        // base (client 3) + the one diverged allocation shared by 0,1,2.
+        assert_eq!(store.resident_models(), 2);
+        assert_eq!(store.get(1), &[5.0, 5.0]);
+        assert_eq!(store.get(2), &[5.0, 5.0]);
+    }
+
+    #[test]
+    fn base_drops_out_when_last_reference_leaves() {
+        let mut store = ClientModelStore::new(2, vec![1.0]);
+        store.set(0, vec![2.0]);
+        store.set(1, vec![3.0]);
+        // The shared base is no longer referenced by any entry.
+        assert_eq!(store.resident_models(), 2);
+        assert!(store.peak_models() >= 3);
+    }
+
+    #[test]
+    fn dense_mode_copies_on_shared_writes() {
+        let mut store = ClientModelStore::new_dense(3, vec![0.0; 2]);
+        let snap = store.snapshot(0);
+        store.set_shared(1, snap);
+        // Still one allocation per client: the shared write materialized.
+        assert_eq!(store.resident_models(), 3);
+        assert_eq!(store.get(1), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn dense_view_walks_clients_in_order() {
+        let mut store = ClientModelStore::new(3, vec![0.0]);
+        store.set(1, vec![1.0]);
+        let rows: Vec<&[f32]> = store.iter_dense().collect();
+        assert_eq!(rows, vec![&[0.0][..], &[1.0][..], &[0.0][..]]);
+    }
+
+    #[test]
+    fn snapshot_outlives_divergence() {
+        let mut store = ClientModelStore::new(2, vec![4.0]);
+        let snap = store.snapshot(0);
+        store.set(0, vec![5.0]);
+        // The holder's view is immutable: divergence replaced the entry,
+        // it did not mutate the shared allocation.
+        assert_eq!(snap.as_slice(), &[4.0]);
+        assert_eq!(store.get(0), &[5.0]);
+    }
+}

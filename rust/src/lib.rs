@@ -32,6 +32,18 @@
 //!   is `ExperimentConfig::workers` (`--workers`, 0 = all cores) and is
 //!   purely a wall-clock knob: trajectories are bit-identical for every
 //!   value (rust/tests/parallel_parity.rs).
+//! - **L3-fleet** — copy-on-write fleet state ([`fleet`]): per-client
+//!   models live in a [`fleet::ClientModelStore`] of `Arc<Vec<f32>>`
+//!   snapshots. Untouched clients share one base allocation (the init,
+//!   or in FedBuff the server snapshot current at their last pull) and a
+//!   model is deep-copied only when its client diverges, so resident
+//!   client-model memory is O(touched·d) instead of O(n·d) — the change
+//!   that unlocks n≥10⁴ sweeps (`figures net_fleet`). Task snapshots are
+//!   `Arc` clones and the worker's deep-copy is the single
+//!   materialization point; a client-order dense-view iterator keeps the
+//!   potential Φ_t fold bit-exact, and the store's high-water mark is
+//!   surfaced as `peak_model_bytes` in every CSV
+//!   (rust/tests/fleet_parity.rs proves CoW ≡ dense bit for bit).
 //! - **L2/L1 (build-time Python)** — the client model's fwd/bwd/update as
 //!   JAX functions over Pallas kernels, AOT-lowered once to
 //!   `artifacts/*.hlo.txt`; [`runtime`] loads and [`engine::XlaEngine`]
@@ -47,6 +59,7 @@ pub mod data;
 pub mod engine;
 pub mod exec;
 pub mod figures;
+pub mod fleet;
 pub mod metrics;
 pub mod model;
 pub mod net;

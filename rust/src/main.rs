@@ -24,7 +24,10 @@ use quafl::util::cli;
 
 /// Options that never take a value (declared so trailing positionals —
 /// e.g. `figures --smoke fig2` — are not swallowed as flag values).
-const BOOL_FLAGS: &[&str] = &["smoke", "paper-scale", "weighted", "xla"];
+const BOOL_FLAGS: &[&str] = &[
+    "smoke", "paper-scale", "weighted", "xla", "price-init-broadcast",
+    "dense-fleet",
+];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -62,6 +65,10 @@ fn usage() {
          \x20 --weighted                  --swt/--sit FLOAT\n\
          \x20 --slow-fraction FLOAT (0.25) --batch INT (32)\n\
          \x20 --workers INT client-exec threads (0 = all cores)\n\
+         \x20 --price-init-broadcast      price the t=0 init-model broadcast\n\
+         \x20 --dense-fleet               eager O(n·d) client models\n\
+         \x20                             (reference layout; default is the\n\
+         \x20                             CoW fleet store, bit-identical)\n\
          \x20 --seed INT --xla --gamma FLOAT --out FILE.csv\n\
          network (defaults: ideal transport, always-on clients):\n\
          \x20 --net ideal|broadband|mobile|DIST  (DIST = const:V |\n\

@@ -16,6 +16,17 @@ pub struct CommTally {
     pub bits_down: u64,
     pub comm_up_time: f64,
     pub comm_down_time: f64,
+    /// high-water mark of resident per-client model bytes, measured by
+    /// every algorithm at the same boundary — the round's reduction:
+    /// fleet-store distinct allocations ([`crate::fleet`]) plus in-flight
+    /// client models held outside the workers (QuAFL's returned
+    /// next-models, FedBuff's live pull snapshot and popped-but-
+    /// unprocessed start snapshots, FedAvg's shared broadcast snapshot +
+    /// returned models). Worker-side SGD scratch and decoded-message
+    /// buffers are excluded (transient compute state, identical under
+    /// the dense layout). O((s + touched)·d) under the CoW store vs the
+    /// eager layout's O(n·d).
+    pub peak_model_bytes: u64,
 }
 
 /// One evaluation point.
@@ -30,6 +41,8 @@ pub struct EvalPoint {
     pub comm_up_time: f64,
     /// cumulative simulated downlink transmission time
     pub comm_down_time: f64,
+    /// peak resident client-model bytes so far (see [`CommTally`])
+    pub peak_model_bytes: u64,
     pub val_loss: f64,
     pub val_acc: f64,
     /// loss on a fixed training subsample (the paper's train-loss curves)
@@ -112,6 +125,16 @@ impl RunMetrics {
             .unwrap_or(0.0)
     }
 
+    /// Peak resident client-model bytes over the whole run (the fleet
+    /// store's high-water mark — see [`crate::fleet`]); the series in the
+    /// CSV is monotone, so the last point carries the run-level peak.
+    pub fn peak_model_bytes(&self) -> u64 {
+        self.points
+            .last()
+            .map(|p| p.peak_model_bytes)
+            .unwrap_or(0)
+    }
+
     pub const CSV_HEADER: &'static [&'static str] = &[
         "round",
         "sim_time",
@@ -123,6 +146,7 @@ impl RunMetrics {
         "train_loss",
         "comm_up_time",
         "comm_down_time",
+        "peak_model_bytes",
     ];
 
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
@@ -139,6 +163,7 @@ impl RunMetrics {
                 p.train_loss,
                 p.comm_up_time,
                 p.comm_down_time,
+                p.peak_model_bytes as f64,
             ])?;
         }
         w.flush()
@@ -158,6 +183,7 @@ mod tests {
             bits_down: 100,
             comm_up_time: round as f64 * 0.5,
             comm_down_time: round as f64 * 0.25,
+            peak_model_bytes: 4096 + round as u64,
             val_loss: 1.0 - acc,
             val_acc: acc,
             train_loss: 1.0 - acc,
@@ -196,7 +222,7 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 3);
         assert!(text.starts_with("round,sim_time"));
-        assert!(text.lines().next().unwrap().ends_with("comm_down_time"));
+        assert!(text.lines().next().unwrap().ends_with("peak_model_bytes"));
         std::fs::remove_dir_all(dir).ok();
     }
 
@@ -206,5 +232,14 @@ mod tests {
         m.push(pt(0, 0.0, 0.1));
         m.push(pt(4, 2.0, 0.2));
         assert!((m.total_comm_time() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peak_model_bytes_reads_last_point() {
+        let mut m = RunMetrics::new("x");
+        assert_eq!(m.peak_model_bytes(), 0);
+        m.push(pt(0, 0.0, 0.1));
+        m.push(pt(7, 2.0, 0.2));
+        assert_eq!(m.peak_model_bytes(), 4096 + 7);
     }
 }

@@ -1,0 +1,265 @@
+//! Parity + property suite for the copy-on-write fleet store
+//! (rust/src/fleet):
+//!
+//! 1. Under random touch/read patterns, [`ClientModelStore`] must
+//!    materialize dense state identical to a reference `Vec<Vec<f32>>`,
+//!    while never holding more distinct allocations than touched
+//!    clients + the shared base.
+//! 2. End-to-end QuAFL and FedBuff trajectories must be **bit-identical**
+//!    between the CoW store and the eager `--dense-fleet` reference
+//!    layout — every eval field, the bit tallies, and the potential
+//!    series (which folds the store's dense view).
+//! 3. A huge-fleet run (n=2000, s=8) must allocate ≪ n full models:
+//!    `peak_model_bytes` stays O(s·rounds·d), not O(n·d).
+
+mod common;
+
+use std::sync::Arc;
+
+use common::assert_identical;
+use quafl::config::{Algorithm, ExperimentConfig, QuantizerKind, TimingConfig};
+use quafl::coordinator;
+use quafl::fleet::ClientModelStore;
+use quafl::prop_assert;
+use quafl::testing::{check, PropConfig};
+
+#[test]
+fn prop_store_matches_dense_reference_under_random_ops() {
+    check(
+        "fleet_store_cow_vs_reference",
+        PropConfig { cases: 20, max_size: 24, seed: 0xF1EE7 },
+        |rng, size| {
+            let n = 2 + size;
+            let d = 1 + rng.gen_range(6);
+            let base: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+            let mut store = ClientModelStore::new(n, base.clone());
+            let mut reference: Vec<Vec<f32>> = vec![base; n];
+            let mut touched = std::collections::BTreeSet::new();
+            for _ in 0..80 {
+                match rng.gen_range(3) {
+                    0 => {
+                        // Diverge: client i gets its own fresh model.
+                        let i = rng.gen_range(n);
+                        let v: Vec<f32> =
+                            (0..d).map(|_| rng.next_f32()).collect();
+                        store.set(i, v.clone());
+                        reference[i] = v;
+                        touched.insert(i);
+                    }
+                    1 => {
+                        // Alias: client i points at client j's snapshot
+                        // (the FedBuff pull pattern).
+                        let i = rng.gen_range(n);
+                        let j = rng.gen_range(n);
+                        let snap = store.snapshot(j);
+                        store.set_shared(i, snap);
+                        reference[i] = reference[j].clone();
+                        touched.insert(i);
+                    }
+                    _ => {
+                        // Read: a single client's view must match.
+                        let i = rng.gen_range(n);
+                        prop_assert!(
+                            store.get(i) == reference[i].as_slice(),
+                            "read mismatch at client {i}"
+                        );
+                    }
+                }
+            }
+            // The dense view walks clients in order and must equal the
+            // reference exactly (same floats, same order).
+            let dense: Vec<&[f32]> = store.iter_dense().collect();
+            prop_assert!(dense.len() == n, "dense view length {}", dense.len());
+            for (i, r) in reference.iter().enumerate() {
+                prop_assert!(
+                    dense[i] == r.as_slice(),
+                    "dense view mismatch at client {i}"
+                );
+            }
+            // CoW bound: distinct allocations never exceed touched + base.
+            prop_assert!(
+                store.resident_models() <= touched.len() + 1,
+                "resident {} > touched {} + 1",
+                store.resident_models(),
+                touched.len()
+            );
+            prop_assert!(
+                store.peak_models() >= store.resident_models(),
+                "peak below resident"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn untouched_store_is_one_allocation_dense_store_is_n() {
+    let cow = ClientModelStore::new(500, vec![0.25; 16]);
+    assert_eq!(cow.resident_models(), 1);
+    assert_eq!(cow.peak_models(), 1);
+    let dense = ClientModelStore::new_dense(500, vec![0.25; 16]);
+    assert_eq!(dense.resident_models(), 500);
+}
+
+#[test]
+fn snapshots_are_immutable_across_divergence() {
+    let mut store = ClientModelStore::new(3, vec![1.0, 2.0]);
+    let snap: Arc<Vec<f32>> = store.snapshot(1);
+    store.set(1, vec![9.0, 9.0]);
+    assert_eq!(snap.as_slice(), &[1.0, 2.0]);
+    assert_eq!(store.get(1), &[9.0, 9.0]);
+    assert_eq!(store.get(0), &[1.0, 2.0]);
+}
+
+/// Parameter dimension d of the config's model (no hardcoded constants —
+/// the bounds below must track the model zoo).
+fn model_dim(cfg: &ExperimentConfig) -> usize {
+    quafl::model::ModelSpec::by_name(&cfg.model)
+        .unwrap()
+        .num_params()
+}
+
+fn e2e_base(algorithm: Algorithm) -> ExperimentConfig {
+    ExperimentConfig {
+        algorithm,
+        n: 12,
+        s: 4,
+        k: 4,
+        rounds: 6,
+        eval_every: 2,
+        train_samples: 512,
+        val_samples: 128,
+        batch: 16,
+        seed: 23,
+        workers: 2,
+        timing: TimingConfig { slow_fraction: 0.3, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn dense_vs_cow(cfg: ExperimentConfig, what: &str) {
+    let cow = coordinator::run(&cfg).expect("cow run");
+    assert!(!cow.points.is_empty(), "{what}: no eval points");
+    let dense =
+        coordinator::run(&ExperimentConfig { dense_fleet: true, ..cfg })
+            .expect("dense run");
+    assert_identical(&cow, &dense, what);
+    // The one legitimate difference: the dense layout is resident-heavier
+    // (n allocations up front vs the shared base + diverged clients).
+    assert!(
+        dense.peak_model_bytes() >= cow.peak_model_bytes(),
+        "{what}: dense peak {} below cow peak {}",
+        dense.peak_model_bytes(),
+        cow.peak_model_bytes()
+    );
+}
+
+#[test]
+fn quafl_cow_matches_dense_bitwise() {
+    // track_potential stresses the dense-view fold every round.
+    dense_vs_cow(
+        ExperimentConfig {
+            track_potential: true,
+            ..e2e_base(Algorithm::QuAFL)
+        },
+        "quafl dense-vs-cow",
+    );
+}
+
+#[test]
+fn quafl_weighted_cow_matches_dense_bitwise() {
+    dense_vs_cow(
+        ExperimentConfig {
+            weighted: true,
+            track_potential: true,
+            ..e2e_base(Algorithm::QuAFL)
+        },
+        "quafl weighted dense-vs-cow",
+    );
+}
+
+#[test]
+fn fedbuff_cow_matches_dense_bitwise() {
+    dense_vs_cow(
+        ExperimentConfig {
+            quantizer: QuantizerKind::Qsgd { bits: 8 },
+            ..e2e_base(Algorithm::FedBuff)
+        },
+        "fedbuff dense-vs-cow",
+    );
+}
+
+#[test]
+fn fedbuff_uncompressed_cow_matches_dense_bitwise() {
+    dense_vs_cow(
+        ExperimentConfig {
+            quantizer: QuantizerKind::None,
+            ..e2e_base(Algorithm::FedBuff)
+        },
+        "fedbuff fp32 dense-vs-cow",
+    );
+}
+
+#[test]
+fn price_init_broadcast_default_off_is_bit_exact_and_on_charges_bits() {
+    // Default off: the flag's existence must not perturb anything (the
+    // config is identical, but pin the accounting explicitly).
+    let cfg = e2e_base(Algorithm::QuAFL);
+    let off = coordinator::run(&cfg).unwrap();
+    let on = coordinator::run(&ExperimentConfig {
+        price_init_broadcast: true,
+        ..cfg.clone()
+    })
+    .unwrap();
+    // Under the Ideal transport the broadcast costs 0.0 time and leaves
+    // the clocks untouched, so the trajectory matches except for the
+    // extra n full-precision downlinks in the tally.
+    let d_bits = (model_dim(&cfg) * 32) as u64;
+    let extra = cfg.n as u64 * d_bits;
+    assert_eq!(off.points.len(), on.points.len());
+    for (p, q) in off.points.iter().zip(&on.points) {
+        assert_eq!(p.bits_down + extra, q.bits_down, "round {}", p.round);
+        assert_eq!(p.bits_up, q.bits_up);
+        assert_eq!(p.sim_time.to_bits(), q.sim_time.to_bits());
+        assert_eq!(p.val_loss.to_bits(), q.val_loss.to_bits());
+    }
+}
+
+#[test]
+fn huge_fleet_run_allocates_far_fewer_than_n_models() {
+    let base = ExperimentConfig {
+        n: 2000,
+        s: 8,
+        k: 2,
+        rounds: 5,
+        eval_every: 5,
+        train_samples: 2000,
+        val_samples: 64,
+        batch: 16,
+        quantizer: QuantizerKind::None,
+        ..Default::default()
+    };
+    let model_bytes = (model_dim(&base) * 4) as u64;
+    let dense_bytes = base.n as u64 * model_bytes;
+    for algorithm in [Algorithm::QuAFL, Algorithm::FedBuff] {
+        let m = coordinator::run(&ExperimentConfig {
+            algorithm,
+            ..base.clone()
+        })
+        .unwrap();
+        let peak = m.peak_model_bytes();
+        assert!(peak > 0, "{algorithm:?}: peak never recorded");
+        // At most s clients diverge per QuAFL round (Z arrivals per
+        // FedBuff aggregation) + shared bases/snapshots + transient
+        // set() overlap: a generous O(s·rounds) bound, far below n.
+        let bound = (base.s * base.rounds + 10) as u64 * model_bytes;
+        assert!(
+            peak <= bound,
+            "{algorithm:?}: peak {peak} exceeds O(touched) bound {bound}"
+        );
+        assert!(
+            peak * 20 <= dense_bytes,
+            "{algorithm:?}: peak {peak} not ≪ dense {dense_bytes}"
+        );
+    }
+}
