@@ -8,6 +8,12 @@
 //! protocols (one single-step task per round — degenerates to the serial
 //! path on the primary engine) so all four algorithms share one execution
 //! substrate.
+//!
+//! The client-selection subsystem ([`crate::select`]) is structurally a
+//! no-op here: a single sequential node never samples clients, so the
+//! policy is never consulted and the participation tracker stays empty
+//! (its Gini/staleness CSV columns read 0) — pinned, along with the
+//! other three algorithms, by rust/tests/select_parity.rs.
 
 use std::sync::Arc;
 

@@ -1,13 +1,22 @@
 //! Synchronous FedAvg [25] — the paper's primary comparison point
 //! (Appendix A.2 simulation rules):
 //!
-//! Each round the server samples s reachable clients, sends them its model
+//! Each round the server samples s reachable clients (through the
+//! pluggable selection policy, [`crate::select`] — the default `Uniform`
+//! is the paper's rule, bit for bit), sends them its model
 //! *uncompressed*, and blocks until the slowest of them completes exactly
 //! K local steps; it then averages the returned models equally. The round
 //! duration is max_i(downlink_i + time for K steps + uplink_i) + sit, and
 //! swt = 0 (the server calls again immediately) — the transport terms are
 //! exactly 0.0 under the default `Ideal` profile, reproducing the paper's
 //! rule (and the pre-net trajectory) bit for bit.
+//!
+//! `--broadcast-downlink` reprices the model broadcast as one
+//! transmission on a shared medium: every sampled client receives at the
+//! *slowest* sampled link's downlink time and the payload bits are
+//! charged once per round, instead of the default s independent unicasts
+//! (each client at its own link, s payloads). Off by default — the
+//! unicast pricing is the bit-exact legacy path.
 //!
 //! The s independent K-step bursts run through the [`crate::exec`]
 //! fan-out; the equal-weight average folds the returned models in sampled
@@ -47,18 +56,38 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     let model_bits = (d * 32) as u64;
 
     for t in 0..cfg.rounds {
-        let sampled = ctx.availability.sample(&mut ctx.rng, cfg.n, cfg.s, now);
+        let sampled = ctx.select_clients(now);
+        if cfg.track_selection {
+            metrics.selections.push((now, sampled.clone()));
+        }
         if sampled.len() < cfg.s {
             metrics.short_rounds += 1;
         }
         if sampled.is_empty() {
             // Nobody reachable: the server idles one interaction slot.
             now += cfg.timing.sit;
+            ctx.tracker.advance_round();
             if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
                 ctx.eval_point(&mut metrics, t + 1, now, &tally, &x_server)?;
             }
             continue;
         }
+
+        // `--broadcast-downlink`: one shared-medium transmission — all
+        // sampled clients receive at the slowest sampled link's time, one
+        // payload charged per round. None = the default per-client
+        // unicast pricing (bit-exact legacy path).
+        let bcast_t = if cfg.broadcast_downlink {
+            let slowest = sampled
+                .iter()
+                .map(|&i| ctx.transport.downlink_time(i, model_bits))
+                .fold(0.0, f64::max);
+            tally.bits_down += model_bits;
+            tally.comm_down_time += slowest;
+            Some(slowest)
+        } else {
+            None
+        };
 
         // Synchronous barrier: the round takes as long as the slowest
         // sampled client needs to receive the model, run its K steps, and
@@ -70,7 +99,10 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         // each worker deep-copies it once for its K-step burst.
         let x_round = Arc::new(x_server.clone());
         for &i in &sampled {
-            let down_t = ctx.transport.downlink_time(i, model_bits);
+            let down_t = match bcast_t {
+                Some(slowest) => slowest,
+                None => ctx.transport.downlink_time(i, model_bits),
+            };
             let up_t = ctx.transport.uplink_time(i, model_bits);
             ctx.clocks[i].restart(now + down_t);
             let finish = ctx.clocks[i].finish_time_for(cfg.k) + up_t;
@@ -79,9 +111,11 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             metrics.total_interactions += 1;
             metrics.sum_observed_steps += cfg.k as u64;
             tally.total_steps += cfg.k as u64;
-            tally.bits_down += model_bits;
+            if bcast_t.is_none() {
+                tally.bits_down += model_bits;
+                tally.comm_down_time += down_t;
+            }
             tally.bits_up += model_bits;
-            tally.comm_down_time += down_t;
             tally.comm_up_time += up_t;
 
             tasks.push(make_task(ctx, i, x_round.clone(), cfg.k, cfg.lr));
@@ -99,9 +133,19 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         let mut sum = vec![0f32; d];
         for r in &results {
             params::axpy(&mut sum, 1.0 / sampled.len() as f32, &r.params);
+            // Selection-policy bookkeeping (no RNG, no trajectory float):
+            // FedAvg clients are stateless, so a participation doubles as
+            // a snapshot refresh; the mean per-step loss feeds loss-poc.
+            ctx.tracker.record_participation(r.client_id, now);
+            ctx.tracker.note_snapshot(r.client_id);
+            if r.steps > 0 {
+                ctx.tracker
+                    .note_loss(r.client_id, r.loss as f64 / r.steps as f64);
+            }
         }
         x_server = sum;
         now = round_end + cfg.timing.sit;
+        ctx.tracker.advance_round();
 
         if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
             ctx.eval_point(&mut metrics, t + 1, now, &tally, &x_server)?;

@@ -37,6 +37,19 @@
 //! legitimately appear twice in one buffer; both its bursts land in event
 //! order because its batches were drawn serially.
 //!
+//! Selection integration ([`crate::select`]): FedBuff has no per-round
+//! sampling step, so the policy acts as an **admission gate** on
+//! arrivals. Under the default `Uniform` policy every push is admitted
+//! without consuming randomness — the bit-exact legacy path. Non-uniform
+//! policies may reject a push (`StalenessAware` drops updates whose
+//! pulled snapshot is older than the cap in aggregations — FADAS-style
+//! bounded staleness; `Fairness` holds fast clients to a one-participation
+//! quota lead; `LossPoc` gates on the tracked-loss median): the compute
+//! and uplink are already spent and stay charged, the Δ is simply never
+//! aggregated, and the client re-pulls and restarts — so its next push
+//! is fresh and the event loop cannot livelock. Rejections are counted
+//! in `RunMetrics::rejected_interactions`.
+//!
 //! The paper's qualitative claim reproduced here: under heterogeneous
 //! speeds slow clients contribute systematically fewer buffer entries, so
 //! with non-i.i.d. data the model skews toward fast clients' distributions
@@ -157,23 +170,44 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         while tasks.len() < cfg.fedbuff_buffer {
             let Reverse(Finish { time, id }) = queue.pop().expect("queue non-empty");
             now = time;
+            // Admission gate ([`crate::select`]): the default `Uniform`
+            // policy admits every arrival without touching the RNG (the
+            // bit-exact legacy path); staleness/fairness/loss policies
+            // may drop the update — see the module docs.
+            let admitted = ctx.admit_update(now, id);
             metrics.total_interactions += 1;
             metrics.sum_observed_steps += cfg.k as u64;
             tally.total_steps += cfg.k as u64;
 
-            // Client `id` finished K steps on its pulled snapshot; it
-            // pulls the current model (uncompressed, as in [30]) and
-            // restarts. The pull aliases the shared server snapshot — no
-            // model floats are copied here.
-            let start = fleet.snapshot(id);
-            fleet.set_shared(id, server_snap.clone());
-            let mut task = make_task(ctx, id, start, cfg.k, cfg.lr);
-            if up_quant.is_some() {
-                msg_counter += 1;
-                task.seed = derive_seed(cfg.seed, 0xFB0F ^ msg_counter);
+            if admitted {
+                // Client `id` finished K steps on its pulled snapshot;
+                // its burst joins the buffer fan-out.
+                let start = fleet.snapshot(id);
+                let mut task = make_task(ctx, id, start, cfg.k, cfg.lr);
+                if up_quant.is_some() {
+                    msg_counter += 1;
+                    task.seed = derive_seed(cfg.seed, 0xFB0F ^ msg_counter);
+                }
+                tasks.push(task);
+                ctx.tracker.record_participation(id, now);
+                if cfg.track_selection {
+                    metrics.selections.push((now, vec![id]));
+                }
+            } else {
+                // Rejected: the compute and the transmission already
+                // happened — the Δ's exact wire bits stay charged (the
+                // admitted path charges them at aggregation) — but the
+                // update is never aggregated.
+                metrics.rejected_interactions += 1;
+                tally.bits_up += delta_bits;
             }
-            tasks.push(task);
 
+            // Admitted or not, the client pulls the current model
+            // (uncompressed, as in [30]) and restarts. The pull aliases
+            // the shared server snapshot — no model floats are copied
+            // here — and refreshes the client's snapshot epoch.
+            fleet.set_shared(id, server_snap.clone());
+            ctx.tracker.note_snapshot(id);
             let down_t = ctx.transport.downlink_time(id, model_bits);
             let up_t = ctx.transport.uplink_time(id, delta_bits);
             tally.bits_down += model_bits;
@@ -211,10 +245,11 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         // compresses its Δ = pulled − local with its pre-assigned seed.
         let up_quant_ref = up_quant.as_ref();
         let deltas = ctx.pool.map(tasks, |engine: &mut dyn TrainEngine, task| {
+            let id = task.client_id;
             // Deep-copy the shared pulled snapshot for the SGD burst —
             // the fan-out's single materialization point.
             let mut x_local = (*task.params).clone();
-            engine.train_steps(&mut x_local, &task.batches, task.lr)?;
+            let loss = engine.train_steps(&mut x_local, &task.batches, task.lr)?;
             // Δ = pulled - local (a descent direction scaled by η·h̃).
             let mut delta = params::sub(task.params.as_slice(), &x_local);
             let bits = if let Some(q) = up_quant_ref {
@@ -225,17 +260,31 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             } else {
                 model_bits
             };
-            Ok((delta, bits))
+            Ok((id, delta, bits, loss))
         })?;
 
         // Server aggregates the full buffer, applying Δs in event order.
         let scale = cfg.fedbuff_server_lr / deltas.len() as f32;
-        for (delta, bits) in deltas {
+        for (id, delta, bits, loss) in deltas {
             tally.bits_up += bits;
             params::axpy(&mut x_server, -scale, &delta);
+            // Tracker observation for the loss-aware policies (pure
+            // bookkeeping — no RNG, no trajectory float).
+            ctx.tracker.note_loss(id, loss as f64 / cfg.k as f64);
         }
         aggregations += 1;
         now += cfg.timing.sit;
+        // The aggregation is FedBuff's "round": age every snapshot in
+        // both the tracker and the fleet store. The two derive the same
+        // staleness by construction — every pull stamps both (above) and
+        // the counters only advance here, together.
+        ctx.tracker.advance_round();
+        fleet.advance_epoch();
+        debug_assert_eq!(
+            ctx.tracker.round(),
+            fleet.current_epoch(),
+            "tracker round and fleet epoch must advance in lockstep"
+        );
         // Clients pulling from here until the next aggregation share this
         // snapshot: one allocation, not Z (or n) clones of x_server. It
         // is fresh, so at this instant it is exactly one allocation on

@@ -3,9 +3,13 @@
 //!
 //! Per server round t (server clock τ):
 //!
-//! 1. Sample S, |S| <= s, uniformly from the *reachable* clients (the
-//!    [`crate::net`] availability process; under the default `Always`
-//!    process this is exactly the pre-net uniform draw of s clients).
+//! 1. Sample S, |S| <= s, from the *reachable* clients (the [`crate::net`]
+//!    availability process) through the pluggable selection policy
+//!    ([`crate::select`], `--select`). The default `Uniform` policy is the
+//!    paper's rule — under the default `Always` process it is exactly the
+//!    pre-net uniform draw of s clients, bit for bit; staleness-, fairness-
+//!    and loss-aware policies bias the draw using the server's
+//!    participation tracker.
 //! 2. For each i ∈ S (non-blocking — the client replies immediately):
 //!    - the client's realized progress is H_i = (steps its Exp(λ_i)
 //!      process completed since its last interaction, capped at K); those
@@ -60,6 +64,11 @@ struct ClientOutcome {
     x_next: Vec<f32>,
     /// exact uplink cost of Enc(Y^i)
     up_bits: u64,
+    /// summed training loss over the burst (participation-tracker
+    /// observation — the trajectory never reads it)
+    loss: f32,
+    /// local steps actually executed (h)
+    steps: usize,
 }
 
 pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
@@ -111,13 +120,22 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
 
     for t in 0..cfg.rounds {
         now += cfg.timing.swt;
-        let sampled = ctx.availability.sample(&mut ctx.rng, cfg.n, cfg.s, now);
+        // Selection goes through the pluggable policy ([`crate::select`]);
+        // the default `Uniform` consumes exactly the RNG stream the direct
+        // `availability.sample` call consumed (tests/select_parity.rs).
+        let sampled = ctx.select_clients(now);
+        if cfg.track_selection {
+            metrics.selections.push((now, sampled.clone()));
+        }
         if sampled.len() < cfg.s {
             metrics.short_rounds += 1;
         }
         if sampled.is_empty() {
-            // Nobody reachable: the server idles this round.
+            // Nobody reachable: the server idles this round (the idle
+            // round still ages every snapshot).
             now += cfg.timing.sit;
+            ctx.tracker.advance_round();
+            fleet.advance_epoch();
             if cfg.track_potential {
                 metrics
                     .potential
@@ -163,10 +181,13 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             // Execute the h steps the client actually took (from X^i).
             // The deep copy of the shared snapshot happens here, in the
             // worker — the fan-out's single materialization point.
+            let steps = task.batches.len();
             let mut x_sgd = (*task.params).clone();
-            if !task.batches.is_empty() {
-                engine.train_steps(&mut x_sgd, &task.batches, task.lr)?;
-            }
+            let loss = if task.batches.is_empty() {
+                0.0
+            } else {
+                engine.train_steps(&mut x_sgd, &task.batches, task.lr)?
+            };
             // Y^i = X^i - η·η_i·h̃ = (1-η_i)·X^i + η_i·(SGD result).
             let y_i = if eta_ref[i] == 1.0 {
                 x_sgd
@@ -199,7 +220,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
                 }
                 AveragingMode::ServerOnly => y_i,
             };
-            Ok(ClientOutcome { client_id: i, q_y, x_next, up_bits })
+            Ok(ClientOutcome { client_id: i, q_y, x_next, up_bits, loss, steps })
         })?;
 
         // Reduction-boundary high-water mark (same boundary FedBuff and
@@ -228,6 +249,16 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             tally.bits_down += enc_x.bits as u64;
             params::axpy(&mut sum_qy, 1.0, &out.q_y);
             fleet.set(out.client_id, out.x_next);
+            // Participation bookkeeping for the selection policies: the
+            // client was served now, holds a round-t snapshot, and its
+            // mean local loss is the freshest signal the server has.
+            // Pure bookkeeping — no RNG, no trajectory float.
+            ctx.tracker.record_participation(out.client_id, now);
+            ctx.tracker.note_snapshot(out.client_id);
+            if out.steps > 0 {
+                ctx.tracker
+                    .note_loss(out.client_id, out.loss as f64 / out.steps as f64);
+            }
             // The client restarts its K local steps once it has received
             // and folded in the server's message.
             ctx.clocks[out.client_id].restart(now + cfg.timing.sit + down_t);
@@ -249,6 +280,13 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
 
         now += cfg.timing.sit + round_comm;
         tally.peak_model_bytes = tally.peak_model_bytes.max(fleet.peak_bytes());
+        ctx.tracker.advance_round();
+        fleet.advance_epoch();
+        debug_assert_eq!(
+            ctx.tracker.round(),
+            fleet.current_epoch(),
+            "tracker round and fleet epoch must advance in lockstep"
+        );
 
         if cfg.track_potential {
             metrics

@@ -5,6 +5,7 @@
 
 use crate::data::{PartitionKind, SynthFamily};
 use crate::net::NetworkConfig;
+use crate::select::SelectionKind;
 use crate::util::cli::Args;
 
 /// Which protocol to run (paper §4 comparisons).
@@ -196,6 +197,23 @@ pub struct ExperimentConfig {
     /// O(n·d) layout. Trajectories are bit-identical either way
     /// (rust/tests/fleet_parity.rs); only `peak_model_bytes` differs.
     pub dense_fleet: bool,
+    /// server-side client-selection policy ([`crate::select`]; `--select`,
+    /// `--select-cap`, `--select-candidates`). The default `Uniform` is a
+    /// bit-exact wrapper over the pre-subsystem sampling path
+    /// (rust/tests/select_parity.rs).
+    pub select: SelectionKind,
+    /// price FedAvg's per-round model broadcast as one transmission on a
+    /// shared downlink medium — every sampled client receives at the
+    /// slowest sampled link's time and the payload is charged once —
+    /// instead of s independent unicasts (`--broadcast-downlink`; off by
+    /// default = bit-exact unicast pricing). QuAFL/FedBuff downlinks are
+    /// genuinely per-client (each round's recipients differ mid-flight),
+    /// so only FedAvg's synchronized broadcast honors the flag.
+    pub broadcast_downlink: bool,
+    /// record each round's selected client set in
+    /// [`crate::metrics::RunMetrics::selections`] (test/diagnostic hook;
+    /// costs O(s) memory per round, off by default, no CLI surface)
+    pub track_selection: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -228,6 +246,9 @@ impl Default for ExperimentConfig {
             net: NetworkConfig::default(),
             price_init_broadcast: false,
             dense_fleet: false,
+            select: SelectionKind::Uniform,
+            broadcast_downlink: false,
+            track_selection: false,
         }
     }
 }
@@ -253,6 +274,7 @@ impl ExperimentConfig {
             return Err("fedbuff buffer must be >= 1".into());
         }
         self.net.validate()?;
+        self.select.validate(self.s)?;
         Ok(())
     }
 
@@ -265,15 +287,17 @@ impl ExperimentConfig {
         "fast-lambda", "slow-lambda",
         "fedbuff-buffer", "fedbuff-server-lr", "eval-every", "batch",
         "seed", "xla", "gamma", "out", "workers",
-        "price-init-broadcast", "dense-fleet",
+        "price-init-broadcast", "dense-fleet", "broadcast-downlink",
     ];
 
     /// The full `run` key set: [`ExperimentConfig::CLI_KEYS`] plus the
-    /// network keys owned by [`NetworkConfig::CLI_KEYS`] (single source —
-    /// a flag added to one parser cannot drift out of the typo guard).
+    /// network keys owned by [`NetworkConfig::CLI_KEYS`] and the selection
+    /// keys owned by [`SelectionKind::CLI_KEYS`] (single source — a flag
+    /// added to one parser cannot drift out of the typo guard).
     pub fn cli_keys() -> Vec<&'static str> {
         let mut keys = Self::CLI_KEYS.to_vec();
         keys.extend_from_slice(NetworkConfig::CLI_KEYS);
+        keys.extend_from_slice(SelectionKind::CLI_KEYS);
         keys
     }
 
@@ -328,7 +352,9 @@ impl ExperimentConfig {
         c.workers = args.get_usize("workers", c.workers);
         c.price_init_broadcast = args.bool("price-init-broadcast");
         c.dense_fleet = args.bool("dense-fleet");
+        c.broadcast_downlink = args.bool("broadcast-downlink");
         c.net = NetworkConfig::from_args(args)?;
+        c.select = SelectionKind::from_args(args)?;
         c.validate()?;
         Ok(c)
     }
@@ -408,6 +434,40 @@ mod tests {
         let c = ExperimentConfig::from_args(&a).unwrap();
         assert!(c.price_init_broadcast);
         assert!(c.dense_fleet);
+    }
+
+    #[test]
+    fn select_flags_parse_into_config() {
+        let d = ExperimentConfig::default();
+        assert!(d.select.is_uniform());
+        assert!(!d.broadcast_downlink);
+        let a = cli::parse(&sv(&[
+            "run", "--select", "loss-poc", "--select-candidates", "12",
+        ]));
+        let c = ExperimentConfig::from_args(&a).unwrap();
+        assert_eq!(c.select, SelectionKind::LossPoc { candidates: Some(12) });
+        // --select-candidates below s must be rejected at validation.
+        let a = cli::parse(&sv(&[
+            "run", "--s", "10", "--n", "40", "--select", "loss-poc",
+            "--select-candidates", "4",
+        ]));
+        assert!(ExperimentConfig::from_args(&a).is_err());
+        // The typo guard covers every selection key without hand-copying.
+        let keys = ExperimentConfig::cli_keys();
+        for k in SelectionKind::CLI_KEYS {
+            assert!(keys.contains(k), "missing select key {k}");
+        }
+        assert!(keys.contains(&"broadcast-downlink"));
+    }
+
+    #[test]
+    fn broadcast_downlink_flag_parses() {
+        let a = cli::parse_with_bool_flags(
+            &sv(&["run", "--algorithm", "fedavg", "--broadcast-downlink"]),
+            &["broadcast-downlink"],
+        );
+        let c = ExperimentConfig::from_args(&a).unwrap();
+        assert!(c.broadcast_downlink);
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //! entry point behind both the CLI (`quafl run ...`) and the figure
 //! harness.
 
+use std::sync::Arc;
+
 use anyhow::{Context, Result};
 
 use crate::algorithms;
@@ -20,6 +22,7 @@ use crate::quant::{
     lattice_gamma_for, IdentityQuantizer, LatticeQuantizer, QsgdQuantizer,
     Quantizer,
 };
+use crate::select::{ParticipationTracker, SelectionPolicy, SelectionView};
 use crate::sim::{build_clocks, ClientClock};
 use crate::util::rng::{derive_seed, Rng};
 
@@ -47,6 +50,13 @@ pub struct FlRun {
     pub transport: Box<dyn Transport>,
     /// gates which clients are reachable at a given simulated time
     pub availability: ClientAvailability,
+    /// server-side client-selection policy ([`crate::select`]); the
+    /// default `Uniform` is a bit-exact wrapper over
+    /// [`ClientAvailability::sample`]
+    pub selector: Box<dyn SelectionPolicy>,
+    /// per-client participation/staleness/loss history feeding the
+    /// selection policy and the Gini/staleness metrics columns
+    pub tracker: ParticipationTracker,
     /// server-side sampling randomness
     pub rng: Rng,
     /// expected steps per interaction per client (H_i) — analytic, used by
@@ -79,12 +89,23 @@ impl FlRun {
             spec.name
         );
 
-        let part = partition(&train, cfg.n, cfg.partition, derive_seed(cfg.seed, 0x9A47));
+        // The partition is materialized once and shared: each Shard is a
+        // view into the Arc (client id + RNG stream), so per-client index
+        // vectors are never duplicated — the O(n) memory term the lazy
+        // shard removes. The fork argument (the shard's length) matches
+        // the old eager construction, keeping every batch stream bit-exact.
+        let part = Arc::new(partition(
+            &train,
+            cfg.n,
+            cfg.partition,
+            derive_seed(cfg.seed, 0x9A47),
+        ));
         let mut shard_rng = Rng::new(derive_seed(cfg.seed, 0x54A2D));
-        let shards: Vec<Shard> = part
-            .shards
-            .iter()
-            .map(|idx| Shard::new(idx.clone(), shard_rng.fork(idx.len() as u64)))
+        let shards: Vec<Shard> = (0..cfg.n)
+            .map(|i| {
+                let len = part.shards[i].len() as u64;
+                Shard::from_partition(part.clone(), i, shard_rng.fork(len))
+            })
             .collect();
 
         let clocks = build_clocks(cfg.n, &cfg.timing, derive_seed(cfg.seed, 0xC10C));
@@ -107,8 +128,12 @@ impl FlRun {
         let expected_h = expected_steps_per_interaction(cfg, &clocks);
         let quantizer = build_quantizer(cfg, spec.num_params());
         // Neither build consumes shared RNG state, so the default Ideal
-        // network leaves every downstream random stream untouched.
-        let transport = cfg.net.build_transport(cfg.n, derive_seed(cfg.seed, 0x4E70));
+        // network leaves every downstream random stream untouched. The
+        // clock rates feed the optional compute↔bandwidth copula
+        // (`--net-compute-corr`; 0.0 keeps the legacy independent draws).
+        let rates: Vec<f64> = clocks.iter().map(|c| c.rate()).collect();
+        let transport =
+            cfg.net.build_transport(cfg.n, derive_seed(cfg.seed, 0x4E70), &rates);
         let availability =
             cfg.net.build_availability(cfg.n, derive_seed(cfg.seed, 0x4E71));
 
@@ -124,9 +149,39 @@ impl FlRun {
             quantizer,
             transport,
             availability,
+            selector: cfg.select.build(cfg.s),
+            tracker: ParticipationTracker::new(cfg.n),
             rng: Rng::new(derive_seed(cfg.seed, 0x5E1EC7)),
             expected_h,
         })
+    }
+
+    /// Sample this round's participants through the selection policy.
+    /// Under the default `Uniform` policy this consumes exactly the RNG
+    /// stream [`ClientAvailability::sample`] consumed before the
+    /// subsystem existed, so default trajectories are bit-identical
+    /// (rust/tests/select_parity.rs).
+    pub fn select_clients(&mut self, now: f64) -> Vec<usize> {
+        let mut view = SelectionView {
+            now,
+            n: self.cfg.n,
+            availability: &mut self.availability,
+            tracker: &self.tracker,
+        };
+        self.selector.select(&mut view, &mut self.rng, self.cfg.s)
+    }
+
+    /// Event-driven admission (FedBuff): should `client`'s arriving
+    /// update enter the aggregation buffer? The default `Uniform` policy
+    /// admits everything without consuming randomness.
+    pub fn admit_update(&mut self, now: f64, client: usize) -> bool {
+        let mut view = SelectionView {
+            now,
+            n: self.cfg.n,
+            availability: &mut self.availability,
+            tracker: &self.tracker,
+        };
+        self.selector.admit(&mut view, &mut self.rng, client)
     }
 
     /// Build the per-client model store for this run: copy-on-write by
@@ -183,6 +238,9 @@ impl FlRun {
             comm_up_time: tally.comm_up_time,
             comm_down_time: tally.comm_down_time,
             peak_model_bytes: tally.peak_model_bytes,
+            participation_gini: self.tracker.participation_gini(),
+            staleness_max: self.tracker.max_staleness(),
+            staleness_mean: self.tracker.mean_staleness(),
             val_loss,
             val_acc,
             train_loss,

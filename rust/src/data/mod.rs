@@ -10,6 +10,8 @@ pub mod synthetic;
 pub use partition::{partition, Partition, PartitionKind};
 pub use synthetic::{SynthSpec, SynthFamily};
 
+use std::sync::Arc;
+
 use crate::util::rng::Rng;
 
 /// A dense classification dataset. Features are row-major
@@ -71,30 +73,68 @@ pub struct Batch {
 /// A client's view of the training set: indices into the shared dataset
 /// plus an independent sampling stream (clients sample i.i.d. from their
 /// local distribution, matching the paper's stochastic-gradient model).
+///
+/// The index list has two backings (ROADMAP "Lazy shards"): an owned
+/// vector (the baseline node, tests) or a **shared view into the fleet's
+/// one materialized [`Partition`]** — client `i`'s shard is just
+/// `(Arc<Partition>, i)` plus its RNG, so building n shards allocates no
+/// per-client index vectors at all. The pre-lazy construction cloned
+/// every partition shard into its own `Vec<usize>`, an O(total-samples)
+/// duplicate plus n allocations that `figures net_fleet`-scale sweeps
+/// paid up front. Batch draws are bit-identical either way (same index
+/// values, same RNG stream).
 #[derive(Clone, Debug)]
 pub struct Shard {
-    pub indices: Vec<usize>,
+    backing: ShardBacking,
     rng: Rng,
+}
+
+#[derive(Clone, Debug)]
+enum ShardBacking {
+    /// the shard owns its index list
+    Owned(Vec<usize>),
+    /// a view into the fleet-shared partition: no per-client allocation
+    Shared { part: Arc<Partition>, client: usize },
 }
 
 impl Shard {
     pub fn new(indices: Vec<usize>, rng: Rng) -> Self {
         assert!(!indices.is_empty(), "empty shard");
-        Shard { indices, rng }
+        Shard { backing: ShardBacking::Owned(indices), rng }
+    }
+
+    /// Client `client`'s view of the shared partition (see the type docs).
+    pub fn from_partition(part: Arc<Partition>, client: usize, rng: Rng) -> Self {
+        assert!(!part.shards[client].is_empty(), "empty shard");
+        Shard { backing: ShardBacking::Shared { part, client }, rng }
+    }
+
+    /// The client's index list (borrowed from the shared partition when
+    /// the shard is a view).
+    pub fn indices(&self) -> &[usize] {
+        match &self.backing {
+            ShardBacking::Owned(v) => v,
+            ShardBacking::Shared { part, client } => &part.shards[*client],
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.indices.len()
+        self.indices().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.indices.is_empty()
+        self.indices().is_empty()
     }
 
     /// Draw a batch of local sample indices with replacement.
     pub fn sample_batch(&mut self, batch: usize) -> Vec<usize> {
+        let Shard { backing, rng } = self;
+        let indices: &[usize] = match backing {
+            ShardBacking::Owned(v) => v,
+            ShardBacking::Shared { part, client } => &part.shards[*client],
+        };
         (0..batch)
-            .map(|_| self.indices[self.rng.gen_range(self.indices.len())])
+            .map(|_| indices[rng.gen_range(indices.len())])
             .collect()
     }
 }
@@ -146,5 +186,36 @@ mod tests {
             }
         }
         assert!(seen[1] && seen[2] && seen[3] && seen[4]);
+    }
+
+    #[test]
+    fn shared_shard_matches_owned_bitwise() {
+        // The lazy (shared-partition) backing must produce the exact
+        // batch stream the owned backing produces from the same RNG.
+        let part = Arc::new(Partition {
+            shards: vec![vec![0, 3], vec![2, 5, 7, 9]],
+        });
+        let mut owned = Shard::new(part.shards[1].clone(), Rng::new(11));
+        let mut shared = Shard::from_partition(part.clone(), 1, Rng::new(11));
+        assert_eq!(owned.len(), shared.len());
+        assert_eq!(owned.indices(), shared.indices());
+        for _ in 0..50 {
+            assert_eq!(owned.sample_batch(7), shared.sample_batch(7));
+        }
+    }
+
+    #[test]
+    fn shared_shard_allocates_no_index_copies() {
+        // The view borrows the partition's own storage.
+        let part = Arc::new(Partition { shards: vec![vec![4, 8, 15]] });
+        let shard = Shard::from_partition(part.clone(), 0, Rng::new(1));
+        assert!(std::ptr::eq(shard.indices(), part.shards[0].as_slice()));
+    }
+
+    #[test]
+    #[should_panic(expected = "empty shard")]
+    fn shared_shard_rejects_empty_partition_entry() {
+        let part = Arc::new(Partition { shards: vec![vec![]] });
+        let _ = Shard::from_partition(part, 0, Rng::new(1));
     }
 }

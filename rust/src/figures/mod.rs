@@ -32,6 +32,12 @@
 //!   the `mobile` profile, feasible because the CoW fleet store
 //!   ([`crate::fleet`]) keeps resident client-model memory O(touched·d).
 //!   The summary's `peak_model_bytes` column quantifies it.
+//! - **`select_churn`** — the four client-selection policies
+//!   ([`crate::select`]: uniform, staleness-capped, fairness quota,
+//!   loss-aware power-of-choice) for QuAFL and FedBuff at n=300/s=30
+//!   (`--paper-scale`) on `mobile` under churn. The summary's
+//!   `participation_gini`, `staleness_max`/`staleness_mean`, and
+//!   `rejected` columns separate the policies.
 //!
 //! The same axes are scriptable as a grid via `quafl sweep`
 //! (`--algorithms`, `--quantizers`, `--nets`, `--seeds` — see
@@ -48,6 +54,7 @@ use crate::coordinator;
 use crate::data::{PartitionKind, SynthFamily};
 use crate::metrics::RunMetrics;
 use crate::net::{AvailabilityKind, NetProfile, NetworkConfig};
+use crate::select::SelectionKind;
 use crate::util::csv::CsvWriter;
 
 /// One experimental arm of a figure.
@@ -60,7 +67,7 @@ pub fn list() -> Vec<&'static str> {
     vec![
         "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
         "fig9", "fig10", "fig11", "fig13", "fig15", "fig16", "net_bw",
-        "net_churn", "net_fleet",
+        "net_churn", "net_fleet", "select_churn",
     ]
 }
 
@@ -74,6 +81,11 @@ pub fn smoke_cfg(mut cfg: ExperimentConfig) -> ExperimentConfig {
     cfg.eval_every = cfg.eval_every.min(4);
     cfg.train_samples = cfg.train_samples.min(512);
     cfg.val_samples = cfg.val_samples.min(128);
+    // A fleet-scale staleness cap can never bind inside a 4-round smoke;
+    // clamp it so the bounded-staleness code paths actually run.
+    if let SelectionKind::StalenessAware { cap } = &mut cfg.select {
+        *cap = (*cap).min(2);
+    }
     cfg
 }
 
@@ -81,10 +93,13 @@ pub fn smoke_cfg(mut cfg: ExperimentConfig) -> ExperimentConfig {
 /// [`summary_core_cells`] produces the matching row slice.
 /// `peak_model_bytes` makes fleet-scale memory (the CoW store's
 /// high-water mark, [`crate::fleet`]) visible in sweep output, not just
-/// in benches.
+/// in benches; `participation_gini` and the staleness columns make the
+/// selection policies ([`crate::select`]) comparable per row, and
+/// `rejected` counts FedBuff arrivals the admission gate dropped.
 const SUMMARY_CORE_HEADER: &[&str] = &[
     "final_acc", "final_val_loss", "sim_time", "total_bits", "comm_up_time",
     "comm_down_time", "short_rounds", "time_to_acc50", "peak_model_bytes",
+    "participation_gini", "staleness_max", "staleness_mean", "rejected",
 ];
 
 /// One formatted cell per [`SUMMARY_CORE_HEADER`] column.
@@ -102,6 +117,10 @@ fn summary_core_cells(m: &RunMetrics) -> Vec<String> {
             .map(|t| format!("{t:.1}"))
             .unwrap_or_else(|| "never".into()),
         format!("{}", m.peak_model_bytes()),
+        format!("{:.4}", m.participation_gini()),
+        format!("{}", m.staleness_max()),
+        format!("{:.2}", m.staleness_mean()),
+        format!("{}", m.rejected_interactions),
     ]
 }
 
@@ -587,7 +606,7 @@ pub fn arms_for(id: &str, paper: bool) -> Option<Vec<Arm>> {
         "net_bw" => {
             let mobile = NetworkConfig {
                 profile: NetProfile::preset("mobile").expect("preset"),
-                availability: AvailabilityKind::Always,
+                ..Default::default()
             };
             let ideal = NetworkConfig::default();
             let mk = |label: &str,
@@ -647,6 +666,7 @@ pub fn arms_for(id: &str, paper: bool) -> Option<Vec<Arm>> {
                         net: NetworkConfig {
                             profile: NetProfile::Ideal,
                             availability,
+                            ..Default::default()
                         },
                         ..b.clone()
                     },
@@ -664,7 +684,7 @@ pub fn arms_for(id: &str, paper: bool) -> Option<Vec<Arm>> {
             let s = scale(paper, 16, 30);
             let mobile = NetworkConfig {
                 profile: NetProfile::preset("mobile").expect("preset"),
-                availability: AvailabilityKind::Always,
+                ..Default::default()
             };
             let mk = |label: &str,
                       algorithm: Algorithm,
@@ -696,6 +716,60 @@ pub fn arms_for(id: &str, paper: bool) -> Option<Vec<Arm>> {
                 ),
                 mk("fedavg_fp32", Algorithm::FedAvg, QuantizerKind::None),
             ]
+        }
+        // §select select_churn: the four selection policies
+        // ([`crate::select`]) for QuAFL and FedBuff at the paper's
+        // large-fleet scale (n=300/s=30 with --paper-scale) on the
+        // `mobile` transport under churn — the regime where *which*
+        // clients the server picks dominates. The summary's
+        // participation_gini / staleness_max / staleness_mean / rejected
+        // columns separate the policies; sim_time shows what each bias
+        // costs or buys on the clock.
+        "select_churn" => {
+            let n = scale(paper, 60, 300);
+            let s = scale(paper, 6, 30);
+            let churn_net = NetworkConfig {
+                profile: NetProfile::preset("mobile").expect("preset"),
+                availability: AvailabilityKind::Churn {
+                    mean_up: 120.0,
+                    mean_down: 60.0,
+                },
+                ..Default::default()
+            };
+            // Cap = 2·(n/s): twice the expected uniform staleness, so it
+            // binds on the churned tail without dominating selection.
+            let policies: [(&str, SelectionKind); 4] = [
+                ("uniform", SelectionKind::Uniform),
+                (
+                    "staleness",
+                    SelectionKind::StalenessAware { cap: 2 * (n / s) as u64 },
+                ),
+                ("fairness", SelectionKind::Fairness),
+                ("loss_poc", SelectionKind::LossPoc { candidates: None }),
+            ];
+            let mut arms = Vec::new();
+            for (tag, algorithm, quantizer) in [
+                ("quafl", Algorithm::QuAFL, QuantizerKind::Lattice { bits: 10 }),
+                ("fedbuff", Algorithm::FedBuff, QuantizerKind::Qsgd { bits: 10 }),
+            ] {
+                for (plabel, select) in &policies {
+                    arms.push(Arm {
+                        label: format!("{tag}_{plabel}"),
+                        cfg: ExperimentConfig {
+                            algorithm,
+                            quantizer,
+                            n,
+                            s,
+                            family: SynthFamily::Hard,
+                            train_samples: scale(paper, 6000, 30_000),
+                            select: select.clone(),
+                            net: churn_net.clone(),
+                            ..b.clone()
+                        },
+                    });
+                }
+            }
+            arms
         }
         // Fig 16: FedBuff+QSGD vs QuAFL+lattice at equal bit width.
         "fig16" => vec![
@@ -803,6 +877,38 @@ mod tests {
         // Default scale stays a huge fleet, small enough for a laptop.
         let small = arms_for("net_fleet", false).unwrap();
         assert!(small.iter().all(|a| a.cfg.n == 2000));
+    }
+
+    #[test]
+    fn select_churn_covers_both_algorithms_and_all_policies() {
+        for paper in [false, true] {
+            let arms = arms_for("select_churn", paper).unwrap();
+            assert_eq!(arms.len(), 8);
+            for algo in [Algorithm::QuAFL, Algorithm::FedBuff] {
+                let of_algo: Vec<&Arm> =
+                    arms.iter().filter(|a| a.cfg.algorithm == algo).collect();
+                assert_eq!(of_algo.len(), 4, "{algo:?}");
+                let names: std::collections::BTreeSet<&str> =
+                    of_algo.iter().map(|a| a.cfg.select.name()).collect();
+                assert_eq!(names.len(), 4, "{algo:?}: duplicate policies");
+            }
+            // Every arm runs under churn on a priced network, so the
+            // policies have something to react to.
+            assert!(arms.iter().all(|a| !a.cfg.net.profile.is_ideal()));
+            assert!(arms.iter().all(|a| matches!(
+                a.cfg.net.availability,
+                AvailabilityKind::Churn { .. }
+            )));
+        }
+        let paper_arms = arms_for("select_churn", true).unwrap();
+        assert!(paper_arms.iter().all(|a| a.cfg.n == 300 && a.cfg.s == 30));
+        // The smoke clamp keeps the staleness cap small enough to bind.
+        for arm in arms_for("select_churn", true).unwrap() {
+            let cfg = smoke_cfg(arm.cfg);
+            if let SelectionKind::StalenessAware { cap } = cfg.select {
+                assert!(cap <= 2, "smoke cap {cap} cannot bind in 4 rounds");
+            }
+        }
     }
 
     #[test]

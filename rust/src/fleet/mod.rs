@@ -32,6 +32,17 @@
 //!   allocations (pointer identity over the entries it owns) and tracks
 //!   the high-water mark; [`ClientModelStore::peak_bytes`] feeds the
 //!   `peak_model_bytes` metric surfaced in every CSV.
+//! - **Snapshots carry an epoch.** Every write stamps the store's current
+//!   epoch (advanced once per server round / FedBuff aggregation via
+//!   [`ClientModelStore::advance_epoch`]), so a client's snapshot
+//!   *staleness* — rounds since its model was installed, the quantity the
+//!   staleness-aware selection policy ranks on ([`crate::select`]) — is
+//!   derivable directly from the store
+//!   ([`ClientModelStore::snapshot_epoch`] /
+//!   [`ClientModelStore::staleness`]). The algorithms keep it in
+//!   lockstep with the participation tracker's own bookkeeping by
+//!   stamping and advancing both at the same program points (the
+//!   lockstep is debug-asserted every round).
 //!
 //! The reference layout is still available: `dense` mode (the
 //! `--dense-fleet` knob) materializes every client up front and
@@ -58,6 +69,11 @@ pub struct ClientModelStore {
     peak_models: usize,
     /// reference layout: every write materializes (O(n·d), for parity)
     dense: bool,
+    /// epoch (server round / aggregation index) at which each client's
+    /// current snapshot was installed; 0 = the shared init
+    epochs: Vec<u64>,
+    /// the epoch stamped on writes; advanced by [`Self::advance_epoch`]
+    current_epoch: u64,
 }
 
 impl ClientModelStore {
@@ -80,6 +96,8 @@ impl ClientModelStore {
             dim,
             peak_models: 0,
             dense,
+            epochs: vec![0; n],
+            current_epoch: 0,
         };
         if dense {
             for _ in 0..n {
@@ -126,18 +144,21 @@ impl ClientModelStore {
         self.entries[i].clone()
     }
 
-    /// Client `i` diverged: install `model` as its own allocation.
+    /// Client `i` diverged: install `model` as its own allocation,
+    /// stamped with the current epoch.
     pub fn set(&mut self, i: usize, model: Vec<f32>) {
         assert_eq!(model.len(), self.dim, "model dim mismatch");
         let arc = Arc::new(model);
         self.retain(&arc);
         let old = std::mem::replace(&mut self.entries[i], arc);
         self.release(&old);
+        self.epochs[i] = self.current_epoch;
     }
 
     /// Point client `i` at an existing shared snapshot (e.g. the server
-    /// model current at its pull) without copying. In dense mode this
-    /// deep-copies instead, reproducing the eager layout.
+    /// model current at its pull) without copying, stamped with the
+    /// current epoch. In dense mode this deep-copies instead, reproducing
+    /// the eager layout.
     pub fn set_shared(&mut self, i: usize, model: Arc<Vec<f32>>) {
         if self.dense {
             self.set(i, (*model).clone());
@@ -147,6 +168,31 @@ impl ClientModelStore {
         self.retain(&model);
         let old = std::mem::replace(&mut self.entries[i], model);
         self.release(&old);
+        self.epochs[i] = self.current_epoch;
+    }
+
+    /// Advance the epoch stamped on subsequent writes (once per server
+    /// round / FedBuff aggregation).
+    pub fn advance_epoch(&mut self) {
+        self.current_epoch += 1;
+    }
+
+    /// The epoch writes are currently stamped with.
+    pub fn current_epoch(&self) -> u64 {
+        self.current_epoch
+    }
+
+    /// Epoch at which client `i`'s current snapshot was installed
+    /// (0 = the shared init).
+    pub fn snapshot_epoch(&self, i: usize) -> u64 {
+        self.epochs[i]
+    }
+
+    /// Rounds since client `i`'s snapshot was installed — the quantity
+    /// the staleness-aware selection policy ranks on ([`crate::select`];
+    /// equal to the participation tracker's bookkeeping).
+    pub fn staleness(&self, i: usize) -> u64 {
+        self.current_epoch - self.epochs[i]
     }
 
     /// Every client's model slice, in client order — the dense view the
@@ -290,6 +336,32 @@ mod tests {
         store.set(1, vec![1.0]);
         let rows: Vec<&[f32]> = store.iter_dense().collect();
         assert_eq!(rows, vec![&[0.0][..], &[1.0][..], &[0.0][..]]);
+    }
+
+    #[test]
+    fn epochs_stamp_writes_and_derive_staleness() {
+        let mut store = ClientModelStore::new(3, vec![0.0; 2]);
+        assert_eq!(store.current_epoch(), 0);
+        assert_eq!(store.staleness(0), 0);
+        store.advance_epoch();
+        store.advance_epoch();
+        // Untouched clients age with the epoch counter (init = epoch 0).
+        assert_eq!(store.staleness(0), 2);
+        store.set(1, vec![1.0, 1.0]);
+        assert_eq!(store.snapshot_epoch(1), 2);
+        assert_eq!(store.staleness(1), 0);
+        store.advance_epoch();
+        assert_eq!(store.staleness(1), 1);
+        let snap = store.snapshot(1);
+        store.set_shared(2, snap);
+        assert_eq!(store.snapshot_epoch(2), 3);
+        assert_eq!(store.staleness(2), 0);
+        // Dense mode stamps identically (set_shared routes through set).
+        let mut dense = ClientModelStore::new_dense(2, vec![0.0; 2]);
+        dense.advance_epoch();
+        let snap = dense.snapshot(0);
+        dense.set_shared(1, snap);
+        assert_eq!(dense.snapshot_epoch(1), 1);
     }
 
     #[test]

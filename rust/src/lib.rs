@@ -32,6 +32,19 @@
 //!   is `ExperimentConfig::workers` (`--workers`, 0 = all cores) and is
 //!   purely a wall-clock knob: trajectories are bit-identical for every
 //!   value (rust/tests/parallel_parity.rs).
+//! - **L3-select** — the pluggable client-selection subsystem
+//!   ([`select`]): a [`select::SelectionPolicy`] trait (plus a FedBuff
+//!   admission hook) over a [`select::SelectionView`] of reachability and
+//!   the server's [`select::ParticipationTracker`] (participation counts,
+//!   last-served time, snapshot staleness, last observed loss). Four
+//!   policies ship behind `--select`: `uniform` (default — a bit-exact
+//!   wrapper over the pre-subsystem RNG path,
+//!   rust/tests/select_parity.rs), `staleness` (oldest-snapshot-first
+//!   with a hard `--select-cap`; FedBuff drops over-cap updates),
+//!   `fairness` (min-participation quota / round-robin), and `loss-poc`
+//!   (power-of-choice over `--select-candidates`, keeping the highest
+//!   tracked losses). Participation Gini and max/mean staleness flow into
+//!   every CSV; `figures select_churn` compares the policies under churn.
 //! - **L3-fleet** — copy-on-write fleet state ([`fleet`]): per-client
 //!   models live in a [`fleet::ClientModelStore`] of `Arc<Vec<f32>>`
 //!   snapshots. Untouched clients share one base allocation (the init,
@@ -65,6 +78,7 @@ pub mod model;
 pub mod net;
 pub mod quant;
 pub mod runtime;
+pub mod select;
 pub mod sim;
 pub mod testing;
 pub mod util;

@@ -26,7 +26,7 @@ use quafl::util::cli;
 /// e.g. `figures --smoke fig2` — are not swallowed as flag values).
 const BOOL_FLAGS: &[&str] = &[
     "smoke", "paper-scale", "weighted", "xla", "price-init-broadcast",
-    "dense-fleet",
+    "dense-fleet", "broadcast-downlink",
 ];
 
 fn main() {
@@ -70,6 +70,12 @@ fn usage() {
          \x20                             (reference layout; default is the\n\
          \x20                             CoW fleet store, bit-identical)\n\
          \x20 --seed INT --xla --gamma FLOAT --out FILE.csv\n\
+         client selection (default: the paper's uniform draw):\n\
+         \x20 --select uniform|staleness|fairness|loss-poc\n\
+         \x20 --select-cap N              hard staleness cap (staleness;\n\
+         \x20                             FedBuff drops over-cap updates)\n\
+         \x20 --select-candidates D       power-of-choice candidates >= s\n\
+         \x20                             (loss-poc; default 2*s)\n\
          network (defaults: ideal transport, always-on clients):\n\
          \x20 --net ideal|broadband|mobile|DIST  (DIST = const:V |\n\
          \x20       lognormal:MEDIAN/SIGMA | pareto:SCALE/SHAPE | mix:P+A+B,\n\
@@ -77,6 +83,10 @@ fn usage() {
          \x20 --net-up/--net-down/--net-latency DIST  per-component override\n\
          \x20 --churn MEAN_UP/MEAN_DOWN   exponential dropout/rejoin churn\n\
          \x20 --duty PERIOD/ON_FRACTION   periodic availability windows\n\
+         \x20 --net-compute-corr RHO      copula correlation between compute\n\
+         \x20                             rate and bandwidth (default 0.0)\n\
+         \x20 --broadcast-downlink        price FedAvg's downlink as one\n\
+         \x20                             shared broadcast (slowest link)\n\
          \n\
          figures options: --out-dir DIR (results) --paper-scale|--smoke [ids...]\n\
          \n\
@@ -138,6 +148,7 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
                             NetworkConfig {
                                 profile,
                                 availability: base.net.availability.clone(),
+                                compute_corr: base.net.compute_corr,
                             },
                         )
                     })

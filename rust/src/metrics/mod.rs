@@ -43,6 +43,13 @@ pub struct EvalPoint {
     pub comm_down_time: f64,
     /// peak resident client-model bytes so far (see [`CommTally`])
     pub peak_model_bytes: u64,
+    /// Gini coefficient of per-client participation counts so far
+    /// ([`crate::select::ParticipationTracker`]; 0 = perfectly equal)
+    pub participation_gini: f64,
+    /// max model-snapshot staleness (rounds) across the fleet at eval time
+    pub staleness_max: u64,
+    /// mean model-snapshot staleness (rounds) across the fleet
+    pub staleness_mean: f64,
     pub val_loss: f64,
     pub val_acc: f64,
     /// loss on a fixed training subsample (the paper's train-loss curves)
@@ -65,6 +72,13 @@ pub struct RunMetrics {
     /// rounds where fewer than the configured `s` clients were reachable
     /// (churn/duty-cycle visibility; 0 under `Always` availability)
     pub short_rounds: u64,
+    /// FedBuff arrivals the selection policy's admission rule rejected
+    /// (staleness cap / fairness quota / loss gate; 0 under `Uniform`)
+    pub rejected_interactions: u64,
+    /// per-round selected client sets `(sim_time, ids)` — recorded only
+    /// when `ExperimentConfig::track_selection` (test/diagnostic hook;
+    /// FedBuff records each admitted arrival as a singleton set)
+    pub selections: Vec<(f64, Vec<usize>)>,
 }
 
 impl RunMetrics {
@@ -135,6 +149,25 @@ impl RunMetrics {
             .unwrap_or(0)
     }
 
+    /// Participation Gini at the last eval point (the series is computed
+    /// per point, so the last one is the run-level figure-of-merit).
+    pub fn participation_gini(&self) -> f64 {
+        self.points
+            .last()
+            .map(|p| p.participation_gini)
+            .unwrap_or(0.0)
+    }
+
+    /// Max snapshot staleness at the last eval point.
+    pub fn staleness_max(&self) -> u64 {
+        self.points.last().map(|p| p.staleness_max).unwrap_or(0)
+    }
+
+    /// Mean snapshot staleness at the last eval point.
+    pub fn staleness_mean(&self) -> f64 {
+        self.points.last().map(|p| p.staleness_mean).unwrap_or(0.0)
+    }
+
     pub const CSV_HEADER: &'static [&'static str] = &[
         "round",
         "sim_time",
@@ -147,6 +180,9 @@ impl RunMetrics {
         "comm_up_time",
         "comm_down_time",
         "peak_model_bytes",
+        "participation_gini",
+        "staleness_max",
+        "staleness_mean",
     ];
 
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
@@ -164,6 +200,9 @@ impl RunMetrics {
                 p.comm_up_time,
                 p.comm_down_time,
                 p.peak_model_bytes as f64,
+                p.participation_gini,
+                p.staleness_max as f64,
+                p.staleness_mean,
             ])?;
         }
         w.flush()
@@ -184,6 +223,9 @@ mod tests {
             comm_up_time: round as f64 * 0.5,
             comm_down_time: round as f64 * 0.25,
             peak_model_bytes: 4096 + round as u64,
+            participation_gini: 0.1 * round as f64,
+            staleness_max: round as u64,
+            staleness_mean: round as f64 * 0.5,
             val_loss: 1.0 - acc,
             val_acc: acc,
             train_loss: 1.0 - acc,
@@ -222,7 +264,11 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 3);
         assert!(text.starts_with("round,sim_time"));
-        assert!(text.lines().next().unwrap().ends_with("peak_model_bytes"));
+        assert!(text
+            .lines()
+            .next()
+            .unwrap()
+            .ends_with("participation_gini,staleness_max,staleness_mean"));
         std::fs::remove_dir_all(dir).ok();
     }
 
@@ -241,5 +287,17 @@ mod tests {
         m.push(pt(0, 0.0, 0.1));
         m.push(pt(7, 2.0, 0.2));
         assert_eq!(m.peak_model_bytes(), 4096 + 7);
+    }
+
+    #[test]
+    fn selection_metrics_read_last_point() {
+        let mut m = RunMetrics::new("x");
+        assert_eq!(m.participation_gini(), 0.0);
+        assert_eq!(m.staleness_max(), 0);
+        assert_eq!(m.staleness_mean(), 0.0);
+        m.push(pt(4, 2.0, 0.2));
+        assert!((m.participation_gini() - 0.4).abs() < 1e-12);
+        assert_eq!(m.staleness_max(), 4);
+        assert!((m.staleness_mean() - 2.0).abs() < 1e-12);
     }
 }

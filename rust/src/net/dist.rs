@@ -17,6 +17,7 @@
 //! `+` is the component separator.
 
 use crate::util::rng::Rng;
+use crate::util::stats::normal_quantile;
 
 /// A seeded scalar distribution.
 #[derive(Clone, Debug, PartialEq)]
@@ -49,6 +50,33 @@ impl Dist {
                     a.sample(rng)
                 } else {
                     b.sample(rng)
+                }
+            }
+        }
+    }
+
+    /// Inverse-CDF draw at quantile `u ∈ (0, 1)` — the Gaussian-copula
+    /// hook (`--net-compute-corr`): [`crate::net::SimTransport`] maps a
+    /// correlated normal through Φ and asks each marginal for that
+    /// quantile, so the marginal distributions stay exactly the
+    /// configured ones. A mixture picks its component from `rng` (the
+    /// copula correlates *within* the chosen component) and applies the
+    /// component's quantile.
+    pub fn quantile(&self, u: f64, rng: &mut Rng) -> f64 {
+        let u = u.clamp(1e-12, 1.0 - 1e-12);
+        match self {
+            Dist::Const(v) => *v,
+            Dist::LogNormal { median, sigma } => {
+                median * (sigma * normal_quantile(u)).exp()
+            }
+            Dist::Pareto { scale, shape } => {
+                scale / (1.0 - u).powf(1.0 / shape)
+            }
+            Dist::Mix { p, a, b } => {
+                if rng.next_f64() < *p {
+                    a.quantile(u, rng)
+                } else {
+                    b.quantile(u, rng)
                 }
             }
         }
@@ -226,6 +254,51 @@ mod tests {
             (0..50).map(|_| d.sample(&mut r)).collect()
         };
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn quantile_is_monotone_and_matches_known_points() {
+        let mut r = Rng::new(1);
+        assert_eq!(Dist::Const(7.0).quantile(0.9, &mut r), 7.0);
+        // Lognormal: the median is the 0.5 quantile by definition.
+        let ln = Dist::LogNormal { median: 100.0, sigma: 0.7 };
+        assert!((ln.quantile(0.5, &mut r) - 100.0).abs() < 1e-6);
+        // Pareto: P[X <= scale / (1-u)^(1/shape)] = u exactly.
+        let pa = Dist::Pareto { scale: 10.0, shape: 2.0 };
+        assert!((pa.quantile(0.75, &mut r) - 20.0).abs() < 1e-9);
+        for d in [ln, pa] {
+            let mut prev = f64::NEG_INFINITY;
+            for k in 1..20 {
+                let q = d.quantile(k as f64 / 20.0, &mut r);
+                assert!(q >= prev, "quantile not monotone");
+                prev = q;
+            }
+        }
+    }
+
+    #[test]
+    fn quantile_preserves_marginal_distribution() {
+        // Pushing U(0,1) through the quantile must reproduce the same
+        // distribution as direct sampling (compare tail masses).
+        let d = Dist::Pareto { scale: 10.0, shape: 1.5 };
+        let mut r = Rng::new(8);
+        let n = 20_000;
+        let tail_direct = (0..n)
+            .filter(|_| d.sample(&mut r) > 40.0)
+            .count() as f64
+            / n as f64;
+        let mut r2 = Rng::new(9);
+        let tail_quantile = (0..n)
+            .filter(|_| {
+                let u = r2.next_f64();
+                d.quantile(u, &mut r2) > 40.0
+            })
+            .count() as f64
+            / n as f64;
+        assert!(
+            (tail_direct - tail_quantile).abs() < 0.02,
+            "direct {tail_direct} vs quantile {tail_quantile}"
+        );
     }
 
     #[test]

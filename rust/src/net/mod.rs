@@ -28,6 +28,10 @@
 //! --net-latency DIST                  per-message latency floor
 //! --churn MEAN_UP/MEAN_DOWN           exponential dropout/rejoin churn
 //! --duty PERIOD/ON_FRACTION           periodic availability windows
+//! --net-compute-corr RHO              Gaussian-copula rank correlation
+//!                                     between a client's compute rate and
+//!                                     its bandwidth draws (0.0 = today's
+//!                                     independent draws, bit-exact)
 //! ```
 //!
 //! Distances are simulated-time units (the unit of `swt`/`sit` and the
@@ -92,6 +96,13 @@ impl NetProfile {
 pub struct NetworkConfig {
     pub profile: NetProfile,
     pub availability: AvailabilityKind,
+    /// Gaussian-copula rank correlation between a client's compute rate
+    /// and its bandwidth draws (`--net-compute-corr`, in [-1, 1]). The
+    /// default 0.0 keeps the legacy independent per-client draws —
+    /// bit-exact ([`SimTransport::draw`]); any other value routes through
+    /// [`SimTransport::draw_correlated`]. Ignored by the `Ideal` profile
+    /// (no bandwidth is drawn).
+    pub compute_corr: f64,
 }
 
 impl Default for NetworkConfig {
@@ -99,14 +110,17 @@ impl Default for NetworkConfig {
         NetworkConfig {
             profile: NetProfile::Ideal,
             availability: AvailabilityKind::Always,
+            compute_corr: 0.0,
         }
     }
 }
 
 impl NetworkConfig {
     /// CLI keys this subsystem owns (merged into the run/sweep key sets).
-    pub const CLI_KEYS: &'static [&'static str] =
-        &["net", "net-up", "net-down", "net-latency", "churn", "duty"];
+    pub const CLI_KEYS: &'static [&'static str] = &[
+        "net", "net-up", "net-down", "net-latency", "churn", "duty",
+        "net-compute-corr",
+    ];
 
     /// Parse `--net NAME|DIST`, one NetworkConfig per string — also the
     /// grammar of each entry of the sweep runner's `--nets` list. A bare
@@ -192,6 +206,22 @@ impl NetworkConfig {
             cfg.availability =
                 AvailabilityKind::DutyCycle { period, on_fraction };
         }
+        if let Some(s) = args.get("net-compute-corr") {
+            cfg.compute_corr = s
+                .parse()
+                .map_err(|_| format!("--net-compute-corr: bad number {s:?}"))?;
+            // The ideal profile draws no bandwidth, so a correlation
+            // would be a silent no-op — reject the footgun at the CLI.
+            // (Programmatic configs — e.g. a sweep's ideal arm with a
+            // fleet-wide rho — stay permissive; the label says ideal.)
+            if cfg.compute_corr != 0.0 && cfg.profile.is_ideal() {
+                return Err(format!(
+                    "--net-compute-corr {} has no effect on the ideal \
+                     profile; pick a priced --net first",
+                    cfg.compute_corr
+                ));
+            }
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -201,6 +231,12 @@ impl NetworkConfig {
             up_bw.validate(true)?;
             down_bw.validate(true)?;
             latency.validate(false)?;
+        }
+        if !(-1.0..=1.0).contains(&self.compute_corr) {
+            return Err(format!(
+                "--net-compute-corr {} outside [-1, 1]",
+                self.compute_corr
+            ));
         }
         self.availability.validate()
     }
@@ -225,17 +261,32 @@ impl NetworkConfig {
 
     /// Materialize the per-client links. Consumes no shared RNG state, so
     /// building the network never perturbs the rest of the experiment.
-    pub fn build_transport(&self, n: usize, seed: u64) -> Box<dyn Transport> {
+    /// `compute_rates` (one clock rate per client) feeds the optional
+    /// compute↔bandwidth copula; with the default `compute_corr == 0.0`
+    /// the legacy independent-draw path runs bit-exactly.
+    pub fn build_transport(
+        &self,
+        n: usize,
+        seed: u64,
+        compute_rates: &[f64],
+    ) -> Box<dyn Transport> {
         match &self.profile {
             NetProfile::Ideal => Box::new(IdealTransport),
             NetProfile::Custom { up_bw, down_bw, latency } => {
-                Box::new(SimTransport::draw(
-                    n,
-                    up_bw,
-                    down_bw,
-                    latency,
-                    derive_seed(seed, 0x7A45),
-                ))
+                let seed = derive_seed(seed, 0x7A45);
+                if self.compute_corr == 0.0 {
+                    Box::new(SimTransport::draw(n, up_bw, down_bw, latency, seed))
+                } else {
+                    Box::new(SimTransport::draw_correlated(
+                        n,
+                        up_bw,
+                        down_bw,
+                        latency,
+                        seed,
+                        compute_rates,
+                        self.compute_corr,
+                    ))
+                }
             }
         }
     }
@@ -273,10 +324,7 @@ mod tests {
     fn presets_parse_and_validate() {
         for name in ["ideal", "broadband", "mobile"] {
             let p = NetProfile::preset(name).unwrap();
-            let c = NetworkConfig {
-                profile: p,
-                availability: AvailabilityKind::Always,
-            };
+            let c = NetworkConfig { profile: p, ..Default::default() };
             assert!(c.validate().is_ok(), "{name}");
         }
         assert!(NetProfile::preset("dialup").is_none());
@@ -332,7 +380,7 @@ mod tests {
     #[test]
     fn ideal_transport_from_config_prices_zero() {
         let c = NetworkConfig::default();
-        let t = c.build_transport(4, 1);
+        let t = c.build_transport(4, 1, &[0.5; 4]);
         assert_eq!(t.uplink_time(0, 1 << 30).to_bits(), 0f64.to_bits());
     }
 
@@ -340,10 +388,65 @@ mod tests {
     fn custom_transport_prices_positive() {
         let c = NetworkConfig {
             profile: NetProfile::preset("mobile").unwrap(),
-            availability: AvailabilityKind::Always,
+            ..Default::default()
         };
-        let t = c.build_transport(4, 1);
+        let t = c.build_transport(4, 1, &[0.5; 4]);
         assert!(t.uplink_time(0, 1_000_000) > 0.0);
         assert!(t.downlink_time(3, 1_000_000) > 0.0);
+    }
+
+    #[test]
+    fn compute_corr_parses_validates_and_switches_draw_path() {
+        let a = cli::parse(&sv(&[
+            "run", "--net", "mobile", "--net-compute-corr", "0.8",
+        ]));
+        let c = NetworkConfig::from_args(&a).unwrap();
+        assert_eq!(c.compute_corr, 0.8);
+        // Out-of-range, garbage, and the ideal-profile no-op footgun are
+        // all rejected at the CLI.
+        let a = cli::parse(&sv(&[
+            "run", "--net", "mobile", "--net-compute-corr", "1.5",
+        ]));
+        assert!(NetworkConfig::from_args(&a).is_err());
+        let a = cli::parse(&sv(&[
+            "run", "--net", "mobile", "--net-compute-corr", "lots",
+        ]));
+        assert!(NetworkConfig::from_args(&a).is_err());
+        let a = cli::parse(&sv(&["run", "--net-compute-corr", "0.5"]));
+        assert!(NetworkConfig::from_args(&a).is_err(), "ideal + rho");
+        // Zero correlation routes through the exact legacy draw: same
+        // seed derivation, same independent per-client streams.
+        let base = NetworkConfig {
+            profile: NetProfile::preset("mobile").unwrap(),
+            ..Default::default()
+        };
+        let rates: Vec<f64> =
+            (0..16).map(|i| if i < 8 { 0.125 } else { 0.5 }).collect();
+        let (up, down, lat) = match &base.profile {
+            NetProfile::Custom { up_bw, down_bw, latency } => {
+                (up_bw.clone(), down_bw.clone(), latency.clone())
+            }
+            NetProfile::Ideal => unreachable!("mobile is custom"),
+        };
+        let legacy =
+            SimTransport::draw(16, &up, &down, &lat, derive_seed(9, 0x7A45));
+        let zero = base.build_transport(16, 9, &rates);
+        let corr = NetworkConfig { compute_corr: 0.9, ..base }
+            .build_transport(16, 9, &rates);
+        let mut corr_differs = false;
+        for i in 0..16 {
+            let bits = 1_000_000;
+            assert_eq!(
+                legacy.uplink_time(i, bits).to_bits(),
+                zero.uplink_time(i, bits).to_bits(),
+                "client {i}: rho=0 must be the legacy draw"
+            );
+            if legacy.uplink_time(i, bits).to_bits()
+                != corr.uplink_time(i, bits).to_bits()
+            {
+                corr_differs = true;
+            }
+        }
+        assert!(corr_differs, "rho=0.9 must change the link draw");
     }
 }

@@ -11,6 +11,7 @@
 //! no-op on every trajectory.
 
 use crate::util::rng::{derive_seed, Rng};
+use crate::util::stats::{normal_cdf, normal_quantile};
 
 use super::dist::Dist;
 
@@ -88,6 +89,78 @@ impl SimTransport {
         SimTransport { links }
     }
 
+    /// Like [`SimTransport::draw`], but with a Gaussian-copula rank
+    /// correlation `rho` between each client's *compute rate* and its
+    /// bandwidth draws (`--net-compute-corr`): fast clients get fast
+    /// links for `rho > 0`, slow links for `rho < 0`.
+    ///
+    /// Per client: its compute side enters as the latent percentile of
+    /// its rate among the fleet (ties — the fast/slow speed classes —
+    /// broken uniformly at random within the class), pushed through Φ⁻¹
+    /// to a latent normal `z_c`; each direction's bandwidth is drawn at
+    /// the quantile `Φ(ρ·z_c + √(1−ρ²)·ε)` with an independent ε per
+    /// direction, so ρ = ±1 gives comonotone/antimonotone rate↔bandwidth
+    /// coupling while the marginal bandwidth distributions stay exactly
+    /// the configured ones ([`Dist::quantile`]). Latency stays an
+    /// independent draw. `rho == 0.0` is routed to [`SimTransport::draw`]
+    /// by the config layer, keeping the default bit-exact.
+    pub fn draw_correlated(
+        n: usize,
+        up_bw: &Dist,
+        down_bw: &Dist,
+        latency: &Dist,
+        seed: u64,
+        compute_rates: &[f64],
+        rho: f64,
+    ) -> Self {
+        assert_eq!(compute_rates.len(), n, "one compute rate per client");
+        let rho = rho.clamp(-1.0, 1.0);
+        let ortho = (1.0 - rho * rho).sqrt();
+        // Rank statistics of the rate vector, computed once: below[i] =
+        // #{j : rate_j < rate_i}, ties[i] = #{j : rate_j == rate_i}.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            compute_rates[a]
+                .partial_cmp(&compute_rates[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut below = vec![0usize; n];
+        let mut ties = vec![0usize; n];
+        let mut j = 0;
+        while j < n {
+            let mut k = j;
+            while k < n && compute_rates[order[k]] == compute_rates[order[j]] {
+                k += 1;
+            }
+            for &idx in &order[j..k] {
+                below[idx] = j;
+                ties[idx] = k - j;
+            }
+            j = k;
+        }
+        let links = (0..n)
+            .map(|i| {
+                let mut rng =
+                    Rng::new(derive_seed(seed, 0xC0_0000_0000 + i as u64));
+                let u_c = (below[i] as f64 + rng.next_f64() * ties[i] as f64)
+                    / n as f64;
+                let z_c = normal_quantile(u_c.clamp(1e-12, 1.0 - 1e-12));
+                let z_up = rho * z_c + ortho * rng.normal();
+                let z_down = rho * z_c + ortho * rng.normal();
+                Link {
+                    up_bw: up_bw
+                        .quantile(normal_cdf(z_up), &mut rng)
+                        .max(MIN_BANDWIDTH),
+                    down_bw: down_bw
+                        .quantile(normal_cdf(z_down), &mut rng)
+                        .max(MIN_BANDWIDTH),
+                    latency: latency.sample(&mut rng).max(0.0),
+                }
+            })
+            .collect();
+        SimTransport { links }
+    }
+
     pub fn links(&self) -> &[Link] {
         &self.links
     }
@@ -150,6 +223,92 @@ mod tests {
             a.links()[0].up_bw.to_bits(),
             c.links()[0].up_bw.to_bits()
         );
+    }
+
+    /// Median of a sample (test helper — heavy-tailed draws make means
+    /// unstable, medians not).
+    fn median(mut v: Vec<f64>) -> f64 {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    }
+
+    /// Two-class rate vector mirroring the fast/slow clock fleet.
+    fn rates_two_class(n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|i| if i < n / 2 { 0.125 } else { 0.5 })
+            .collect()
+    }
+
+    #[test]
+    fn correlated_draw_couples_rate_and_bandwidth() {
+        let n = 400;
+        let rates = rates_two_class(n);
+        let up = Dist::Pareto { scale: 5e4, shape: 1.5 };
+        let down = Dist::LogNormal { median: 2e5, sigma: 1.0 };
+        let lat = Dist::Const(0.2);
+        let t = SimTransport::draw_correlated(n, &up, &down, &lat, 3, &rates, 0.9);
+        let slow_up: Vec<f64> =
+            (0..n / 2).map(|i| t.links()[i].up_bw).collect();
+        let fast_up: Vec<f64> =
+            (n / 2..n).map(|i| t.links()[i].up_bw).collect();
+        assert!(
+            median(fast_up.clone()) > median(slow_up.clone()),
+            "rho=0.9: fast clients should get faster uplinks"
+        );
+        let slow_down: Vec<f64> =
+            (0..n / 2).map(|i| t.links()[i].down_bw).collect();
+        let fast_down: Vec<f64> =
+            (n / 2..n).map(|i| t.links()[i].down_bw).collect();
+        assert!(median(fast_down) > median(slow_down));
+        // Negative correlation flips the coupling.
+        let t_neg =
+            SimTransport::draw_correlated(n, &up, &down, &lat, 3, &rates, -0.9);
+        let slow_up_neg: Vec<f64> =
+            (0..n / 2).map(|i| t_neg.links()[i].up_bw).collect();
+        let fast_up_neg: Vec<f64> =
+            (n / 2..n).map(|i| t_neg.links()[i].up_bw).collect();
+        assert!(
+            median(fast_up_neg) < median(slow_up_neg),
+            "rho=-0.9: fast clients should get slower uplinks"
+        );
+    }
+
+    #[test]
+    fn correlated_draw_preserves_marginals() {
+        // The copula reshuffles *which client* gets which link, not the
+        // fleet-wide link distribution: medians with and without the
+        // correlation must agree closely.
+        let n = 2000;
+        let rates = rates_two_class(n);
+        let up = Dist::LogNormal { median: 1e6, sigma: 0.5 };
+        let down = Dist::LogNormal { median: 4e6, sigma: 0.5 };
+        let lat = Dist::Const(0.05);
+        let plain = SimTransport::draw(n, &up, &down, &lat, 7);
+        let corr =
+            SimTransport::draw_correlated(n, &up, &down, &lat, 7, &rates, 0.8);
+        let med_plain = median(plain.links().iter().map(|l| l.up_bw).collect());
+        let med_corr = median(corr.links().iter().map(|l| l.up_bw).collect());
+        assert!(
+            (med_plain / med_corr - 1.0).abs() < 0.1,
+            "marginal drifted: {med_plain} vs {med_corr}"
+        );
+    }
+
+    #[test]
+    fn correlated_draw_is_seed_deterministic() {
+        let n = 32;
+        let rates = rates_two_class(n);
+        let up = Dist::Pareto { scale: 1e4, shape: 1.5 };
+        let down = Dist::LogNormal { median: 1e6, sigma: 0.5 };
+        let lat = Dist::Const(0.1);
+        let a = SimTransport::draw_correlated(n, &up, &down, &lat, 5, &rates, 0.6);
+        let b = SimTransport::draw_correlated(n, &up, &down, &lat, 5, &rates, 0.6);
+        for (x, y) in a.links().iter().zip(b.links()) {
+            assert_eq!(x.up_bw.to_bits(), y.up_bw.to_bits());
+            assert_eq!(x.down_bw.to_bits(), y.down_bw.to_bits());
+        }
+        let c = SimTransport::draw_correlated(n, &up, &down, &lat, 6, &rates, 0.6);
+        assert_ne!(a.links()[0].up_bw.to_bits(), c.links()[0].up_bw.to_bits());
     }
 
     #[test]

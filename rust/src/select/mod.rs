@@ -1,0 +1,277 @@
+//! Pluggable client-selection subsystem.
+//!
+//! The paper's analysis assumes the server samples `s` clients uniformly
+//! per interaction, but its own system model — partial asynchrony plus
+//! churn — is exactly the regime where *which* clients the server picks
+//! dominates convergence. This subsystem makes the selection rule a
+//! first-class, swappable component:
+//!
+//! - [`policy::SelectionPolicy`] — the trait every rule implements:
+//!   `select(view, rng, s)` picks up to `s` distinct reachable clients,
+//!   and `admit(view, rng, client)` gates event-driven buffer admission
+//!   (FedBuff, which has no per-round sampling step).
+//! - [`policy::SelectionView`] — what a policy may observe: the
+//!   availability process (reachability at the current simulated time)
+//!   and the [`tracker::ParticipationTracker`]'s per-client history.
+//! - [`tracker::ParticipationTracker`] — server-side bookkeeping:
+//!   participation counts, last-served simulated time, current snapshot
+//!   staleness (rounds since the client's model snapshot), and the last
+//!   observed local loss. It also computes the participation Gini
+//!   coefficient and max/mean staleness surfaced in every CSV.
+//!
+//! Four policies ship ([`SelectionKind`], the `--select` CLI axis):
+//!
+//! - **`uniform`** (default) — a bit-exact wrapper over the pre-subsystem
+//!   RNG path ([`crate::net::ClientAvailability::sample`]): same stream,
+//!   same picks, so every existing trajectory is reproduced bit for bit
+//!   (rust/tests/select_parity.rs).
+//! - **`staleness`** — staleness-bounded participation: reachable clients
+//!   whose model snapshot is at least `--select-cap` rounds old are
+//!   selected first (oldest first); remaining slots are filled by a
+//!   uniform draw. For FedBuff the cap becomes an admission bound:
+//!   updates computed from a snapshot older than `cap` aggregations are
+//!   dropped (FADAS-style bounded staleness, arXiv:2402.11198).
+//! - **`fairness`** — min-participation quota: the `s` reachable clients
+//!   with the fewest participations are chosen (random tie-break), which
+//!   degenerates to round-robin under full availability. For FedBuff it
+//!   admits an update only while the pusher is within one participation
+//!   of the least-served reachable client.
+//! - **`loss-poc`** — loss-proportional power-of-choice: sample a
+//!   candidate set of `d = --select-candidates ≥ s` reachable clients,
+//!   keep the `s` with the highest tracked local loss (never-observed
+//!   clients rank highest, so the fleet is explored first). For FedBuff
+//!   it admits updates whose tracked loss is at or above the reachable
+//!   median.
+//!
+//! The coordinator owns one boxed policy per run (next to `transport` and
+//! `availability` in [`crate::coordinator::FlRun`]); algorithms select
+//! through [`crate::coordinator::FlRun::select_clients`] and record
+//! outcomes into the tracker, so policies always see current history.
+
+pub mod policy;
+pub mod tracker;
+
+pub use policy::{
+    Fairness, LossPropPowerOfChoice, SelectionPolicy, SelectionView,
+    StalenessAware, Uniform,
+};
+pub use tracker::ParticipationTracker;
+
+use crate::util::cli::Args;
+
+/// Default hard staleness cap (`--select staleness` without
+/// `--select-cap`): about twice the n/s ≈ 10 expected uniform staleness
+/// at the paper's n=300/s=30 fleet scale.
+pub const DEFAULT_STALENESS_CAP: u64 = 20;
+
+/// Which selection policy a run uses (`--select`).
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub enum SelectionKind {
+    /// uniform over reachable clients — the exact pre-subsystem path
+    #[default]
+    Uniform,
+    /// oldest-snapshot-first with a hard staleness cap (`--select-cap`)
+    StalenessAware { cap: u64 },
+    /// min-participation quota / round-robin over reachable clients
+    Fairness,
+    /// power-of-choice over `--select-candidates` (None = 2·s) candidates,
+    /// keeping the highest-loss `s`
+    LossPoc { candidates: Option<usize> },
+}
+
+impl SelectionKind {
+    /// CLI keys this subsystem owns (merged into the run/sweep key sets).
+    pub const CLI_KEYS: &'static [&'static str] =
+        &["select", "select-cap", "select-candidates"];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectionKind::Uniform => "uniform",
+            SelectionKind::StalenessAware { .. } => "staleness",
+            SelectionKind::Fairness => "fairness",
+            SelectionKind::LossPoc { .. } => "loss-poc",
+        }
+    }
+
+    pub fn is_uniform(&self) -> bool {
+        *self == SelectionKind::Uniform
+    }
+
+    /// Build from CLI args (`--select NAME`, `--select-cap N`,
+    /// `--select-candidates D`). Sub-keys are rejected when they do not
+    /// apply to the chosen policy, so a silently-ignored knob cannot
+    /// masquerade as a configured one.
+    pub fn from_args(args: &Args) -> Result<Self, String> {
+        // Every selection key takes a value; a bare flag would otherwise
+        // pass the typo guard and silently keep the Uniform default.
+        for key in Self::CLI_KEYS {
+            if args.flag(key) {
+                return Err(format!("--{key} requires a value"));
+            }
+        }
+        let name = args.get("select").unwrap_or("uniform");
+        let cap = match args.get("select-cap") {
+            Some(v) => Some(
+                v.parse::<u64>()
+                    .map_err(|_| format!("--select-cap: bad integer {v:?}"))?,
+            ),
+            None => None,
+        };
+        let candidates = match args.get("select-candidates") {
+            Some(v) => Some(v.parse::<usize>().map_err(|_| {
+                format!("--select-candidates: bad integer {v:?}")
+            })?),
+            None => None,
+        };
+        let kind = match name {
+            "uniform" => SelectionKind::Uniform,
+            "staleness" | "staleness-aware" => SelectionKind::StalenessAware {
+                cap: cap.unwrap_or(DEFAULT_STALENESS_CAP),
+            },
+            "fairness" | "fair" => SelectionKind::Fairness,
+            "loss-poc" | "power-of-choice" | "poc" => {
+                SelectionKind::LossPoc { candidates }
+            }
+            other => {
+                return Err(format!(
+                    "unknown selection policy {other:?} \
+                     (uniform | staleness | fairness | loss-poc)"
+                ))
+            }
+        };
+        if cap.is_some() && !matches!(kind, SelectionKind::StalenessAware { .. })
+        {
+            return Err(format!(
+                "--select-cap only applies to --select staleness (got {name})"
+            ));
+        }
+        if candidates.is_some()
+            && !matches!(kind, SelectionKind::LossPoc { .. })
+        {
+            return Err(format!(
+                "--select-candidates only applies to --select loss-poc \
+                 (got {name})"
+            ));
+        }
+        Ok(kind)
+    }
+
+    /// Validate against the run's sample size `s`.
+    pub fn validate(&self, s: usize) -> Result<(), String> {
+        match self {
+            SelectionKind::Uniform | SelectionKind::Fairness => Ok(()),
+            SelectionKind::StalenessAware { cap } => {
+                if *cap == 0 {
+                    return Err("--select-cap must be >= 1".into());
+                }
+                Ok(())
+            }
+            SelectionKind::LossPoc { candidates } => {
+                if let Some(d) = candidates {
+                    if *d < s {
+                        return Err(format!(
+                            "--select-candidates {d} must be >= s = {s}"
+                        ));
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Materialize the policy. `s` resolves the power-of-choice candidate
+    /// default (d = 2·s).
+    pub fn build(&self, s: usize) -> Box<dyn SelectionPolicy> {
+        match self {
+            SelectionKind::Uniform => Box::new(Uniform),
+            SelectionKind::StalenessAware { cap } => {
+                Box::new(StalenessAware::new(*cap))
+            }
+            SelectionKind::Fairness => Box::new(Fairness),
+            SelectionKind::LossPoc { candidates } => Box::new(
+                LossPropPowerOfChoice::new(candidates.unwrap_or(2 * s).max(s)),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn default_is_uniform() {
+        assert!(SelectionKind::default().is_uniform());
+        let a = cli::parse(&sv(&["run"]));
+        assert_eq!(SelectionKind::from_args(&a).unwrap(), SelectionKind::Uniform);
+    }
+
+    #[test]
+    fn from_args_full_surface() {
+        let a = cli::parse(&sv(&["run", "--select", "staleness", "--select-cap", "7"]));
+        assert_eq!(
+            SelectionKind::from_args(&a).unwrap(),
+            SelectionKind::StalenessAware { cap: 7 }
+        );
+        let a = cli::parse(&sv(&["run", "--select", "staleness"]));
+        assert_eq!(
+            SelectionKind::from_args(&a).unwrap(),
+            SelectionKind::StalenessAware { cap: DEFAULT_STALENESS_CAP }
+        );
+        let a = cli::parse(&sv(&["run", "--select", "fairness"]));
+        assert_eq!(SelectionKind::from_args(&a).unwrap(), SelectionKind::Fairness);
+        let a = cli::parse(&sv(&[
+            "run", "--select", "loss-poc", "--select-candidates", "16",
+        ]));
+        assert_eq!(
+            SelectionKind::from_args(&a).unwrap(),
+            SelectionKind::LossPoc { candidates: Some(16) }
+        );
+    }
+
+    #[test]
+    fn from_args_rejects_misapplied_knobs_and_garbage() {
+        let a = cli::parse(&sv(&["run", "--select", "roulette"]));
+        assert!(SelectionKind::from_args(&a).is_err());
+        let a = cli::parse(&sv(&["run", "--select", "fairness", "--select-cap", "3"]));
+        assert!(SelectionKind::from_args(&a).is_err());
+        let a = cli::parse(&sv(&[
+            "run", "--select", "uniform", "--select-candidates", "8",
+        ]));
+        assert!(SelectionKind::from_args(&a).is_err());
+        // A forgotten value must error, not silently stay Uniform.
+        let a = cli::parse(&sv(&["run", "--select"]));
+        assert!(SelectionKind::from_args(&a).is_err());
+    }
+
+    #[test]
+    fn validate_checks_cap_and_candidates() {
+        assert!(SelectionKind::Uniform.validate(5).is_ok());
+        assert!(SelectionKind::StalenessAware { cap: 0 }.validate(5).is_err());
+        assert!(SelectionKind::StalenessAware { cap: 1 }.validate(5).is_ok());
+        assert!(SelectionKind::LossPoc { candidates: Some(4) }
+            .validate(5)
+            .is_err());
+        assert!(SelectionKind::LossPoc { candidates: Some(5) }
+            .validate(5)
+            .is_ok());
+        assert!(SelectionKind::LossPoc { candidates: None }.validate(5).is_ok());
+    }
+
+    #[test]
+    fn build_resolves_poc_candidate_default() {
+        let p = SelectionKind::LossPoc { candidates: None }.build(6);
+        assert_eq!(p.name(), "loss-poc");
+        let p = SelectionKind::Uniform.build(6);
+        assert_eq!(p.name(), "uniform");
+        let p = SelectionKind::StalenessAware { cap: 3 }.build(6);
+        assert_eq!(p.name(), "staleness");
+        let p = SelectionKind::Fairness.build(6);
+        assert_eq!(p.name(), "fairness");
+    }
+}

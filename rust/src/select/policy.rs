@@ -1,0 +1,495 @@
+//! The selection policies and the view they observe.
+//!
+//! Contract shared by every policy (rust/tests/select_parity.rs):
+//!
+//! - `select` returns **distinct** client ids, every one reachable at
+//!   `view.now`, at most `s` of them;
+//! - when at most `s` clients are reachable it returns **all of them, in
+//!   ascending id order, without consuming randomness** — exactly what
+//!   [`crate::net::ClientAvailability::sample`] does for a short round,
+//!   so every policy degenerates identically under heavy churn;
+//! - all randomness comes from the passed [`Rng`] (the coordinator's
+//!   server-side sampling stream), so runs replay bit for bit.
+//!
+//! [`Uniform`] additionally guarantees *stream parity*: it delegates to
+//! [`crate::net::ClientAvailability::sample`] verbatim, consuming the
+//! exact RNG sequence the pre-subsystem code consumed.
+//!
+//! Cost note: the non-uniform `admit` hooks scan the reachable set (and
+//! loss-poc sorts the observed losses) on every FedBuff arrival — O(n)
+//! to O(n·log n) per pop, ~1 ms at the n=10⁴ fleet scale, dwarfed by the
+//! K-step SGD burst each arrival already paid for. If a policy ever
+//! needs per-arrival admission at n ≫ 10⁴, cache the reachable median
+//! per aggregation (the tracker only changes at pops the server sees).
+
+use std::cmp::Ordering;
+
+use crate::net::ClientAvailability;
+use crate::util::rng::Rng;
+
+use super::tracker::ParticipationTracker;
+
+/// What a policy may observe when selecting: reachability at the current
+/// simulated time plus the server's participation history.
+pub struct SelectionView<'a> {
+    /// simulated time of this selection
+    pub now: f64,
+    /// fleet size n
+    pub n: usize,
+    /// the availability process (mutable: churn walks materialize lazily
+    /// as time advances)
+    pub availability: &'a mut ClientAvailability,
+    /// per-client participation/staleness/loss history
+    pub tracker: &'a ParticipationTracker,
+}
+
+impl SelectionView<'_> {
+    /// Clients reachable at `now`, ascending id order.
+    pub fn reachable(&mut self) -> Vec<usize> {
+        let now = self.now;
+        (0..self.n)
+            .filter(|&i| self.availability.is_up(i, now))
+            .collect()
+    }
+
+    /// The exact pre-subsystem uniform draw: same RNG stream, same picks
+    /// as [`ClientAvailability::sample`] — the `Uniform` fast path.
+    pub fn sample_uniform(&mut self, rng: &mut Rng, s: usize) -> Vec<usize> {
+        self.availability.sample(rng, self.n, s, self.now)
+    }
+}
+
+/// A server-side client-selection rule (see the module docs for the
+/// shared contract).
+pub trait SelectionPolicy: Send {
+    /// Pick up to `s` distinct reachable clients at `view.now`.
+    fn select(
+        &mut self,
+        view: &mut SelectionView,
+        rng: &mut Rng,
+        s: usize,
+    ) -> Vec<usize>;
+
+    /// Event-driven admission (FedBuff): should client `client`'s
+    /// arriving update enter the aggregation buffer? The default admits
+    /// everything and consumes no randomness, so algorithms without a
+    /// sampling step stay bit-exact under `Uniform`.
+    fn admit(
+        &mut self,
+        view: &mut SelectionView,
+        rng: &mut Rng,
+        client: usize,
+    ) -> bool {
+        let _ = (view, rng, client);
+        true
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Attach a random tie-break key to each candidate, drawing in the given
+/// (ascending-id) order so the stream is deterministic.
+fn keyed<T: Copy>(
+    items: &[usize],
+    rng: &mut Rng,
+    mut score: impl FnMut(usize) -> T,
+) -> Vec<(T, u64, usize)> {
+    items
+        .iter()
+        .map(|&i| (score(i), rng.next_u64(), i))
+        .collect()
+}
+
+/// Uniform over reachable clients — the default, and a bit-exact wrapper
+/// over the pre-subsystem RNG path.
+pub struct Uniform;
+
+impl SelectionPolicy for Uniform {
+    fn select(
+        &mut self,
+        view: &mut SelectionView,
+        rng: &mut Rng,
+        s: usize,
+    ) -> Vec<usize> {
+        view.sample_uniform(rng, s)
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+/// Staleness-bounded participation: reachable clients whose snapshot is
+/// at least `cap` rounds old are mandatory (oldest first, random
+/// tie-break); remaining slots are a uniform draw over the rest. For
+/// FedBuff, `admit` drops updates computed from a snapshot older than
+/// `cap` aggregations (the rejected client still re-pulls, so its next
+/// push is fresh — no livelock).
+pub struct StalenessAware {
+    cap: u64,
+}
+
+impl StalenessAware {
+    pub fn new(cap: u64) -> Self {
+        assert!(cap >= 1, "staleness cap must be >= 1");
+        StalenessAware { cap }
+    }
+
+    pub fn cap(&self) -> u64 {
+        self.cap
+    }
+}
+
+impl SelectionPolicy for StalenessAware {
+    fn select(
+        &mut self,
+        view: &mut SelectionView,
+        rng: &mut Rng,
+        s: usize,
+    ) -> Vec<usize> {
+        let reachable = view.reachable();
+        if reachable.len() <= s {
+            return reachable;
+        }
+        let over: Vec<usize> = reachable
+            .iter()
+            .copied()
+            .filter(|&i| view.tracker.staleness(i) >= self.cap)
+            .collect();
+        let mut ranked = keyed(&over, rng, |i| view.tracker.staleness(i));
+        // Oldest snapshots first; equal staleness in random order.
+        ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut picked: Vec<usize> =
+            ranked.into_iter().take(s).map(|(_, _, i)| i).collect();
+        if picked.len() < s {
+            // Below the cap the policy is unbiased: fill uniformly.
+            let rest: Vec<usize> = reachable
+                .iter()
+                .copied()
+                .filter(|i| !picked.contains(i))
+                .collect();
+            let fill = rng.sample_distinct(rest.len(), s - picked.len());
+            picked.extend(fill.into_iter().map(|j| rest[j]));
+        }
+        picked
+    }
+
+    fn admit(
+        &mut self,
+        view: &mut SelectionView,
+        _rng: &mut Rng,
+        client: usize,
+    ) -> bool {
+        view.tracker.staleness(client) <= self.cap
+    }
+
+    fn name(&self) -> &'static str {
+        "staleness"
+    }
+}
+
+/// Min-participation quota: the `s` reachable clients with the fewest
+/// participations (random tie-break) — round-robin under full
+/// availability. For FedBuff, `admit` holds a pusher to within one
+/// participation of the least-served reachable client.
+pub struct Fairness;
+
+impl SelectionPolicy for Fairness {
+    fn select(
+        &mut self,
+        view: &mut SelectionView,
+        rng: &mut Rng,
+        s: usize,
+    ) -> Vec<usize> {
+        let reachable = view.reachable();
+        if reachable.len() <= s {
+            return reachable;
+        }
+        let mut ranked = keyed(&reachable, rng, |i| view.tracker.count(i));
+        ranked.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+        ranked.into_iter().take(s).map(|(_, _, i)| i).collect()
+    }
+
+    fn admit(
+        &mut self,
+        view: &mut SelectionView,
+        _rng: &mut Rng,
+        client: usize,
+    ) -> bool {
+        let reachable = view.reachable();
+        let Some(min) = reachable.iter().map(|&i| view.tracker.count(i)).min()
+        else {
+            // Nobody reachable to compare against: admit rather than
+            // stall the buffer.
+            return true;
+        };
+        // Quota slack of one: the pusher may lead the least-served
+        // reachable client by at most one participation.
+        view.tracker.count(client) <= min + 1
+    }
+
+    fn name(&self) -> &'static str {
+        "fairness"
+    }
+}
+
+/// Loss-proportional power-of-choice: sample `d ≥ s` reachable
+/// candidates uniformly, keep the `s` with the highest tracked local
+/// loss. Clients the server has never observed rank highest (+∞), so the
+/// fleet is explored before the bias kicks in. For FedBuff, `admit`
+/// accepts updates whose tracked loss is at or above the reachable
+/// median (unknown losses are admitted).
+pub struct LossPropPowerOfChoice {
+    d: usize,
+}
+
+impl LossPropPowerOfChoice {
+    pub fn new(d: usize) -> Self {
+        assert!(d >= 1, "candidate set must be non-empty");
+        LossPropPowerOfChoice { d }
+    }
+
+    pub fn candidates(&self) -> usize {
+        self.d
+    }
+}
+
+impl SelectionPolicy for LossPropPowerOfChoice {
+    fn select(
+        &mut self,
+        view: &mut SelectionView,
+        rng: &mut Rng,
+        s: usize,
+    ) -> Vec<usize> {
+        let reachable = view.reachable();
+        if reachable.len() <= s {
+            return reachable;
+        }
+        let cand: Vec<usize> = if reachable.len() <= self.d {
+            reachable
+        } else {
+            rng.sample_distinct(reachable.len(), self.d)
+                .into_iter()
+                .map(|j| reachable[j])
+                .collect()
+        };
+        let mut ranked = keyed(&cand, rng, |i| {
+            view.tracker.loss(i).unwrap_or(f64::INFINITY)
+        });
+        ranked.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
+        ranked.into_iter().take(s).map(|(_, _, i)| i).collect()
+    }
+
+    fn admit(
+        &mut self,
+        view: &mut SelectionView,
+        _rng: &mut Rng,
+        client: usize,
+    ) -> bool {
+        let Some(loss) = view.tracker.loss(client) else {
+            return true;
+        };
+        let reachable = view.reachable();
+        let mut observed: Vec<f64> = reachable
+            .iter()
+            .filter_map(|&i| view.tracker.loss(i))
+            .collect();
+        if observed.len() < 2 {
+            return true;
+        }
+        observed.sort_by(|a, b| a.partial_cmp(b).unwrap_or(Ordering::Equal));
+        let median = observed[observed.len() / 2];
+        loss >= median
+    }
+
+    fn name(&self) -> &'static str {
+        "loss-poc"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::AvailabilityKind;
+
+    fn always(n: usize) -> ClientAvailability {
+        ClientAvailability::new(AvailabilityKind::Always, n, 1)
+    }
+
+    fn assert_valid(picked: &[usize], reachable: &[usize], s: usize) {
+        assert!(picked.len() <= s);
+        let mut sorted = picked.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), picked.len(), "distinct");
+        for i in picked {
+            assert!(reachable.contains(i), "client {i} not reachable");
+        }
+    }
+
+    #[test]
+    fn uniform_delegates_to_availability_sample() {
+        let n = 12;
+        let mut av = always(n);
+        let mut av_ref = always(n);
+        let tracker = ParticipationTracker::new(n);
+        let mut rng = Rng::new(7);
+        let mut rng_ref = Rng::new(7);
+        let mut policy = Uniform;
+        for t in 0..20 {
+            let mut view = SelectionView {
+                now: t as f64,
+                n,
+                availability: &mut av,
+                tracker: &tracker,
+            };
+            let picked = policy.select(&mut view, &mut rng, 4);
+            let expect = av_ref.sample(&mut rng_ref, n, 4, t as f64);
+            assert_eq!(picked, expect, "t={t}");
+        }
+        // Identical residual streams: the wrapper consumed exactly the
+        // raw path's randomness.
+        assert_eq!(rng.next_u64(), rng_ref.next_u64());
+    }
+
+    #[test]
+    fn fairness_picks_least_served() {
+        let n = 8;
+        let mut av = always(n);
+        let mut tracker = ParticipationTracker::new(n);
+        // counts: 0 → 5, 1 → 5, 2 → 1, 3 → 2, 4 → 2, 5..8 → 0.
+        for _ in 0..5 {
+            tracker.record_participation(0, 1.0);
+            tracker.record_participation(1, 1.0);
+        }
+        tracker.record_participation(2, 1.0);
+        for _ in 0..2 {
+            tracker.record_participation(3, 1.0);
+            tracker.record_participation(4, 1.0);
+        }
+        let mut rng = Rng::new(3);
+        let mut policy = Fairness;
+        let mut view =
+            SelectionView { now: 0.0, n, availability: &mut av, tracker: &tracker };
+        let picked = policy.select(&mut view, &mut rng, 5);
+        assert_valid(&picked, &(0..n).collect::<Vec<_>>(), 5);
+        // The three untouched clients and the once-served client 2 must
+        // all be in; the five-time participants 0 and 1 must be out; the
+        // last slot goes to one of the twice-served 3/4.
+        for i in [5, 6, 7, 2] {
+            assert!(picked.contains(&i), "{picked:?} missing {i}");
+        }
+        assert!(!picked.contains(&0) && !picked.contains(&1), "{picked:?}");
+    }
+
+    #[test]
+    fn staleness_mandates_over_cap_clients_oldest_first() {
+        let n = 10;
+        let mut av = always(n);
+        let mut tracker = ParticipationTracker::new(n);
+        for _ in 0..6 {
+            tracker.advance_round();
+        }
+        // Clients 0..7 refreshed now (staleness 0); 7, 8, 9 stay on the
+        // init snapshot (staleness 6).
+        for i in 0..7 {
+            tracker.note_snapshot(i);
+        }
+        let mut rng = Rng::new(5);
+        let mut policy = StalenessAware::new(4);
+        let mut view =
+            SelectionView { now: 0.0, n, availability: &mut av, tracker: &tracker };
+        let picked = policy.select(&mut view, &mut rng, 4);
+        assert_valid(&picked, &(0..n).collect::<Vec<_>>(), 4);
+        for i in [7, 8, 9] {
+            assert!(picked.contains(&i), "over-cap client {i} not selected");
+        }
+        // Admission: over-cap updates are dropped, fresh ones admitted.
+        let mut view =
+            SelectionView { now: 0.0, n, availability: &mut av, tracker: &tracker };
+        assert!(!policy.admit(&mut view, &mut rng, 8));
+        let mut view =
+            SelectionView { now: 0.0, n, availability: &mut av, tracker: &tracker };
+        assert!(policy.admit(&mut view, &mut rng, 0));
+    }
+
+    #[test]
+    fn loss_poc_keeps_highest_loss_and_explores_unknowns() {
+        let n = 8;
+        let mut av = always(n);
+        let mut tracker = ParticipationTracker::new(n);
+        for i in 0..6 {
+            tracker.note_loss(i, i as f64 * 0.1);
+        }
+        // 6 and 7 never observed → rank highest.
+        let mut rng = Rng::new(9);
+        let mut policy = LossPropPowerOfChoice::new(n);
+        let mut view =
+            SelectionView { now: 0.0, n, availability: &mut av, tracker: &tracker };
+        let picked = policy.select(&mut view, &mut rng, 4);
+        assert_valid(&picked, &(0..n).collect::<Vec<_>>(), 4);
+        assert!(picked.contains(&6) && picked.contains(&7), "{picked:?}");
+        // The two remaining slots go to the highest observed losses.
+        assert!(picked.contains(&5) && picked.contains(&4), "{picked:?}");
+    }
+
+    #[test]
+    fn short_round_returns_reachable_in_order_without_randomness() {
+        // Under a tight duty cycle most instants leave fewer than s
+        // clients reachable; every policy must then return all of them,
+        // ascending, consuming no randomness (the raw short-round path).
+        let n = 10;
+        let s = 4;
+        let kind =
+            AvailabilityKind::DutyCycle { period: 10.0, on_fraction: 0.3 };
+        let tracker = ParticipationTracker::new(n);
+        let policies: Vec<Box<dyn SelectionPolicy>> = vec![
+            Box::new(Uniform),
+            Box::new(StalenessAware::new(2)),
+            Box::new(Fairness),
+            Box::new(LossPropPowerOfChoice::new(8)),
+        ];
+        for mut p in policies {
+            let mut av = ClientAvailability::new(kind.clone(), n, 21);
+            let mut twin = ClientAvailability::new(kind.clone(), n, 21);
+            let mut rng = Rng::new(11);
+            let mut short_rounds = 0;
+            for step in 0..40 {
+                let t = step as f64 * 0.7;
+                let reachable: Vec<usize> =
+                    (0..n).filter(|&i| twin.is_up(i, t)).collect();
+                if reachable.is_empty() || reachable.len() > s {
+                    continue;
+                }
+                short_rounds += 1;
+                let mut view = SelectionView {
+                    now: t,
+                    n,
+                    availability: &mut av,
+                    tracker: &tracker,
+                };
+                let picked = p.select(&mut view, &mut rng, s);
+                assert_eq!(picked, reachable, "{} t={t}", p.name());
+            }
+            assert!(short_rounds > 0, "{}: duty cycle never short", p.name());
+            // No randomness consumed on any short path.
+            assert_eq!(rng.next_u64(), Rng::new(11).next_u64(), "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn default_admit_accepts_everything() {
+        let n = 4;
+        let mut av = always(n);
+        let tracker = ParticipationTracker::new(n);
+        let mut rng = Rng::new(1);
+        let mut view =
+            SelectionView { now: 0.0, n, availability: &mut av, tracker: &tracker };
+        assert!(Uniform.admit(&mut view, &mut rng, 2));
+        assert_eq!(rng.next_u64(), Rng::new(1).next_u64());
+    }
+}

@@ -1,0 +1,218 @@
+//! Server-side participation bookkeeping feeding the selection policies
+//! and the fairness/staleness metrics columns.
+//!
+//! The tracker is pure bookkeeping: recording never consumes randomness
+//! and never touches a float the trajectory depends on, so carrying it in
+//! every run keeps the default `Uniform` policy bit-exact while making
+//! the history available the moment a non-uniform policy asks for it.
+//!
+//! "Round" is the server's interaction counter: QuAFL/FedAvg advance it
+//! once per server round, FedBuff once per buffer aggregation. A client's
+//! *staleness* is `round - snapshot_round[i]`, where `snapshot_round[i]`
+//! is the round at which its current model snapshot was installed (0 =
+//! the shared init) — the same quantity the fleet store derives from its
+//! per-client snapshot epochs ([`crate::fleet::ClientModelStore`]'s
+//! `snapshot_epoch`), kept here so policies can rank clients without a
+//! handle on the store. The two derivations stay equal by construction:
+//! the algorithms stamp snapshots in both at the same program points and
+//! advance both counters together (a `debug_assert` in QuAFL/FedBuff
+//! checks the lockstep on every round of every debug-build test run).
+
+/// Per-client participation history (see the module docs).
+#[derive(Clone, Debug)]
+pub struct ParticipationTracker {
+    round: u64,
+    counts: Vec<u64>,
+    last_served: Vec<f64>,
+    snapshot_round: Vec<u64>,
+    last_loss: Vec<Option<f64>>,
+}
+
+impl ParticipationTracker {
+    pub fn new(n: usize) -> Self {
+        ParticipationTracker {
+            round: 0,
+            counts: vec![0; n],
+            last_served: vec![f64::NEG_INFINITY; n],
+            snapshot_round: vec![0; n],
+            last_loss: vec![None; n],
+        }
+    }
+
+    /// Fleet size n.
+    pub fn len(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+
+    /// Current server round / aggregation index.
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// Advance the server's interaction counter (once per QuAFL/FedAvg
+    /// round, once per FedBuff aggregation — including idle rounds, which
+    /// age everyone's snapshot).
+    pub fn advance_round(&mut self) {
+        self.round += 1;
+    }
+
+    /// Client `i` participated (contributed to the model) at `now`.
+    pub fn record_participation(&mut self, i: usize, now: f64) {
+        self.counts[i] += 1;
+        self.last_served[i] = now;
+    }
+
+    /// Client `i` (re)installed a model snapshot this round — a QuAFL
+    /// post-round update or a FedBuff pull, admitted or not.
+    pub fn note_snapshot(&mut self, i: usize) {
+        self.snapshot_round[i] = self.round;
+    }
+
+    /// Record client `i`'s last observed mean local loss (non-finite
+    /// observations are dropped rather than poisoning the ranking).
+    pub fn note_loss(&mut self, i: usize, loss: f64) {
+        if loss.is_finite() {
+            self.last_loss[i] = Some(loss);
+        }
+    }
+
+    pub fn count(&self, i: usize) -> u64 {
+        self.counts[i]
+    }
+
+    /// Last simulated time client `i` was served (−∞ if never).
+    pub fn last_served(&self, i: usize) -> f64 {
+        self.last_served[i]
+    }
+
+    /// Rounds since client `i`'s current snapshot was installed.
+    pub fn staleness(&self, i: usize) -> u64 {
+        self.round - self.snapshot_round[i]
+    }
+
+    /// Last observed mean local loss, if the server ever saw one.
+    pub fn loss(&self, i: usize) -> Option<f64> {
+        self.last_loss[i]
+    }
+
+    /// Gini coefficient of the participation counts (0 = perfectly
+    /// equal; → 1 as participation concentrates on few clients).
+    pub fn participation_gini(&self) -> f64 {
+        let n = self.counts.len();
+        let total: u64 = self.counts.iter().sum();
+        if n == 0 || total == 0 {
+            return 0.0;
+        }
+        let mut sorted = self.counts.clone();
+        sorted.sort_unstable();
+        // G = Σ_i (2(i+1) − n − 1)·c_(i) / (n·Σc) over ascending c_(i).
+        let num: f64 = sorted
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (2.0 * (i as f64 + 1.0) - n as f64 - 1.0) * c as f64)
+            .sum();
+        num / (n as f64 * total as f64)
+    }
+
+    /// Max snapshot staleness across the fleet.
+    pub fn max_staleness(&self) -> u64 {
+        self.snapshot_round
+            .iter()
+            .map(|&r| self.round - r)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Mean snapshot staleness across the fleet.
+    pub fn mean_staleness(&self) -> f64 {
+        if self.snapshot_round.is_empty() {
+            return 0.0;
+        }
+        let sum: u64 = self.snapshot_round.iter().map(|&r| self.round - r).sum();
+        sum as f64 / self.snapshot_round.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_tracker_is_all_zero() {
+        let t = ParticipationTracker::new(5);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.round(), 0);
+        assert_eq!(t.participation_gini(), 0.0);
+        assert_eq!(t.max_staleness(), 0);
+        assert_eq!(t.mean_staleness(), 0.0);
+        for i in 0..5 {
+            assert_eq!(t.count(i), 0);
+            assert_eq!(t.staleness(i), 0);
+            assert!(t.loss(i).is_none());
+            assert_eq!(t.last_served(i), f64::NEG_INFINITY);
+        }
+    }
+
+    #[test]
+    fn staleness_tracks_rounds_since_snapshot() {
+        let mut t = ParticipationTracker::new(3);
+        t.advance_round();
+        t.advance_round();
+        // Never-refreshed clients age with the round counter (the init
+        // snapshot is round 0).
+        assert_eq!(t.staleness(0), 2);
+        t.note_snapshot(1);
+        assert_eq!(t.staleness(1), 0);
+        t.advance_round();
+        assert_eq!(t.staleness(1), 1);
+        assert_eq!(t.staleness(0), 3);
+        assert_eq!(t.max_staleness(), 3);
+        assert!((t.mean_staleness() - (3.0 + 1.0 + 3.0) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gini_of_equal_counts_is_zero() {
+        let mut t = ParticipationTracker::new(4);
+        for i in 0..4 {
+            t.record_participation(i, 1.0);
+            t.record_participation(i, 2.0);
+        }
+        assert!(t.participation_gini().abs() < 1e-12);
+    }
+
+    #[test]
+    fn gini_of_concentrated_counts_is_large() {
+        let mut t = ParticipationTracker::new(4);
+        for _ in 0..100 {
+            t.record_participation(0, 1.0);
+        }
+        // One client holds all mass: G = (n-1)/n = 0.75.
+        assert!((t.participation_gini() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gini_known_small_case() {
+        // counts [0, 1, 3]: sorted, num = (2-4)*0 + (4-4)*1 + (6-4)*3 = 6;
+        // G = 6 / (3*4) = 0.5.
+        let mut t = ParticipationTracker::new(3);
+        t.record_participation(1, 1.0);
+        for _ in 0..3 {
+            t.record_participation(2, 1.0);
+        }
+        assert!((t.participation_gini() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn losses_ignore_non_finite_observations() {
+        let mut t = ParticipationTracker::new(2);
+        t.note_loss(0, 1.5);
+        t.note_loss(0, f64::NAN);
+        assert_eq!(t.loss(0), Some(1.5));
+        t.note_loss(0, 0.5);
+        assert_eq!(t.loss(0), Some(0.5));
+    }
+}

@@ -61,6 +61,23 @@ pub fn assert_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
             "{what}: train_loss at round {}",
             p.round
         );
+        assert_eq!(
+            p.participation_gini.to_bits(),
+            q.participation_gini.to_bits(),
+            "{what}: participation_gini at round {}",
+            p.round
+        );
+        assert_eq!(
+            p.staleness_max, q.staleness_max,
+            "{what}: staleness_max at round {}",
+            p.round
+        );
+        assert_eq!(
+            p.staleness_mean.to_bits(),
+            q.staleness_mean.to_bits(),
+            "{what}: staleness_mean at round {}",
+            p.round
+        );
     }
     assert_eq!(a.total_interactions, b.total_interactions, "{what}");
     assert_eq!(
@@ -69,6 +86,10 @@ pub fn assert_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
     );
     assert_eq!(a.sum_observed_steps, b.sum_observed_steps, "{what}");
     assert_eq!(a.short_rounds, b.short_rounds, "{what}: short_rounds");
+    assert_eq!(
+        a.rejected_interactions, b.rejected_interactions,
+        "{what}: rejected_interactions"
+    );
     assert_eq!(a.potential.len(), b.potential.len(), "{what}: potential len");
     for (i, (x, y)) in a.potential.iter().zip(&b.potential).enumerate() {
         assert_eq!(x.to_bits(), y.to_bits(), "{what}: potential[{i}]");

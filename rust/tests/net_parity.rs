@@ -57,7 +57,7 @@ fn explicit_free_net() -> NetworkConfig {
             down_bw: Dist::Const(f64::INFINITY),
             latency: Dist::Const(0.0),
         },
-        availability: AvailabilityKind::Always,
+        ..Default::default()
     }
 }
 
@@ -99,7 +99,7 @@ fn priced_network_slows_time_but_not_traffic_for_quafl() {
                 down_bw: Dist::Const(4e5),
                 latency: Dist::Const(0.1),
             },
-            availability: AvailabilityKind::Always,
+            ..Default::default()
         },
         ..base(Algorithm::QuAFL)
     })
@@ -161,6 +161,7 @@ fn churn_run_replays_identically() {
                 mean_up: 10.0,
                 mean_down: 90.0,
             },
+            ..Default::default()
         },
         rounds: 20,
         ..base(Algorithm::QuAFL)
@@ -202,7 +203,7 @@ fn bandwidth_skew_flips_sim_time_ordering() {
             down_bw: Dist::Const(2e5),
             latency: Dist::Const(0.1),
         },
-        availability: AvailabilityKind::Always,
+        ..Default::default()
     };
     let lattice = ExperimentConfig {
         quantizer: QuantizerKind::Lattice { bits: 10 },
@@ -242,6 +243,95 @@ fn bandwidth_skew_flips_sim_time_ordering() {
 }
 
 #[test]
+fn broadcast_downlink_prices_one_transmission_per_round() {
+    // FedAvg on constant symmetric links: unicast pricing charges s
+    // payloads per round, `--broadcast-downlink` exactly one — and since
+    // every link is identical, the per-client receive times (hence the
+    // clocks, models, and the whole time axis) are bit-identical; only
+    // the downlink accounting shrinks by a factor of s.
+    let cfg = ExperimentConfig {
+        quantizer: QuantizerKind::None,
+        net: NetworkConfig {
+            profile: NetProfile::Custom {
+                up_bw: Dist::Const(1e5),
+                down_bw: Dist::Const(1e5),
+                latency: Dist::Const(0.1),
+            },
+            ..Default::default()
+        },
+        ..base(Algorithm::FedAvg)
+    };
+    let unicast = coordinator::run(&cfg).unwrap();
+    let broadcast = coordinator::run(&ExperimentConfig {
+        broadcast_downlink: true,
+        ..cfg.clone()
+    })
+    .unwrap();
+    assert_eq!(unicast.points.len(), broadcast.points.len());
+    assert_eq!(unicast.short_rounds, 0, "Always availability: full rounds");
+    let s = cfg.s as u64;
+    for (p, q) in unicast.points.iter().zip(&broadcast.points) {
+        assert_eq!(p.round, q.round);
+        assert_eq!(p.bits_up, q.bits_up, "uplink traffic unchanged");
+        assert_eq!(
+            p.bits_down,
+            q.bits_down * s,
+            "round {}: broadcast pays one payload where unicast pays s",
+            p.round
+        );
+        assert_eq!(
+            p.sim_time.to_bits(),
+            q.sim_time.to_bits(),
+            "identical links: same receive times, same time axis"
+        );
+        assert_eq!(p.val_loss.to_bits(), q.val_loss.to_bits());
+        if p.round > 0 {
+            assert!(
+                q.comm_down_time < p.comm_down_time,
+                "round {}: shared medium must charge less downlink time",
+                p.round
+            );
+        }
+    }
+}
+
+#[test]
+fn compute_corr_reshuffles_links_but_not_traffic() {
+    // The copula changes *which client* gets which link, so the time
+    // axis moves — but wire sizes are dim-deterministic, so the exact
+    // bit tallies cannot.
+    let net = |rho: f64| NetworkConfig {
+        profile: NetProfile::Custom {
+            up_bw: Dist::LogNormal { median: 1e5, sigma: 0.8 },
+            down_bw: Dist::LogNormal { median: 4e5, sigma: 0.8 },
+            latency: Dist::Const(0.1),
+        },
+        compute_corr: rho,
+        ..Default::default()
+    };
+    let independent = coordinator::run(&ExperimentConfig {
+        net: net(0.0),
+        ..base(Algorithm::QuAFL)
+    })
+    .unwrap();
+    let correlated = coordinator::run(&ExperimentConfig {
+        net: net(0.9),
+        ..base(Algorithm::QuAFL)
+    })
+    .unwrap();
+    assert_eq!(independent.points.len(), correlated.points.len());
+    let mut time_differs = false;
+    for (p, q) in independent.points.iter().zip(&correlated.points) {
+        assert_eq!(p.bits_up, q.bits_up, "round {}: traffic", p.round);
+        assert_eq!(p.bits_down, q.bits_down);
+        if p.sim_time.to_bits() != q.sim_time.to_bits() {
+            time_differs = true;
+        }
+    }
+    assert!(time_differs, "rho=0.9 left the time axis untouched");
+}
+
+#[test]
 fn duty_cycle_gates_sampling_end_to_end() {
     let m = coordinator::run(&ExperimentConfig {
         net: NetworkConfig {
@@ -250,6 +340,7 @@ fn duty_cycle_gates_sampling_end_to_end() {
                 period: 40.0,
                 on_fraction: 0.25,
             },
+            ..Default::default()
         },
         rounds: 12,
         ..base(Algorithm::QuAFL)

@@ -106,6 +106,7 @@ fn lossy_net() -> NetworkConfig {
     NetworkConfig {
         profile: NetProfile::preset("mobile").expect("preset"),
         availability: AvailabilityKind::Churn { mean_up: 60.0, mean_down: 30.0 },
+        ..Default::default()
     }
 }
 

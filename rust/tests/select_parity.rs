@@ -1,0 +1,465 @@
+//! Parity + property suite for the pluggable client-selection subsystem
+//! (rust/src/select):
+//!
+//! 1. **Stream parity.** The default `Uniform` policy must consume the
+//!    exact RNG stream `ClientAvailability::sample` consumed before the
+//!    subsystem existed — per draw *and* in residual stream state — for
+//!    every availability kind (always / churn / duty).
+//! 2. **Schedule parity.** A `--select uniform` run's recorded selection
+//!    schedule (times + ids, `track_selection`) must reproduce a
+//!    from-scratch reimplementation of the *pre-subsystem* sampling loop
+//!    (raw `availability.sample`, twin clocks, twin transport priced from
+//!    dim-deterministic encoded sizes) bit for bit, for QuAFL and FedAvg,
+//!    on a priced network under churn. FedBuff and the baseline have no
+//!    sampling step; their uniform path consumes no selection RNG at all,
+//!    pinned by replay identity under churn.
+//! 3. **Policy properties.** Fairness meets its min-participation quota
+//!    (round-robin under full availability; exact argmin under churn),
+//!    StalenessAware respects its hard cap (over-cap reachable clients
+//!    are mandatory), and the policies genuinely diverge — different
+//!    schedules, lower participation Gini for fairness, FedBuff
+//!    admission rejections under a tight staleness cap.
+
+mod common;
+
+use common::assert_identical;
+use quafl::config::{Algorithm, ExperimentConfig, TimingConfig};
+use quafl::coordinator;
+use quafl::model::ModelSpec;
+use quafl::net::{
+    AvailabilityKind, ClientAvailability, NetProfile, NetworkConfig,
+};
+use quafl::select::{
+    Fairness, ParticipationTracker, SelectionKind, SelectionPolicy,
+    SelectionView, StalenessAware,
+};
+use quafl::sim::build_clocks;
+use quafl::util::rng::{derive_seed, Rng};
+
+fn base(algorithm: Algorithm) -> ExperimentConfig {
+    ExperimentConfig {
+        algorithm,
+        n: 16,
+        s: 4,
+        k: 4,
+        rounds: 10,
+        eval_every: 5,
+        train_samples: 512,
+        val_samples: 64,
+        batch: 16,
+        seed: 31,
+        workers: 2,
+        timing: TimingConfig { slow_fraction: 0.3, ..Default::default() },
+        track_selection: true,
+        ..Default::default()
+    }
+}
+
+/// Mobile-profile transport + heavy churn (~10% stationary availability,
+/// the regime net_parity.rs already relies on to force short rounds):
+/// the richest scheduling path — priced exchanges, reachability gating,
+/// short and empty rounds.
+fn churny_mobile() -> NetworkConfig {
+    NetworkConfig {
+        profile: NetProfile::preset("mobile").expect("preset"),
+        availability: AvailabilityKind::Churn { mean_up: 10.0, mean_down: 90.0 },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn uniform_matches_raw_sample_stream_for_all_availability_kinds() {
+    let n = 24;
+    let s = 6;
+    for kind in [
+        AvailabilityKind::Always,
+        AvailabilityKind::Churn { mean_up: 30.0, mean_down: 10.0 },
+        AvailabilityKind::DutyCycle { period: 50.0, on_fraction: 0.4 },
+    ] {
+        let mut av = ClientAvailability::new(kind.clone(), n, 5);
+        let mut av_raw = ClientAvailability::new(kind.clone(), n, 5);
+        let tracker = ParticipationTracker::new(n);
+        let mut rng = Rng::new(99);
+        let mut rng_raw = Rng::new(99);
+        let mut policy = quafl::select::Uniform;
+        for step in 0..60 {
+            let t = step as f64 * 3.3;
+            let mut view = SelectionView {
+                now: t,
+                n,
+                availability: &mut av,
+                tracker: &tracker,
+            };
+            let picked = policy.select(&mut view, &mut rng, s);
+            let expect = av_raw.sample(&mut rng_raw, n, s, t);
+            assert_eq!(picked, expect, "{} t={t}", kind.name());
+        }
+        // Residual streams bit-identical: the policy consumed exactly
+        // the raw path's randomness, no more, no less.
+        assert_eq!(rng.next_u64(), rng_raw.next_u64(), "{}", kind.name());
+    }
+}
+
+#[test]
+fn quafl_uniform_schedule_matches_pre_subsystem_reference() {
+    // Reimplement the pre-subsystem QuAFL sampling loop from scratch —
+    // raw `availability.sample` on twin processes, clock advancement in
+    // sampled order, exchanges priced from the dim-deterministic encoded
+    // sizes — and demand the recorded schedule matches bit for bit.
+    let cfg = ExperimentConfig { net: churny_mobile(), ..base(Algorithm::QuAFL) };
+    let m = coordinator::run(&cfg).expect("quafl run");
+    assert_eq!(m.selections.len(), cfg.rounds, "one selection per round");
+
+    let mut rng = Rng::new(derive_seed(cfg.seed, 0x5E1EC7));
+    let mut availability =
+        cfg.net.build_availability(cfg.n, derive_seed(cfg.seed, 0x4E71));
+    let mut clocks =
+        build_clocks(cfg.n, &cfg.timing, derive_seed(cfg.seed, 0xC10C));
+    let rates: Vec<f64> = clocks.iter().map(|c| c.rate()).collect();
+    let transport =
+        cfg.net.build_transport(cfg.n, derive_seed(cfg.seed, 0x4E70), &rates);
+    let d = ModelSpec::by_name(&cfg.model).unwrap().num_params();
+    let quantizer = coordinator::build_quantizer(&cfg, d);
+    // Both directions carry the quantizer's encoding, whose wire size is
+    // a deterministic function of d (property-tested in net_parity.rs).
+    let msg_bits = quantizer.encoded_bits(d) as u64;
+
+    let mut now = 0f64;
+    let mut short_rounds = 0u64;
+    for t in 0..cfg.rounds {
+        now += cfg.timing.swt;
+        let sampled = availability.sample(&mut rng, cfg.n, cfg.s, now);
+        let (rec_t, rec_ids) = &m.selections[t];
+        assert_eq!(rec_t.to_bits(), now.to_bits(), "round {t}: time");
+        assert_eq!(rec_ids, &sampled, "round {t}: ids");
+        if sampled.len() < cfg.s {
+            short_rounds += 1;
+        }
+        if sampled.is_empty() {
+            now += cfg.timing.sit;
+            continue;
+        }
+        // Pre-pass: realize partial progress in sampled order.
+        for &i in &sampled {
+            let _ = clocks[i].steps_completed(now, cfg.k);
+        }
+        // Reduction: price the overlapping exchanges, restart clocks.
+        let mut round_comm = 0f64;
+        for &i in &sampled {
+            let down_t = transport.downlink_time(i, msg_bits);
+            let up_t = transport.uplink_time(i, msg_bits);
+            round_comm = round_comm.max(down_t + up_t);
+            clocks[i].restart(now + cfg.timing.sit + down_t);
+        }
+        now += cfg.timing.sit + round_comm;
+    }
+    assert_eq!(m.short_rounds, short_rounds, "short-round accounting");
+    // The churn must have actually gated something, or this proved little.
+    assert!(short_rounds > 0, "churn never produced a short round");
+}
+
+#[test]
+fn fedavg_uniform_schedule_matches_pre_subsystem_reference() {
+    let cfg = ExperimentConfig {
+        quantizer: quafl::config::QuantizerKind::None,
+        net: churny_mobile(),
+        ..base(Algorithm::FedAvg)
+    };
+    let m = coordinator::run(&cfg).expect("fedavg run");
+    assert_eq!(m.selections.len(), cfg.rounds);
+
+    let mut rng = Rng::new(derive_seed(cfg.seed, 0x5E1EC7));
+    let mut availability =
+        cfg.net.build_availability(cfg.n, derive_seed(cfg.seed, 0x4E71));
+    let mut clocks =
+        build_clocks(cfg.n, &cfg.timing, derive_seed(cfg.seed, 0xC10C));
+    let rates: Vec<f64> = clocks.iter().map(|c| c.rate()).collect();
+    let transport =
+        cfg.net.build_transport(cfg.n, derive_seed(cfg.seed, 0x4E70), &rates);
+    let d = ModelSpec::by_name(&cfg.model).unwrap().num_params();
+    let model_bits = (d * 32) as u64;
+
+    let mut now = 0f64;
+    for t in 0..cfg.rounds {
+        let sampled = availability.sample(&mut rng, cfg.n, cfg.s, now);
+        let (rec_t, rec_ids) = &m.selections[t];
+        assert_eq!(rec_t.to_bits(), now.to_bits(), "round {t}: time");
+        assert_eq!(rec_ids, &sampled, "round {t}: ids");
+        if sampled.is_empty() {
+            now += cfg.timing.sit;
+            continue;
+        }
+        let mut round_end = now;
+        for &i in &sampled {
+            let down_t = transport.downlink_time(i, model_bits);
+            let up_t = transport.uplink_time(i, model_bits);
+            clocks[i].restart(now + down_t);
+            let finish = clocks[i].finish_time_for(cfg.k) + up_t;
+            round_end = round_end.max(finish);
+        }
+        now = round_end + cfg.timing.sit;
+    }
+}
+
+#[test]
+fn uniform_replays_identically_under_churn_for_all_algorithms() {
+    // FedBuff and the baseline have no sampling step — uniform is the
+    // admit-everything no-RNG path — so replay identity under churn pins
+    // the whole-trajectory invariance the subsystem promises; QuAFL and
+    // FedAvg ride along on top of their reference-schedule proofs.
+    for algorithm in [
+        Algorithm::QuAFL,
+        Algorithm::FedAvg,
+        Algorithm::FedBuff,
+        Algorithm::Baseline,
+    ] {
+        let cfg = ExperimentConfig {
+            net: churny_mobile(),
+            track_selection: false,
+            ..base(algorithm)
+        };
+        let a = coordinator::run(&cfg).expect("run a");
+        let b = coordinator::run(&cfg).expect("run b");
+        assert!(!a.points.is_empty());
+        assert_identical(&a, &b, algorithm.name());
+        assert_eq!(a.rejected_interactions, 0, "{}", algorithm.name());
+        // An explicit `--select uniform` is the same configuration as
+        // the default (the enum default), hence the same trajectory.
+        let explicit = coordinator::run(&ExperimentConfig {
+            select: SelectionKind::Uniform,
+            ..cfg
+        })
+        .expect("explicit uniform");
+        assert_identical(&a, &explicit, algorithm.name());
+    }
+}
+
+#[test]
+fn uniform_participation_metrics_populate() {
+    // n=16 clients over 10·s=40 participations cannot split evenly, so
+    // the Gini is strictly positive; staleness is ≥ 1 for everyone at
+    // the post-round eval boundary.
+    let m = coordinator::run(&base(Algorithm::QuAFL)).expect("run");
+    assert!(m.participation_gini() > 0.0);
+    assert!(m.staleness_max() >= 1);
+    assert!(m.staleness_mean() >= 1.0);
+}
+
+/// Drive a policy directly against a seeded availability process and a
+/// live tracker, checking `check(round, reachable, picked, tracker)`
+/// before each round's bookkeeping is recorded.
+fn drive_policy(
+    policy: &mut dyn SelectionPolicy,
+    kind: AvailabilityKind,
+    n: usize,
+    s: usize,
+    rounds: usize,
+    mut check: impl FnMut(usize, &[usize], &[usize], &ParticipationTracker),
+) {
+    let mut av = ClientAvailability::new(kind.clone(), n, 13);
+    let mut twin = ClientAvailability::new(kind, n, 13);
+    let mut tracker = ParticipationTracker::new(n);
+    let mut rng = Rng::new(41);
+    for round in 0..rounds {
+        let t = round as f64 * 10.0;
+        let reachable: Vec<usize> =
+            (0..n).filter(|&i| twin.is_up(i, t)).collect();
+        let picked = {
+            let mut view = SelectionView {
+                now: t,
+                n,
+                availability: &mut av,
+                tracker: &tracker,
+            };
+            policy.select(&mut view, &mut rng, s)
+        };
+        // Shared contract: distinct, reachable, at most s — and all of
+        // the reachable when at most s of them exist.
+        let mut sorted = picked.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), picked.len(), "round {round}: distinct");
+        assert!(picked.len() <= s, "round {round}: too many");
+        for &i in &picked {
+            assert!(reachable.contains(&i), "round {round}: {i} unreachable");
+        }
+        if reachable.len() <= s {
+            assert_eq!(picked, reachable, "round {round}: short round");
+        }
+        check(round, &reachable, &picked, &tracker);
+        for &i in &picked {
+            tracker.record_participation(i, t);
+            tracker.note_snapshot(i);
+        }
+        tracker.advance_round();
+    }
+}
+
+#[test]
+fn fairness_is_round_robin_under_full_availability() {
+    let (n, s) = (10, 3);
+    let mut policy = Fairness;
+    drive_policy(
+        &mut policy,
+        AvailabilityKind::Always,
+        n,
+        s,
+        50,
+        |round, _reachable, _picked, tracker| {
+            // Always picking the least-served keeps the spread within 1.
+            let counts: Vec<u64> = (0..n).map(|i| tracker.count(i)).collect();
+            let max = *counts.iter().max().unwrap();
+            let min = *counts.iter().min().unwrap();
+            assert!(max - min <= 1, "round {round}: counts {counts:?}");
+        },
+    );
+}
+
+#[test]
+fn fairness_meets_quota_under_churn() {
+    let (n, s) = (12, 3);
+    let mut policy = Fairness;
+    let mut full_rounds = 0;
+    drive_policy(
+        &mut policy,
+        AvailabilityKind::Churn { mean_up: 40.0, mean_down: 20.0 },
+        n,
+        s,
+        60,
+        |round, reachable, picked, tracker| {
+            if reachable.len() <= s {
+                return;
+            }
+            full_rounds += 1;
+            // Exact argmin: no unselected reachable client is strictly
+            // less served than a selected one.
+            let max_picked =
+                picked.iter().map(|&i| tracker.count(i)).max().unwrap();
+            let min_unpicked = reachable
+                .iter()
+                .filter(|i| !picked.contains(i))
+                .map(|&i| tracker.count(i))
+                .min()
+                .unwrap();
+            assert!(
+                max_picked <= min_unpicked,
+                "round {round}: picked count {max_picked} over \
+                 unpicked min {min_unpicked}"
+            );
+        },
+    );
+    assert!(full_rounds > 0, "churn always gated below s");
+}
+
+#[test]
+fn staleness_cap_mandates_overdue_clients() {
+    let (n, s) = (12, 3);
+    let cap = 3u64;
+    let mut policy = StalenessAware::new(cap);
+    let mut binding_rounds = 0;
+    drive_policy(
+        &mut policy,
+        AvailabilityKind::Churn { mean_up: 20.0, mean_down: 20.0 },
+        n,
+        s,
+        60,
+        |round, reachable, picked, tracker| {
+            if reachable.len() <= s {
+                return;
+            }
+            let over: Vec<usize> = reachable
+                .iter()
+                .copied()
+                .filter(|&i| tracker.staleness(i) >= cap)
+                .collect();
+            let picked_over =
+                picked.iter().filter(|i| over.contains(i)).count();
+            // The cap is hard: over-cap reachable clients are selected
+            // before anyone else, up to the s slots available.
+            assert_eq!(
+                picked_over,
+                over.len().min(s),
+                "round {round}: over-cap {over:?}, picked {picked:?}"
+            );
+            if !over.is_empty() {
+                binding_rounds += 1;
+            }
+        },
+    );
+    assert!(binding_rounds > 0, "cap never bound — property untested");
+}
+
+#[test]
+fn policies_diverge_and_fairness_flattens_participation() {
+    let mk = |select: SelectionKind| ExperimentConfig {
+        rounds: 40,
+        eval_every: 20,
+        net: NetworkConfig {
+            availability: AvailabilityKind::Churn {
+                mean_up: 100.0,
+                mean_down: 30.0,
+            },
+            ..Default::default()
+        },
+        select,
+        ..base(Algorithm::QuAFL)
+    };
+    let uniform = coordinator::run(&mk(SelectionKind::Uniform)).unwrap();
+    let fairness = coordinator::run(&mk(SelectionKind::Fairness)).unwrap();
+    let staleness =
+        coordinator::run(&mk(SelectionKind::StalenessAware { cap: 6 })).unwrap();
+    let poc = coordinator::run(&mk(SelectionKind::LossPoc { candidates: None }))
+        .unwrap();
+
+    // The four schedules must genuinely differ.
+    let traces: std::collections::BTreeSet<String> =
+        [&uniform, &fairness, &staleness, &poc]
+            .iter()
+            .map(|m| format!("{:?}", m.selections))
+            .collect();
+    assert_eq!(traces.len(), 4, "some policies selected identically");
+
+    // Fairness explicitly equalizes participation: its Gini must come in
+    // below uniform sampling's.
+    assert!(
+        fairness.participation_gini() < uniform.participation_gini(),
+        "fairness gini {} not below uniform {}",
+        fairness.participation_gini(),
+        uniform.participation_gini()
+    );
+    // All four converged to something finite.
+    for m in [&uniform, &fairness, &staleness, &poc] {
+        assert!(m.final_loss().is_finite());
+    }
+}
+
+#[test]
+fn fedbuff_staleness_cap_rejects_stale_pushes_uniform_never_does() {
+    let mk = |select: SelectionKind| ExperimentConfig {
+        n: 16,
+        fedbuff_buffer: 2,
+        k: 3,
+        rounds: 30,
+        eval_every: 15,
+        timing: TimingConfig { slow_fraction: 0.5, ..Default::default() },
+        select,
+        track_selection: false,
+        ..base(Algorithm::FedBuff)
+    };
+    let uniform = coordinator::run(&mk(SelectionKind::Uniform)).unwrap();
+    assert_eq!(uniform.rejected_interactions, 0);
+    // Buffer 2 over 16 free-running clients: ~8 aggregations pass between
+    // a client's pull and its push, so a cap of 1 must reject plenty —
+    // while rejected clients re-pull fresh snapshots, so the run still
+    // completes its 30 aggregations.
+    let capped =
+        coordinator::run(&mk(SelectionKind::StalenessAware { cap: 1 })).unwrap();
+    assert!(
+        capped.rejected_interactions > 0,
+        "tight staleness cap never rejected an arrival"
+    );
+    assert!(capped.final_loss().is_finite());
+    // Rejections are visible in the interaction accounting: the rejected
+    // arrivals' compute still happened.
+    assert!(capped.total_interactions > uniform.total_interactions);
+}
