@@ -27,6 +27,7 @@ MODELS = {
     "mlp": [784, 32, 10],
     "mlp_wide": [784, 256, 10],
     "mlp_deep": [784, 256, 128, 10],
+    "mlp_tiny": [16, 16, 10],
 }
 
 

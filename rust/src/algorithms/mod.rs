@@ -20,6 +20,14 @@
 //! engines, and the reduction folds results back **in task order** — so
 //! trajectories are bit-identical to the serial path for any worker count
 //! (rust/tests/parallel_parity.rs).
+//!
+//! Availability-query contract: every protocol queries
+//! [`crate::net::ClientAvailability`] (via selection or `next_up`) at
+//! **globally non-decreasing** simulated times — QuAFL and FedAvg advance
+//! `now` monotonically across rounds, FedBuff pops its finish-time heap
+//! in order. The event-driven availability index (`--event-driven`,
+//! default on) relies on this to drain its transition queue forward-only;
+//! a `debug_assert` in the drain enforces it on every debug test run.
 
 pub mod baseline;
 pub mod fedavg;

@@ -214,6 +214,12 @@ pub struct ExperimentConfig {
     /// [`crate::metrics::RunMetrics::selections`] (test/diagnostic hook;
     /// costs O(s) memory per round, off by default, no CLI surface)
     pub track_selection: bool,
+    /// serve availability/selection queries from the event-driven index
+    /// (churn event queue + Fenwick up-set, O(s log n) per round) instead
+    /// of the legacy O(n) per-client walk (`--event-driven true|false`,
+    /// default on). Trajectories are bit-identical either way
+    /// (rust/tests/scale_parity.rs); the legacy path is the test oracle.
+    pub event_driven: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -249,6 +255,7 @@ impl Default for ExperimentConfig {
             select: SelectionKind::Uniform,
             broadcast_downlink: false,
             track_selection: false,
+            event_driven: true,
         }
     }
 }
@@ -288,6 +295,7 @@ impl ExperimentConfig {
         "fedbuff-buffer", "fedbuff-server-lr", "eval-every", "batch",
         "seed", "xla", "gamma", "out", "workers",
         "price-init-broadcast", "dense-fleet", "broadcast-downlink",
+        "event-driven",
     ];
 
     /// The full `run` key set: [`ExperimentConfig::CLI_KEYS`] plus the
@@ -317,6 +325,7 @@ impl ExperimentConfig {
                 "mnist" => SynthFamily::Mnist,
                 "hard" => SynthFamily::Hard,
                 "celeb" => SynthFamily::Celeb,
+                "tiny" => SynthFamily::Tiny,
                 other => return Err(format!("unknown family {other:?}")),
             };
         }
@@ -353,6 +362,19 @@ impl ExperimentConfig {
         c.price_init_broadcast = args.bool("price-init-broadcast");
         c.dense_fleet = args.bool("dense-fleet");
         c.broadcast_downlink = args.bool("broadcast-downlink");
+        // Default-on boolean: only an explicit value overrides (the bare
+        // flag `--event-driven` is a no-op restatement of the default).
+        if let Some(v) = args.get("event-driven") {
+            c.event_driven = match v {
+                "true" => true,
+                "false" => false,
+                other => {
+                    return Err(format!(
+                        "--event-driven expects true|false, got {other:?}"
+                    ))
+                }
+            };
+        }
         c.net = NetworkConfig::from_args(args)?;
         c.select = SelectionKind::from_args(args)?;
         c.validate()?;
@@ -434,6 +456,38 @@ mod tests {
         let c = ExperimentConfig::from_args(&a).unwrap();
         assert!(c.price_init_broadcast);
         assert!(c.dense_fleet);
+    }
+
+    #[test]
+    fn event_driven_defaults_on_and_parses_explicit_values() {
+        assert!(ExperimentConfig::default().event_driven);
+        let a = cli::parse_with_bool_flags(
+            &sv(&["run", "--event-driven", "false"]),
+            &["event-driven"],
+        );
+        assert!(!ExperimentConfig::from_args(&a).unwrap().event_driven);
+        let a = cli::parse_with_bool_flags(
+            &sv(&["run", "--event-driven", "true"]),
+            &["event-driven"],
+        );
+        assert!(ExperimentConfig::from_args(&a).unwrap().event_driven);
+        // Bare flag restates the default.
+        let a = cli::parse_with_bool_flags(
+            &sv(&["run", "--event-driven"]),
+            &["event-driven"],
+        );
+        assert!(ExperimentConfig::from_args(&a).unwrap().event_driven);
+        let a = cli::parse(&sv(&["run", "--event-driven", "junk"]));
+        assert!(ExperimentConfig::from_args(&a).is_err());
+        assert!(ExperimentConfig::cli_keys().contains(&"event-driven"));
+    }
+
+    #[test]
+    fn tiny_family_parses_for_million_client_runs() {
+        let a = cli::parse(&sv(&["run", "--family", "tiny", "--model", "mlp_tiny"]));
+        let c = ExperimentConfig::from_args(&a).unwrap();
+        assert_eq!(c.family, SynthFamily::Tiny);
+        assert_eq!(c.model, "mlp_tiny");
     }
 
     #[test]

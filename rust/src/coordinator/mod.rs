@@ -134,8 +134,11 @@ impl FlRun {
         let rates: Vec<f64> = clocks.iter().map(|c| c.rate()).collect();
         let transport =
             cfg.net.build_transport(cfg.n, derive_seed(cfg.seed, 0x4E70), &rates);
-        let availability =
-            cfg.net.build_availability(cfg.n, derive_seed(cfg.seed, 0x4E71));
+        let availability = cfg.net.build_availability(
+            cfg.n,
+            derive_seed(cfg.seed, 0x4E71),
+            cfg.event_driven,
+        );
 
         Ok(FlRun {
             cfg: cfg.clone(),

@@ -24,6 +24,10 @@ pub enum SynthFamily {
     /// Many-class, high style variance: CelebA stand-in (used with
     /// by-class partitioning for the pure non-i.i.d. experiments).
     Celeb,
+    /// 16-dimensional Mnist-like miniature: not a paper task, but the
+    /// only family whose dataset (`train_samples >= n` is enforced) fits
+    /// in memory at n=10⁶–10⁷ for the fleet-scaling benchmarks.
+    Tiny,
 }
 
 #[derive(Clone, Debug)]
@@ -78,6 +82,18 @@ impl SynthSpec {
                 noise: 1.0,
                 style_rank: 24,
                 style_scale: 1.0,
+                label_noise: 0.0,
+                seed,
+            },
+            SynthFamily::Tiny => SynthSpec {
+                dim: 16,
+                classes: 10,
+                train,
+                val,
+                margin: 1.0,
+                noise: 1.0,
+                style_rank: 4,
+                style_scale: 0.3,
                 label_noise: 0.0,
                 seed,
             },
@@ -161,6 +177,16 @@ mod tests {
         assert_eq!(train.features.len(), 120 * 784);
         assert!(train.labels.iter().all(|&l| l < 10));
         assert!(val.labels.iter().all(|&l| l < 10));
+    }
+
+    #[test]
+    fn tiny_family_is_small_dimensional() {
+        let spec = SynthSpec::family(SynthFamily::Tiny, 64, 16, 8);
+        assert_eq!(spec.dim, 16);
+        let (train, val) = spec.generate();
+        assert_eq!(train.features.len(), 64 * 16);
+        assert_eq!(val.len(), 16);
+        assert!(train.labels.iter().all(|&l| l < 10));
     }
 
     #[test]

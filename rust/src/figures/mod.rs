@@ -163,6 +163,109 @@ pub fn run_figure(
         );
     }
     summary.flush()?;
+    if id == "net_fleet" {
+        write_fleet_bench(out_dir, smoke)?;
+    }
+    Ok(())
+}
+
+/// The configs behind `BENCH_fleet.json`: QuAFL rounds on the 16-dim
+/// `tiny` family (442-param `mlp_tiny`, k=1, s=30) so the timing isolates
+/// the round *engine* — availability, sampling, tracker — rather than SGD
+/// math. Event-driven rows climb to n=10⁶ (the million-client smoke
+/// round); legacy O(n) rows stop earlier and exist to show the scaling
+/// gap. These run as-is in every mode, deliberately *not* smoke-clamped.
+pub fn fleet_bench_configs(smoke: bool) -> Vec<(String, ExperimentConfig)> {
+    const S: usize = 30;
+    const ROUNDS: usize = 3;
+    let event_ns: &[usize] = if smoke {
+        &[10_000, 1_000_000]
+    } else {
+        &[10_000, 100_000, 1_000_000]
+    };
+    let legacy_ns: &[usize] = if smoke { &[10_000] } else { &[10_000, 100_000] };
+    let bench_cfg = |n: usize, event_driven: bool| ExperimentConfig {
+        algorithm: Algorithm::QuAFL,
+        n,
+        s: S,
+        k: 1,
+        rounds: ROUNDS,
+        eval_every: ROUNDS,
+        batch: 16,
+        model: "mlp_tiny".into(),
+        family: SynthFamily::Tiny,
+        train_samples: n,
+        val_samples: 64,
+        quantizer: QuantizerKind::Lattice { bits: 10 },
+        net: NetworkConfig {
+            // Long up/down means keep churn-event traffic sparse, so the
+            // measurement is queue/index cost, not transition volume.
+            availability: AvailabilityKind::Churn {
+                mean_up: 2000.0,
+                mean_down: 500.0,
+            },
+            ..Default::default()
+        },
+        event_driven,
+        ..ExperimentConfig::default()
+    };
+    let mut out = Vec::new();
+    for &n in event_ns {
+        out.push((format!("event_n{n}"), bench_cfg(n, true)));
+    }
+    for &n in legacy_ns {
+        out.push((format!("legacy_n{n}"), bench_cfg(n, false)));
+    }
+    out
+}
+
+/// The first `BENCH_*.json` perf artifact: round wall-time vs fleet size
+/// at fixed s, written alongside the `net_fleet` figure output. One row
+/// per [`fleet_bench_configs`] entry, splitting one-time setup (dataset,
+/// shards, clocks, availability index) from the per-round loop.
+fn write_fleet_bench(out_dir: &str, smoke: bool) -> Result<()> {
+    use crate::util::json::{self, Json};
+    use std::collections::BTreeMap;
+
+    let mut rows = Vec::new();
+    for (label, cfg) in fleet_bench_configs(smoke) {
+        let mode = if cfg.event_driven { "event" } else { "legacy" };
+        let t0 = std::time::Instant::now();
+        let mut ctx = coordinator::FlRun::new(&cfg)
+            .with_context(|| format!("fleet bench {label}: setup"))?;
+        let setup = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let metrics = crate::algorithms::quafl::run(&mut ctx)
+            .with_context(|| format!("fleet bench {label}: run"))?;
+        let run = t1.elapsed().as_secs_f64();
+        eprintln!(
+            "[figures] net_fleet bench {label}: setup {setup:.2}s, {} rounds \
+             in {run:.3}s (acc={:.3})",
+            cfg.rounds,
+            metrics.final_acc()
+        );
+        let mut row = BTreeMap::new();
+        row.insert("n".into(), Json::Num(cfg.n as f64));
+        row.insert("s".into(), Json::Num(cfg.s as f64));
+        row.insert("mode".into(), Json::Str(mode.into()));
+        row.insert("rounds".into(), Json::Num(cfg.rounds as f64));
+        row.insert("setup_seconds".into(), Json::Num(setup));
+        row.insert("run_seconds".into(), Json::Num(run));
+        row.insert(
+            "round_seconds".into(),
+            Json::Num(run / cfg.rounds as f64),
+        );
+        rows.push(Json::Obj(row));
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("fleet_scaling".into()));
+    doc.insert("figure".into(), Json::Str("net_fleet".into()));
+    doc.insert("rows".into(), Json::Arr(rows));
+    std::fs::write(
+        format!("{out_dir}/BENCH_fleet.json"),
+        json::to_string(&Json::Obj(doc)) + "\n",
+    )?;
     Ok(())
 }
 
@@ -877,6 +980,36 @@ mod tests {
         // Default scale stays a huge fleet, small enough for a laptop.
         let small = arms_for("net_fleet", false).unwrap();
         assert!(small.iter().all(|a| a.cfg.n == 2000));
+    }
+
+    #[test]
+    fn fleet_bench_reaches_a_million_clients_and_validates() {
+        for smoke in [false, true] {
+            let cfgs = fleet_bench_configs(smoke);
+            // Every bench config must be runnable as-is (never clamped).
+            for (label, cfg) in &cfgs {
+                cfg.validate().unwrap_or_else(|e| {
+                    panic!("bench config {label} invalid: {e}")
+                });
+                assert_eq!(cfg.s, 30, "{label}");
+                assert!(matches!(
+                    cfg.net.availability,
+                    AvailabilityKind::Churn { .. }
+                ));
+            }
+            // The acceptance row: an event-driven n=10⁶ config in every
+            // mode, including --smoke (the CI figure-smoke job).
+            assert!(
+                cfgs.iter().any(|(_, c)| c.n == 1_000_000 && c.event_driven),
+                "smoke={smoke}: missing the million-client event row"
+            );
+            // Legacy rows exist for the scaling comparison but never at
+            // the million-client scale (the O(n) walk is the point).
+            assert!(cfgs.iter().any(|(_, c)| !c.event_driven));
+            assert!(cfgs
+                .iter()
+                .all(|(_, c)| c.event_driven || c.n <= 100_000));
+        }
     }
 
     #[test]

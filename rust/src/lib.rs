@@ -57,6 +57,20 @@
 //!   potential Φ_t fold bit-exact, and the store's high-water mark is
 //!   surfaced as `peak_model_bytes` in every CSV
 //!   (rust/tests/fleet_parity.rs proves CoW ≡ dense bit for bit).
+//! - **L3-scale** — the event-driven round engine that removes the last
+//!   O(n) per-round terms: [`net::ClientAvailability`] in event mode
+//!   (`--event-driven`, default on) keeps a `BinaryHeap` of next up/down
+//!   transitions — touched only when due — and a Fenwick-tree up-set
+//!   ([`util::fenwick`]) whose rank-`select` serves reachability and
+//!   sampling in O(s log n) without materialising candidate vectors
+//!   (uniform draws use the sparse Fisher–Yates
+//!   `Rng::sample_distinct_sparse`, bit-identical to the dense one);
+//!   [`select::ParticipationTracker`]'s Gini/staleness metrics are
+//!   incrementally maintained aggregates with the old full scans retained
+//!   as oracles. Together these unlock n=10⁶–10⁷ rounds (`figures
+//!   net_fleet` writes the BENCH_fleet.json scaling curve); the legacy
+//!   O(n) path is kept and rust/tests/scale_parity.rs proves both modes
+//!   bit-identical on every query, policy, and end-to-end trajectory.
 //! - **L2/L1 (build-time Python)** — the client model's fwd/bwd/update as
 //!   JAX functions over Pallas kernels, AOT-lowered once to
 //!   `artifacts/*.hlo.txt`; [`runtime`] loads and [`engine::XlaEngine`]

@@ -26,7 +26,7 @@ use quafl::util::cli;
 /// e.g. `figures --smoke fig2` — are not swallowed as flag values).
 const BOOL_FLAGS: &[&str] = &[
     "smoke", "paper-scale", "weighted", "xla", "price-init-broadcast",
-    "dense-fleet", "broadcast-downlink",
+    "dense-fleet", "broadcast-downlink", "event-driven",
 ];
 
 fn main() {
@@ -58,8 +58,8 @@ fn usage() {
          \x20 --algorithm quafl|fedavg|fedbuff|baseline (quafl)\n\
          \x20 --n INT clients (20)        --s INT sampled/round (5)\n\
          \x20 --k INT max local steps (10) --lr FLOAT (0.1)\n\
-         \x20 --rounds INT (100)          --model mlp|mlp_wide|mlp_deep\n\
-         \x20 --family mnist|hard|celeb   --partition iid|by-class|dirichlet:A\n\
+         \x20 --rounds INT (100)          --model mlp|mlp_wide|mlp_deep|mlp_tiny\n\
+         \x20 --family mnist|hard|celeb|tiny --partition iid|by-class|dirichlet:A\n\
          \x20 --quantizer none|lattice:B|qsgd:B (lattice:10)\n\
          \x20 --averaging both|server-only|client-only\n\
          \x20 --weighted                  --swt/--sit FLOAT\n\
@@ -87,6 +87,9 @@ fn usage() {
          \x20                             rate and bandwidth (default 0.0)\n\
          \x20 --broadcast-downlink        price FedAvg's downlink as one\n\
          \x20                             shared broadcast (slowest link)\n\
+         \x20 --event-driven true|false   O(s log n) event-queue availability\n\
+         \x20                             index (default true; false = legacy\n\
+         \x20                             O(n) walk, bit-identical)\n\
          \n\
          figures options: --out-dir DIR (results) --paper-scale|--smoke [ids...]\n\
          \n\

@@ -27,6 +27,9 @@ impl ModelSpec {
             "mlp" => vec![784, 32, 10],
             "mlp_wide" => vec![784, 256, 10],
             "mlp_deep" => vec![784, 256, 128, 10],
+            // 16-dim head for the `tiny` synthetic family: keeps d small
+            // enough that million-client fleet benches fit in memory.
+            "mlp_tiny" => vec![16, 16, 10],
             other => return Err(format!("unknown model {other:?}")),
         };
         Ok(ModelSpec::new(name, sizes))
@@ -134,6 +137,8 @@ mod tests {
         assert_eq!(ModelSpec::by_name("mlp").unwrap().num_params(), 25_450);
         assert_eq!(ModelSpec::by_name("mlp_wide").unwrap().num_params(), 203_530);
         assert_eq!(ModelSpec::by_name("mlp_deep").unwrap().num_params(), 235_146);
+        // 16*16 + 16 + 16*10 + 10
+        assert_eq!(ModelSpec::by_name("mlp_tiny").unwrap().num_params(), 442);
         assert!(ModelSpec::by_name("nope").is_err());
     }
 

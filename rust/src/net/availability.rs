@@ -15,9 +15,47 @@
 //! exact pre-net RNG path (`Rng::sample_distinct`), so default-profile
 //! trajectories stay bit-identical.
 //!
-//! Queries must be non-decreasing in `t` per client (they are: every
-//! algorithm's clock is monotone), matching the lazy churn walk.
+//! ## Event-driven mode (`--event-driven`, default on)
+//!
+//! The legacy query path costs O(n) per round: sampling and reachability
+//! walk every client (`(0..n).filter(is_up)`), which caps fleet sweeps at
+//! n≈10⁴. [`ClientAvailability::with_mode`] instead maintains:
+//!
+//! - a global **event queue** (`BinaryHeap` keyed by time-then-id) holding
+//!   each client's next up/down transition — touched only when due, so a
+//!   round processes the transitions that actually happened, not n ticks;
+//! - a **Fenwick-tree index of up-bits** ([`crate::util::fenwick`])
+//!   updated in O(log n) per transition, whose `select(j)` yields the
+//!   j-th reachable client in ascending id order — exactly `up[j]` of the
+//!   legacy materialized candidate vector, never building it.
+//!
+//! Sampling then costs O(s log n): short rounds enumerate the ≤ s
+//! reachable ids by rank, full rounds run a *sparse* Fisher–Yates
+//! ([`crate::util::rng::Rng::sample_distinct_sparse`] — the identical
+//! `gen_range` stream as the dense draw) over ranks and map each through
+//! `select`. Both modes are bit-identical on every query — same
+//! reachability answers, same sampled streams, same residual RNG — which
+//! rust/tests/scale_parity.rs proves property-style; the legacy path is
+//! retained as that suite's oracle.
+//!
+//! Exactness argument, per kind: churn clients own independent RNG
+//! streams and `state(t)` depends only on the initial state and `t`, so
+//! draining a client at a global event time instead of its next query
+//! time consumes the same draws in the same order; duty-cycle reads stay
+//! closed-form (bit-identical by construction) while the index schedules
+//! each boundary conservatively early (− period·1e⁻⁹) and re-evaluates
+//! the exact predicate at drain time, so the Fenwick bits agree with the
+//! predicate at every query instant.
+//!
+//! Queries must be non-decreasing in `t` per client in legacy mode, and
+//! **globally** non-decreasing in event mode (both hold: every
+//! algorithm's clock is monotone; a `debug_assert` checks the global
+//! contract on every drain).
 
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+use crate::util::fenwick::Fenwick;
 use crate::util::rng::{derive_seed, Rng};
 
 /// Which availability process gates the fleet.
@@ -75,16 +113,108 @@ struct ChurnState {
     rng: Rng,
 }
 
+/// The exact legacy duty-cycle predicate — the single home of the float
+/// expression, shared by both query modes so they cannot drift.
+#[inline]
+fn duty_up(phase: f64, period: f64, on_fraction: f64, t: f64) -> bool {
+    (t + phase).rem_euclid(period) < on_fraction * period
+}
+
+/// Analytic time of the next duty-window boundary strictly after `t`.
+#[inline]
+fn duty_next_boundary(phase: f64, period: f64, on_fraction: f64, t: f64) -> f64 {
+    let r = (t + phase).rem_euclid(period);
+    if r < on_fraction * period {
+        t + (on_fraction * period - r) // currently up: next edge is off
+    } else {
+        t + (period - r) // currently down: next edge is on
+    }
+}
+
+/// Conservative scheduling margin for duty boundaries: macroscopically
+/// larger than float rounding in the analytic boundary, so an event
+/// always fires at-or-before the true edge (the drain re-evaluates the
+/// exact predicate, so firing early is harmless and firing late never
+/// happens).
+#[inline]
+fn duty_eps(period: f64) -> f64 {
+    period * 1e-9
+}
+
+/// Smallest representable f64 strictly greater than `t` (t >= 0 finite).
+#[inline]
+fn next_after_pos(t: f64) -> f64 {
+    debug_assert!(t >= 0.0 && t.is_finite());
+    f64::from_bits(t.to_bits() + 1)
+}
+
+/// One pending up/down re-examination in the event queue.
+#[derive(Clone, Debug, PartialEq)]
+struct Event {
+    time: f64,
+    id: usize,
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Simulated times are finite; ties break on client id so the
+        // drain order is deterministic (same pattern as fedbuff's heap).
+        self.time
+            .partial_cmp(&other.time)
+            .unwrap_or(Ordering::Equal)
+            .then(self.id.cmp(&other.id))
+    }
+}
+
+/// The event-driven index over the availability process: the transition
+/// queue plus the Fenwick up-bit set it keeps current.
+#[derive(Clone, Debug)]
+struct EventIndex {
+    /// min-heap of pending transitions (time, then id)
+    queue: BinaryHeap<Reverse<Event>>,
+    /// 0/1 weight per client; `select(j)` = j-th reachable id, ascending
+    up: Fenwick,
+    /// high-water mark of processed event times (global monotone guard)
+    drained_to: f64,
+}
+
 /// The fleet's availability process (one state per client for churn; one
-/// phase per client for duty cycles).
+/// phase per client for duty cycles), with an optional event-driven index
+/// (see the module docs).
 pub struct ClientAvailability {
     kind: AvailabilityKind,
     churn: Vec<ChurnState>,
     phases: Vec<f64>,
+    /// event-driven queries requested (also without an index, e.g. Always)
+    event_driven: bool,
+    /// the queue+Fenwick index (event mode, churn/duty kinds only)
+    events: Option<EventIndex>,
 }
 
 impl ClientAvailability {
+    /// Legacy per-query walk — the parity-suite oracle.
     pub fn new(kind: AvailabilityKind, n: usize, seed: u64) -> Self {
+        Self::with_mode(kind, n, seed, false)
+    }
+
+    /// Build with an explicit query mode. `event_driven = true` installs
+    /// the event queue + Fenwick index; per-client processes (RNG
+    /// streams, phases) are constructed identically in both modes, so the
+    /// underlying stochastic trajectories are the same objects.
+    pub fn with_mode(
+        kind: AvailabilityKind,
+        n: usize,
+        seed: u64,
+        event_driven: bool,
+    ) -> Self {
         let mut churn = Vec::new();
         let mut phases = Vec::new();
         match &kind {
@@ -113,7 +243,57 @@ impl ClientAvailability {
                     .collect();
             }
         }
-        ClientAvailability { kind, churn, phases }
+        let events = if event_driven {
+            match &kind {
+                AvailabilityKind::Always => None, // nothing ever changes
+                AvailabilityKind::Churn { .. } => {
+                    let mut queue = BinaryHeap::with_capacity(n);
+                    for (i, st) in churn.iter().enumerate() {
+                        queue.push(Reverse(Event {
+                            time: st.next_switch,
+                            id: i,
+                        }));
+                    }
+                    Some(EventIndex {
+                        queue,
+                        up: Fenwick::from_values(&vec![1; n]), // all start up
+                        drained_to: 0.0,
+                    })
+                }
+                AvailabilityKind::DutyCycle { period, on_fraction } => {
+                    let mut queue = BinaryHeap::new();
+                    let bits: Vec<i64> = phases
+                        .iter()
+                        .map(|&ph| {
+                            duty_up(ph, *period, *on_fraction, 0.0) as i64
+                        })
+                        .collect();
+                    if *on_fraction < 1.0 {
+                        queue.reserve(n);
+                        for (i, &ph) in phases.iter().enumerate() {
+                            let tb = duty_next_boundary(
+                                ph,
+                                *period,
+                                *on_fraction,
+                                0.0,
+                            );
+                            queue.push(Reverse(Event {
+                                time: (tb - duty_eps(*period)).max(0.0),
+                                id: i,
+                            }));
+                        }
+                    } // on_fraction == 1.0: permanently up, no boundaries
+                    Some(EventIndex {
+                        queue,
+                        up: Fenwick::from_values(&bits),
+                        drained_to: 0.0,
+                    })
+                }
+            }
+        } else {
+            None
+        };
+        ClientAvailability { kind, churn, phases, event_driven, events }
     }
 
     pub fn kind(&self) -> &AvailabilityKind {
@@ -123,6 +303,84 @@ impl ClientAvailability {
     /// True when no process gates the fleet (the exact pre-net path).
     pub fn is_always(&self) -> bool {
         self.kind == AvailabilityKind::Always
+    }
+
+    /// True when queries run through the event queue + Fenwick index.
+    pub fn is_event_driven(&self) -> bool {
+        self.event_driven
+    }
+
+    /// Process every transition due at or before `t`, keeping churn
+    /// states and the Fenwick up-bits current. O(events·log n); a no-op
+    /// when nothing is due. Event-mode queries must be globally
+    /// non-decreasing in `t` (every algorithm's clock is monotone).
+    fn drain(&mut self, t: f64) {
+        let ClientAvailability { kind, churn, phases, events, .. } = self;
+        let Some(ev) = events.as_mut() else { return };
+        debug_assert!(
+            t >= ev.drained_to,
+            "event-driven availability queried at t={t} after t={} — \
+             queries must be globally non-decreasing",
+            ev.drained_to
+        );
+        if t < ev.drained_to {
+            return; // release-mode safety: never rewind the index
+        }
+        ev.drained_to = t;
+        match kind {
+            AvailabilityKind::Always => {}
+            AvailabilityKind::Churn { mean_up, mean_down } => {
+                let (mu, md) = (*mean_up, *mean_down);
+                while let Some(Reverse(top)) = ev.queue.peek() {
+                    if top.time > t {
+                        break;
+                    }
+                    let Reverse(Event { id, .. }) = ev.queue.pop().unwrap();
+                    let st = &mut churn[id];
+                    let was_up = st.up;
+                    // Identical to the legacy advance_churn walk: same
+                    // per-client RNG stream, same draw order.
+                    while st.next_switch <= t {
+                        st.up = !st.up;
+                        let mean = if st.up { mu } else { md };
+                        st.next_switch += st.rng.exponential(1.0 / mean);
+                    }
+                    if st.up != was_up {
+                        ev.up.add(id, if st.up { 1 } else { -1 });
+                    }
+                    ev.queue.push(Reverse(Event {
+                        time: st.next_switch,
+                        id,
+                    }));
+                }
+            }
+            AvailabilityKind::DutyCycle { period, on_fraction } => {
+                let (p, on) = (*period, *on_fraction);
+                while let Some(Reverse(top)) = ev.queue.peek() {
+                    if top.time > t {
+                        break;
+                    }
+                    let Reverse(Event { id, .. }) = ev.queue.pop().unwrap();
+                    // The event time is conservative; the *exact* legacy
+                    // predicate at the drain instant decides the bit.
+                    let now_up = duty_up(phases[id], p, on, t);
+                    let was_up = ev.up.get(id) == 1;
+                    if now_up != was_up {
+                        ev.up.add(id, if now_up { 1 } else { -1 });
+                    }
+                    let mut te =
+                        duty_next_boundary(phases[id], p, on, t) - duty_eps(p);
+                    if te <= t {
+                        // Boundary is imminent (within eps): park the
+                        // event just after t so the next drain at or past
+                        // the edge applies the flip. Never re-fires
+                        // within this drain.
+                        te = next_after_pos(t);
+                    }
+                    ev.queue.push(Reverse(Event { time: te, id }));
+                }
+            }
+        }
     }
 
     fn advance_churn(&mut self, i: usize, t: f64) {
@@ -138,16 +396,24 @@ impl ClientAvailability {
         }
     }
 
-    /// Is client `i` reachable at time `t`? (`t` non-decreasing per client)
+    /// Is client `i` reachable at time `t`? (`t` non-decreasing — per
+    /// client in legacy mode, globally in event mode)
     pub fn is_up(&mut self, i: usize, t: f64) -> bool {
         match &self.kind {
             AvailabilityKind::Always => true,
             AvailabilityKind::Churn { .. } => {
-                self.advance_churn(i, t);
+                if self.events.is_some() {
+                    // After the drain every next_switch exceeds t, so the
+                    // stored state is the state at t.
+                    self.drain(t);
+                } else {
+                    self.advance_churn(i, t);
+                }
                 self.churn[i].up
             }
             AvailabilityKind::DutyCycle { period, on_fraction } => {
-                (t + self.phases[i]).rem_euclid(*period) < on_fraction * period
+                // Closed-form in both modes — stateless, bit-identical.
+                duty_up(self.phases[i], *period, *on_fraction, t)
             }
         }
     }
@@ -159,7 +425,11 @@ impl ClientAvailability {
         match &self.kind {
             AvailabilityKind::Always => t,
             AvailabilityKind::Churn { .. } => {
-                self.advance_churn(i, t);
+                if self.events.is_some() {
+                    self.drain(t);
+                } else {
+                    self.advance_churn(i, t);
+                }
                 if self.churn[i].up {
                     t
                 } else {
@@ -177,11 +447,32 @@ impl ClientAvailability {
         }
     }
 
+    /// All clients reachable at `t`, ascending id order — the candidate
+    /// set the non-uniform selection policies rank. Legacy mode walks all
+    /// n clients; event mode enumerates the `u` set bits of the Fenwick
+    /// index by rank in O(u log n). Identical output, zero RNG, in both.
+    pub fn reachable(&mut self, n: usize, t: f64) -> Vec<usize> {
+        if self.is_always() {
+            return (0..n).collect();
+        }
+        if self.events.is_some() {
+            self.drain(t);
+            let ev = self.events.as_ref().unwrap();
+            debug_assert_eq!(ev.up.len(), n, "fleet size mismatch");
+            return (0..ev.up.total()).map(|j| ev.up.select(j)).collect();
+        }
+        (0..n).filter(|&i| self.is_up(i, t)).collect()
+    }
+
     /// Sample up to `s` distinct reachable clients at time `t`. With
     /// `Always` this is exactly `rng.sample_distinct(n, s)` — same RNG
-    /// stream, same result as the pre-net code. Otherwise the reachable
-    /// subset is enumerated first and the draw happens inside it; if the
-    /// subset has <= `s` members they are all returned (a short round).
+    /// stream, same result as the pre-net code (event mode runs the
+    /// bit-identical sparse draw). Otherwise the draw happens inside the
+    /// reachable subset; if it has <= `s` members they are all returned
+    /// in ascending order without consuming randomness (a short round).
+    /// Event mode replaces the materialized subset with Fenwick
+    /// rank-selection: `select(j)` is the legacy `up[j]`, so picks and
+    /// residual streams match the legacy path bit for bit.
     pub fn sample(
         &mut self,
         rng: &mut Rng,
@@ -190,7 +481,25 @@ impl ClientAvailability {
         t: f64,
     ) -> Vec<usize> {
         if self.is_always() {
-            return rng.sample_distinct(n, s);
+            return if self.event_driven {
+                rng.sample_distinct_sparse(n, s)
+            } else {
+                rng.sample_distinct(n, s)
+            };
+        }
+        if self.events.is_some() {
+            self.drain(t);
+            let ev = self.events.as_ref().unwrap();
+            debug_assert_eq!(ev.up.len(), n, "fleet size mismatch");
+            let m = ev.up.total();
+            if m as usize <= s {
+                return (0..m).map(|j| ev.up.select(j)).collect();
+            }
+            return rng
+                .sample_distinct_sparse(m as usize, s)
+                .into_iter()
+                .map(|j| ev.up.select(j as i64))
+                .collect();
         }
         let up: Vec<usize> = (0..n).filter(|&i| self.is_up(i, t)).collect();
         if up.len() <= s {
@@ -223,6 +532,27 @@ mod tests {
     }
 
     #[test]
+    fn always_event_mode_matches_plain_sampling_stream() {
+        let mut av = ClientAvailability::with_mode(
+            AvailabilityKind::Always,
+            20,
+            1,
+            true,
+        );
+        assert!(av.is_event_driven());
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        for t in 0..10 {
+            assert_eq!(
+                av.sample(&mut r1, 20, 6, t as f64),
+                r2.sample_distinct(20, 6)
+            );
+        }
+        assert_eq!(r1.next_u64(), r2.next_u64(), "residual streams");
+        assert_eq!(av.next_up(3, 17.5).to_bits(), 17.5f64.to_bits());
+    }
+
+    #[test]
     fn churn_replays_identically() {
         let kind = AvailabilityKind::Churn { mean_up: 30.0, mean_down: 10.0 };
         let mut a = ClientAvailability::new(kind.clone(), 8, 9);
@@ -232,6 +562,29 @@ mod tests {
             for i in 0..8 {
                 assert_eq!(a.is_up(i, t), b.is_up(i, t), "client {i} at {t}");
             }
+        }
+    }
+
+    #[test]
+    fn churn_event_mode_matches_legacy() {
+        let kind = AvailabilityKind::Churn { mean_up: 30.0, mean_down: 10.0 };
+        let mut legacy = ClientAvailability::new(kind.clone(), 8, 9);
+        let mut event = ClientAvailability::with_mode(kind, 8, 9, true);
+        for step in 0..200 {
+            let t = step as f64 * 1.7;
+            for i in 0..8 {
+                assert_eq!(
+                    legacy.is_up(i, t),
+                    event.is_up(i, t),
+                    "client {i} at {t}"
+                );
+                assert_eq!(
+                    legacy.next_up(i, t).to_bits(),
+                    event.next_up(i, t).to_bits(),
+                    "client {i} at {t}"
+                );
+            }
+            assert_eq!(legacy.reachable(8, t), event.reachable(8, t), "t={t}");
         }
     }
 
@@ -311,6 +664,36 @@ mod tests {
     }
 
     #[test]
+    fn duty_event_mode_matches_legacy() {
+        let kind =
+            AvailabilityKind::DutyCycle { period: 10.0, on_fraction: 0.3 };
+        let mut legacy = ClientAvailability::new(kind.clone(), 12, 7);
+        let mut event = ClientAvailability::with_mode(kind, 12, 7, true);
+        for step in 0..300 {
+            let t = step as f64 * 0.31;
+            for i in 0..12 {
+                assert_eq!(
+                    legacy.is_up(i, t),
+                    event.is_up(i, t),
+                    "client {i} at {t}"
+                );
+            }
+            assert_eq!(legacy.reachable(12, t), event.reachable(12, t), "t={t}");
+        }
+    }
+
+    #[test]
+    fn duty_full_on_fraction_has_no_events_and_everyone_up() {
+        let kind =
+            AvailabilityKind::DutyCycle { period: 10.0, on_fraction: 1.0 };
+        let mut event = ClientAvailability::with_mode(kind, 6, 3, true);
+        for step in 0..20 {
+            let t = step as f64 * 3.3;
+            assert_eq!(event.reachable(6, t), (0..6).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
     fn gated_sampling_returns_only_reachable_clients() {
         let kind =
             AvailabilityKind::DutyCycle { period: 10.0, on_fraction: 0.3 };
@@ -327,6 +710,30 @@ mod tests {
             for &i in &picked {
                 assert!(av.is_up(i, t), "client {i} sampled while down");
             }
+        }
+    }
+
+    #[test]
+    fn event_sampling_matches_legacy_streams() {
+        for kind in [
+            AvailabilityKind::Churn { mean_up: 40.0, mean_down: 15.0 },
+            AvailabilityKind::DutyCycle { period: 12.0, on_fraction: 0.4 },
+        ] {
+            let mut legacy = ClientAvailability::new(kind.clone(), 40, 13);
+            let mut event =
+                ClientAvailability::with_mode(kind.clone(), 40, 13, true);
+            let mut r1 = Rng::new(99);
+            let mut r2 = Rng::new(99);
+            for k in 0..60 {
+                let t = k as f64 * 2.9;
+                assert_eq!(
+                    legacy.sample(&mut r1, 40, 7, t),
+                    event.sample(&mut r2, 40, 7, t),
+                    "{} t={t}",
+                    kind.name()
+                );
+            }
+            assert_eq!(r1.next_u64(), r2.next_u64(), "{}", kind.name());
         }
     }
 

@@ -292,12 +292,21 @@ impl NetworkConfig {
     }
 
     /// Materialize the availability process (seeded independently of the
-    /// transport draws).
-    pub fn build_availability(&self, n: usize, seed: u64) -> ClientAvailability {
-        ClientAvailability::new(
+    /// transport draws). `event_driven` picks the query engine — the
+    /// O(s log n) event queue + Fenwick index or the legacy O(n) walk —
+    /// without touching the seeded process itself (the two are
+    /// bit-identical on every query; rust/tests/scale_parity.rs).
+    pub fn build_availability(
+        &self,
+        n: usize,
+        seed: u64,
+        event_driven: bool,
+    ) -> ClientAvailability {
+        ClientAvailability::with_mode(
             self.availability.clone(),
             n,
             derive_seed(seed, 0xA4A1),
+            event_driven,
         )
     }
 }

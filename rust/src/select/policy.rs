@@ -15,12 +15,15 @@
 //! [`crate::net::ClientAvailability::sample`] verbatim, consuming the
 //! exact RNG sequence the pre-subsystem code consumed.
 //!
-//! Cost note: the non-uniform `admit` hooks scan the reachable set (and
-//! loss-poc sorts the observed losses) on every FedBuff arrival — O(n)
-//! to O(n·log n) per pop, ~1 ms at the n=10⁴ fleet scale, dwarfed by the
-//! K-step SGD burst each arrival already paid for. If a policy ever
-//! needs per-arrival admission at n ≫ 10⁴, cache the reachable median
-//! per aggregation (the tracker only changes at pops the server sees).
+//! Cost note: with the event-driven availability index,
+//! `view.reachable()` costs O(u log n) in the number of *up* clients, so
+//! the non-uniform policies (which rank the reachable set) scale with
+//! reachability, not fleet size; `Uniform` never materialises the set at
+//! all (O(s log n)). The non-uniform `admit` hooks still scan the
+//! reachable set (and loss-poc sorts the observed losses) on every
+//! FedBuff arrival — if a policy ever needs per-arrival admission with
+//! u ≫ 10⁴ up clients, cache the reachable median per aggregation (the
+//! tracker only changes at pops the server sees).
 
 use std::cmp::Ordering;
 
@@ -44,12 +47,12 @@ pub struct SelectionView<'a> {
 }
 
 impl SelectionView<'_> {
-    /// Clients reachable at `now`, ascending id order.
+    /// Clients reachable at `now`, ascending id order. Delegates to
+    /// [`ClientAvailability::reachable`]: the legacy mode walks all n
+    /// clients, the event-driven mode enumerates the up-set by Fenwick
+    /// rank in O(u log n) — identical output either way.
     pub fn reachable(&mut self) -> Vec<usize> {
-        let now = self.now;
-        (0..self.n)
-            .filter(|&i| self.availability.is_up(i, now))
-            .collect()
+        self.availability.reachable(self.n, self.now)
     }
 
     /// The exact pre-subsystem uniform draw: same RNG stream, same picks

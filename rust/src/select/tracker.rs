@@ -17,6 +17,34 @@
 //! the algorithms stamp snapshots in both at the same program points and
 //! advance both counters together (a `debug_assert` in QuAFL/FedBuff
 //! checks the lockstep on every round of every debug-build test run).
+//!
+//! ## Incremental aggregates
+//!
+//! The Gini/staleness metrics used to be O(n) scans per eval point (sort
+//! + sum), which at n=10⁶ dominates a round. They are now maintained
+//! incrementally — O(log max_count) on `record_participation`, O(1)
+//! amortized on `note_snapshot`/`advance_round`:
+//!
+//! - **Gini** via the pairwise half-sum `S2 = Σ_{i<j} |c_i − c_j|`
+//!   (`i128`). When `c_i` goes `a → a+1`, `ΔS2 = 2·le − n − 1` where
+//!   `le = #{j : c_j ≤ a}` (including `i` itself), answered by a Fenwick
+//!   tree over count *values* ([`crate::util::fenwick`], capacity-doubled
+//!   as counts grow). The sorted-scan numerator
+//!   `Σ_i (2(i+1) − n − 1)·c_(i)` equals `S2` by the standard identity,
+//!   so `G = S2 / (n·total)` is the same statistic.
+//! - **Mean staleness** from the running `Σ snapshot_round`:
+//!   `mean = (n·round − snap_sum) / n`, integer-exact before the single
+//!   final division.
+//! - **Max staleness** as `round − min(snapshot_round)`, with the min
+//!   maintained by a frequency-by-round table and a monotone pointer
+//!   (snapshot rounds only ever increase, so the pointer never rewinds).
+//!
+//! The old full scans are retained as `*_scan` oracles; property tests
+//! (here and in rust/tests/scale_parity.rs) check the incremental values
+//! stay **bitwise** equal to them under arbitrary interleavings of
+//! `record_participation`/`note_snapshot`/`advance_round`.
+
+use crate::util::fenwick::Fenwick;
 
 /// Per-client participation history (see the module docs).
 #[derive(Clone, Debug)]
@@ -26,16 +54,39 @@ pub struct ParticipationTracker {
     last_served: Vec<f64>,
     snapshot_round: Vec<u64>,
     last_loss: Vec<Option<f64>>,
+    /// Σ counts
+    total: u64,
+    /// Σ_{i<j} |c_i − c_j| — the Gini numerator
+    pair_abs_sum: i128,
+    /// count value → #clients holding it (mirror of `cnt_index`)
+    cnt_freq: Vec<i64>,
+    /// Fenwick over `cnt_freq`: prefix(v+1) = #{j : c_j ≤ v}
+    cnt_index: Fenwick,
+    /// Σ snapshot_round
+    snap_sum: u128,
+    /// round value → #clients whose snapshot is from that round
+    snap_freq: Vec<u64>,
+    /// min(snapshot_round) — only ever increases
+    min_snap: u64,
 }
 
 impl ParticipationTracker {
     pub fn new(n: usize) -> Self {
+        let cnt_freq = vec![n as i64, 0];
+        let cnt_index = Fenwick::from_values(&cnt_freq);
         ParticipationTracker {
             round: 0,
             counts: vec![0; n],
             last_served: vec![f64::NEG_INFINITY; n],
             snapshot_round: vec![0; n],
             last_loss: vec![None; n],
+            total: 0,
+            pair_abs_sum: 0,
+            cnt_freq,
+            cnt_index,
+            snap_sum: 0,
+            snap_freq: vec![n as u64],
+            min_snap: 0,
         }
     }
 
@@ -62,14 +113,45 @@ impl ParticipationTracker {
 
     /// Client `i` participated (contributed to the model) at `now`.
     pub fn record_participation(&mut self, i: usize, now: f64) {
-        self.counts[i] += 1;
+        let a = self.counts[i];
+        // ΔS2 for c_i: a → a+1, with le counting i itself (c_i = a ≤ a).
+        let le = self.cnt_index.prefix(a as usize + 1) as i128;
+        self.pair_abs_sum += 2 * le - self.counts.len() as i128 - 1;
+        let new = a as usize + 1;
+        if new >= self.cnt_freq.len() {
+            // Counts only grow; double the value range and rebuild (O(n)
+            // amortized over the doublings).
+            self.cnt_freq.resize((new + 1).next_power_of_two(), 0);
+            self.cnt_index = Fenwick::from_values(&self.cnt_freq);
+        }
+        self.cnt_freq[a as usize] -= 1;
+        self.cnt_freq[new] += 1;
+        self.cnt_index.add(a as usize, -1);
+        self.cnt_index.add(new, 1);
+        self.counts[i] = a + 1;
+        self.total += 1;
         self.last_served[i] = now;
     }
 
     /// Client `i` (re)installed a model snapshot this round — a QuAFL
     /// post-round update or a FedBuff pull, admitted or not.
     pub fn note_snapshot(&mut self, i: usize) {
+        let old = self.snapshot_round[i];
+        if old == self.round {
+            return;
+        }
+        self.snap_sum += (self.round - old) as u128;
+        self.snap_freq[old as usize] -= 1;
+        if self.snap_freq.len() <= self.round as usize {
+            self.snap_freq.resize(self.round as usize + 1, 0);
+        }
+        self.snap_freq[self.round as usize] += 1;
         self.snapshot_round[i] = self.round;
+        // The vacated minimum can only move up — chase it eagerly; some
+        // client always holds a round >= min_snap, so this terminates.
+        while self.snap_freq[self.min_snap as usize] == 0 {
+            self.min_snap += 1;
+        }
     }
 
     /// Record client `i`'s last observed mean local loss (non-finite
@@ -100,8 +182,19 @@ impl ParticipationTracker {
     }
 
     /// Gini coefficient of the participation counts (0 = perfectly
-    /// equal; → 1 as participation concentrates on few clients).
+    /// equal; → 1 as participation concentrates on few clients). O(1)
+    /// from the incrementally maintained pairwise sum.
     pub fn participation_gini(&self) -> f64 {
+        let n = self.counts.len();
+        if n == 0 || self.total == 0 {
+            return 0.0;
+        }
+        self.pair_abs_sum as f64 / (n as f64 * self.total as f64)
+    }
+
+    /// Full-scan Gini oracle — the pre-event-driven implementation with
+    /// an integer-exact numerator, retained for the parity suite.
+    pub fn participation_gini_scan(&self) -> f64 {
         let n = self.counts.len();
         let total: u64 = self.counts.iter().sum();
         if n == 0 || total == 0 {
@@ -109,17 +202,28 @@ impl ParticipationTracker {
         }
         let mut sorted = self.counts.clone();
         sorted.sort_unstable();
-        // G = Σ_i (2(i+1) − n − 1)·c_(i) / (n·Σc) over ascending c_(i).
-        let num: f64 = sorted
+        // G = Σ_i (2(i+1) − n − 1)·c_(i) / (n·Σc) over ascending c_(i);
+        // the numerator equals Σ_{i<j} |c_i − c_j|.
+        let num: i128 = sorted
             .iter()
             .enumerate()
-            .map(|(i, &c)| (2.0 * (i as f64 + 1.0) - n as f64 - 1.0) * c as f64)
+            .map(|(i, &c)| {
+                (2 * (i as i128 + 1) - n as i128 - 1) * c as i128
+            })
             .sum();
-        num / (n as f64 * total as f64)
+        num as f64 / (n as f64 * total as f64)
     }
 
-    /// Max snapshot staleness across the fleet.
+    /// Max snapshot staleness across the fleet. O(1).
     pub fn max_staleness(&self) -> u64 {
+        if self.counts.is_empty() {
+            return 0;
+        }
+        self.round - self.min_snap
+    }
+
+    /// Full-scan max-staleness oracle, retained for the parity suite.
+    pub fn max_staleness_scan(&self) -> u64 {
         self.snapshot_round
             .iter()
             .map(|&r| self.round - r)
@@ -127,8 +231,18 @@ impl ParticipationTracker {
             .unwrap_or(0)
     }
 
-    /// Mean snapshot staleness across the fleet.
+    /// Mean snapshot staleness across the fleet. O(1).
     pub fn mean_staleness(&self) -> f64 {
+        let n = self.snapshot_round.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let sum = n as u128 * self.round as u128 - self.snap_sum;
+        sum as f64 / n as f64
+    }
+
+    /// Full-scan mean-staleness oracle, retained for the parity suite.
+    pub fn mean_staleness_scan(&self) -> f64 {
         if self.snapshot_round.is_empty() {
             return 0.0;
         }
@@ -140,6 +254,7 @@ impl ParticipationTracker {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn fresh_tracker_is_all_zero() {
@@ -214,5 +329,53 @@ mod tests {
         assert_eq!(t.loss(0), Some(1.5));
         t.note_loss(0, 0.5);
         assert_eq!(t.loss(0), Some(0.5));
+    }
+
+    #[test]
+    fn incremental_aggregates_match_scans_under_random_interleavings() {
+        // Satellite 3: any divergence between the incremental aggregates
+        // and the retained full scans is a bug in the incremental path —
+        // equality must be *bitwise*, not approximate.
+        for seed in [1u64, 17, 303] {
+            let mut rng = Rng::new(seed);
+            let n = 1 + rng.gen_range(30);
+            let mut t = ParticipationTracker::new(n);
+            for step in 0..2000 {
+                match rng.gen_range(4) {
+                    0 => t.advance_round(),
+                    1 => {
+                        let i = rng.gen_range(n);
+                        t.record_participation(i, step as f64);
+                    }
+                    _ => t.note_snapshot(rng.gen_range(n)),
+                }
+                assert_eq!(
+                    t.participation_gini().to_bits(),
+                    t.participation_gini_scan().to_bits(),
+                    "gini diverged at step {step} (seed {seed}, n {n})"
+                );
+                assert_eq!(
+                    t.max_staleness(),
+                    t.max_staleness_scan(),
+                    "max staleness diverged at step {step} (seed {seed})"
+                );
+                assert_eq!(
+                    t.mean_staleness().to_bits(),
+                    t.mean_staleness_scan().to_bits(),
+                    "mean staleness diverged at step {step} (seed {seed})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_tracker_aggregates_are_zero() {
+        let mut t = ParticipationTracker::new(0);
+        t.advance_round();
+        assert_eq!(t.participation_gini(), 0.0);
+        assert_eq!(t.max_staleness(), 0);
+        assert_eq!(t.mean_staleness(), 0.0);
+        assert_eq!(t.max_staleness_scan(), 0);
+        assert_eq!(t.mean_staleness_scan(), 0.0);
     }
 }

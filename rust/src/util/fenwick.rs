@@ -1,0 +1,288 @@
+//! Fenwick (binary-indexed) tree over non-negative integer weights, with
+//! O(log n) point update, prefix sum, and rank-select.
+//!
+//! Two roles in the event-driven fleet path ([`crate::net::availability`]):
+//!
+//! - as a **dynamic bitset with order statistics** (all weights 0/1):
+//!   `select(j)` returns the id of the j-th reachable client in ascending
+//!   order — exactly `up[j]` of the legacy materialized candidate vector,
+//!   without ever building it;
+//! - as a **weighted sampler**: draw `k = rng.gen_range(total)` and map it
+//!   through `select(k)` — each index lands with probability
+//!   `weight/total`, updating in O(log n) when weights change.
+
+use crate::util::rng::Rng;
+
+/// Fenwick tree over `n` slots of non-negative i64 weights.
+#[derive(Clone, Debug)]
+pub struct Fenwick {
+    /// 1-indexed partial sums (classic BIT layout); tree[0] unused
+    tree: Vec<i64>,
+    n: usize,
+    total: i64,
+}
+
+impl Fenwick {
+    /// All-zero tree over `n` slots.
+    pub fn new(n: usize) -> Self {
+        Fenwick { tree: vec![0; n + 1], n, total: 0 }
+    }
+
+    /// Build from per-slot values in O(n): each leaf's partial sum is
+    /// folded into exactly one parent node.
+    pub fn from_values(values: &[i64]) -> Self {
+        let n = values.len();
+        let mut tree = vec![0i64; n + 1];
+        let mut total = 0i64;
+        for (i, &v) in values.iter().enumerate() {
+            debug_assert!(v >= 0, "fenwick weights must be non-negative");
+            total += v;
+            tree[i + 1] += v;
+        }
+        for idx in 1..=n {
+            let parent = idx + (idx & idx.wrapping_neg());
+            if parent <= n {
+                tree[parent] += tree[idx];
+            }
+        }
+        Fenwick { tree, n, total }
+    }
+
+    /// Number of slots.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Sum of all weights.
+    pub fn total(&self) -> i64 {
+        self.total
+    }
+
+    /// Add `delta` to slot `i` (the result must stay non-negative).
+    pub fn add(&mut self, i: usize, delta: i64) {
+        debug_assert!(i < self.n, "fenwick add out of range: {i} >= {}", self.n);
+        if delta == 0 {
+            return;
+        }
+        self.total += delta;
+        debug_assert!(self.total >= 0, "fenwick total went negative");
+        let mut idx = i + 1;
+        while idx <= self.n {
+            self.tree[idx] += delta;
+            idx += idx & idx.wrapping_neg();
+        }
+    }
+
+    /// Sum of weights over `[0, i)`.
+    pub fn prefix(&self, i: usize) -> i64 {
+        debug_assert!(i <= self.n, "fenwick prefix out of range");
+        let mut s = 0i64;
+        let mut idx = i;
+        while idx > 0 {
+            s += self.tree[idx];
+            idx -= idx & idx.wrapping_neg();
+        }
+        s
+    }
+
+    /// Weight at slot `i`.
+    pub fn get(&self, i: usize) -> i64 {
+        self.prefix(i + 1) - self.prefix(i)
+    }
+
+    /// Smallest index `i` with `prefix(i + 1) > k` — for 0/1 weights, the
+    /// id of the (k+1)-th set slot in ascending order. Requires
+    /// `0 <= k < total()`. O(log n) binary lifting.
+    pub fn select(&self, k: i64) -> usize {
+        debug_assert!(
+            k >= 0 && k < self.total,
+            "fenwick select rank {k} outside [0, {})",
+            self.total
+        );
+        let mut remaining = k;
+        let mut pos = 0usize; // 1-indexed cursor, currently before slot 1
+        let mut step = self.n.next_power_of_two();
+        while step > 0 {
+            let next = pos + step;
+            if next <= self.n && self.tree[next] <= remaining {
+                remaining -= self.tree[next];
+                pos = next;
+            }
+            step >>= 1;
+        }
+        // pos is the count of slots whose cumulative weight is <= k.
+        pos
+    }
+
+    /// Weighted draw: index `i` with probability `get(i) / total()`.
+    /// Consumes exactly one `gen_range(total)` call. Panics if total is 0.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        assert!(self.total > 0, "cannot sample from an empty fenwick");
+        let k = rng.gen_range(self.total as usize) as i64;
+        self.select(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Naive mirror: plain weight vector with O(n) queries.
+    struct Naive {
+        w: Vec<i64>,
+    }
+
+    impl Naive {
+        fn prefix(&self, i: usize) -> i64 {
+            self.w[..i].iter().sum()
+        }
+
+        fn select(&self, k: i64) -> usize {
+            let mut acc = 0i64;
+            for (i, &v) in self.w.iter().enumerate() {
+                acc += v;
+                if acc > k {
+                    return i;
+                }
+            }
+            panic!("rank {k} out of range");
+        }
+    }
+
+    #[test]
+    fn prefix_sums_match_naive_after_random_updates() {
+        for seed in [3u64, 11, 29] {
+            let mut rng = Rng::new(seed);
+            let n = 64;
+            let mut f = Fenwick::new(n);
+            let mut naive = Naive { w: vec![0; n] };
+            for _ in 0..500 {
+                let i = rng.gen_range(n);
+                // Insert, remove, or bump — never below zero.
+                let delta = match rng.gen_range(3) {
+                    0 => 1,
+                    1 => -(naive.w[i].min(1)),
+                    _ => rng.gen_range(5) as i64,
+                };
+                f.add(i, delta);
+                naive.w[i] += delta;
+                let q = rng.gen_range(n + 1);
+                assert_eq!(f.prefix(q), naive.prefix(q), "prefix({q})");
+                assert_eq!(f.total(), naive.prefix(n));
+                assert_eq!(f.get(i), naive.w[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn select_matches_naive_scan_on_every_rank() {
+        let mut rng = Rng::new(17);
+        let n = 40;
+        let mut f = Fenwick::new(n);
+        let mut naive = Naive { w: vec![0; n] };
+        for round in 0..50 {
+            let i = rng.gen_range(n);
+            let delta = if naive.w[i] > 0 && rng.gen_range(4) == 0 {
+                -naive.w[i]
+            } else {
+                1 + rng.gen_range(3) as i64
+            };
+            f.add(i, delta);
+            naive.w[i] += delta;
+            for k in 0..f.total() {
+                assert_eq!(f.select(k), naive.select(k), "round {round} rank {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn select_inverts_prefix_for_unit_weights() {
+        // 0/1 weights: select(j) is the j-th set bit — the order-statistic
+        // role the availability index relies on.
+        let bits = [1i64, 0, 0, 1, 1, 0, 1, 0, 0, 1];
+        let f = Fenwick::from_values(&bits);
+        let set: Vec<usize> = bits
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b == 1)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(f.total() as usize, set.len());
+        for (j, &id) in set.iter().enumerate() {
+            assert_eq!(f.select(j as i64), id, "rank {j}");
+        }
+    }
+
+    #[test]
+    fn from_values_equals_incremental_build() {
+        let vals = [3i64, 0, 7, 1, 0, 0, 2, 5];
+        let built = Fenwick::from_values(&vals);
+        let mut inc = Fenwick::new(vals.len());
+        for (i, &v) in vals.iter().enumerate() {
+            inc.add(i, v);
+        }
+        for i in 0..=vals.len() {
+            assert_eq!(built.prefix(i), inc.prefix(i));
+        }
+        assert_eq!(built.total(), inc.total());
+    }
+
+    #[test]
+    fn sampled_distribution_matches_naive_weighted_rejection() {
+        // Satellite requirement: 10⁵ draws at fixed seeds, fenwick-sampled
+        // frequencies must match a naive weighted rejection sampler (same
+        // target distribution, independent streams).
+        let weights = [5i64, 0, 1, 10, 4, 0, 20, 8];
+        let n = weights.len();
+        let total: i64 = weights.iter().sum();
+        let max_w = *weights.iter().max().unwrap();
+        let f = Fenwick::from_values(&weights);
+        let draws = 100_000usize;
+
+        let mut fen_counts = vec![0usize; n];
+        let mut rng = Rng::new(2024);
+        for _ in 0..draws {
+            fen_counts[f.sample(&mut rng)] += 1;
+        }
+
+        let mut rej_counts = vec![0usize; n];
+        let mut rej_rng = Rng::new(4048);
+        for _ in 0..draws {
+            loop {
+                let i = rej_rng.gen_range(n);
+                if (rej_rng.gen_range(max_w as usize) as i64) < weights[i] {
+                    rej_counts[i] += 1;
+                    break;
+                }
+            }
+        }
+
+        for i in 0..n {
+            let expect = draws as f64 * weights[i] as f64 / total as f64;
+            let fen = fen_counts[i] as f64;
+            let rej = rej_counts[i] as f64;
+            // Zero-weight slots must never be drawn by either sampler.
+            if weights[i] == 0 {
+                assert_eq!(fen_counts[i], 0, "slot {i}");
+                assert_eq!(rej_counts[i], 0, "slot {i}");
+                continue;
+            }
+            let tol = (expect * 5.0).sqrt().max(50.0); // ~5 sigma
+            assert!((fen - expect).abs() < tol, "slot {i}: fen {fen} vs {expect}");
+            assert!((rej - expect).abs() < tol, "slot {i}: rej {rej} vs {expect}");
+            assert!((fen - rej).abs() < 2.0 * tol, "slot {i}: fen {fen} vs rej {rej}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty fenwick")]
+    fn sampling_empty_tree_panics() {
+        let f = Fenwick::new(4);
+        let mut rng = Rng::new(1);
+        f.sample(&mut rng);
+    }
+}

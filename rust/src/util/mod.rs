@@ -1,5 +1,6 @@
 //! Dependency-free utilities: RNG + distributions, fast Walsh–Hadamard
-//! transform, bit packing, CSV/JSON writers, CLI parsing, stats.
+//! transform, bit packing, Fenwick-tree order statistics, CSV/JSON
+//! writers, CLI parsing, stats.
 //!
 //! No `rand`/`serde`/`clap` — this environment builds offline with only
 //! the `xla` and `anyhow` crates, so these substrates are implemented here
@@ -8,6 +9,7 @@
 pub mod bits;
 pub mod cli;
 pub mod csv;
+pub mod fenwick;
 pub mod hadamard;
 pub mod json;
 pub mod rng;

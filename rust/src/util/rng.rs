@@ -156,6 +156,33 @@ impl Rng {
         idx
     }
 
+    /// Exactly [`Rng::sample_distinct`] — same `gen_range` call sequence,
+    /// same result vector, same residual stream — but O(k) time and
+    /// memory instead of O(n): the dense `(0..n)` index array is replaced
+    /// by a sparse overlay recording only displaced entries. The two are
+    /// interchangeable bit for bit (rust/tests/scale_parity.rs); this one
+    /// makes million-client uniform draws affordable.
+    pub fn sample_distinct_sparse(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_distinct_sparse: k={k} > n={n}");
+        let mut moved: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::with_capacity(2 * k);
+        let at = |moved: &std::collections::HashMap<usize, usize>, p: usize| {
+            moved.get(&p).copied().unwrap_or(p)
+        };
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let j = i + self.gen_range(n - i);
+            // idx.swap(i, j) on the virtual identity array.
+            let vi = at(&moved, i);
+            let vj = at(&moved, j);
+            moved.insert(i, vj);
+            moved.insert(j, vi);
+            // Position i is final after the swap.
+            out.push(vj);
+        }
+        out
+    }
+
     /// In-place Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, v: &mut [T]) {
         for i in (1..v.len()).rev() {
@@ -307,6 +334,23 @@ mod tests {
                 (c as f64 - expect as f64).abs() < expect as f64 * 0.06,
                 "c={c} expect={expect}"
             );
+        }
+    }
+
+    #[test]
+    fn sparse_sampling_is_bitwise_identical_to_dense() {
+        for seed in [1u64, 7, 42, 1234] {
+            for &(n, k) in &[(1usize, 1usize), (10, 3), (50, 50), (1000, 17)] {
+                let mut dense = Rng::new(seed);
+                let mut sparse = Rng::new(seed);
+                assert_eq!(
+                    dense.sample_distinct(n, k),
+                    sparse.sample_distinct_sparse(n, k),
+                    "seed={seed} n={n} k={k}"
+                );
+                // Residual streams agree: same randomness consumed.
+                assert_eq!(dense.next_u64(), sparse.next_u64());
+            }
         }
     }
 

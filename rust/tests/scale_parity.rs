@@ -1,0 +1,337 @@
+//! Naive-parity property suite for the event-driven million-client round
+//! engine (`--event-driven`, default on):
+//!
+//! 1. **Sampler parity.** `Rng::sample_distinct_sparse` — the O(k)
+//!    sparse Fisher–Yates behind event-mode uniform draws — must equal
+//!    the dense `sample_distinct` bit for bit, result and residual RNG
+//!    stream alike, across shapes from k=0 to k=n.
+//! 2. **Availability parity.** The event-driven queue + Fenwick up-set
+//!    must answer *exactly* like the legacy per-client walk — same
+//!    `is_up`, same `next_up` bits, same reachable sets, same sampled
+//!    client streams and residual server RNG — for every availability
+//!    kind (always / churn / duty) under randomized non-decreasing
+//!    query-time sequences with interleaved operation types.
+//! 3. **Policy parity.** All four selection policies, fed one shared
+//!    tracker history, must pick identical clients (and leave identical
+//!    residual RNG state) whether their view is backed by the legacy or
+//!    the event-driven availability, for every availability kind.
+//! 4. **End-to-end parity.** Whole coordinator runs — QuAFL, FedBuff,
+//!    FedAvg under churn and duty cycles, plus QuAFL under every
+//!    selection policy — must produce bitwise-identical metrics with
+//!    `--event-driven` on and off.
+//! 5. **Tracker aggregate parity.** The incrementally maintained
+//!    Gini/max/mean-staleness aggregates must stay bitwise equal to the
+//!    retained full-scan oracles under arbitrary interleavings of
+//!    `record_participation` / `note_snapshot` / `advance_round`.
+//!
+//! (The Fenwick tree's own prefix-sum/select/sampling properties are
+//! unit-tested in rust/src/util/fenwick.rs.)
+
+mod common;
+
+use common::assert_identical;
+use quafl::config::{Algorithm, ExperimentConfig, TimingConfig};
+use quafl::coordinator;
+use quafl::net::{
+    AvailabilityKind, ClientAvailability, NetProfile, NetworkConfig,
+};
+use quafl::select::{
+    ParticipationTracker, SelectionKind, SelectionPolicy, SelectionView,
+};
+use quafl::util::rng::Rng;
+
+fn kinds() -> Vec<AvailabilityKind> {
+    vec![
+        AvailabilityKind::Always,
+        AvailabilityKind::Churn { mean_up: 12.0, mean_down: 5.0 },
+        AvailabilityKind::Churn { mean_up: 2.0, mean_down: 9.0 },
+        AvailabilityKind::DutyCycle { period: 7.0, on_fraction: 0.35 },
+        AvailabilityKind::DutyCycle { period: 3.0, on_fraction: 0.9 },
+        AvailabilityKind::DutyCycle { period: 10.0, on_fraction: 1.0 },
+    ]
+}
+
+#[test]
+fn sparse_fisher_yates_equals_dense_bitwise() {
+    for seed in [1u64, 5, 99, 12345] {
+        for (n, k) in [
+            (1usize, 0usize),
+            (1, 1),
+            (7, 3),
+            (30, 30),
+            (100, 1),
+            (503, 41),
+            (10_000, 64),
+        ] {
+            let mut dense = Rng::new(seed);
+            let mut sparse = Rng::new(seed);
+            assert_eq!(
+                dense.sample_distinct(n, k),
+                sparse.sample_distinct_sparse(n, k),
+                "n={n} k={k} seed={seed}"
+            );
+            // The residual streams must coincide too: callers keep
+            // drawing from the same RNG afterwards.
+            assert_eq!(dense.next_u64(), sparse.next_u64(), "residual");
+        }
+    }
+}
+
+/// Drive a legacy/event twin pair through an identical randomized op
+/// sequence at non-decreasing times and demand bitwise agreement.
+#[test]
+fn event_driven_availability_is_bit_identical_to_legacy() {
+    let n = 40;
+    let s = 7;
+    for kind in kinds() {
+        for seed in [3u64, 21, 77] {
+            let mut legacy = ClientAvailability::new(kind.clone(), n, seed);
+            let mut event =
+                ClientAvailability::with_mode(kind.clone(), n, seed, true);
+            assert!(!legacy.is_event_driven());
+            assert!(event.is_event_driven());
+            let mut server_a = Rng::new(seed ^ 0xABCD);
+            let mut server_b = Rng::new(seed ^ 0xABCD);
+            let mut driver = Rng::new(seed.wrapping_mul(31) + 7);
+            let mut t = 0.0f64;
+            for step in 0..300 {
+                t += driver.uniform(0.0, 2.5);
+                let what = format!("{} seed={seed} step={step} t={t}", kind.name());
+                match driver.gen_range(4) {
+                    0 => {
+                        let i = driver.gen_range(n);
+                        assert_eq!(
+                            legacy.is_up(i, t),
+                            event.is_up(i, t),
+                            "is_up({i}) {what}"
+                        );
+                    }
+                    1 => {
+                        let i = driver.gen_range(n);
+                        assert_eq!(
+                            legacy.next_up(i, t).to_bits(),
+                            event.next_up(i, t).to_bits(),
+                            "next_up({i}) {what}"
+                        );
+                    }
+                    2 => {
+                        assert_eq!(
+                            legacy.reachable(n, t),
+                            event.reachable(n, t),
+                            "reachable {what}"
+                        );
+                    }
+                    _ => {
+                        assert_eq!(
+                            legacy.sample(&mut server_a, n, s, t),
+                            event.sample(&mut server_b, n, s, t),
+                            "sample {what}"
+                        );
+                    }
+                }
+            }
+            // Both server streams must end in the same state: the event
+            // path consumed exactly the legacy draw sequence.
+            assert_eq!(
+                server_a.next_u64(),
+                server_b.next_u64(),
+                "{}: residual server stream",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn every_policy_picks_identically_over_both_modes() {
+    let n = 30;
+    let s = 5;
+    let policies = [
+        SelectionKind::Uniform,
+        SelectionKind::StalenessAware { cap: 3 },
+        SelectionKind::Fairness,
+        SelectionKind::LossPoc { candidates: Some(12) },
+    ];
+    for kind in kinds() {
+        for pk in &policies {
+            let mut legacy = ClientAvailability::new(kind.clone(), n, 17);
+            let mut event =
+                ClientAvailability::with_mode(kind.clone(), n, 17, true);
+            let mut pol_a = pk.build(s);
+            let mut pol_b = pk.build(s);
+            let mut rng_a = Rng::new(4242);
+            let mut rng_b = Rng::new(4242);
+            // One shared history: the policies must diverge only if the
+            // availability answers diverge.
+            let mut tracker = ParticipationTracker::new(n);
+            let mut driver = Rng::new(99);
+            let mut t = 0.0f64;
+            for step in 0..120 {
+                t += driver.uniform(0.1, 2.0);
+                let picked_a = {
+                    let mut view = SelectionView {
+                        now: t,
+                        n,
+                        availability: &mut legacy,
+                        tracker: &tracker,
+                    };
+                    pol_a.select(&mut view, &mut rng_a, s)
+                };
+                let picked_b = {
+                    let mut view = SelectionView {
+                        now: t,
+                        n,
+                        availability: &mut event,
+                        tracker: &tracker,
+                    };
+                    pol_b.select(&mut view, &mut rng_b, s)
+                };
+                assert_eq!(
+                    picked_a,
+                    picked_b,
+                    "{}/{} step {step} t={t}",
+                    kind.name(),
+                    pol_a.name()
+                );
+                tracker.advance_round();
+                for &i in &picked_a {
+                    tracker.record_participation(i, t);
+                    tracker.note_snapshot(i);
+                    tracker.note_loss(i, 1.0 / (1.0 + i as f64));
+                }
+            }
+            assert_eq!(
+                rng_a.next_u64(),
+                rng_b.next_u64(),
+                "{}/{}: residual policy RNG",
+                kind.name(),
+                pol_b.name()
+            );
+        }
+    }
+}
+
+fn e2e_base(algorithm: Algorithm) -> ExperimentConfig {
+    ExperimentConfig {
+        algorithm,
+        n: 24,
+        s: 6,
+        k: 3,
+        rounds: 6,
+        eval_every: 3,
+        train_samples: 512,
+        val_samples: 64,
+        batch: 16,
+        seed: 23,
+        workers: 2,
+        timing: TimingConfig { slow_fraction: 0.3, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn gated_net(kind: AvailabilityKind) -> NetworkConfig {
+    NetworkConfig {
+        profile: NetProfile::preset("mobile").expect("preset"),
+        availability: kind,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn whole_runs_are_bit_identical_across_modes() {
+    let gates = [
+        AvailabilityKind::Churn { mean_up: 60.0, mean_down: 30.0 },
+        AvailabilityKind::DutyCycle { period: 40.0, on_fraction: 0.5 },
+    ];
+    for algorithm in [Algorithm::QuAFL, Algorithm::FedBuff, Algorithm::FedAvg] {
+        for gate in &gates {
+            let mk = |event_driven: bool| ExperimentConfig {
+                net: gated_net(gate.clone()),
+                event_driven,
+                ..e2e_base(algorithm)
+            };
+            let on = coordinator::run(&mk(true)).expect("event-driven run");
+            let off = coordinator::run(&mk(false)).expect("legacy run");
+            assert!(!on.points.is_empty());
+            assert_identical(
+                &on,
+                &off,
+                &format!("{}/{}", algorithm.name(), gate.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn whole_runs_are_bit_identical_across_modes_for_every_policy() {
+    let policies = [
+        SelectionKind::Uniform,
+        SelectionKind::StalenessAware { cap: 4 },
+        SelectionKind::Fairness,
+        SelectionKind::LossPoc { candidates: None },
+    ];
+    for select in policies {
+        let mk = |event_driven: bool| ExperimentConfig {
+            net: gated_net(AvailabilityKind::Churn {
+                mean_up: 60.0,
+                mean_down: 30.0,
+            }),
+            select: select.clone(),
+            event_driven,
+            ..e2e_base(Algorithm::QuAFL)
+        };
+        let on = coordinator::run(&mk(true)).expect("event-driven run");
+        let off = coordinator::run(&mk(false)).expect("legacy run");
+        assert!(!on.points.is_empty());
+        assert_identical(&on, &off, select.name());
+    }
+}
+
+#[test]
+fn default_config_runs_event_driven_and_reproduces_legacy() {
+    // The toggle defaults ON; an untouched config must still reproduce
+    // the legacy (pre-event-queue) trajectory bit for bit — the Always
+    // kind's sparse draw is stream-identical to the dense one.
+    let cfg = e2e_base(Algorithm::QuAFL);
+    assert!(cfg.event_driven);
+    let on = coordinator::run(&cfg).expect("default run");
+    let off = coordinator::run(&ExperimentConfig {
+        event_driven: false,
+        ..e2e_base(Algorithm::QuAFL)
+    })
+    .expect("legacy run");
+    assert_identical(&on, &off, "default/always");
+}
+
+#[test]
+fn tracker_incremental_aggregates_match_scan_oracles() {
+    for seed in [7u64, 1234, 999_983] {
+        let mut driver = Rng::new(seed);
+        let n = 1 + driver.gen_range(50);
+        let mut t = ParticipationTracker::new(n);
+        for step in 0..3000 {
+            match driver.gen_range(5) {
+                0 | 1 => {
+                    t.record_participation(driver.gen_range(n), step as f64)
+                }
+                2 => t.advance_round(),
+                _ => t.note_snapshot(driver.gen_range(n)),
+            }
+            assert_eq!(
+                t.participation_gini().to_bits(),
+                t.participation_gini_scan().to_bits(),
+                "gini at step {step} (seed {seed}, n {n})"
+            );
+            assert_eq!(
+                t.max_staleness(),
+                t.max_staleness_scan(),
+                "max staleness at step {step} (seed {seed}, n {n})"
+            );
+            assert_eq!(
+                t.mean_staleness().to_bits(),
+                t.mean_staleness_scan().to_bits(),
+                "mean staleness at step {step} (seed {seed}, n {n})"
+            );
+        }
+    }
+}
