@@ -1,40 +1,81 @@
 //! Engine bench: XLA (AOT artifact via PJRT) vs native Rust train-step and
 //! eval latency (EXPERIMENTS.md §Perf L2). This quantifies the cost of a
 //! single simulated client step — the dominant term of every experiment.
+//!
+//! Flags (after `cargo bench --bench bench_engine --`):
+//!   --smoke         seconds-scale sampling (the CI trace-smoke job)
+//!   --out-dir DIR   write DIR/BENCH_engine.json (canonical {bench, rows})
 
 use quafl::data::{SynthFamily, SynthSpec};
 use quafl::engine::{NativeEngine, TrainEngine, XlaEngine};
 use quafl::model::ModelSpec;
-use quafl::testing::bench::bench_units;
+use quafl::testing::bench::{bench_cfg, write_bench_json, BenchResult};
+use quafl::util::cli;
 
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::parse_with_bool_flags(&argv, &["smoke"]);
+    let smoke = args.bool("smoke");
+    let (warmup, secs) = if smoke { (1, 0.05) } else { (3, 1.0) };
+
     println!("== bench_engine ==");
     let (train, val) = SynthSpec::family(SynthFamily::Mnist, 2048, 1024, 1).generate();
     let idx: Vec<usize> = (0..32).collect();
     let batch = train.gather_batch(&idx);
 
+    let mut results: Vec<BenchResult> = Vec::new();
     for model in ["mlp", "mlp_deep"] {
         let spec = ModelSpec::by_name(model).unwrap();
         let mut params = spec.init_params(3);
 
         let mut native = NativeEngine::new(spec.clone(), 32);
-        bench_units(&format!("native train_step {model}"), 32.0, "samples", || {
-            native.train_step(&mut params, &batch, 0.01).unwrap();
-        });
-        bench_units(&format!("native eval(1024) {model}"), 1024.0, "samples", || {
-            std::hint::black_box(native.evaluate(&params, &val).unwrap());
-        });
+        results.push(bench_cfg(
+            &format!("native train_step {model}"),
+            warmup,
+            secs,
+            Some((32.0, "samples")),
+            &mut || {
+                native.train_step(&mut params, &batch, 0.01).unwrap();
+            },
+        ));
+        results.push(bench_cfg(
+            &format!("native eval(1024) {model}"),
+            warmup,
+            secs,
+            Some((1024.0, "samples")),
+            &mut || {
+                std::hint::black_box(native.evaluate(&params, &val).unwrap());
+            },
+        ));
 
         if std::path::Path::new("artifacts/meta.json").exists() {
             let mut xla = XlaEngine::new("artifacts", &spec).unwrap();
-            bench_units(&format!("xla    train_step {model}"), 32.0, "samples", || {
-                xla.train_step(&mut params, &batch, 0.01).unwrap();
-            });
-            bench_units(&format!("xla    eval(1024) {model}"), 1024.0, "samples", || {
-                std::hint::black_box(xla.evaluate(&params, &val).unwrap());
-            });
+            results.push(bench_cfg(
+                &format!("xla    train_step {model}"),
+                warmup,
+                secs,
+                Some((32.0, "samples")),
+                &mut || {
+                    xla.train_step(&mut params, &batch, 0.01).unwrap();
+                },
+            ));
+            results.push(bench_cfg(
+                &format!("xla    eval(1024) {model}"),
+                warmup,
+                secs,
+                Some((1024.0, "samples")),
+                &mut || {
+                    std::hint::black_box(xla.evaluate(&params, &val).unwrap());
+                },
+            ));
         } else {
             println!("(artifacts missing — run `make artifacts` for XLA numbers)");
         }
+    }
+
+    if let Some(dir) = args.get("out-dir") {
+        let path = format!("{dir}/BENCH_engine.json");
+        write_bench_json(&path, "engine_step", &results).unwrap();
+        println!("wrote {path}");
     }
 }

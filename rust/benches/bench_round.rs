@@ -3,6 +3,10 @@
 //! quantization + sampling with the engine swapped for a no-op model) —
 //! the claim is that the coordinator is NOT the bottleneck: its share of a
 //! round must be small next to the client SGD steps.
+//!
+//! Flags (after `cargo bench --bench bench_round --`):
+//!   --smoke         clamp fleet sizes/rounds and shorten sampling (CI)
+//!   --out-dir DIR   write DIR/BENCH_round.json (canonical {bench, rows})
 
 use std::sync::Arc;
 
@@ -11,61 +15,81 @@ use quafl::coordinator;
 use quafl::exec::{ClientTask, EngineFactory, EnginePool};
 use quafl::model::params;
 use quafl::quant::{LatticeQuantizer, Quantizer};
-use quafl::testing::bench::{bench, bench_units};
+use quafl::testing::bench::{bench_cfg, write_bench_json, BenchResult};
+use quafl::util::cli;
 use quafl::util::rng::Rng;
 
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::parse_with_bool_flags(&argv, &["smoke"]);
+    let smoke = args.bool("smoke");
+    let (warmup, secs) = if smoke { (1, 0.05) } else { (3, 1.0) };
+
     println!("== bench_round ==");
+    let mut results: Vec<BenchResult> = Vec::new();
 
     // Full end-to-end rounds (engine included), per algorithm.
+    let e2e_rounds = if smoke { 2 } else { 10 };
     for algo in [Algorithm::QuAFL, Algorithm::FedAvg, Algorithm::FedBuff] {
         let cfg = ExperimentConfig {
             algorithm: algo,
             n: 20,
             s: 5,
             k: 10,
-            rounds: 10,
+            rounds: e2e_rounds,
             workers: 1,
             eval_every: 1_000_000, // never evaluate inside the bench
             train_samples: 2000,
             val_samples: 256,
             ..Default::default()
         };
-        bench_units(
-            &format!("{} 10 rounds (n=20 s=5 K=10, engine incl)", algo.name()),
-            10.0,
-            "rounds",
-            || {
+        results.push(bench_cfg(
+            &format!(
+                "{} {e2e_rounds} rounds (n=20 s=5 K=10, engine incl)",
+                algo.name()
+            ),
+            warmup,
+            secs,
+            Some((e2e_rounds as f64, "rounds")),
+            &mut || {
                 std::hint::black_box(coordinator::run(&cfg).unwrap());
             },
-        );
+        ));
     }
 
     // Parallel client-execution scaling (§exec): QuAFL at the paper's
     // large-fleet scale (n=300, s=32) across worker counts. Trajectories
     // are bit-identical across rows; only wall-clock changes. The
     // acceptance target is >= 2x speedup at workers=8 vs workers=1.
-    for workers in [1usize, 2, 4, 8] {
+    // Smoke keeps the two endpoint rows at a reduced fleet so the
+    // artifact still carries a serial-vs-parallel pair.
+    let worker_rows: &[usize] = if smoke { &[1, 8] } else { &[1, 2, 4, 8] };
+    let (scale_n, scale_s, scale_samples) =
+        if smoke { (60, 8, 1200) } else { (300, 32, 6000) };
+    for &workers in worker_rows {
         let cfg = ExperimentConfig {
             algorithm: Algorithm::QuAFL,
-            n: 300,
-            s: 32,
+            n: scale_n,
+            s: scale_s,
             k: 10,
             rounds: 2,
             workers,
             eval_every: 1_000_000,
-            train_samples: 6000,
+            train_samples: scale_samples,
             val_samples: 256,
             ..Default::default()
         };
-        bench_units(
-            &format!("quafl scaling n=300 s=32 K=10 workers={workers} (2 rounds)"),
-            2.0,
-            "rounds",
-            || {
+        results.push(bench_cfg(
+            &format!(
+                "quafl scaling n={scale_n} s={scale_s} K=10 workers={workers} (2 rounds)"
+            ),
+            warmup,
+            secs,
+            Some((2.0, "rounds")),
+            &mut || {
                 std::hint::black_box(coordinator::run(&cfg).unwrap());
             },
-        );
+        ));
     }
 
     // Fan-out overhead at large s (§exec persistent pool): dispatch s
@@ -91,11 +115,12 @@ fn main() {
             })
             .collect();
         pool.run_local_sgd(warm).unwrap();
-        bench_units(
+        results.push(bench_cfg(
             &format!("fan-out overhead s={s} workers={workers} (no-op tasks)"),
-            s as f64,
-            "tasks",
-            || {
+            warmup,
+            secs,
+            Some((s as f64, "tasks")),
+            &mut || {
                 let tasks: Vec<ClientTask> = (0..s)
                     .map(|i| ClientTask {
                         client_id: i,
@@ -107,7 +132,7 @@ fn main() {
                     .collect();
                 std::hint::black_box(pool.run_local_sgd(tasks).unwrap());
             },
-        );
+        ));
     }
 
     // Fleet-store memory (§fleet): peak resident client-model bytes at
@@ -116,9 +141,12 @@ fn main() {
     // touched <= s·rounds (+ shared bases), demonstrating the
     // acceptance target: an n=10⁴/s=30 run's resident model bytes are
     // O(s + touched), not O(n). The dense column is analytic (n·d·4) —
-    // actually allocating it is exactly what the store avoids.
+    // actually allocating it is exactly what the store avoids. This
+    // section is a one-shot measurement, not a timed BenchResult, so it
+    // stays console-only and out of BENCH_round.json.
+    let fleet_n = if smoke { 1_000 } else { 10_000 };
     for algo in [Algorithm::QuAFL, Algorithm::FedBuff] {
-        let n = 10_000;
+        let n = fleet_n;
         let s = 30;
         let rounds = 3;
         let cfg = ExperimentConfig {
@@ -165,33 +193,51 @@ fn main() {
         .collect();
     let q = LatticeQuantizer::new(10, 1e-4);
     let mut seed = 0u64;
-    bench("quafl L3-only round update (s=5, d=25450)", || {
-        seed += 1;
-        let enc_x = q.encode(&x_server, seed);
-        let mut sum = vec![0f32; d];
-        for c in &clients {
-            let enc_y = q.encode(c, seed ^ 0x99);
-            let qy = q.decode(&enc_y, &x_server);
-            params::axpy(&mut sum, 1.0, &qy);
-            std::hint::black_box(q.decode(&enc_x, c));
-        }
-        let mut xs = x_server.clone();
-        params::scale(&mut xs, 1.0 / 6.0);
-        params::axpy(&mut xs, 1.0 / 6.0, &sum);
-        std::hint::black_box(xs);
-    });
+    results.push(bench_cfg(
+        "quafl L3-only round update (s=5, d=25450)",
+        warmup,
+        secs,
+        None,
+        &mut || {
+            seed += 1;
+            let enc_x = q.encode(&x_server, seed);
+            let mut sum = vec![0f32; d];
+            for c in &clients {
+                let enc_y = q.encode(c, seed ^ 0x99);
+                let qy = q.decode(&enc_y, &x_server);
+                params::axpy(&mut sum, 1.0, &qy);
+                std::hint::black_box(q.decode(&enc_x, c));
+            }
+            let mut xs = x_server.clone();
+            params::scale(&mut xs, 1.0 / 6.0);
+            params::axpy(&mut xs, 1.0 / 6.0, &sum);
+            std::hint::black_box(xs);
+        },
+    ));
 
     // Identity path (fp32) for reference — isolates quantizer cost.
     let qn = QuantizerKind::None;
     let _ = qn;
-    bench("quafl L3-only round update, fp32 (s=5, d=25450)", || {
-        let mut sum = vec![0f32; d];
-        for c in &clients {
-            params::axpy(&mut sum, 1.0, c);
-        }
-        let mut xs = x_server.clone();
-        params::scale(&mut xs, 1.0 / 6.0);
-        params::axpy(&mut xs, 1.0 / 6.0, &sum);
-        std::hint::black_box(xs);
-    });
+    results.push(bench_cfg(
+        "quafl L3-only round update, fp32 (s=5, d=25450)",
+        warmup,
+        secs,
+        None,
+        &mut || {
+            let mut sum = vec![0f32; d];
+            for c in &clients {
+                params::axpy(&mut sum, 1.0, c);
+            }
+            let mut xs = x_server.clone();
+            params::scale(&mut xs, 1.0 / 6.0);
+            params::axpy(&mut xs, 1.0 / 6.0, &sum);
+            std::hint::black_box(xs);
+        },
+    ));
+
+    if let Some(dir) = args.get("out-dir") {
+        let path = format!("{dir}/BENCH_round.json");
+        write_bench_json(&path, "round_orchestration", &results).unwrap();
+        println!("wrote {path}");
+    }
 }

@@ -48,6 +48,8 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     ctx.eval_point(&mut metrics, 0, now, &tally, &x)?;
 
     for t in 0..cfg.rounds {
+        let round_t0 = ctx.tracer.start();
+        let round_sim0 = now;
         now += step_rng.exponential(cfg.timing.slow_lambda);
         // The task holds the sole reference, so the worker's unwrap
         // mutates the model in place without a copy.
@@ -60,7 +62,9 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             1,
             cfg.lr,
         );
+        let sgd_t0 = ctx.tracer.start();
         let mut results = ctx.pool.run_local_sgd(vec![task])?;
+        ctx.tracer.span("local_sgd", sgd_t0, t as u64, 0.0, now);
         let r = results.pop().expect("one task in, one result out");
         x = r.params;
         tally.total_steps += r.steps as u64;
@@ -70,6 +74,8 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
             ctx.eval_point(&mut metrics, t + 1, now, &tally, &x)?;
         }
+        ctx.emit_counters(t as u64, now, &tally, None);
+        ctx.tracer.span("round", round_t0, t as u64, now - round_sim0, now);
     }
     Ok(metrics)
 }

@@ -56,7 +56,11 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     let model_bits = (d * 32) as u64;
 
     for t in 0..cfg.rounds {
+        let round_t0 = ctx.tracer.start();
+        let round_sim0 = now;
+        let select_t0 = ctx.tracer.start();
         let sampled = ctx.select_clients(now);
+        ctx.tracer.span("select", select_t0, t as u64, 0.0, now);
         if cfg.track_selection {
             metrics.selections.push((now, sampled.clone()));
         }
@@ -70,6 +74,8 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
                 ctx.eval_point(&mut metrics, t + 1, now, &tally, &x_server)?;
             }
+            ctx.emit_counters(t as u64, now, &tally, None);
+            ctx.tracer.span("round", round_t0, t as u64, now - round_sim0, now);
             continue;
         }
 
@@ -77,6 +83,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         // sampled clients receive at the slowest sampled link's time, one
         // payload charged per round. None = the default per-client
         // unicast pricing (bit-exact legacy path).
+        let bcast_t0 = ctx.tracer.start();
         let bcast_t = if cfg.broadcast_downlink {
             let slowest = sampled
                 .iter()
@@ -118,18 +125,23 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             tally.bits_up += model_bits;
             tally.comm_up_time += up_t;
 
+            ctx.tracer.sample("delay", t as u64, down_t + up_t);
             tasks.push(make_task(ctx, i, x_round.clone(), cfg.k, cfg.lr));
         }
+        ctx.tracer.span("broadcast", bcast_t0, t as u64, 0.0, now);
 
         // Fan out the K-step bursts; average in sampled order (weights
         // follow the realized sample size, == s whenever all reachable).
+        let sgd_t0 = ctx.tracer.start();
         let results = ctx.pool.run_local_sgd(tasks)?;
+        ctx.tracer.span("local_sgd", sgd_t0, t as u64, 0.0, now);
         // Reduction-boundary high-water mark (same boundary QuAFL and
         // FedBuff measure at): the shared broadcast snapshot plus the s
         // returned client models held for averaging.
         tally.peak_model_bytes = tally
             .peak_model_bytes
             .max(((results.len() + 1) * d * 4) as u64);
+        let reduce_t0 = ctx.tracer.start();
         let mut sum = vec![0f32; d];
         for r in &results {
             params::axpy(&mut sum, 1.0 / sampled.len() as f32, &r.params);
@@ -144,12 +156,15 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             }
         }
         x_server = sum;
+        ctx.tracer.span("reduce", reduce_t0, t as u64, 0.0, now);
         now = round_end + cfg.timing.sit;
         ctx.tracker.advance_round();
 
         if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
             ctx.eval_point(&mut metrics, t + 1, now, &tally, &x_server)?;
         }
+        ctx.emit_counters(t as u64, now, &tally, None);
+        ctx.tracer.span("round", round_t0, t as u64, now - round_sim0, now);
     }
     Ok(metrics)
 }

@@ -160,12 +160,16 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     ctx.eval_point(&mut metrics, 0, now, &tally, &x_server)?;
 
     while aggregations < cfg.rounds {
+        let agg = aggregations as u64;
+        let round_t0 = ctx.tracer.start();
+        let round_sim0 = now;
         // Serial event-queue walk: pop the Z arrivals that fill this
         // buffer, in arrival order. Each popped client materializes its
         // burst (start snapshot + batch draws) and immediately re-pulls
         // the current server model and restarts — delayed by the model's
         // downlink time, and by the client's next availability window if
         // it churned off.
+        let select_t0 = ctx.tracer.start();
         let mut tasks = Vec::with_capacity(cfg.fedbuff_buffer);
         while tasks.len() < cfg.fedbuff_buffer {
             let Reverse(Finish { time, id }) = queue.pop().expect("queue non-empty");
@@ -181,7 +185,11 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
 
             if admitted {
                 // Client `id` finished K steps on its pulled snapshot;
-                // its burst joins the buffer fan-out.
+                // its burst joins the buffer fan-out. The staleness of the
+                // admitted update is sampled before the re-pull below
+                // refreshes the client's snapshot.
+                ctx.tracer
+                    .sample("staleness", agg, ctx.tracker.staleness(id) as f64);
                 let start = fleet.snapshot(id);
                 let mut task = make_task(ctx, id, start, cfg.k, cfg.lr);
                 if up_quant.is_some() {
@@ -210,6 +218,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             ctx.tracker.note_snapshot(id);
             let down_t = ctx.transport.downlink_time(id, model_bits);
             let up_t = ctx.transport.uplink_time(id, delta_bits);
+            ctx.tracer.sample("delay", agg, down_t + up_t);
             tally.bits_down += model_bits;
             tally.comm_down_time += down_t;
             tally.comm_up_time += up_t;
@@ -218,6 +227,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             let t_next = ctx.clocks[id].finish_time_for(cfg.k) + up_t;
             queue.push(Reverse(Finish { time: t_next, id }));
         }
+        ctx.tracer.span("select", select_t0, agg, now - round_sim0, now);
 
         // High-water measurement at the buffer boundary, where residency
         // peaks: store residents + the live pull snapshot + popped start
@@ -243,6 +253,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
 
         // Fan out the Z bursts; each worker also forms and (optionally)
         // compresses its Δ = pulled − local with its pre-assigned seed.
+        let sgd_t0 = ctx.tracer.start();
         let up_quant_ref = up_quant.as_ref();
         let deltas = ctx.pool.map(tasks, |engine: &mut dyn TrainEngine, task| {
             let id = task.client_id;
@@ -262,8 +273,10 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             };
             Ok((id, delta, bits, loss))
         })?;
+        ctx.tracer.span("local_sgd", sgd_t0, agg, 0.0, now);
 
         // Server aggregates the full buffer, applying Δs in event order.
+        let reduce_t0 = ctx.tracer.start();
         let scale = cfg.fedbuff_server_lr / deltas.len() as f32;
         for (id, delta, bits, loss) in deltas {
             tally.bits_up += bits;
@@ -272,6 +285,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             // bookkeeping — no RNG, no trajectory float).
             ctx.tracker.note_loss(id, loss as f64 / cfg.k as f64);
         }
+        ctx.tracer.span("reduce", reduce_t0, agg, 0.0, now);
         aggregations += 1;
         now += cfg.timing.sit;
         // The aggregation is FedBuff's "round": age every snapshot in
@@ -298,6 +312,8 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         if aggregations % cfg.eval_every == 0 || aggregations == cfg.rounds {
             ctx.eval_point(&mut metrics, aggregations, now, &tally, &x_server)?;
         }
+        ctx.emit_counters(agg, now, &tally, Some(&fleet));
+        ctx.tracer.span("round", round_t0, agg, now - round_sim0, now);
     }
     Ok(metrics)
 }

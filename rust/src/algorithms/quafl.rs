@@ -119,11 +119,15 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     ctx.eval_point(&mut metrics, 0, now, &tally, &x_server)?;
 
     for t in 0..cfg.rounds {
+        let round_t0 = ctx.tracer.start();
+        let round_sim0 = now;
         now += cfg.timing.swt;
         // Selection goes through the pluggable policy ([`crate::select`]);
         // the default `Uniform` consumes exactly the RNG stream the direct
         // `availability.sample` call consumed (tests/select_parity.rs).
+        let select_t0 = ctx.tracer.start();
         let sampled = ctx.select_clients(now);
+        ctx.tracer.span("select", select_t0, t as u64, 0.0, now);
         if cfg.track_selection {
             metrics.selections.push((now, sampled.clone()));
         }
@@ -144,6 +148,8 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
                 ctx.eval_point(&mut metrics, t + 1, now, &tally, &x_server)?;
             }
+            ctx.emit_counters(t as u64, now, &tally, Some(&fleet));
+            ctx.tracer.span("round", round_t0, t as u64, now - round_sim0, now);
             continue;
         }
         // With churn a round may run below the configured s; the averaging
@@ -152,8 +158,10 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         let inv_s1 = 1.0 / (sampled.len() as f32 + 1.0);
 
         // Server's outgoing message is encoded once per round.
+        let quant_t0 = ctx.tracer.start();
         let down_seed = derive_seed(cfg.seed, 0xD011 ^ ((t as u64) << 24));
         let enc_x = ctx.quantizer.encode(&x_server, down_seed);
+        ctx.tracer.span("quantize", quant_t0, t as u64, 0.0, now);
 
         // Serial pre-pass (sampled order): realize each client's partial
         // progress on its clock, account it, and snapshot its SGD burst.
@@ -172,6 +180,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         // Fan out: local SGD, Y^i formation, and both directions of the
         // quantized exchange. X_t and Enc(X_t) are round constants, so
         // every worker decodes against exactly what the serial loop would.
+        let sgd_t0 = ctx.tracer.start();
         let quantizer: &dyn Quantizer = ctx.quantizer.as_ref();
         let x_server_key = &x_server;
         let enc_x_ref = &enc_x;
@@ -222,6 +231,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             };
             Ok(ClientOutcome { client_id: i, q_y, x_next, up_bits, loss, steps })
         })?;
+        ctx.tracer.span("local_sgd", sgd_t0, t as u64, 0.0, now);
 
         // Reduction-boundary high-water mark (same boundary FedBuff and
         // FedAvg measure at): store residents plus the s returned
@@ -236,6 +246,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         // the floating-point sum matches the serial path bit for bit. Each
         // exchange is priced from its actual bits; the exchanges overlap,
         // so the round extends by the slowest one.
+        let reduce_t0 = ctx.tracer.start();
         let mut sum_qy = vec![0f32; d];
         let mut round_comm = 0f64;
         for out in outcomes {
@@ -243,6 +254,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
                 ctx.transport.downlink_time(out.client_id, enc_x.bits as u64);
             let up_t = ctx.transport.uplink_time(out.client_id, out.up_bits);
             round_comm = round_comm.max(down_t + up_t);
+            ctx.tracer.sample("delay", t as u64, down_t + up_t);
             tally.comm_down_time += down_t;
             tally.comm_up_time += up_t;
             tally.bits_up += out.up_bits;
@@ -263,6 +275,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             // and folded in the server's message.
             ctx.clocks[out.client_id].restart(now + cfg.timing.sit + down_t);
         }
+        ctx.tracer.span("reduce", reduce_t0, t as u64, 0.0, now);
 
         // Server-side model update. ClientOnly removes the server's
         // self-retention: it adopts the plain mean of client replies.
@@ -297,6 +310,8 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
             ctx.eval_point(&mut metrics, t + 1, now, &tally, &x_server)?;
         }
+        ctx.emit_counters(t as u64, now, &tally, Some(&fleet));
+        ctx.tracer.span("round", round_t0, t as u64, now - round_sim0, now);
     }
     Ok(metrics)
 }

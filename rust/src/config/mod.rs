@@ -6,6 +6,7 @@
 use crate::data::{PartitionKind, SynthFamily};
 use crate::net::NetworkConfig;
 use crate::select::SelectionKind;
+use crate::trace::Level;
 use crate::util::cli::Args;
 
 /// Which protocol to run (paper §4 comparisons).
@@ -220,6 +221,16 @@ pub struct ExperimentConfig {
     /// default on). Trajectories are bit-identical either way
     /// (rust/tests/scale_parity.rs); the legacy path is the test oracle.
     pub event_driven: bool,
+    /// structured-trace output path (`--trace out.jsonl`). `None` (the
+    /// default) keeps the [`crate::trace::Tracer`] disarmed — every hook
+    /// is a near no-op and trajectories are bit-identical either way
+    /// (rust/tests/trace_parity.rs). The sink appends, so the runs of one
+    /// `figures`/`sweep` invocation share a single trace file.
+    pub trace: Option<String>,
+    /// trace/diagnostic verbosity (`--trace-level off|error|info|debug`;
+    /// default `info`). Gates both the structured event stream and the
+    /// [`crate::log!`] stderr diagnostics.
+    pub trace_level: Level,
 }
 
 impl Default for ExperimentConfig {
@@ -256,6 +267,8 @@ impl Default for ExperimentConfig {
             broadcast_downlink: false,
             track_selection: false,
             event_driven: true,
+            trace: None,
+            trace_level: Level::Info,
         }
     }
 }
@@ -295,7 +308,7 @@ impl ExperimentConfig {
         "fedbuff-buffer", "fedbuff-server-lr", "eval-every", "batch",
         "seed", "xla", "gamma", "out", "workers",
         "price-init-broadcast", "dense-fleet", "broadcast-downlink",
-        "event-driven",
+        "event-driven", "trace", "trace-level",
     ];
 
     /// The full `run` key set: [`ExperimentConfig::CLI_KEYS`] plus the
@@ -374,6 +387,12 @@ impl ExperimentConfig {
                     ))
                 }
             };
+        }
+        if let Some(p) = args.get("trace") {
+            c.trace = Some(p.to_string());
+        }
+        if let Some(l) = args.get("trace-level") {
+            c.trace_level = Level::parse(l)?;
         }
         c.net = NetworkConfig::from_args(args)?;
         c.select = SelectionKind::from_args(args)?;
@@ -522,6 +541,23 @@ mod tests {
         );
         let c = ExperimentConfig::from_args(&a).unwrap();
         assert!(c.broadcast_downlink);
+    }
+
+    #[test]
+    fn trace_flags_parse_and_default_off() {
+        let d = ExperimentConfig::default();
+        assert!(d.trace.is_none());
+        assert_eq!(d.trace_level, Level::Info);
+        let a = cli::parse(&sv(&[
+            "run", "--trace", "out.jsonl", "--trace-level", "debug",
+        ]));
+        let c = ExperimentConfig::from_args(&a).unwrap();
+        assert_eq!(c.trace.as_deref(), Some("out.jsonl"));
+        assert_eq!(c.trace_level, Level::Debug);
+        let a = cli::parse(&sv(&["run", "--trace-level", "loud"]));
+        assert!(ExperimentConfig::from_args(&a).is_err());
+        let keys = ExperimentConfig::cli_keys();
+        assert!(keys.contains(&"trace") && keys.contains(&"trace-level"));
     }
 
     #[test]

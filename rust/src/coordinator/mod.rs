@@ -24,6 +24,8 @@ use crate::quant::{
 };
 use crate::select::{ParticipationTracker, SelectionPolicy, SelectionView};
 use crate::sim::{build_clocks, ClientClock};
+use crate::trace::{JsonlSink, Tracer};
+use crate::util::json::Json;
 use crate::util::rng::{derive_seed, Rng};
 
 /// Default location of the AOT artifacts relative to the workspace root.
@@ -62,6 +64,11 @@ pub struct FlRun {
     /// expected steps per interaction per client (H_i) — analytic, used by
     /// the weighted variant's η_i = H_min / H_i
     pub expected_h: Vec<f64>,
+    /// structured-event sink handle ([`crate::trace`]); `Tracer::off()`
+    /// unless `--trace` names a JSONL file. Every hook is a near-no-op
+    /// when off and never consumes RNG or perturbs the trajectory when
+    /// on (rust/tests/trace_parity.rs).
+    pub tracer: Tracer,
 }
 
 impl FlRun {
@@ -140,6 +147,24 @@ impl FlRun {
             cfg.event_driven,
         );
 
+        let tracer = match &cfg.trace {
+            Some(path) => {
+                let sink = JsonlSink::append(path)
+                    .with_context(|| format!("opening trace file {path}"))?;
+                Tracer::new(Arc::new(sink), cfg.trace_level)
+            }
+            None => Tracer::off(),
+        };
+        tracer.meta(vec![
+            ("algorithm", Json::Str(format!("{:?}", cfg.algorithm))),
+            ("n", Json::Num(cfg.n as f64)),
+            ("s", Json::Num(cfg.s as f64)),
+            ("k", Json::Num(cfg.k as f64)),
+            ("seed", Json::Num(cfg.seed as f64)),
+            ("workers", Json::Num(cfg.workers as f64)),
+            ("event_driven", Json::Bool(cfg.event_driven)),
+        ]);
+
         Ok(FlRun {
             cfg: cfg.clone(),
             spec,
@@ -156,7 +181,43 @@ impl FlRun {
             tracker: ParticipationTracker::new(cfg.n),
             rng: Rng::new(derive_seed(cfg.seed, 0x5E1EC7)),
             expected_h,
+            tracer,
         })
+    }
+
+    /// Poll every passive per-layer counter and emit the round's gauge
+    /// snapshot (cumulative values; `trace-report` shows last/max).
+    /// `fleet` is `None` for algorithms without a per-client model store
+    /// (the sequential baseline). One early-out branch when tracing is
+    /// off — no counter is even read.
+    pub fn emit_counters(
+        &self,
+        round: u64,
+        now: f64,
+        tally: &CommTally,
+        fleet: Option<&ClientModelStore>,
+    ) {
+        if !self.tracer.enabled() {
+            return;
+        }
+        let t = &self.tracer;
+        t.counter("pool_busy_ns", round, self.pool.busy_ns() as f64, now);
+        let (drained, depth, avail_ops) = self.availability.event_stats();
+        t.counter("events_drained", round, drained as f64, now);
+        t.counter("event_queue_depth", round, depth as f64, now);
+        let fen = avail_ops + self.tracker.fenwick_ops();
+        t.counter("fenwick_ops", round, fen as f64, now);
+        if let Some(store) = fleet {
+            t.counter(
+                "cow_materializations",
+                round,
+                store.materializations() as f64,
+                now,
+            );
+        }
+        t.counter("bits_up", round, tally.bits_up as f64, now);
+        t.counter("bits_down", round, tally.bits_down as f64, now);
+        t.counter("steps_total", round, tally.total_steps as f64, now);
     }
 
     /// Sample this round's participants through the selection policy.
@@ -229,9 +290,11 @@ impl FlRun {
         tally: &CommTally,
         params: &[f32],
     ) -> Result<()> {
+        let t0 = self.tracer.start();
         let (val_loss, val_acc) = self.pool.evaluate_sharded(params, &self.val)?;
         let (train_loss, _) =
             self.pool.evaluate_sharded(params, &self.train_probe)?;
+        self.tracer.span("eval", t0, round as u64, 0.0, sim_time);
         metrics.push(EvalPoint {
             round,
             sim_time,
@@ -305,12 +368,14 @@ pub fn run(cfg: &ExperimentConfig) -> Result<RunMetrics> {
 
 pub fn run_with_artifacts(cfg: &ExperimentConfig, artifacts: &str) -> Result<RunMetrics> {
     let mut ctx = FlRun::with_artifacts(cfg, artifacts)?;
-    match cfg.algorithm {
+    let result = match cfg.algorithm {
         Algorithm::QuAFL => algorithms::quafl::run(&mut ctx),
         Algorithm::FedAvg => algorithms::fedavg::run(&mut ctx),
         Algorithm::FedBuff => algorithms::fedbuff::run(&mut ctx),
         Algorithm::Baseline => algorithms::baseline::run(&mut ctx),
-    }
+    };
+    ctx.tracer.flush();
+    result
 }
 
 #[cfg(test)]

@@ -38,9 +38,11 @@
 //! bit-identity for workers ∈ {1, 2, 8} on all four algorithms, and
 //! `benches/bench_round.rs` measures the scaling at n=300/s=32.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -189,6 +191,12 @@ pub struct EnginePool {
     primary: Box<dyn TrainEngine>,
     workers: usize,
     pool: Vec<Worker>,
+    /// passive observability counter: cumulative nanoseconds any engine
+    /// (primary or worker) spent executing fan-out chunks. Shared with
+    /// the worker closures; [`crate::trace`] polls it at round
+    /// boundaries. Busy vs. the enclosing span's wall time is the
+    /// worker-utilization signal.
+    busy_ns: Arc<AtomicU64>,
 }
 
 impl EnginePool {
@@ -200,7 +208,19 @@ impl EnginePool {
             workers
         };
         let primary = factory.build()?;
-        Ok(EnginePool { factory, primary, workers, pool: Vec::new() })
+        Ok(EnginePool {
+            factory,
+            primary,
+            workers,
+            pool: Vec::new(),
+            busy_ns: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    /// Cumulative engine-busy nanoseconds across every fan-out so far
+    /// (the trace layer's `pool_busy_ns` counter).
+    pub fn busy_ns(&self) -> u64 {
+        self.busy_ns.load(Ordering::Relaxed)
     }
 
     /// Resolved worker count (>= 1, including the caller's thread).
@@ -238,7 +258,8 @@ impl EnginePool {
                         Err(e) => {
                             // The pool reports a generic dead-worker error
                             // on dispatch; the cause is only known here.
-                            eprintln!(
+                            crate::log!(
+                                Error,
                                 "[exec] engine worker {idx}: engine \
                                  construction failed: {e:#}"
                             );
@@ -276,13 +297,17 @@ impl EnginePool {
         }
         let workers = self.workers.min(n);
         if workers <= 1 {
+            let t0 = Instant::now();
             let mut out = Vec::with_capacity(n);
             for task in tasks {
                 out.push(f(self.primary.as_mut(), task)?);
             }
+            self.busy_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             return Ok(out);
         }
         self.ensure_workers(workers - 1)?;
+        let busy_ns = Arc::clone(&self.busy_ns);
 
         // Same contiguous chunking as the serial split would use.
         let base = n / workers;
@@ -308,10 +333,14 @@ impl EnginePool {
                 break;
             }
             let res_tx = guard.tx.as_ref().expect("sender open").clone();
+            let chunk_busy = Arc::clone(&busy_ns);
             let job: Box<dyn FnOnce(&mut dyn TrainEngine) + Send + '_> =
                 Box::new(move |engine| {
+                    let t0 = Instant::now();
                     let out: Vec<Result<R>> =
                         chunk.into_iter().map(|t| fref(engine, t)).collect();
+                    chunk_busy
+                        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     let _ = res_tx.send((w, out));
                 });
             // SAFETY: the job borrows `f` and whatever `f` captures. Every
@@ -329,10 +358,12 @@ impl EnginePool {
         }
 
         // Chunk 0 on the caller's thread while the workers run theirs.
+        let t0 = Instant::now();
         let out0: Vec<Result<R>> = chunk0
             .into_iter()
             .map(|t| f(self.primary.as_mut(), t))
             .collect();
+        busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
 
         let mut per_chunk: Vec<Option<Vec<Result<R>>>> =
             (0..workers - 1).map(|_| None).collect();
@@ -579,6 +610,22 @@ mod tests {
             assert_eq!(a.loss.to_bits(), b.loss.to_bits());
             assert_eq!(a.params, b.params);
         }
+    }
+
+    #[test]
+    fn busy_counter_accumulates_on_serial_and_parallel_paths() {
+        let (train, mut shards, params) = setup(6);
+        let mut pool = EnginePool::new(factory(), 1).unwrap();
+        assert_eq!(pool.busy_ns(), 0);
+        let tasks = make_tasks(&train, &mut shards, &params, &[2, 1, 1, 2, 1, 1]);
+        pool.run_local_sgd(tasks).unwrap();
+        let serial_busy = pool.busy_ns();
+        assert!(serial_busy > 0, "serial fan-out must record busy time");
+        let (_, mut shards2, _) = setup(6);
+        let mut pool4 = EnginePool::new(factory(), 4).unwrap();
+        let tasks = make_tasks(&train, &mut shards2, &params, &[2, 1, 1, 2, 1, 1]);
+        pool4.run_local_sgd(tasks).unwrap();
+        assert!(pool4.busy_ns() > 0, "parallel fan-out must record busy time");
     }
 
     #[test]

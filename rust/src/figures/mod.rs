@@ -125,11 +125,15 @@ fn summary_core_cells(m: &RunMetrics) -> Vec<String> {
 }
 
 /// Run a figure by id, writing one CSV per arm plus a summary row file.
+/// `trace` threads the CLI's `--trace` path into every arm's config, so
+/// one figure invocation accumulates a single JSONL trace across arms
+/// (the sink appends).
 pub fn run_figure(
     id: &str,
     out_dir: &str,
     paper_scale: bool,
     smoke: bool,
+    trace: Option<&str>,
 ) -> Result<()> {
     let arms = arms_for(id, paper_scale)
         .with_context(|| format!("unknown figure {id:?} (known: {:?})", list()))?;
@@ -141,7 +145,10 @@ pub fn run_figure(
         CsvWriter::create(format!("{out_dir}/{id}_summary.csv"), &header)?;
     for arm in arms {
         let t0 = std::time::Instant::now();
-        let cfg = if smoke { smoke_cfg(arm.cfg) } else { arm.cfg };
+        let mut cfg = if smoke { smoke_cfg(arm.cfg) } else { arm.cfg };
+        if cfg.trace.is_none() {
+            cfg.trace = trace.map(str::to_string);
+        }
         let metrics = coordinator::run(&cfg)
             .with_context(|| format!("{id} arm {}", arm.label))?;
         let path = format!("{out_dir}/{id}_{}.csv", arm.label);
@@ -155,7 +162,8 @@ pub fn run_figure(
         row.push(format!("{:.3}", metrics.zero_progress_fraction()));
         row.push(format!("{:.2}", metrics.mean_observed_steps()));
         summary.row_strs(&row)?;
-        eprintln!(
+        crate::log!(
+            Info,
             "[figures] {id}/{}: acc={:.3} ({}s)",
             arm.label,
             metrics.final_acc(),
@@ -238,7 +246,8 @@ fn write_fleet_bench(out_dir: &str, smoke: bool) -> Result<()> {
         let metrics = crate::algorithms::quafl::run(&mut ctx)
             .with_context(|| format!("fleet bench {label}: run"))?;
         let run = t1.elapsed().as_secs_f64();
-        eprintln!(
+        crate::log!(
+            Info,
             "[figures] net_fleet bench {label}: setup {setup:.2}s, {} rounds \
              in {run:.3}s (acc={:.3})",
             cfg.rounds,
@@ -343,7 +352,8 @@ pub fn run_sweep(
                     ];
                     row.extend(summary_core_cells(&metrics));
                     summary.row_strs(&row)?;
-                    eprintln!(
+                    crate::log!(
+                        Info,
                         "[sweep] {label}: acc={:.3} sim_time={:.1} ({}s)",
                         metrics.final_acc(),
                         metrics.points.last().map(|p| p.sim_time).unwrap_or(0.0),

@@ -74,6 +74,12 @@ pub struct ClientModelStore {
     epochs: Vec<u64>,
     /// the epoch stamped on writes; advanced by [`Self::advance_epoch`]
     current_epoch: u64,
+    /// passive observability counter: materializations installed via
+    /// [`Self::set`] — CoW divergences, plus (in dense mode) the deep
+    /// copies `set_shared` routes through `set`. Polled by
+    /// [`crate::trace`] at round boundaries; initial-construction copies
+    /// are not counted.
+    materializations: u64,
 }
 
 impl ClientModelStore {
@@ -98,6 +104,7 @@ impl ClientModelStore {
             dense,
             epochs: vec![0; n],
             current_epoch: 0,
+            materializations: 0,
         };
         if dense {
             for _ in 0..n {
@@ -148,6 +155,7 @@ impl ClientModelStore {
     /// stamped with the current epoch.
     pub fn set(&mut self, i: usize, model: Vec<f32>) {
         assert_eq!(model.len(), self.dim, "model dim mismatch");
+        self.materializations += 1;
         let arc = Arc::new(model);
         self.retain(&arc);
         let old = std::mem::replace(&mut self.entries[i], arc);
@@ -231,6 +239,12 @@ impl ClientModelStore {
     /// High-water mark in bytes — the `peak_model_bytes` metric.
     pub fn peak_bytes(&self) -> u64 {
         (self.peak_models * self.dim * 4) as u64
+    }
+
+    /// Models materialized through [`ClientModelStore::set`] since
+    /// construction (the trace layer's `cow_materializations` counter).
+    pub fn materializations(&self) -> u64 {
+        self.materializations
     }
 
     /// Count `a` into the residency map and update the high-water mark —
@@ -362,6 +376,23 @@ mod tests {
         let snap = dense.snapshot(0);
         dense.set_shared(1, snap);
         assert_eq!(dense.snapshot_epoch(1), 1);
+    }
+
+    #[test]
+    fn materialization_counter_counts_set_calls() {
+        let mut store = ClientModelStore::new(4, vec![0.0; 2]);
+        assert_eq!(store.materializations(), 0);
+        store.set(0, vec![1.0, 1.0]);
+        store.set(0, vec![2.0, 2.0]);
+        // Aliasing writes are free in CoW mode...
+        let snap = store.snapshot(0);
+        store.set_shared(1, snap);
+        assert_eq!(store.materializations(), 2);
+        // ...but deep-copy (and count) in dense mode.
+        let mut dense = ClientModelStore::new_dense(2, vec![0.0; 2]);
+        let snap = dense.snapshot(0);
+        dense.set_shared(1, snap);
+        assert_eq!(dense.materializations(), 1);
     }
 
     #[test]

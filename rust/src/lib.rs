@@ -71,6 +71,21 @@
 //!   net_fleet` writes the BENCH_fleet.json scaling curve); the legacy
 //!   O(n) path is kept and rust/tests/scale_parity.rs proves both modes
 //!   bit-identical on every query, policy, and end-to-end trajectory.
+//! - **L3-trace** — the structured tracing & self-profiling layer
+//!   ([`trace`]): a zero-overhead-when-off [`trace::Tracer`] handle on
+//!   [`coordinator::FlRun`] emits dual-stamped span events (wall-clock ns
+//!   + simulated seconds) around every round phase (select, broadcast,
+//!   quantize, local SGD, reduce, eval), cumulative counters for the hot
+//!   internals (EnginePool busy time, availability event-queue drains,
+//!   Fenwick operations, CoW materializations, encoded bits), and
+//!   per-interaction delay/staleness samples, to a pluggable
+//!   [`trace::TraceSink`] (buffered JSONL file via [`util::json`]; ring
+//!   buffer for tests). `--trace out.jsonl` arms it, `quafl trace-report`
+//!   aggregates a trace into a per-phase breakdown + `BENCH_phase.json`,
+//!   and the leveled [`log!`] macro is the one diagnostics channel
+//!   (stderr, mirrored into the sink). Event schema and stability rules:
+//!   docs/TRACE_SCHEMA.md; rust/tests/trace_parity.rs proves an armed
+//!   sink perturbs no RNG draw or trajectory value.
 //! - **L2/L1 (build-time Python)** — the client model's fwd/bwd/update as
 //!   JAX functions over Pallas kernels, AOT-lowered once to
 //!   `artifacts/*.hlo.txt`; [`runtime`] loads and [`engine::XlaEngine`]
@@ -95,6 +110,7 @@ pub mod runtime;
 pub mod select;
 pub mod sim;
 pub mod testing;
+pub mod trace;
 pub mod util;
 
 pub use config::ExperimentConfig;

@@ -1,11 +1,14 @@
 //! `quafl` CLI — the launcher.
 //!
 //! Subcommands:
-//!   run      — run one experiment (algorithm × data × quantizer × timing
-//!              × network)
-//!   figures  — regenerate the paper's figures (+ §net arms) as CSV series
-//!   sweep    — grid runner: algorithms × quantizers × nets × seeds
-//!   info     — print artifact/platform/runtime information
+//!   run          — run one experiment (algorithm × data × quantizer ×
+//!                  timing × network)
+//!   figures      — regenerate the paper's figures (+ §net arms) as CSV
+//!                  series
+//!   sweep        — grid runner: algorithms × quantizers × nets × seeds
+//!   trace-report — aggregate a `--trace` JSONL file into a per-phase
+//!                  breakdown + BENCH_phase.json
+//!   info         — print artifact/platform/runtime information
 //!
 //! Examples:
 //!   quafl run --algorithm quafl --n 100 --s 10 --quantizer lattice:14 \
@@ -16,10 +19,13 @@
 //!               --nets ideal,mobile --seeds 1,2 --out-dir results/sweep
 //!   quafl info
 
+use std::sync::Arc;
+
 use quafl::config::{Algorithm, ExperimentConfig, QuantizerKind};
 use quafl::coordinator;
 use quafl::figures;
 use quafl::net::NetworkConfig;
+use quafl::trace::{self, JsonlSink, Level};
 use quafl::util::cli;
 
 /// Options that never take a value (declared so trailing positionals —
@@ -32,10 +38,32 @@ const BOOL_FLAGS: &[&str] = &[
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = cli::parse_with_bool_flags(&argv, BOOL_FLAGS);
+    // Process-wide diagnostic level + optional trace mirror: `quafl::log!`
+    // lines follow `--trace-level` and, when `--trace` names a file, are
+    // mirrored into it as `log` events alongside the runs' own sinks.
+    if let Some(lvl) = args.get("trace-level") {
+        match Level::parse(lvl) {
+            Ok(l) => trace::set_log_level(l),
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    if let Some(path) = args.get("trace") {
+        match JsonlSink::append(path) {
+            Ok(sink) => trace::install_log_mirror(Arc::new(sink)),
+            Err(e) => {
+                eprintln!("opening trace file {path}: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
     let code = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("figures") => cmd_figures(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("trace-report") => cmd_trace_report(&args),
         Some("info") => cmd_info(),
         Some(other) => {
             eprintln!("unknown subcommand {other:?}");
@@ -70,6 +98,11 @@ fn usage() {
          \x20                             (reference layout; default is the\n\
          \x20                             CoW fleet store, bit-identical)\n\
          \x20 --seed INT --xla --gamma FLOAT --out FILE.csv\n\
+         tracing (default: off — hooks are no-ops, bit-identical runs):\n\
+         \x20 --trace FILE.jsonl          append structured span/counter/\n\
+         \x20                             sample events (dual wall/sim\n\
+         \x20                             stamps; see docs/TRACE_SCHEMA.md)\n\
+         \x20 --trace-level off|error|info|debug (info) diagnostic level\n\
          client selection (default: the paper's uniform draw):\n\
          \x20 --select uniform|staleness|fairness|loss-poc\n\
          \x20 --select-cap N              hard staleness cap (staleness;\n\
@@ -96,7 +129,12 @@ fn usage() {
          sweep options: run options (base config) plus\n\
          \x20 --algorithms A,B,..  --quantizers Q1,Q2,..\n\
          \x20 --nets N1,N2,.. (each: preset|DIST) --seeds S1,S2,..\n\
-         \x20 --out-dir DIR (results/sweep)\n"
+         \x20 --out-dir DIR (results/sweep)\n\
+         \n\
+         trace-report options: quafl trace-report FILE.jsonl\n\
+         \x20 --out-dir DIR (results)     prints the per-phase wall/sim\n\
+         \x20                             breakdown and writes\n\
+         \x20                             DIR/BENCH_phase.json\n"
     );
 }
 
@@ -182,7 +220,8 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
         * spec.quantizers.len()
         * spec.nets.len()
         * spec.seeds.len();
-    eprintln!(
+    quafl::log!(
+        Info,
         "[sweep] {cells} cells ({} algorithms x {} quantizers x {} nets x {} seeds) -> {out_dir}",
         spec.algorithms.len(),
         spec.quantizers.len(),
@@ -210,7 +249,8 @@ fn cmd_run(args: &cli::Args) -> i32 {
             return 2;
         }
     };
-    eprintln!(
+    quafl::log!(
+        Info,
         "[quafl] {} n={} s={} K={} rounds={} model={} quant={:?} part={:?} engine={} workers={} net={}",
         cfg.algorithm.name(),
         cfg.n,
@@ -250,7 +290,7 @@ fn cmd_run(args: &cli::Args) -> i32 {
                     eprintln!("writing {out}: {e}");
                     return 1;
                 }
-                eprintln!("[quafl] wrote {out}");
+                quafl::log!(Info, "[quafl] wrote {out}");
             }
             0
         }
@@ -262,7 +302,9 @@ fn cmd_run(args: &cli::Args) -> i32 {
 }
 
 fn cmd_figures(args: &cli::Args) -> i32 {
-    if let Err(e) = args.check_known(&["out-dir", "paper-scale", "smoke"]) {
+    if let Err(e) =
+        args.check_known(&["out-dir", "paper-scale", "smoke", "trace", "trace-level"])
+    {
         eprintln!("{e}");
         return 2;
     }
@@ -279,13 +321,56 @@ fn cmd_figures(args: &cli::Args) -> i32 {
         args.positional.clone()
     };
     for id in &ids {
-        eprintln!("[figures] {id} ...");
-        if let Err(e) = figures::run_figure(id, &out_dir, paper, smoke) {
+        quafl::log!(Info, "[figures] {id} ...");
+        if let Err(e) =
+            figures::run_figure(id, &out_dir, paper, smoke, args.get("trace"))
+        {
             eprintln!("figure {id} failed: {e:#}");
             return 1;
         }
     }
     0
+}
+
+fn cmd_trace_report(args: &cli::Args) -> i32 {
+    if let Err(e) = args.check_known(&["out-dir", "trace", "trace-level"]) {
+        eprintln!("{e}");
+        return 2;
+    }
+    let file = match args.positional.first() {
+        Some(f) => f,
+        None => {
+            eprintln!("usage: quafl trace-report FILE.jsonl [--out-dir DIR]");
+            return 2;
+        }
+    };
+    let text = match std::fs::read_to_string(file) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("reading {file}: {e}");
+            return 1;
+        }
+    };
+    let events = match quafl::util::json::parse_lines(&text) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("parsing {file}: {e}");
+            return 1;
+        }
+    };
+    let report = quafl::trace::report::aggregate(&events);
+    print!("{}", report.render());
+    let out_dir = args.get_str("out-dir", "results");
+    match report.write_bench(&out_dir) {
+        Ok(path) => {
+            quafl::log!(Info, "[trace-report] wrote {path}");
+            0
+        }
+        Err(e) => {
+            eprintln!("writing BENCH_phase.json: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_info() -> i32 {

@@ -184,6 +184,9 @@ struct EventIndex {
     up: Fenwick,
     /// high-water mark of processed event times (global monotone guard)
     drained_to: f64,
+    /// passive observability counter: transitions popped off the queue
+    /// since construction ([`crate::trace`] polls it at round boundaries)
+    drained_events: u64,
 }
 
 /// The fleet's availability process (one state per client for churn; one
@@ -258,6 +261,7 @@ impl ClientAvailability {
                         queue,
                         up: Fenwick::from_values(&vec![1; n]), // all start up
                         drained_to: 0.0,
+                        drained_events: 0,
                     })
                 }
                 AvailabilityKind::DutyCycle { period, on_fraction } => {
@@ -287,6 +291,7 @@ impl ClientAvailability {
                         queue,
                         up: Fenwick::from_values(&bits),
                         drained_to: 0.0,
+                        drained_events: 0,
                     })
                 }
             }
@@ -308,6 +313,17 @@ impl ClientAvailability {
     /// True when queries run through the event queue + Fenwick index.
     pub fn is_event_driven(&self) -> bool {
         self.event_driven
+    }
+
+    /// Passive trace counters for the event-driven index:
+    /// `(events_drained, queue_depth, fenwick_ops)` — all zero without an
+    /// index (legacy mode, or `Always`). Polled by [`crate::trace`] at
+    /// round boundaries; reading perturbs nothing.
+    pub fn event_stats(&self) -> (u64, usize, u64) {
+        match &self.events {
+            Some(ev) => (ev.drained_events, ev.queue.len(), ev.up.ops()),
+            None => (0, 0, 0),
+        }
     }
 
     /// Process every transition due at or before `t`, keeping churn
@@ -336,6 +352,7 @@ impl ClientAvailability {
                         break;
                     }
                     let Reverse(Event { id, .. }) = ev.queue.pop().unwrap();
+                    ev.drained_events += 1;
                     let st = &mut churn[id];
                     let was_up = st.up;
                     // Identical to the legacy advance_churn walk: same
@@ -361,6 +378,7 @@ impl ClientAvailability {
                         break;
                     }
                     let Reverse(Event { id, .. }) = ev.queue.pop().unwrap();
+                    ev.drained_events += 1;
                     // The event time is conservative; the *exact* legacy
                     // predicate at the drain instant decides the bit.
                     let now_up = duty_up(phases[id], p, on, t);
@@ -735,6 +753,23 @@ mod tests {
             }
             assert_eq!(r1.next_u64(), r2.next_u64(), "{}", kind.name());
         }
+    }
+
+    #[test]
+    fn event_stats_count_drains_and_stay_zero_in_legacy_mode() {
+        let kind = AvailabilityKind::Churn { mean_up: 5.0, mean_down: 5.0 };
+        let mut legacy = ClientAvailability::new(kind.clone(), 8, 3);
+        let mut event = ClientAvailability::with_mode(kind, 8, 3, true);
+        for step in 0..40 {
+            let t = step as f64 * 4.0;
+            let _ = legacy.reachable(8, t);
+            let _ = event.reachable(8, t);
+        }
+        assert_eq!(legacy.event_stats(), (0, 0, 0));
+        let (drained, depth, fops) = event.event_stats();
+        assert!(drained > 0, "churn over 160s must pop transitions");
+        assert_eq!(depth, 8, "every churn client keeps one pending event");
+        assert!(fops > 0, "fenwick served the reachability queries");
     }
 
     #[test]

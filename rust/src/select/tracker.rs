@@ -181,6 +181,15 @@ impl ParticipationTracker {
         self.last_loss[i]
     }
 
+    /// Total operations served by the tracker's internal Fenwick index
+    /// (passive trace counter; see [`crate::util::fenwick::Fenwick::ops`]).
+    /// Note the index is rebuilt on capacity doublings, which resets the
+    /// construction-time baseline — the counter is a rate signal, not an
+    /// exact lifetime tally.
+    pub fn fenwick_ops(&self) -> u64 {
+        self.cnt_index.ops()
+    }
+
     /// Gini coefficient of the participation counts (0 = perfectly
     /// equal; → 1 as participation concentrates on few clients). O(1)
     /// from the incrementally maintained pairwise sum.
@@ -366,6 +375,17 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn fenwick_ops_grow_with_participation_bookkeeping() {
+        let mut t = ParticipationTracker::new(4);
+        assert_eq!(t.fenwick_ops(), 0);
+        t.record_participation(0, 1.0);
+        let after_one = t.fenwick_ops();
+        assert!(after_one > 0, "participation must exercise the index");
+        t.record_participation(1, 2.0);
+        assert!(t.fenwick_ops() > after_one);
     }
 
     #[test]

@@ -3,7 +3,10 @@
 //! Wall-clock timing with warmup, fixed-duration sampling, and
 //! criterion-style reporting (mean ± std, p50/p95, throughput). Bench
 //! binaries (`cargo bench`) build on this; results for EXPERIMENTS.md
-//! §Perf are copied from its output.
+//! §Perf are copied from its output. [`write_bench_json`] serializes a
+//! result set as a canonical `{bench, rows}` artifact (`BENCH_engine.json`
+//! / `BENCH_round.json`, same shape as `BENCH_fleet.json` and
+//! `BENCH_phase.json`) when a bench binary is given `--out-dir`.
 
 use std::time::{Duration, Instant};
 
@@ -115,6 +118,46 @@ pub fn bench_cfg(
     r
 }
 
+/// Serialize bench results as the canonical `{bench, rows}` JSON document
+/// the CI perf artifacts use. Numbers format through the shared
+/// [`crate::util::json`] writer, so the file round-trips bit-exactly
+/// through [`crate::util::json::parse`].
+pub fn write_bench_json(
+    path: &str,
+    bench_name: &str,
+    results: &[BenchResult],
+) -> std::io::Result<()> {
+    use crate::util::json::{self, Json};
+    use std::collections::BTreeMap;
+
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("name".into(), Json::Str(r.name.clone()));
+            o.insert("mean_ns".into(), Json::Num(r.mean_ns));
+            o.insert("std_ns".into(), Json::Num(r.std_ns));
+            o.insert("p50_ns".into(), Json::Num(r.p50_ns));
+            o.insert("p95_ns".into(), Json::Num(r.p95_ns));
+            o.insert("iters".into(), Json::Num(r.iters as f64));
+            if let Some((units, label)) = r.units {
+                o.insert("units_per_iter".into(), Json::Num(units));
+                o.insert("unit".into(), Json::Str(label.to_string()));
+            }
+            Json::Obj(o)
+        })
+        .collect();
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str(bench_name.to_string()));
+    doc.insert("rows".into(), Json::Arr(rows));
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, json::to_string(&Json::Obj(doc)) + "\n")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +171,31 @@ mod tests {
         assert!(r.iters >= 5);
         assert!(r.mean_ns >= 0.0);
         assert!(count >= r.iters);
+    }
+
+    #[test]
+    fn bench_json_round_trips() {
+        let r = BenchResult {
+            name: "row".into(),
+            mean_ns: 1234.5,
+            std_ns: 10.0,
+            p50_ns: 1200.0,
+            p95_ns: 1400.0,
+            iters: 17,
+            units: Some((32.0, "samples")),
+        };
+        let dir = std::env::temp_dir().join("quafl_bench_json_test");
+        let path = dir.join("BENCH_test.json");
+        let path = path.to_str().unwrap().to_string();
+        write_bench_json(&path, "test_bench", &[r]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(&text).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("test_bench"));
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("mean_ns").unwrap().as_f64(), Some(1234.5));
+        assert_eq!(rows[0].get("unit").unwrap().as_str(), Some("samples"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,555 @@
+//! Structured tracing & self-profiling (L3-trace).
+//!
+//! A zero-overhead-when-off observability layer threaded through every
+//! subsystem: dual-stamped span events (wall-clock nanoseconds *and*
+//! simulated seconds) around each round phase, cumulative counters for
+//! the hot internals (EnginePool busy time, event-queue drains, Fenwick
+//! operations, CoW materializations, encoded bits), and per-interaction
+//! samples (delay, staleness) whose *distribution* — not just the mean —
+//! is what the async-FL analyses say drives convergence.
+//!
+//! Design rules (enforced by rust/tests/trace_parity.rs):
+//!
+//! - **Bit-exact**: no code path here draws from any RNG or reorders a
+//!   float fold. Enabling a sink changes bytes on disk, never a
+//!   trajectory value.
+//! - **Zero overhead when off**: the [`Tracer`] handle wraps an
+//!   `Option<Arc<dyn TraceSink>>`; every hook starts with an `is_some()`
+//!   check, and [`Tracer::start`] only reads the clock when a sink is
+//!   armed, so the disabled path is a branch on a local option.
+//! - **One channel**: diagnostics go through the leveled [`crate::log!`]
+//!   macro (stderr by default); when the CLI installs a sink mirror they
+//!   also land in the JSONL stream as `log` events.
+//!
+//! Event kinds and field-level stability guarantees are documented in
+//! `docs/TRACE_SCHEMA.md`. Aggregation (`quafl trace-report`,
+//! `BENCH_phase.json`) lives in [`report`].
+
+pub mod report;
+
+use std::collections::BTreeMap;
+use std::fs::OpenOptions;
+use std::io::{BufWriter, Write as _};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+/// Verbosity level, total-ordered `Off < Error < Info < Debug`.
+///
+/// For the trace stream, `Info` (the default) records every structured
+/// event kind; `Error` and `Off` suppress spans/counters/samples (the
+/// sink then only sees mirrored `log` events at or below the level).
+/// For the [`crate::log!`] macro the level gates stderr diagnostics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Result<Level, String> {
+        match s {
+            "off" => Ok(Level::Off),
+            "error" => Ok(Level::Error),
+            "info" => Ok(Level::Info),
+            "debug" => Ok(Level::Debug),
+            other => Err(format!(
+                "unknown trace level {other:?}; expected off|error|info|debug"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Error => "error",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// One structured trace event. The JSONL encoding (see
+/// [`Event::to_json`]) tags each line with a `kind` discriminator so
+/// downstream tooling can dispatch without schema negotiation.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// Run header: static facts about the experiment (algorithm, n, s,
+    /// seed, workers, ...). Emitted once per run.
+    Meta { fields: Vec<(&'static str, Json)> },
+    /// A completed phase: `wall_ns` of host time and `sim_dt` of
+    /// simulated seconds spent, stamped with the simulated clock
+    /// (`sim_now`) at completion.
+    Span {
+        phase: &'static str,
+        round: u64,
+        wall_ns: u64,
+        sim_dt: f64,
+        sim_now: f64,
+    },
+    /// A named cumulative counter or gauge polled at a round boundary.
+    Counter {
+        name: &'static str,
+        round: u64,
+        value: f64,
+        sim_now: f64,
+    },
+    /// One observation of a per-interaction quantity (delay seconds,
+    /// staleness rounds, ...). High-volume; the report histograms these.
+    Sample {
+        name: &'static str,
+        round: u64,
+        value: f64,
+    },
+    /// A mirrored diagnostic line from [`crate::log!`].
+    Log { level: Level, msg: String },
+}
+
+impl Event {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::Meta { .. } => "meta",
+            Event::Span { .. } => "span",
+            Event::Counter { .. } => "counter",
+            Event::Sample { .. } => "sample",
+            Event::Log { .. } => "log",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("kind".to_string(), Json::Str(self.kind().to_string()));
+        match self {
+            Event::Meta { fields } => {
+                for (k, v) in fields {
+                    o.insert(k.to_string(), v.clone());
+                }
+            }
+            Event::Span {
+                phase,
+                round,
+                wall_ns,
+                sim_dt,
+                sim_now,
+            } => {
+                o.insert("phase".into(), Json::Str(phase.to_string()));
+                o.insert("round".into(), Json::Num(*round as f64));
+                o.insert("wall_ns".into(), Json::Num(*wall_ns as f64));
+                o.insert("sim_dt".into(), Json::Num(*sim_dt));
+                o.insert("sim_now".into(), Json::Num(*sim_now));
+            }
+            Event::Counter {
+                name,
+                round,
+                value,
+                sim_now,
+            } => {
+                o.insert("name".into(), Json::Str(name.to_string()));
+                o.insert("round".into(), Json::Num(*round as f64));
+                o.insert("value".into(), Json::Num(*value));
+                o.insert("sim_now".into(), Json::Num(*sim_now));
+            }
+            Event::Sample { name, round, value } => {
+                o.insert("name".into(), Json::Str(name.to_string()));
+                o.insert("round".into(), Json::Num(*round as f64));
+                o.insert("value".into(), Json::Num(*value));
+            }
+            Event::Log { level, msg } => {
+                o.insert("level".into(), Json::Str(level.name().to_string()));
+                o.insert("msg".into(), Json::Str(msg.clone()));
+            }
+        }
+        Json::Obj(o)
+    }
+}
+
+/// Destination for trace events. Implementations must tolerate emission
+/// from any thread (the log mirror can fire from worker threads).
+pub trait TraceSink: Send + Sync {
+    fn emit(&self, event: &Event);
+    fn flush(&self) {}
+}
+
+fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // A panic while holding the sink lock poisons it; keep tracing
+    // best-effort rather than cascading the panic.
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Buffered JSONL file sink: one [`Event`] per line, encoded with the
+/// in-crate [`crate::util::json`] writer. Opens in *append* mode so the
+/// sequential runs of a `figures`/`sweep` invocation accumulate into a
+/// single trace file.
+pub struct JsonlSink {
+    out: Mutex<BufWriter<std::fs::File>>,
+}
+
+impl JsonlSink {
+    pub fn append(path: &str) -> std::io::Result<JsonlSink> {
+        let f = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(JsonlSink {
+            out: Mutex::new(BufWriter::new(f)),
+        })
+    }
+}
+
+impl TraceSink for JsonlSink {
+    fn emit(&self, event: &Event) {
+        let mut line = json::to_string(&event.to_json());
+        line.push('\n');
+        let mut g = lock_or_recover(&self.out);
+        // Every flush stays line-aligned: a line never straddles a buffer
+        // boundary, so two sinks appending to one O_APPEND file (a run's
+        // sink plus the CLI's log mirror) cannot interleave mid-line.
+        // Trace IO failures must never abort a simulation.
+        if g.buffer().len() + line.len() > g.capacity() {
+            let _ = g.flush();
+        }
+        if line.len() > g.capacity() {
+            let _ = g.get_mut().write_all(line.as_bytes());
+        } else {
+            let _ = g.write_all(line.as_bytes());
+        }
+    }
+
+    fn flush(&self) {
+        let _ = lock_or_recover(&self.out).flush();
+    }
+}
+
+/// In-memory sink for tests: keeps every event in arrival order.
+#[derive(Default)]
+pub struct RingSink {
+    events: Mutex<Vec<Event>>,
+}
+
+impl RingSink {
+    pub fn new() -> RingSink {
+        RingSink::default()
+    }
+
+    pub fn events(&self) -> Vec<Event> {
+        lock_or_recover(&self.events).clone()
+    }
+
+    pub fn len(&self) -> usize {
+        lock_or_recover(&self.events).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl TraceSink for RingSink {
+    fn emit(&self, event: &Event) {
+        lock_or_recover(&self.events).push(event.clone());
+    }
+}
+
+/// Started-span token. Holds the wall clock only when a sink is armed,
+/// so the disabled path never calls `Instant::now()`.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanStart(Option<Instant>);
+
+/// Cheap cloneable handle threaded through [`crate::coordinator::FlRun`].
+/// `Tracer::off()` (the default) is a `None` and every hook is a near
+/// no-op; an armed tracer forwards events to its shared sink.
+#[derive(Clone, Default)]
+pub struct Tracer {
+    sink: Option<Arc<dyn TraceSink>>,
+    level: Level,
+}
+
+impl Default for Level {
+    fn default() -> Level {
+        Level::Info
+    }
+}
+
+impl Tracer {
+    /// The disabled tracer: no sink, hooks compile to option checks.
+    pub fn off() -> Tracer {
+        Tracer {
+            sink: None,
+            level: Level::Info,
+        }
+    }
+
+    pub fn new(sink: Arc<dyn TraceSink>, level: Level) -> Tracer {
+        Tracer {
+            sink: Some(sink),
+            level,
+        }
+    }
+
+    /// Armed = a sink is installed *and* the level admits structured
+    /// events (spans/counters/samples are `Info`-severity).
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some() && self.level >= Level::Info
+    }
+
+    /// Begin a phase span; reads the clock only when armed.
+    #[inline]
+    pub fn start(&self) -> SpanStart {
+        if self.enabled() {
+            SpanStart(Some(Instant::now()))
+        } else {
+            SpanStart(None)
+        }
+    }
+
+    /// Complete a phase span started with [`Tracer::start`].
+    #[inline]
+    pub fn span(&self, phase: &'static str, start: SpanStart, round: u64, sim_dt: f64, sim_now: f64) {
+        if let (Some(t0), true) = (start.0, self.enabled()) {
+            self.emit(&Event::Span {
+                phase,
+                round,
+                wall_ns: t0.elapsed().as_nanos() as u64,
+                sim_dt,
+                sim_now,
+            });
+        }
+    }
+
+    #[inline]
+    pub fn counter(&self, name: &'static str, round: u64, value: f64, sim_now: f64) {
+        if self.enabled() {
+            self.emit(&Event::Counter {
+                name,
+                round,
+                value,
+                sim_now,
+            });
+        }
+    }
+
+    #[inline]
+    pub fn sample(&self, name: &'static str, round: u64, value: f64) {
+        if self.enabled() {
+            self.emit(&Event::Sample { name, round, value });
+        }
+    }
+
+    pub fn meta(&self, fields: Vec<(&'static str, Json)>) {
+        if self.enabled() {
+            self.emit(&Event::Meta { fields });
+        }
+    }
+
+    fn emit(&self, e: &Event) {
+        if let Some(s) = &self.sink {
+            s.emit(e);
+        }
+    }
+
+    pub fn flush(&self) {
+        if let Some(s) = &self.sink {
+            s.flush();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Leveled diagnostics: the one channel for library stderr output.
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static LOG_MIRROR: OnceLock<Arc<dyn TraceSink>> = OnceLock::new();
+
+/// Set the process-wide diagnostic level (`--trace-level`).
+pub fn set_log_level(level: Level) {
+    LOG_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn log_level() -> Level {
+    match LOG_LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Off,
+        1 => Level::Error,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+#[inline]
+pub fn log_enabled(level: Level) -> bool {
+    level != Level::Off && level as u8 <= LOG_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Mirror diagnostics into a trace sink (installed once by the CLI when
+/// `--trace` is given; library code and tests never install one, so
+/// parallel `cargo test` stays isolated).
+pub fn install_log_mirror(sink: Arc<dyn TraceSink>) {
+    let _ = LOG_MIRROR.set(sink);
+}
+
+/// Write one diagnostic line to stderr and the mirror sink, if any.
+/// Call through [`crate::log!`], which gates on [`log_enabled`] first.
+pub fn log_line(level: Level, msg: String) {
+    eprintln!("{msg}");
+    if let Some(s) = LOG_MIRROR.get() {
+        s.emit(&Event::Log { level, msg });
+        // Diagnostics are rare; flushing each keeps the mirror's lines
+        // whole on disk even if the process aborts.
+        s.flush();
+    }
+}
+
+/// Leveled diagnostic logging: `crate::log!(Info, "[figures] {id} done")`.
+/// Levels are [`Level`] variant names (`Error`, `Info`, `Debug`). Output
+/// goes to stderr (matching the historical `eprintln!` call sites) and,
+/// when the CLI installed a mirror, to the JSONL trace as `log` events.
+/// The format arguments are not evaluated when the level is filtered.
+#[macro_export]
+macro_rules! log {
+    ($lvl:ident, $($arg:tt)*) => {{
+        if $crate::trace::log_enabled($crate::trace::Level::$lvl) {
+            $crate::trace::log_line($crate::trace::Level::$lvl, format!($($arg)*));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("off").unwrap(), Level::Off);
+        assert_eq!(Level::parse("debug").unwrap(), Level::Debug);
+        assert!(Level::parse("verbose").is_err());
+        assert!(Level::Off < Level::Error && Level::Error < Level::Info && Level::Info < Level::Debug);
+        assert_eq!(Level::parse("info").unwrap().name(), "info");
+    }
+
+    #[test]
+    fn off_tracer_is_inert() {
+        let t = Tracer::off();
+        assert!(!t.enabled());
+        let s = t.start();
+        assert!(s.0.is_none());
+        // None of these should panic or allocate a sink.
+        t.span("round", s, 0, 1.0, 1.0);
+        t.counter("bits_up", 0, 0.0, 0.0);
+        t.sample("delay", 0, 0.5);
+        t.flush();
+    }
+
+    #[test]
+    fn ring_sink_captures_all_kinds() {
+        let ring = Arc::new(RingSink::new());
+        let t = Tracer::new(ring.clone(), Level::Info);
+        assert!(t.enabled());
+        t.meta(vec![("algorithm", Json::Str("quafl".into()))]);
+        let s = t.start();
+        t.span("select", s, 3, 0.25, 10.0);
+        t.counter("fenwick_ops", 3, 42.0, 10.0);
+        t.sample("delay", 3, 1.5);
+        let evs = ring.events();
+        assert_eq!(evs.len(), 4);
+        let kinds: Vec<&str> = evs.iter().map(|e| e.kind()).collect();
+        assert_eq!(kinds, vec!["meta", "span", "counter", "sample"]);
+        match &evs[1] {
+            Event::Span {
+                phase,
+                round,
+                sim_dt,
+                sim_now,
+                ..
+            } => {
+                assert_eq!(*phase, "select");
+                assert_eq!(*round, 3);
+                assert_eq!(*sim_dt, 0.25);
+                assert_eq!(*sim_now, 10.0);
+            }
+            other => panic!("expected span, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_level_suppresses_structured_events() {
+        let ring = Arc::new(RingSink::new());
+        let t = Tracer::new(ring.clone(), Level::Error);
+        assert!(!t.enabled());
+        let s = t.start();
+        t.span("round", s, 0, 0.0, 0.0);
+        t.counter("bits_up", 0, 1.0, 0.0);
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn event_json_has_kind_and_fields() {
+        let e = Event::Span {
+            phase: "reduce",
+            round: 7,
+            wall_ns: 1500,
+            sim_dt: 0.5,
+            sim_now: 99.0,
+        };
+        let j = e.to_json();
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("span"));
+        assert_eq!(j.get("phase").and_then(|v| v.as_str()), Some("reduce"));
+        assert_eq!(j.get("round").and_then(|v| v.as_f64()), Some(7.0));
+        assert_eq!(j.get("wall_ns").and_then(|v| v.as_f64()), Some(1500.0));
+        // Round-trips through the writer/parser.
+        let back = json::parse(&json::to_string(&j)).unwrap();
+        assert_eq!(back.get("sim_now").and_then(|v| v.as_f64()), Some(99.0));
+
+        let log = Event::Log {
+            level: Level::Info,
+            msg: "hello".into(),
+        }
+        .to_json();
+        assert_eq!(log.get("level").and_then(|v| v.as_str()), Some("info"));
+        assert_eq!(log.get("msg").and_then(|v| v.as_str()), Some("hello"));
+    }
+
+    #[test]
+    fn jsonl_sink_appends_parseable_lines() {
+        let path = std::env::temp_dir().join(format!(
+            "quafl_trace_test_{}.jsonl",
+            std::process::id()
+        ));
+        let path_s = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        {
+            let sink = Arc::new(JsonlSink::append(&path_s).unwrap());
+            let t = Tracer::new(sink, Level::Info);
+            t.counter("bits_up", 0, 128.0, 1.0);
+            t.sample("delay", 0, 2.5);
+            t.flush();
+        }
+        {
+            // Second sink on the same path must append, not truncate.
+            let sink = Arc::new(JsonlSink::append(&path_s).unwrap());
+            let t = Tracer::new(sink, Level::Info);
+            t.sample("delay", 1, 3.5);
+            t.flush();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in &lines {
+            let j = json::parse(line).unwrap();
+            assert!(j.get("kind").is_some());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn log_level_gating() {
+        // Do not mutate the global level here (tests run in parallel);
+        // just check the predicate against the default.
+        assert!(!log_enabled(Level::Off));
+        assert!(log_enabled(Level::Error) || log_level() == Level::Off);
+    }
+}

@@ -1,0 +1,448 @@
+//! Trace aggregation: turn a JSONL trace stream into a per-phase
+//! wall-time/sim-time breakdown, per-interaction sample histograms, and
+//! the canonical `BENCH_phase.json` artifact (`quafl trace-report`).
+//!
+//! The input is the event stream documented in `docs/TRACE_SCHEMA.md`;
+//! unknown `kind`s are counted and skipped, never fatal, so newer traces
+//! stay readable by older tooling and vice versa.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Json};
+
+/// Canonical phase display order; phases outside this list render after
+/// it, alphabetically.
+const PHASE_ORDER: &[&str] = &[
+    "select",
+    "broadcast",
+    "quantize",
+    "local_sgd",
+    "reduce",
+    "eval",
+    "round",
+];
+
+/// Number of equal-width bins in sample histograms.
+const HIST_BINS: usize = 8;
+
+#[derive(Debug, Default, Clone)]
+pub struct SpanAgg {
+    pub count: u64,
+    pub wall_ns_total: f64,
+    pub wall_ns_max: f64,
+    pub sim_dt_total: f64,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct CounterAgg {
+    pub count: u64,
+    pub last: f64,
+    pub max: f64,
+}
+
+/// Aggregated view of one trace file.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub events: usize,
+    pub meta: Vec<Json>,
+    pub spans: BTreeMap<String, SpanAgg>,
+    pub counters: BTreeMap<String, CounterAgg>,
+    pub samples: BTreeMap<String, Vec<f64>>,
+    pub logs: usize,
+    pub unknown: usize,
+}
+
+/// Fold a parsed event stream (see [`json::parse_lines`]) into a report.
+pub fn aggregate(events: &[Json]) -> Report {
+    let mut r = Report::default();
+    for e in events {
+        r.events += 1;
+        match e.get("kind").and_then(|k| k.as_str()) {
+            Some("meta") => r.meta.push(e.clone()),
+            Some("span") => {
+                let phase = e
+                    .get("phase")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("?")
+                    .to_string();
+                let wall = e.get("wall_ns").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let sim = e.get("sim_dt").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let agg = r.spans.entry(phase).or_default();
+                agg.count += 1;
+                agg.wall_ns_total += wall;
+                agg.wall_ns_max = agg.wall_ns_max.max(wall);
+                agg.sim_dt_total += sim;
+            }
+            Some("counter") => {
+                let name = e
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("?")
+                    .to_string();
+                let value = e.get("value").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let agg = r.counters.entry(name).or_default();
+                agg.count += 1;
+                agg.last = value;
+                agg.max = agg.max.max(value);
+            }
+            Some("sample") => {
+                let name = e
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("?")
+                    .to_string();
+                let value = e.get("value").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                r.samples.entry(name).or_default().push(value);
+            }
+            Some("log") => r.logs += 1,
+            _ => r.unknown += 1,
+        }
+    }
+    r
+}
+
+/// Nearest-rank percentile over a sorted slice, `q` in `[0, 1]`.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Equal-width histogram over `[min, max]`; returns (min, max, counts).
+fn histogram(sorted: &[f64], bins: usize) -> (f64, f64, Vec<u64>) {
+    if sorted.is_empty() {
+        return (0.0, 0.0, vec![0; bins]);
+    }
+    let (lo, hi) = (sorted[0], sorted[sorted.len() - 1]);
+    let mut counts = vec![0u64; bins];
+    if hi <= lo {
+        counts[0] = sorted.len() as u64;
+        return (lo, hi, counts);
+    }
+    let width = (hi - lo) / bins as f64;
+    for &v in sorted {
+        let b = (((v - lo) / width) as usize).min(bins - 1);
+        counts[b] += 1;
+    }
+    (lo, hi, counts)
+}
+
+fn fmt_wall(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3}us", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+impl Report {
+    /// Phase names in canonical-then-alphabetical display order.
+    fn ordered_phases(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = PHASE_ORDER
+            .iter()
+            .copied()
+            .filter(|p| self.spans.contains_key(*p))
+            .collect();
+        for p in self.spans.keys() {
+            if !PHASE_ORDER.contains(&p.as_str()) {
+                out.push(p);
+            }
+        }
+        out
+    }
+
+    /// Human-readable breakdown table (what `trace-report` prints).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "trace: {} events ({} meta, {} spans, {} counters, {} samples, {} logs, {} unknown)\n",
+            self.events,
+            self.meta.len(),
+            self.spans.values().map(|a| a.count).sum::<u64>(),
+            self.counters.values().map(|a| a.count).sum::<u64>(),
+            self.samples.values().map(|v| v.len()).sum::<usize>(),
+            self.logs,
+            self.unknown,
+        ));
+        for m in &self.meta {
+            if let Some(o) = m.as_obj() {
+                let mut parts = Vec::new();
+                for (k, v) in o {
+                    if k == "kind" {
+                        continue;
+                    }
+                    parts.push(format!("{k}={}", json::to_string(v)));
+                }
+                s.push_str(&format!("run: {}\n", parts.join(" ")));
+            }
+        }
+        if !self.spans.is_empty() {
+            s.push_str(&format!(
+                "\n{:<12} {:>8} {:>12} {:>12} {:>12} {:>14}\n",
+                "phase", "count", "wall total", "wall mean", "wall max", "sim total"
+            ));
+            for phase in self.ordered_phases() {
+                let a = &self.spans[phase];
+                let mean = if a.count > 0 {
+                    a.wall_ns_total / a.count as f64
+                } else {
+                    0.0
+                };
+                s.push_str(&format!(
+                    "{:<12} {:>8} {:>12} {:>12} {:>12} {:>13.3}s\n",
+                    phase,
+                    a.count,
+                    fmt_wall(a.wall_ns_total),
+                    fmt_wall(mean),
+                    fmt_wall(a.wall_ns_max),
+                    a.sim_dt_total,
+                ));
+            }
+        }
+        if !self.samples.is_empty() {
+            s.push_str(&format!(
+                "\n{:<12} {:>8} {:>12} {:>12} {:>12} {:>12}\n",
+                "sample", "count", "mean", "p50", "p95", "max"
+            ));
+            for (name, values) in &self.samples {
+                let mut sorted = values.clone();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+                let mean = sorted.iter().sum::<f64>() / sorted.len().max(1) as f64;
+                let (lo, hi, counts) = histogram(&sorted, HIST_BINS);
+                s.push_str(&format!(
+                    "{:<12} {:>8} {:>12.4} {:>12.4} {:>12.4} {:>12.4}\n",
+                    name,
+                    sorted.len(),
+                    mean,
+                    percentile(&sorted, 0.50),
+                    percentile(&sorted, 0.95),
+                    sorted.last().copied().unwrap_or(0.0),
+                ));
+                let bars: Vec<String> = counts.iter().map(|c| c.to_string()).collect();
+                s.push_str(&format!(
+                    "{:<12} hist [{lo:.4}..{hi:.4}]: {}\n",
+                    "",
+                    bars.join(" ")
+                ));
+            }
+        }
+        if !self.counters.is_empty() {
+            s.push_str(&format!("\n{:<22} {:>8} {:>16}\n", "counter", "polls", "last"));
+            for (name, a) in &self.counters {
+                s.push_str(&format!("{:<22} {:>8} {:>16.0}\n", name, a.count, a.last));
+            }
+        }
+        s
+    }
+
+    /// The canonical `BENCH_phase.json` document: one row per phase,
+    /// sample distribution, and counter, in the same `{bench, rows}`
+    /// shape as `BENCH_fleet.json`.
+    pub fn bench_json(&self) -> Json {
+        let mut rows = Vec::new();
+        for phase in self.ordered_phases() {
+            let a = &self.spans[phase];
+            let mut row = BTreeMap::new();
+            row.insert("kind".into(), Json::Str("span".into()));
+            row.insert("phase".into(), Json::Str(phase.to_string()));
+            row.insert("count".into(), Json::Num(a.count as f64));
+            row.insert("wall_ns_total".into(), Json::Num(a.wall_ns_total));
+            row.insert(
+                "wall_ns_mean".into(),
+                Json::Num(if a.count > 0 {
+                    a.wall_ns_total / a.count as f64
+                } else {
+                    0.0
+                }),
+            );
+            row.insert("wall_ns_max".into(), Json::Num(a.wall_ns_max));
+            row.insert("sim_dt_total".into(), Json::Num(a.sim_dt_total));
+            rows.push(Json::Obj(row));
+        }
+        for (name, values) in &self.samples {
+            let mut sorted = values.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            let (lo, hi, counts) = histogram(&sorted, HIST_BINS);
+            let mut row = BTreeMap::new();
+            row.insert("kind".into(), Json::Str("sample".into()));
+            row.insert("name".into(), Json::Str(name.clone()));
+            row.insert("count".into(), Json::Num(sorted.len() as f64));
+            row.insert(
+                "mean".into(),
+                Json::Num(sorted.iter().sum::<f64>() / sorted.len().max(1) as f64),
+            );
+            row.insert("p50".into(), Json::Num(percentile(&sorted, 0.50)));
+            row.insert("p95".into(), Json::Num(percentile(&sorted, 0.95)));
+            row.insert("max".into(), Json::Num(sorted.last().copied().unwrap_or(0.0)));
+            row.insert("hist_min".into(), Json::Num(lo));
+            row.insert("hist_max".into(), Json::Num(hi));
+            row.insert(
+                "hist".into(),
+                Json::Arr(counts.iter().map(|c| Json::Num(*c as f64)).collect()),
+            );
+            rows.push(Json::Obj(row));
+        }
+        for (name, a) in &self.counters {
+            let mut row = BTreeMap::new();
+            row.insert("kind".into(), Json::Str("counter".into()));
+            row.insert("name".into(), Json::Str(name.clone()));
+            row.insert("polls".into(), Json::Num(a.count as f64));
+            row.insert("last".into(), Json::Num(a.last));
+            row.insert("max".into(), Json::Num(a.max));
+            rows.push(Json::Obj(row));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".into(), Json::Str("phase_breakdown".into()));
+        doc.insert("rows".into(), Json::Arr(rows));
+        Json::Obj(doc)
+    }
+
+    /// Write `BENCH_phase.json` under `out_dir`; returns the path.
+    pub fn write_bench(&self, out_dir: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all(out_dir)?;
+        let path = format!("{out_dir}/BENCH_phase.json");
+        std::fs::write(&path, json::to_string(&self.bench_json()) + "\n")?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Event;
+
+    fn span(phase: &'static str, round: u64, wall_ns: u64, sim_dt: f64) -> Json {
+        Event::Span {
+            phase,
+            round,
+            wall_ns,
+            sim_dt,
+            sim_now: round as f64,
+        }
+        .to_json()
+    }
+
+    fn sample(name: &'static str, value: f64) -> Json {
+        Event::Sample {
+            name,
+            round: 0,
+            value,
+        }
+        .to_json()
+    }
+
+    fn counter(name: &'static str, value: f64) -> Json {
+        Event::Counter {
+            name,
+            round: 0,
+            value,
+            sim_now: 0.0,
+        }
+        .to_json()
+    }
+
+    #[test]
+    fn aggregates_spans_counters_samples() {
+        let events = vec![
+            Event::Meta {
+                fields: vec![("algorithm", Json::Str("quafl".into()))],
+            }
+            .to_json(),
+            span("select", 0, 100, 0.0),
+            span("select", 1, 300, 0.0),
+            span("local_sgd", 0, 5000, 0.5),
+            counter("bits_up", 128.0),
+            counter("bits_up", 512.0),
+            sample("delay", 1.0),
+            sample("delay", 3.0),
+            sample("delay", 2.0),
+        ];
+        let r = aggregate(&events);
+        assert_eq!(r.events, events.len());
+        assert_eq!(r.meta.len(), 1);
+        let sel = &r.spans["select"];
+        assert_eq!(sel.count, 2);
+        assert_eq!(sel.wall_ns_total, 400.0);
+        assert_eq!(sel.wall_ns_max, 300.0);
+        assert_eq!(r.spans["local_sgd"].sim_dt_total, 0.5);
+        let bits = &r.counters["bits_up"];
+        assert_eq!(bits.count, 2);
+        assert_eq!(bits.last, 512.0);
+        assert_eq!(bits.max, 512.0);
+        assert_eq!(r.samples["delay"], vec![1.0, 3.0, 2.0]);
+        assert_eq!(r.unknown, 0);
+    }
+
+    #[test]
+    fn unknown_kinds_are_counted_not_fatal() {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("kind".to_string(), Json::Str("future_kind".into()));
+        let r = aggregate(&[Json::Obj(o), Json::Num(3.0)]);
+        assert_eq!(r.unknown, 2);
+        assert_eq!(r.events, 2);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 0.5), 3.0);
+        assert_eq!(percentile(&v, 1.0), 5.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn histogram_covers_range() {
+        let v = vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        let (lo, hi, counts) = histogram(&v, 8);
+        assert_eq!((lo, hi), (0.0, 7.0));
+        assert_eq!(counts.iter().sum::<u64>(), 8);
+        // Degenerate range: everything lands in bin 0.
+        let (_, _, c1) = histogram(&[2.0, 2.0, 2.0], 8);
+        assert_eq!(c1[0], 3);
+        assert_eq!(c1.iter().sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn render_and_bench_json() {
+        let events = vec![
+            span("round", 0, 2_000_000, 1.5),
+            span("select", 0, 1000, 0.0),
+            sample("delay", 0.5),
+            sample("delay", 1.5),
+            counter("cow_materializations", 7.0),
+        ];
+        let r = aggregate(&events);
+        let text = r.render();
+        assert!(text.contains("select"), "{text}");
+        assert!(text.contains("round"), "{text}");
+        assert!(text.contains("delay"), "{text}");
+        assert!(text.contains("cow_materializations"), "{text}");
+        // select renders before round (canonical phase order).
+        assert!(text.find("select").unwrap() < text.find("round").unwrap());
+
+        let doc = r.bench_json();
+        assert_eq!(
+            doc.get("bench").and_then(|v| v.as_str()),
+            Some("phase_breakdown")
+        );
+        let rows = doc.get("rows").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(rows.len(), 4); // 2 spans + 1 sample + 1 counter
+        // Canonical JSON round-trips through the in-crate parser.
+        let back = json::parse(&json::to_string(&doc)).unwrap();
+        assert_eq!(back, doc);
+        let hist = rows
+            .iter()
+            .find(|r| r.get("kind").and_then(|k| k.as_str()) == Some("sample"))
+            .and_then(|r| r.get("hist"))
+            .and_then(|h| h.as_arr())
+            .unwrap();
+        assert_eq!(hist.len(), HIST_BINS);
+    }
+}

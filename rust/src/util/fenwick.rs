@@ -11,21 +11,39 @@
 //!   through `select(k)` — each index lands with probability
 //!   `weight/total`, updating in O(log n) when weights change.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::util::rng::Rng;
 
 /// Fenwick tree over `n` slots of non-negative i64 weights.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct Fenwick {
     /// 1-indexed partial sums (classic BIT layout); tree[0] unused
     tree: Vec<i64>,
     n: usize,
     total: i64,
+    /// passive observability counter: add/prefix/select calls since
+    /// construction ([`crate::trace`] polls it at round boundaries).
+    /// Atomic only for interior mutability through `&self` queries —
+    /// no RNG, no float, no behavioral effect.
+    ops: AtomicU64,
+}
+
+impl Clone for Fenwick {
+    fn clone(&self) -> Self {
+        Fenwick {
+            tree: self.tree.clone(),
+            n: self.n,
+            total: self.total,
+            ops: AtomicU64::new(self.ops.load(Ordering::Relaxed)),
+        }
+    }
 }
 
 impl Fenwick {
     /// All-zero tree over `n` slots.
     pub fn new(n: usize) -> Self {
-        Fenwick { tree: vec![0; n + 1], n, total: 0 }
+        Fenwick { tree: vec![0; n + 1], n, total: 0, ops: AtomicU64::new(0) }
     }
 
     /// Build from per-slot values in O(n): each leaf's partial sum is
@@ -45,12 +63,24 @@ impl Fenwick {
                 tree[parent] += tree[idx];
             }
         }
-        Fenwick { tree, n, total }
+        Fenwick { tree, n, total, ops: AtomicU64::new(0) }
     }
 
     /// Number of slots.
     pub fn len(&self) -> usize {
         self.n
+    }
+
+    /// Total add/prefix/select calls served since construction (passive
+    /// trace counter; `get` counts as two prefixes, `sample` as one
+    /// select).
+    pub fn ops(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    fn count_op(&self) {
+        self.ops.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn is_empty(&self) -> bool {
@@ -65,6 +95,7 @@ impl Fenwick {
     /// Add `delta` to slot `i` (the result must stay non-negative).
     pub fn add(&mut self, i: usize, delta: i64) {
         debug_assert!(i < self.n, "fenwick add out of range: {i} >= {}", self.n);
+        self.count_op();
         if delta == 0 {
             return;
         }
@@ -80,6 +111,7 @@ impl Fenwick {
     /// Sum of weights over `[0, i)`.
     pub fn prefix(&self, i: usize) -> i64 {
         debug_assert!(i <= self.n, "fenwick prefix out of range");
+        self.count_op();
         let mut s = 0i64;
         let mut idx = i;
         while idx > 0 {
@@ -103,6 +135,7 @@ impl Fenwick {
             "fenwick select rank {k} outside [0, {})",
             self.total
         );
+        self.count_op();
         let mut remaining = k;
         let mut pos = 0usize; // 1-indexed cursor, currently before slot 1
         let mut step = self.n.next_power_of_two();
@@ -276,6 +309,20 @@ mod tests {
             assert!((rej - expect).abs() < tol, "slot {i}: rej {rej} vs {expect}");
             assert!((fen - rej).abs() < 2.0 * tol, "slot {i}: fen {fen} vs rej {rej}");
         }
+    }
+
+    #[test]
+    fn ops_counter_counts_calls_and_survives_clone() {
+        let mut f = Fenwick::new(8);
+        assert_eq!(f.ops(), 0);
+        f.add(2, 1); // 1 op
+        f.add(3, 0); // counted even when delta == 0
+        let _ = f.prefix(4); // 1 op
+        let _ = f.get(2); // 2 prefixes
+        let _ = f.select(0); // 1 op
+        assert_eq!(f.ops(), 6);
+        let g = f.clone();
+        assert_eq!(g.ops(), 6);
     }
 
     #[test]

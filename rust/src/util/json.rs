@@ -340,6 +340,28 @@ pub fn to_string(v: &Json) -> String {
     s
 }
 
+/// Parse newline-delimited JSON (JSONL): one document per non-empty
+/// line. Used for trace streams ([`crate::trace`]); errors carry the
+/// 1-based line number so a corrupt trace points at the bad record.
+pub fn parse_lines(s: &str) -> Result<Vec<Json>, ParseError> {
+    let mut out = Vec::new();
+    for (i, line) in s.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse(line) {
+            Ok(v) => out.push(v),
+            Err(e) => {
+                return Err(ParseError {
+                    msg: format!("line {}: {}", i + 1, e.msg),
+                    pos: e.pos,
+                })
+            }
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -395,5 +417,15 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn parse_lines_jsonl() {
+        let text = "{\"a\":1}\n\n{\"b\":2}\n";
+        let docs = parse_lines(text).unwrap();
+        assert_eq!(docs.len(), 2);
+        assert_eq!(docs[1].get("b").unwrap().as_f64(), Some(2.0));
+        let err = parse_lines("{\"a\":1}\nnot json\n").unwrap_err();
+        assert!(err.msg.contains("line 2"), "{}", err.msg);
     }
 }

@@ -1,0 +1,232 @@
+//! Parity + schema suite for the tracing subsystem (rust/src/trace): the
+//! tentpole guarantee is that observability is **bit-free** — enabling a
+//! JSONL sink must not perturb a single RNG draw or trajectory value.
+//! Every algorithm's RunMetrics must be bit-identical with tracing off
+//! vs. armed, the emitted JSONL must round-trip through the in-crate
+//! parser against the schema in docs/TRACE_SCHEMA.md, and the
+//! `trace-report` aggregation must see the expected spans / counters /
+//! samples from a real run.
+
+mod common;
+
+use std::path::PathBuf;
+
+use common::assert_identical;
+use quafl::config::{Algorithm, ExperimentConfig, TimingConfig};
+use quafl::coordinator;
+use quafl::metrics::RunMetrics;
+use quafl::trace::report;
+use quafl::util::json::{self, Json};
+
+fn base(algorithm: Algorithm) -> ExperimentConfig {
+    ExperimentConfig {
+        algorithm,
+        n: 10,
+        s: 4,
+        k: 4,
+        rounds: 6,
+        eval_every: 2,
+        workers: 2,
+        train_samples: 512,
+        val_samples: 128,
+        batch: 16,
+        seed: 23,
+        timing: TimingConfig { slow_fraction: 0.3, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn tmp_trace(tag: &str) -> (PathBuf, String) {
+    let path = std::env::temp_dir().join(format!(
+        "quafl_trace_parity_{tag}_{}.jsonl",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let s = path.to_str().unwrap().to_string();
+    (path, s)
+}
+
+/// Run `cfg` untraced and traced-to-JSONL; assert bit-identical metrics
+/// and return (traced metrics, parsed event stream).
+fn run_both(cfg: ExperimentConfig, tag: &str) -> (RunMetrics, Vec<Json>) {
+    let off = coordinator::run(&cfg).expect("untraced run");
+    assert!(
+        !off.points.is_empty(),
+        "run produced no eval points — vacuous parity"
+    );
+    let (path, path_s) = tmp_trace(tag);
+    let traced = coordinator::run(&ExperimentConfig {
+        trace: Some(path_s.clone()),
+        ..cfg.clone()
+    })
+    .expect("traced run");
+    assert_identical(
+        &off,
+        &traced,
+        &format!("{} trace off vs jsonl", cfg.algorithm.name()),
+    );
+    let text = std::fs::read_to_string(&path).expect("trace file written");
+    let events = json::parse_lines(&text).expect("trace lines parse");
+    assert!(!events.is_empty(), "armed tracer emitted nothing");
+    let _ = std::fs::remove_file(&path);
+    (traced, events)
+}
+
+/// Schema check per docs/TRACE_SCHEMA.md: every line has a known kind
+/// and that kind's required fields.
+fn check_schema(events: &[Json], what: &str) {
+    for e in events {
+        let kind = e
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .unwrap_or_else(|| panic!("{what}: event without kind: {e:?}"));
+        match kind {
+            "meta" => {
+                assert!(e.get("algorithm").is_some(), "{what}: meta.algorithm");
+                assert!(e.get("seed").is_some(), "{what}: meta.seed");
+            }
+            "span" => {
+                for f in ["phase", "round", "wall_ns", "sim_dt", "sim_now"] {
+                    assert!(e.get(f).is_some(), "{what}: span.{f} missing: {e:?}");
+                }
+                assert!(
+                    e.get("wall_ns").unwrap().as_f64().unwrap() >= 0.0,
+                    "{what}: negative wall_ns"
+                );
+            }
+            "counter" => {
+                for f in ["name", "round", "value", "sim_now"] {
+                    assert!(e.get(f).is_some(), "{what}: counter.{f} missing");
+                }
+            }
+            "sample" => {
+                for f in ["name", "round", "value"] {
+                    assert!(e.get(f).is_some(), "{what}: sample.{f} missing");
+                }
+            }
+            "log" => {
+                assert!(e.get("msg").is_some(), "{what}: log.msg missing");
+            }
+            other => panic!("{what}: unknown event kind {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn quafl_bit_identical_and_schema_valid() {
+    let (_, events) = run_both(base(Algorithm::QuAFL), "quafl");
+    check_schema(&events, "quafl");
+    let r = report::aggregate(&events);
+    assert_eq!(r.unknown, 0, "no unknown kinds from our own writer");
+    assert!(!r.meta.is_empty(), "meta header present");
+    // Phases QuAFL must traverse every round.
+    for phase in ["select", "quantize", "local_sgd", "reduce", "round"] {
+        let agg = r
+            .spans
+            .get(phase)
+            .unwrap_or_else(|| panic!("missing span phase {phase:?}"));
+        assert!(agg.count > 0, "{phase}: zero spans");
+    }
+    // eval_every=2 over 6 rounds -> eval spans exist.
+    assert!(r.spans.get("eval").is_some(), "eval spans");
+    // "round" spans advance the simulated clock.
+    assert!(
+        r.spans["round"].sim_dt_total > 0.0,
+        "round spans carry sim time"
+    );
+    for c in [
+        "pool_busy_ns",
+        "events_drained",
+        "event_queue_depth",
+        "fenwick_ops",
+        "cow_materializations",
+        "bits_up",
+        "bits_down",
+        "steps_total",
+    ] {
+        assert!(r.counters.get(c).is_some(), "missing counter {c:?}");
+    }
+    // Counters are cumulative: last poll sees the full-run bit tally.
+    assert!(r.counters["bits_up"].last > 0.0, "bits_up accumulated");
+    assert!(
+        !r.samples.get("delay").map(Vec::is_empty).unwrap_or(true),
+        "per-interaction delay samples"
+    );
+}
+
+#[test]
+fn fedavg_bit_identical_and_phases() {
+    let (_, events) = run_both(base(Algorithm::FedAvg), "fedavg");
+    check_schema(&events, "fedavg");
+    let r = report::aggregate(&events);
+    // FedAvg broadcasts the server model; QuAFL's quantize phase is absent.
+    assert!(r.spans.get("broadcast").is_some(), "broadcast spans");
+    assert!(r.spans.get("quantize").is_none(), "no quantize in fedavg");
+    assert!(r.spans.get("round").is_some());
+}
+
+#[test]
+fn fedbuff_bit_identical_with_staleness_samples() {
+    let (_, events) = run_both(base(Algorithm::FedBuff), "fedbuff");
+    check_schema(&events, "fedbuff");
+    let r = report::aggregate(&events);
+    assert!(
+        !r.samples.get("staleness").map(Vec::is_empty).unwrap_or(true),
+        "fedbuff emits per-admission staleness samples"
+    );
+    assert!(r.spans.get("round").is_some());
+}
+
+#[test]
+fn trace_level_off_emits_no_structured_events() {
+    // A sink armed below Info severity must stay silent AND stay bit-free.
+    let cfg = base(Algorithm::QuAFL);
+    let off = coordinator::run(&cfg).expect("untraced run");
+    let (path, path_s) = tmp_trace("level_off");
+    let traced = coordinator::run(&ExperimentConfig {
+        trace: Some(path_s),
+        trace_level: quafl::trace::Level::Off,
+        ..cfg
+    })
+    .expect("level-off run");
+    assert_identical(&off, &traced, "quafl trace level=off");
+    let text = std::fs::read_to_string(&path).unwrap_or_default();
+    assert!(
+        text.trim().is_empty(),
+        "level=off trace file should be empty, got {} bytes",
+        text.len()
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn report_aggregates_and_writes_bench_phase_json() {
+    let (_, events) = run_both(
+        ExperimentConfig { rounds: 4, ..base(Algorithm::QuAFL) },
+        "report",
+    );
+    let r = report::aggregate(&events);
+    let rendered = r.render();
+    assert!(rendered.contains("round"), "breakdown lists the round phase");
+    assert!(rendered.contains("local_sgd"));
+
+    let dir = std::env::temp_dir().join(format!(
+        "quafl_trace_report_test_{}",
+        std::process::id()
+    ));
+    let out_dir = dir.to_str().unwrap().to_string();
+    let path = r.write_bench(&out_dir).expect("write BENCH_phase.json");
+    let doc = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(
+        doc.get("bench").and_then(|v| v.as_str()),
+        Some("phase_breakdown")
+    );
+    let rows = doc.get("rows").and_then(|v| v.as_arr()).unwrap();
+    assert!(!rows.is_empty(), "phase rows present");
+    let phases: Vec<&str> = rows
+        .iter()
+        .filter_map(|row| row.get("phase").and_then(|v| v.as_str()))
+        .collect();
+    assert!(phases.contains(&"round"), "rows include the round phase");
+    let _ = std::fs::remove_dir_all(&dir);
+}
