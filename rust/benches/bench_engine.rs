@@ -1,13 +1,23 @@
-//! Engine bench: XLA (AOT artifact via PJRT) vs native Rust train-step and
-//! eval latency (EXPERIMENTS.md §Perf L2). This quantifies the cost of a
-//! single simulated client step — the dominant term of every experiment.
+//! Engine bench: per-kernel native train-step/eval latency (scalar vs
+//! blocked, plus simd when compiled in) and XLA (AOT artifact via PJRT)
+//! rows (EXPERIMENTS.md §Perf L2). This quantifies the cost of a single
+//! simulated client step — the dominant term of every experiment — and
+//! is the acceptance gauge for the kernel subsystem: the `blocked` rows
+//! must beat `scalar` on `mlp` at batch 32.
+//!
+//! The eval rows also cover the zero-alloc evaluation path: after the
+//! first chunk the engine's reusable index/batch scratch
+//! (`Dataset::gather_batch_into`) makes the steady-state eval loop
+//! allocation-free, so these rows time pure compute + gather copies.
 //!
 //! Flags (after `cargo bench --bench bench_engine --`):
-//!   --smoke         seconds-scale sampling (the CI trace-smoke job)
+//!   --smoke         seconds-scale sampling (the CI figure-smoke job)
 //!   --out-dir DIR   write DIR/BENCH_engine.json (canonical {bench, rows})
 
+use std::sync::Arc;
+
 use quafl::data::{SynthFamily, SynthSpec};
-use quafl::engine::{NativeEngine, TrainEngine, XlaEngine};
+use quafl::engine::{KernelKind, KernelStats, NativeEngine, TrainEngine, XlaEngine};
 use quafl::model::ModelSpec;
 use quafl::testing::bench::{bench_cfg, write_bench_json, BenchResult};
 use quafl::util::cli;
@@ -18,37 +28,55 @@ fn main() {
     let smoke = args.bool("smoke");
     let (warmup, secs) = if smoke { (1, 0.05) } else { (3, 1.0) };
 
-    println!("== bench_engine ==");
-    let (train, val) = SynthSpec::family(SynthFamily::Mnist, 2048, 1024, 1).generate();
-    let idx: Vec<usize> = (0..32).collect();
-    let batch = train.gather_batch(&idx);
+    let kernels: &[KernelKind] = if cfg!(feature = "simd") {
+        &[KernelKind::Scalar, KernelKind::Blocked, KernelKind::Simd]
+    } else {
+        &[KernelKind::Scalar, KernelKind::Blocked]
+    };
 
+    println!("== bench_engine ==");
     let mut results: Vec<BenchResult> = Vec::new();
-    for model in ["mlp", "mlp_deep"] {
+    // (model, matching data family): mlp_tiny is the fleet-scaling
+    // miniature (16-dim), mlp the paper's MNIST-scale model.
+    for (model, family) in [
+        ("mlp_tiny", SynthFamily::Tiny),
+        ("mlp", SynthFamily::Mnist),
+    ] {
         let spec = ModelSpec::by_name(model).unwrap();
+        let (train, val) = SynthSpec::family(family, 2048, 1024, 1).generate();
+        let idx: Vec<usize> = (0..32).collect();
+        let batch = train.gather_batch(&idx);
         let mut params = spec.init_params(3);
 
-        let mut native = NativeEngine::new(spec.clone(), 32);
-        results.push(bench_cfg(
-            &format!("native train_step {model}"),
-            warmup,
-            secs,
-            Some((32.0, "samples")),
-            &mut || {
-                native.train_step(&mut params, &batch, 0.01).unwrap();
-            },
-        ));
-        results.push(bench_cfg(
-            &format!("native eval(1024) {model}"),
-            warmup,
-            secs,
-            Some((1024.0, "samples")),
-            &mut || {
-                std::hint::black_box(native.evaluate(&params, &val).unwrap());
-            },
-        ));
+        for &kind in kernels {
+            let mut native = NativeEngine::with_kernel(
+                spec.clone(),
+                32,
+                kind,
+                Arc::new(KernelStats::new()),
+            )
+            .unwrap();
+            results.push(bench_cfg(
+                &format!("native train_step {model} [{}]", kind.name()),
+                warmup,
+                secs,
+                Some((32.0, "samples")),
+                &mut || {
+                    native.train_step(&mut params, &batch, 0.01).unwrap();
+                },
+            ));
+            results.push(bench_cfg(
+                &format!("native eval(1024) {model} [{}]", kind.name()),
+                warmup,
+                secs,
+                Some((1024.0, "samples")),
+                &mut || {
+                    std::hint::black_box(native.evaluate(&params, &val).unwrap());
+                },
+            ));
+        }
 
-        if std::path::Path::new("artifacts/meta.json").exists() {
+        if model == "mlp" && std::path::Path::new("artifacts/meta.json").exists() {
             let mut xla = XlaEngine::new("artifacts", &spec).unwrap();
             results.push(bench_cfg(
                 &format!("xla    train_step {model}"),
@@ -68,7 +96,7 @@ fn main() {
                     std::hint::black_box(xla.evaluate(&params, &val).unwrap());
                 },
             ));
-        } else {
+        } else if model == "mlp" {
             println!("(artifacts missing — run `make artifacts` for XLA numbers)");
         }
     }

@@ -12,6 +12,7 @@ use std::sync::Arc;
 
 use quafl::config::{Algorithm, ExperimentConfig, QuantizerKind};
 use quafl::coordinator;
+use quafl::engine::KernelKind;
 use quafl::exec::{ClientTask, EngineFactory, EnginePool};
 use quafl::model::params;
 use quafl::quant::{LatticeQuantizer, Quantizer};
@@ -100,7 +101,7 @@ fn main() {
     // serial loop: the gap is the entire fan-out overhead budget).
     for (s, workers) in [(128usize, 1usize), (128, 8), (256, 8)] {
         let mut pool = EnginePool::new(
-            EngineFactory::new("mlp", false, "artifacts", 32),
+            EngineFactory::new("mlp", false, "artifacts", 32, KernelKind::default()),
             workers,
         )
         .unwrap();

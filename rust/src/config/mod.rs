@@ -4,6 +4,7 @@
 //! by the figure harness.
 
 use crate::data::{PartitionKind, SynthFamily};
+use crate::engine::KernelKind;
 use crate::net::NetworkConfig;
 use crate::select::SelectionKind;
 use crate::trace::Level;
@@ -171,6 +172,12 @@ pub struct ExperimentConfig {
     pub seed: u64,
     /// use the XLA engine (artifacts) instead of the native engine
     pub use_xla: bool,
+    /// native-engine GEMM backend (`--engine-kernel scalar|blocked|simd`;
+    /// default `blocked`). `scalar` and `blocked` are bit-identical
+    /// (rust/tests/kernel_parity.rs), so this is purely a wall-clock knob
+    /// on every default-feature build; `simd` requires `--features simd`
+    /// and changes rounding (FMA). Ignored when `use_xla` is set.
+    pub engine_kernel: KernelKind,
     /// override γ for the lattice quantizer (otherwise derived from lr/K)
     pub lattice_gamma: Option<f32>,
     /// record the paper's potential Φ_t each round (Lemma 3.4 diagnostic;
@@ -257,6 +264,7 @@ impl Default for ExperimentConfig {
             batch: 32,
             seed: 1,
             use_xla: false,
+            engine_kernel: KernelKind::default(),
             lattice_gamma: None,
             track_potential: false,
             workers: 0,
@@ -293,6 +301,12 @@ impl ExperimentConfig {
         if self.algorithm == Algorithm::FedBuff && self.fedbuff_buffer == 0 {
             return Err("fedbuff buffer must be >= 1".into());
         }
+        if !self.engine_kernel.available() {
+            return Err(format!(
+                "engine kernel `{}` requires building with `--features simd`",
+                self.engine_kernel.name()
+            ));
+        }
         self.net.validate()?;
         self.select.validate(self.s)?;
         Ok(())
@@ -306,7 +320,7 @@ impl ExperimentConfig {
         "averaging", "weighted", "swt", "sit", "slow-fraction",
         "fast-lambda", "slow-lambda",
         "fedbuff-buffer", "fedbuff-server-lr", "eval-every", "batch",
-        "seed", "xla", "gamma", "out", "workers",
+        "seed", "xla", "engine-kernel", "gamma", "out", "workers",
         "price-init-broadcast", "dense-fleet", "broadcast-downlink",
         "event-driven", "trace", "trace-level",
     ];
@@ -367,6 +381,9 @@ impl ExperimentConfig {
         c.batch = args.get_usize("batch", c.batch);
         c.seed = args.get_u64("seed", c.seed);
         c.use_xla = args.bool("xla");
+        if let Some(k) = args.get("engine-kernel") {
+            c.engine_kernel = KernelKind::parse(k)?;
+        }
         if let Some(g) = args.get("gamma") {
             c.lattice_gamma =
                 Some(g.parse().map_err(|_| format!("bad gamma {g:?}"))?);
@@ -443,6 +460,33 @@ mod tests {
         assert!(c.validate().is_err());
         let c = ExperimentConfig { lr: -1.0, ..base };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn engine_kernel_defaults_blocked_and_parses() {
+        assert_eq!(ExperimentConfig::default().engine_kernel, KernelKind::Blocked);
+        let a = cli::parse(&sv(&["run", "--engine-kernel", "scalar"]));
+        let c = ExperimentConfig::from_args(&a).unwrap();
+        assert_eq!(c.engine_kernel, KernelKind::Scalar);
+        let a = cli::parse(&sv(&["run", "--engine-kernel", "blocked"]));
+        let c = ExperimentConfig::from_args(&a).unwrap();
+        assert_eq!(c.engine_kernel, KernelKind::Blocked);
+        let a = cli::parse(&sv(&["run", "--engine-kernel", "warp"]));
+        assert!(ExperimentConfig::from_args(&a).is_err());
+        assert!(ExperimentConfig::cli_keys().contains(&"engine-kernel"));
+    }
+
+    #[test]
+    fn engine_kernel_simd_gated_by_feature() {
+        let a = cli::parse(&sv(&["run", "--engine-kernel", "simd"]));
+        let r = ExperimentConfig::from_args(&a);
+        if cfg!(feature = "simd") {
+            assert_eq!(r.unwrap().engine_kernel, KernelKind::Simd);
+        } else {
+            // Parses as a known kind, but validation rejects it when the
+            // backend isn't compiled in.
+            assert!(r.unwrap_err().contains("--features simd"));
+        }
     }
 
     #[test]

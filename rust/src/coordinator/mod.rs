@@ -117,7 +117,13 @@ impl FlRun {
 
         let clocks = build_clocks(cfg.n, &cfg.timing, derive_seed(cfg.seed, 0xC10C));
 
-        let factory = EngineFactory::new(&cfg.model, cfg.use_xla, artifacts, cfg.batch);
+        let factory = EngineFactory::new(
+            &cfg.model,
+            cfg.use_xla,
+            artifacts,
+            cfg.batch,
+            cfg.engine_kernel,
+        );
         let pool = EnginePool::new(factory, cfg.workers).context("building engine")?;
         anyhow::ensure!(
             pool.train_batch() == cfg.batch,
@@ -163,6 +169,7 @@ impl FlRun {
             ("seed", Json::Num(cfg.seed as f64)),
             ("workers", Json::Num(cfg.workers as f64)),
             ("event_driven", Json::Bool(cfg.event_driven)),
+            ("engine_kernel", Json::Str(cfg.engine_kernel.name().to_string())),
         ]);
 
         Ok(FlRun {
@@ -218,6 +225,9 @@ impl FlRun {
         t.counter("bits_up", round, tally.bits_up as f64, now);
         t.counter("bits_down", round, tally.bits_down as f64, now);
         t.counter("steps_total", round, tally.total_steps as f64, now);
+        let (kflops, kbytes) = self.pool.kernel_stats();
+        t.counter("kernel_flops", round, kflops as f64, now);
+        t.counter("kernel_bytes", round, kbytes as f64, now);
     }
 
     /// Sample this round's participants through the selection policy.

@@ -48,6 +48,25 @@ impl Dataset {
         Batch { x, y, batch: idx.len(), dim: self.dim, classes: self.num_classes }
     }
 
+    /// [`Dataset::gather_batch`] into a caller-owned scratch batch: the
+    /// `x`/`y` vectors are truncated and refilled in place, so a scratch
+    /// reused across calls with the same shape allocates nothing after
+    /// the first fill. Produces bit-identical contents to
+    /// [`Dataset::gather_batch`].
+    pub fn gather_batch_into(&self, idx: &[usize], out: &mut Batch) {
+        out.x.clear();
+        out.x.reserve(idx.len() * self.dim);
+        out.y.clear();
+        out.y.resize(idx.len() * self.num_classes, 0f32);
+        for (row, &i) in idx.iter().enumerate() {
+            out.x.extend_from_slice(self.feature_row(i));
+            out.y[row * self.num_classes + self.labels[i] as usize] = 1.0;
+        }
+        out.batch = idx.len();
+        out.dim = self.dim;
+        out.classes = self.num_classes;
+    }
+
     /// Class histogram (used by partition tests and heterogeneity stats).
     pub fn class_counts(&self) -> Vec<usize> {
         let mut c = vec![0usize; self.num_classes];
@@ -68,6 +87,14 @@ pub struct Batch {
     pub batch: usize,
     pub dim: usize,
     pub classes: usize,
+}
+
+impl Batch {
+    /// Zero-sample placeholder — the initial state of scratch batches
+    /// filled by [`Dataset::gather_batch_into`].
+    pub fn empty() -> Self {
+        Batch { x: Vec::new(), y: Vec::new(), batch: 0, dim: 0, classes: 0 }
+    }
 }
 
 /// A client's view of the training set: indices into the shared dataset
@@ -159,6 +186,34 @@ mod tests {
         assert_eq!(b.batch, 2);
         assert_eq!(b.x, vec![3.0, 4.0, 5.0, 9.0, 10.0, 11.0]);
         assert_eq!(b.y, vec![0.0, 1.0, 0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn gather_batch_into_matches_gather_batch() {
+        let d = tiny();
+        let mut scratch = Batch::empty();
+        for idx in [vec![1usize, 3], vec![0], vec![2, 0, 1]] {
+            d.gather_batch_into(&idx, &mut scratch);
+            let fresh = d.gather_batch(&idx);
+            assert_eq!(scratch.x, fresh.x);
+            assert_eq!(scratch.y, fresh.y);
+            assert_eq!(scratch.batch, fresh.batch);
+            assert_eq!(scratch.dim, fresh.dim);
+            assert_eq!(scratch.classes, fresh.classes);
+        }
+    }
+
+    #[test]
+    fn gather_batch_into_reuses_capacity() {
+        let d = tiny();
+        let mut scratch = Batch::empty();
+        d.gather_batch_into(&[0, 1, 2], &mut scratch);
+        let (cx, cy) = (scratch.x.capacity(), scratch.y.capacity());
+        // Same or smaller shapes must not reallocate.
+        d.gather_batch_into(&[3, 2, 1], &mut scratch);
+        d.gather_batch_into(&[1], &mut scratch);
+        assert_eq!(scratch.x.capacity(), cx);
+        assert_eq!(scratch.y.capacity(), cy);
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Cache-blocked, register-tiled GEMM kernel — the default backend.
+//!
+//! ## Tile layout
+//!
+//! - `MR = 4`: rows processed together (batch rows in forward, `fan_in`
+//!   rows in backward/update).
+//! - `NR = 8`: `fan_out` panel width; a full tile holds a 4×8 `f32`
+//!   accumulator block in registers.
+//!
+//! **Forward** walks `fan_out` in `NR`-wide panels (`chunks_exact` over
+//! the bias) and `b` in `MR`-row tiles: the 4×8 accumulator block is
+//! seeded from the bias once and the entire k-loop (`fan_in`) runs with
+//! the tile live in registers — the weight panel `w[i][o0..o0+8]` is
+//! loaded once and reused by all four rows, so weight traffic per output
+//! drops 4× and the panel's 8 accumulator chains give the CPU independent
+//! FP adds to overlap.
+//!
+//! **Backward-data** unrolls four independent `fan_in` chains per batch
+//! row, sharing each `d[r][o]` load across the four weight rows: a single
+//! chain is latency-bound on the FP add (each `acc += dv*wv` waits on the
+//! previous), four interleaved chains are not.
+//!
+//! **Update** keeps a 4×8 block of `W` in registers across the whole
+//! batch-row reduction, turning `b` read-modify-write passes over the
+//! weight matrix into one load and one store per element.
+//!
+//! ## Why this is bit-identical to [`super::scalar::ScalarKernel`]
+//!
+//! Every output element's value is one ordered reduction over a single
+//! "k" dimension (forward/backward: the fan dimension; update: batch
+//! rows). The tiling here reorders only *across* elements — each
+//! element's own chain keeps the scalar term order, a single
+//! accumulator, plain `acc + a*b` rounding (no FMA), and the scalar
+//! zero-skip/mask branches (semantic: `x + 0.0` flips `-0.0`, and
+//! `0.0 * inf = NaN`). Remainder rows/columns (sizes not divisible by
+//! `MR`/`NR`) fall back to the scalar per-element chains, which are
+//! bit-identical by the same argument. The contract is enforced by
+//! rust/tests/kernel_parity.rs.
+
+use super::MatmulKernel;
+
+/// Row-tile height (see module docs).
+const MR: usize = 4;
+/// `fan_out` panel width.
+const NR: usize = 8;
+
+pub struct BlockedKernel;
+
+impl MatmulKernel for BlockedKernel {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn forward(
+        &self,
+        inp: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        out: &mut [f32],
+        b: usize,
+        fan_in: usize,
+        fan_out: usize,
+    ) {
+        let mut r0 = 0;
+        while r0 + MR <= b {
+            forward_tile4(inp, w, bias, out, r0, fan_in, fan_out);
+            r0 += MR;
+        }
+        for r in r0..b {
+            forward_row(inp, w, bias, out, r, 0, fan_in, fan_out);
+        }
+    }
+
+    fn backward_data(
+        &self,
+        d: &[f32],
+        w: &[f32],
+        act: &[f32],
+        dprev: &mut [f32],
+        b: usize,
+        fan_in: usize,
+        fan_out: usize,
+    ) {
+        for r in 0..b {
+            let drow = &d[r * fan_out..(r + 1) * fan_out];
+            let arow = &act[r * fan_in..(r + 1) * fan_in];
+            let prow = &mut dprev[r * fan_in..(r + 1) * fan_in];
+            let mut i0 = 0;
+            while i0 + MR <= fan_in {
+                // Whole tile masked (common under ReLU): skip the dot
+                // products entirely — outputs are 0.0 either way.
+                if arow[i0..i0 + MR].iter().all(|&v| v <= 0.0) {
+                    prow[i0..i0 + MR].fill(0.0);
+                    i0 += MR;
+                    continue;
+                }
+                // Four independent accumulator chains sharing each d load.
+                // Per chain the o-order and rounding are exactly scalar's.
+                let w0 = &w[i0 * fan_out..(i0 + 1) * fan_out];
+                let w1 = &w[(i0 + 1) * fan_out..(i0 + 2) * fan_out];
+                let w2 = &w[(i0 + 2) * fan_out..(i0 + 3) * fan_out];
+                let w3 = &w[(i0 + 3) * fan_out..(i0 + 4) * fan_out];
+                let mut acc = [0f32; MR];
+                let it = drow
+                    .iter()
+                    .zip(w0.iter())
+                    .zip(w1.iter())
+                    .zip(w2.iter())
+                    .zip(w3.iter());
+                for ((((&dv, &x0), &x1), &x2), &x3) in it {
+                    acc[0] += dv * x0;
+                    acc[1] += dv * x1;
+                    acc[2] += dv * x2;
+                    acc[3] += dv * x3;
+                }
+                for (t, &a) in acc.iter().enumerate() {
+                    prow[i0 + t] = if arow[i0 + t] <= 0.0 { 0.0 } else { a };
+                }
+                i0 += MR;
+            }
+            for i in i0..fan_in {
+                if arow[i] <= 0.0 {
+                    prow[i] = 0.0;
+                    continue;
+                }
+                let wrow = &w[i * fan_out..(i + 1) * fan_out];
+                let mut acc = 0f32;
+                for (dv, wv) in drow.iter().zip(wrow) {
+                    acc += dv * wv;
+                }
+                prow[i] = acc;
+            }
+        }
+    }
+
+    fn update(
+        &self,
+        a: &[f32],
+        d: &[f32],
+        w: &mut [f32],
+        bias: &mut [f32],
+        lr: f32,
+        b: usize,
+        fan_in: usize,
+        fan_out: usize,
+    ) {
+        let mut i0 = 0;
+        while i0 + MR <= fan_in {
+            update_rows4(a, d, w, lr, b, i0, fan_in, fan_out);
+            i0 += MR;
+        }
+        for i in i0..fan_in {
+            update_row(a, d, w, lr, b, i, 0, fan_in, fan_out);
+        }
+        // Bias update: identical to scalar (r-ascending, o-ascending).
+        for r in 0..b {
+            let drow = &d[r * fan_out..(r + 1) * fan_out];
+            for (bv, &dv) in bias.iter_mut().zip(drow) {
+                *bv -= lr * dv;
+            }
+        }
+    }
+}
+
+/// Forward for a full `MR`-row tile: one `NR`-wide accumulator block per
+/// `fan_out` panel, seeded from the bias, k-loop over `fan_in` with the
+/// weight panel shared across the four rows.
+fn forward_tile4(
+    inp: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    r0: usize,
+    fan_in: usize,
+    fan_out: usize,
+) {
+    for (p, bpan) in bias.chunks_exact(NR).enumerate() {
+        let o0 = p * NR;
+        let mut acc = [[0f32; NR]; MR];
+        for tile in acc.iter_mut() {
+            tile.copy_from_slice(bpan);
+        }
+        for i in 0..fan_in {
+            let woff = i * fan_out + o0;
+            let wpan = &w[woff..woff + NR];
+            for (t, tile) in acc.iter_mut().enumerate() {
+                let iv = inp[(r0 + t) * fan_in + i];
+                // Same semantic skip as scalar, per (row, i).
+                if iv == 0.0 {
+                    continue;
+                }
+                for (av, &wv) in tile.iter_mut().zip(wpan) {
+                    *av += iv * wv;
+                }
+            }
+        }
+        for (t, tile) in acc.iter().enumerate() {
+            let ooff = (r0 + t) * fan_out + o0;
+            out[ooff..ooff + NR].copy_from_slice(tile);
+        }
+    }
+    // Column remainder (fan_out % NR): scalar per-element chains.
+    let o_rem = (fan_out / NR) * NR;
+    if o_rem < fan_out {
+        for t in 0..MR {
+            forward_row(inp, w, bias, out, r0 + t, o_rem, fan_in, fan_out);
+        }
+    }
+}
+
+/// Scalar forward for one row over columns `o_lo..fan_out` (used for row
+/// and column remainders) — exactly the scalar kernel's per-element chain.
+#[allow(clippy::too_many_arguments)]
+fn forward_row(
+    inp: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    r: usize,
+    o_lo: usize,
+    fan_in: usize,
+    fan_out: usize,
+) {
+    let orow = &mut out[r * fan_out + o_lo..(r + 1) * fan_out];
+    orow.copy_from_slice(&bias[o_lo..]);
+    let irow = &inp[r * fan_in..(r + 1) * fan_in];
+    for (i, &iv) in irow.iter().enumerate() {
+        if iv == 0.0 {
+            continue;
+        }
+        let wrow = &w[i * fan_out + o_lo..(i + 1) * fan_out];
+        for (o, &wv) in orow.iter_mut().zip(wrow) {
+            *o += iv * wv;
+        }
+    }
+}
+
+/// Update for a full `MR`-row block of `W`: a 4×8 register tile of
+/// weights accumulates the whole batch-row reduction before one store.
+#[allow(clippy::too_many_arguments)]
+fn update_rows4(
+    a: &[f32],
+    d: &[f32],
+    w: &mut [f32],
+    lr: f32,
+    b: usize,
+    i0: usize,
+    fan_in: usize,
+    fan_out: usize,
+) {
+    let panels = fan_out / NR;
+    for p in 0..panels {
+        let o0 = p * NR;
+        let mut acc = [[0f32; NR]; MR];
+        for (t, tile) in acc.iter_mut().enumerate() {
+            let woff = (i0 + t) * fan_out + o0;
+            tile.copy_from_slice(&w[woff..woff + NR]);
+        }
+        for r in 0..b {
+            let doff = r * fan_out + o0;
+            let dpan = &d[doff..doff + NR];
+            for (t, tile) in acc.iter_mut().enumerate() {
+                let av = a[r * fan_in + i0 + t];
+                if av == 0.0 {
+                    continue;
+                }
+                let scale = lr * av;
+                for (wv, &dv) in tile.iter_mut().zip(dpan) {
+                    *wv -= scale * dv;
+                }
+            }
+        }
+        for (t, tile) in acc.iter().enumerate() {
+            let woff = (i0 + t) * fan_out + o0;
+            w[woff..woff + NR].copy_from_slice(tile);
+        }
+    }
+    // Column remainder: scalar per-element chains.
+    let o_rem = panels * NR;
+    if o_rem < fan_out {
+        for t in 0..MR {
+            update_row(a, d, w, lr, b, i0 + t, o_rem, fan_in, fan_out);
+        }
+    }
+}
+
+/// Scalar update for one `W` row over columns `o_lo..fan_out` (row and
+/// column remainders) — per element the exact scalar chain: r-ascending,
+/// `scale = lr * a[r][i]` rounding, `a == 0.0` skip.
+#[allow(clippy::too_many_arguments)]
+fn update_row(
+    a: &[f32],
+    d: &[f32],
+    w: &mut [f32],
+    lr: f32,
+    b: usize,
+    i: usize,
+    o_lo: usize,
+    fan_in: usize,
+    fan_out: usize,
+) {
+    let wrow = &mut w[i * fan_out + o_lo..(i + 1) * fan_out];
+    for r in 0..b {
+        let av = a[r * fan_in + i];
+        if av == 0.0 {
+            continue;
+        }
+        let scale = lr * av;
+        let drow = &d[r * fan_out + o_lo..(r + 1) * fan_out];
+        for (wv, &dv) in wrow.iter_mut().zip(drow) {
+            *wv -= scale * dv;
+        }
+    }
+}

@@ -1,0 +1,284 @@
+//! GEMM kernel subsystem for the native engine hot path.
+//!
+//! Every figure sweep bottoms out in three dense products per MLP layer:
+//! the forward affine map, the backward data gradient, and the SGD weight
+//! update. [`MatmulKernel`] abstracts exactly those three shapes so
+//! backends can slot in per-op (the way dfdx structures its conv kernels
+//! behind per-backend impls), and [`crate::engine::NativeEngine`] is
+//! written against the trait:
+//!
+//! - [`scalar::ScalarKernel`] — byte-for-byte the pre-subsystem loops
+//!   (`engine/native.rs` as of PR 7). Retained as the test oracle.
+//! - [`blocked::BlockedKernel`] — the default: cache-blocked,
+//!   register-tiled panels (4-row × 8-column accumulator tiles) that are
+//!   **bit-identical** to the scalar kernel. See the module docs for why
+//!   the tiling is bit-free; docs/KERNELS.md states the contract.
+//! - [`simd::SimdKernel`] — `std::simd` + FMA behind the non-default
+//!   `simd` cargo feature (nightly-only `portable_simd`). FMA changes
+//!   rounding, so this backend is gated by approximate-parity tests
+//!   (rel-err bound vs. scalar in rust/tests/kernel_parity.rs), not the
+//!   bit-exact suite.
+//!
+//! ## The bit-exactness contract
+//!
+//! A kernel advertising bit-identity to `scalar` must preserve, for every
+//! output element, the scalar kernel's exact accumulation chain:
+//!
+//! 1. **Ordered k-accumulation.** Each output element reduces over exactly
+//!    one dimension (forward/backward: the fan dimension; update: the
+//!    batch rows). That reduction must visit terms in the scalar order,
+//!    into a single accumulator — no partial-sum splitting, no reordering.
+//!    Blocking over the *other* (per-element independent) dimensions is
+//!    free.
+//! 2. **Same rounding.** Plain `acc + a * b` (two roundings) on the
+//!    default path — `mul_add`/FMA fuses them and is only allowed behind
+//!    the `simd` feature.
+//! 3. **Preserved skip branches.** The scalar loops skip `iv == 0.0`
+//!    inputs (forward/update) and zero masked rows before accumulating
+//!    (backward). These branches are semantic, not just fast paths:
+//!    `x + 0.0 * w` is not a no-op when `x` is `-0.0` or `w` is
+//!    non-finite, so a "simplified" kernel that drops them diverges on
+//!    exactly the inputs ReLU produces in half the activations.
+//!
+//! rust/tests/kernel_parity.rs enforces the contract with random-shape
+//! property tests (including ragged sizes that don't divide the tiles)
+//! and whole-run trajectory identity for QuAFL/FedAvg/FedBuff.
+//!
+//! ## Flop/byte accounting
+//!
+//! Kernels stay pure; [`crate::engine::NativeEngine`] computes analytic
+//! flop/byte counts per layer call from the shapes and adds them to a
+//! shared [`KernelStats`] (two relaxed `fetch_add`s per train step —
+//! noise next to the ~MFLOP of work they describe). The trace layer polls
+//! the totals at round boundaries as the `kernel_flops`/`kernel_bytes`
+//! counters (docs/TRACE_SCHEMA.md).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub mod blocked;
+pub mod scalar;
+#[cfg(feature = "simd")]
+pub mod simd;
+
+/// The three GEMM shapes one MLP layer needs. `b` rows of `fan_in` inputs
+/// against a row-major `(fan_in, fan_out)` weight matrix; all slices may
+/// be larger than the active region (scratch buffers are sized for the
+/// engine's max batch) — kernels touch rows `0..b` only.
+pub trait MatmulKernel: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// `out[r] = inp[r] · W + bias` for `r in 0..b` (no activation —
+    /// the engine applies ReLU afterwards on hidden layers).
+    #[allow(clippy::too_many_arguments)]
+    fn forward(
+        &self,
+        inp: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        out: &mut [f32],
+        b: usize,
+        fan_in: usize,
+        fan_out: usize,
+    );
+
+    /// `dprev[r] = d[r] · Wᵀ`, masked by ReLU: `dprev[r][i] = 0` where
+    /// `act[r][i] <= 0` (act is the *post*-ReLU input activation).
+    #[allow(clippy::too_many_arguments)]
+    fn backward_data(
+        &self,
+        d: &[f32],
+        w: &[f32],
+        act: &[f32],
+        dprev: &mut [f32],
+        b: usize,
+        fan_in: usize,
+        fan_out: usize,
+    );
+
+    /// SGD update in place: `W -= lr · Aᵀ d` (skipping `a == 0.0` terms)
+    /// then `bias -= lr · Σ_r d[r]`, both in batch-row order.
+    #[allow(clippy::too_many_arguments)]
+    fn update(
+        &self,
+        a: &[f32],
+        d: &[f32],
+        w: &mut [f32],
+        bias: &mut [f32],
+        lr: f32,
+        b: usize,
+        fan_in: usize,
+        fan_out: usize,
+    );
+}
+
+/// Kernel selection (`--engine-kernel`, `ExperimentConfig::engine_kernel`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelKind {
+    /// the pre-subsystem loops, byte for byte — the test oracle
+    Scalar,
+    /// cache-blocked register tiling, bit-identical to `scalar` (default)
+    #[default]
+    Blocked,
+    /// `std::simd` + FMA; approximate parity only; needs `--features simd`
+    Simd,
+}
+
+impl KernelKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Ok(KernelKind::Scalar),
+            "blocked" => Ok(KernelKind::Blocked),
+            "simd" => Ok(KernelKind::Simd),
+            other => Err(format!(
+                "unknown engine kernel {other:?} (scalar | blocked | simd)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Blocked => "blocked",
+            KernelKind::Simd => "simd",
+        }
+    }
+
+    /// Whether this build can instantiate the kind (`simd` needs the
+    /// nightly-only `simd` cargo feature compiled in).
+    pub fn available(self) -> bool {
+        match self {
+            KernelKind::Simd => cfg!(feature = "simd"),
+            _ => true,
+        }
+    }
+
+    pub fn instantiate(self) -> Result<Box<dyn MatmulKernel>, String> {
+        match self {
+            KernelKind::Scalar => Ok(Box::new(scalar::ScalarKernel)),
+            KernelKind::Blocked => Ok(Box::new(blocked::BlockedKernel)),
+            KernelKind::Simd => instantiate_simd(),
+        }
+    }
+}
+
+#[cfg(feature = "simd")]
+fn instantiate_simd() -> Result<Box<dyn MatmulKernel>, String> {
+    Ok(Box::new(simd::SimdKernel))
+}
+
+#[cfg(not(feature = "simd"))]
+fn instantiate_simd() -> Result<Box<dyn MatmulKernel>, String> {
+    Err("engine kernel `simd` requires building with `--features simd` \
+         (nightly toolchain: portable_simd)"
+        .to_string())
+}
+
+/// Passive flop/byte counters shared (via `Arc`) across every engine a
+/// factory builds — primary and pool workers alike — so the trace layer
+/// reads fleet-wide totals from one place. Relaxed atomics: these are
+/// observability gauges, not synchronization.
+#[derive(Debug, Default)]
+pub struct KernelStats {
+    flops: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl KernelStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, flops: u64, bytes: u64) {
+        self.flops.fetch_add(flops, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Cumulative floating-point operations (2·b·k·n per GEMM, analytic).
+    pub fn flops(&self) -> u64 {
+        self.flops.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative bytes the kernels touched (operand reads + result
+    /// writes, analytic — not a cache-traffic measurement).
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}
+
+/// Analytic flop count of one `(b, k) × (k, n)` GEMM: one multiply + one
+/// add per inner-product term. The zero-skip branches make the *executed*
+/// count data-dependent; the analytic figure is the stable denominator
+/// every roofline uses.
+pub fn gemm_flops(b: usize, k: usize, n: usize) -> u64 {
+    2 * b as u64 * k as u64 * n as u64
+}
+
+/// Analytic bytes for [`MatmulKernel::forward`]: read inp + W + bias,
+/// write out.
+pub fn forward_bytes(b: usize, fan_in: usize, fan_out: usize) -> u64 {
+    4 * (b * fan_in + fan_in * fan_out + fan_out + b * fan_out) as u64
+}
+
+/// Analytic bytes for [`MatmulKernel::backward_data`]: read d + W + act,
+/// write dprev.
+pub fn backward_data_bytes(b: usize, fan_in: usize, fan_out: usize) -> u64 {
+    4 * (b * fan_out + fan_in * fan_out + b * fan_in + b * fan_in) as u64
+}
+
+/// Analytic bytes for [`MatmulKernel::update`]: read a + d, read+write W
+/// and bias.
+pub fn update_bytes(b: usize, fan_in: usize, fan_out: usize) -> u64 {
+    4 * (b * fan_in + b * fan_out + 2 * fan_in * fan_out + 2 * fan_out) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip_and_default() {
+        for k in [KernelKind::Scalar, KernelKind::Blocked, KernelKind::Simd] {
+            assert_eq!(KernelKind::parse(k.name()).unwrap(), k);
+        }
+        assert_eq!(KernelKind::default(), KernelKind::Blocked);
+        assert!(KernelKind::parse("fast").is_err());
+    }
+
+    #[test]
+    fn scalar_and_blocked_always_available() {
+        assert!(KernelKind::Scalar.available());
+        assert!(KernelKind::Blocked.available());
+        assert!(KernelKind::Scalar.instantiate().is_ok());
+        assert_eq!(KernelKind::Blocked.instantiate().unwrap().name(), "blocked");
+    }
+
+    #[test]
+    fn simd_availability_tracks_feature() {
+        assert_eq!(KernelKind::Simd.available(), cfg!(feature = "simd"));
+        assert_eq!(
+            KernelKind::Simd.instantiate().is_ok(),
+            cfg!(feature = "simd")
+        );
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let s = KernelStats::new();
+        assert_eq!((s.flops(), s.bytes()), (0, 0));
+        s.add(100, 40);
+        s.add(23, 2);
+        assert_eq!((s.flops(), s.bytes()), (123, 42));
+    }
+
+    #[test]
+    fn analytic_counts_match_hand_computation() {
+        // (b=2, k=3, n=5): 2*2*3*5 = 60 flops.
+        assert_eq!(gemm_flops(2, 3, 5), 60);
+        // forward: inp 2*3 + w 3*5 + bias 5 + out 2*5 = 36 floats.
+        assert_eq!(forward_bytes(2, 3, 5), 4 * 36);
+        // backward: d 2*5 + w 3*5 + act 2*3 + dprev 2*3 = 37 floats.
+        assert_eq!(backward_data_bytes(2, 3, 5), 4 * 37);
+        // update: a 2*3 + d 2*5 + 2*w 3*5 + 2*bias 5 = 56 floats.
+        assert_eq!(update_bytes(2, 3, 5), 4 * 56);
+    }
+}

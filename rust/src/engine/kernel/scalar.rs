@@ -1,0 +1,105 @@
+//! The scalar reference kernel: byte-for-byte the loops `engine/native.rs`
+//! ran before the kernel subsystem existed (ikj order, per-element
+//! zero-skip branches, plain `a*b + c` rounding). Every other backend is
+//! validated against this one — bit-exactly for `blocked`, within a
+//! relative-error bound for `simd` (rust/tests/kernel_parity.rs).
+
+use super::MatmulKernel;
+
+pub struct ScalarKernel;
+
+impl MatmulKernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn forward(
+        &self,
+        inp: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        out: &mut [f32],
+        b: usize,
+        fan_in: usize,
+        fan_out: usize,
+    ) {
+        // out = inp @ w + bias  (row-major, ikj loop order)
+        for r in 0..b {
+            let orow = &mut out[r * fan_out..(r + 1) * fan_out];
+            orow.copy_from_slice(bias);
+            let irow = &inp[r * fan_in..(r + 1) * fan_in];
+            for (i, &iv) in irow.iter().enumerate() {
+                if iv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[i * fan_out..(i + 1) * fan_out];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += iv * wv;
+                }
+            }
+        }
+    }
+
+    fn backward_data(
+        &self,
+        d: &[f32],
+        w: &[f32],
+        act: &[f32],
+        dprev: &mut [f32],
+        b: usize,
+        fan_in: usize,
+        fan_out: usize,
+    ) {
+        for r in 0..b {
+            let drow = &d[r * fan_out..(r + 1) * fan_out];
+            let prow = &mut dprev[r * fan_in..(r + 1) * fan_in];
+            for (i, pv) in prow.iter_mut().enumerate() {
+                // relu mask: gradient flows only where act > 0
+                if act[r * fan_in + i] <= 0.0 {
+                    *pv = 0.0;
+                    continue;
+                }
+                let wrow = &w[i * fan_out..(i + 1) * fan_out];
+                let mut acc = 0f32;
+                for (dv, wv) in drow.iter().zip(wrow) {
+                    acc += dv * wv;
+                }
+                *pv = acc;
+            }
+        }
+    }
+
+    fn update(
+        &self,
+        a: &[f32],
+        d: &[f32],
+        w: &mut [f32],
+        bias: &mut [f32],
+        lr: f32,
+        b: usize,
+        fan_in: usize,
+        fan_out: usize,
+    ) {
+        // W -= lr * A^T d ; bias -= lr * sum_rows(d)
+        for r in 0..b {
+            let arow = &a[r * fan_in..(r + 1) * fan_in];
+            let drow = &d[r * fan_out..(r + 1) * fan_out];
+            for (i, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let scale = lr * av;
+                let wrow = &mut w[i * fan_out..(i + 1) * fan_out];
+                for (wv, &dv) in wrow.iter_mut().zip(drow) {
+                    *wv -= scale * dv;
+                }
+            }
+        }
+        for r in 0..b {
+            let drow = &d[r * fan_out..(r + 1) * fan_out];
+            for (bv, &dv) in bias.iter_mut().zip(drow) {
+                *bv -= lr * dv;
+            }
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! `std::simd` kernel (feature `simd`, nightly-only `portable_simd`).
+//!
+//! Vectorizes the `fan_out` dimension in 8-lane `f32` vectors and fuses
+//! multiply-add via [`std::simd::StdFloat::mul_add`]. FMA rounds once
+//! where the scalar path rounds twice, and the backward dot product folds
+//! 8 partial sums before a horizontal reduce — so this backend is **not**
+//! bit-identical to `scalar`/`blocked`. It is gated by approximate-parity
+//! tests (relative-error bound, rust/tests/kernel_parity.rs) and rejected
+//! at config validation when the feature isn't compiled in.
+//!
+//! The zero-skip and ReLU-mask branches are kept per element, matching
+//! the scalar structure (they are semantic: see the module docs in
+//! [`super`]), and the remainder lanes (`fan_out % 8`) use scalar
+//! `f32::mul_add` so the whole row shares one rounding discipline.
+
+use std::simd::prelude::*;
+use std::simd::StdFloat;
+
+use super::MatmulKernel;
+
+const LANES: usize = 8;
+type V = Simd<f32, LANES>;
+
+pub struct SimdKernel;
+
+impl MatmulKernel for SimdKernel {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn forward(
+        &self,
+        inp: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        out: &mut [f32],
+        b: usize,
+        fan_in: usize,
+        fan_out: usize,
+    ) {
+        for r in 0..b {
+            let orow = &mut out[r * fan_out..(r + 1) * fan_out];
+            orow.copy_from_slice(bias);
+            let irow = &inp[r * fan_in..(r + 1) * fan_in];
+            for (i, &iv) in irow.iter().enumerate() {
+                if iv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[i * fan_out..(i + 1) * fan_out];
+                let vi = V::splat(iv);
+                let mut oc = orow.chunks_exact_mut(LANES);
+                let mut wc = wrow.chunks_exact(LANES);
+                for (o8, w8) in oc.by_ref().zip(wc.by_ref()) {
+                    V::from_slice(w8).mul_add(vi, V::from_slice(o8)).copy_to_slice(o8);
+                }
+                for (o, &wv) in oc.into_remainder().iter_mut().zip(wc.remainder()) {
+                    *o = wv.mul_add(iv, *o);
+                }
+            }
+        }
+    }
+
+    fn backward_data(
+        &self,
+        d: &[f32],
+        w: &[f32],
+        act: &[f32],
+        dprev: &mut [f32],
+        b: usize,
+        fan_in: usize,
+        fan_out: usize,
+    ) {
+        for r in 0..b {
+            let drow = &d[r * fan_out..(r + 1) * fan_out];
+            let arow = &act[r * fan_in..(r + 1) * fan_in];
+            let prow = &mut dprev[r * fan_in..(r + 1) * fan_in];
+            for (i, pv) in prow.iter_mut().enumerate() {
+                if arow[i] <= 0.0 {
+                    *pv = 0.0;
+                    continue;
+                }
+                let wrow = &w[i * fan_out..(i + 1) * fan_out];
+                let mut accv = V::splat(0.0);
+                let mut dc = drow.chunks_exact(LANES);
+                let mut wc = wrow.chunks_exact(LANES);
+                for (d8, w8) in dc.by_ref().zip(wc.by_ref()) {
+                    accv = V::from_slice(d8).mul_add(V::from_slice(w8), accv);
+                }
+                let mut acc = accv.reduce_sum();
+                for (&dv, &wv) in dc.remainder().iter().zip(wc.remainder()) {
+                    acc = dv.mul_add(wv, acc);
+                }
+                *pv = acc;
+            }
+        }
+    }
+
+    fn update(
+        &self,
+        a: &[f32],
+        d: &[f32],
+        w: &mut [f32],
+        bias: &mut [f32],
+        lr: f32,
+        b: usize,
+        fan_in: usize,
+        fan_out: usize,
+    ) {
+        for r in 0..b {
+            let arow = &a[r * fan_in..(r + 1) * fan_in];
+            let drow = &d[r * fan_out..(r + 1) * fan_out];
+            for (i, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let scale = lr * av;
+                let vneg = V::splat(-scale);
+                let wrow = &mut w[i * fan_out..(i + 1) * fan_out];
+                let mut wc = wrow.chunks_exact_mut(LANES);
+                let mut dc = drow.chunks_exact(LANES);
+                for (w8, d8) in wc.by_ref().zip(dc.by_ref()) {
+                    V::from_slice(d8).mul_add(vneg, V::from_slice(w8)).copy_to_slice(w8);
+                }
+                for (wv, &dv) in wc.into_remainder().iter_mut().zip(dc.remainder()) {
+                    *wv = dv.mul_add(-scale, *wv);
+                }
+            }
+        }
+        for r in 0..b {
+            let drow = &d[r * fan_out..(r + 1) * fan_out];
+            for (bv, &dv) in bias.iter_mut().zip(drow) {
+                *bv = dv.mul_add(-lr, *bv);
+            }
+        }
+    }
+}

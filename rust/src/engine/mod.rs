@@ -8,12 +8,20 @@
 //!
 //! Both implement [`TrainEngine`] over *flat* parameter vectors — the
 //! representation the FL protocol averages and quantizes.
+//!
+//! The native engine's three per-layer GEMMs are pluggable
+//! ([`kernel::MatmulKernel`]): `--engine-kernel` selects the scalar
+//! oracle, the cache-blocked default, or the feature-gated SIMD backend.
 
+pub mod kernel;
 pub mod native;
 pub mod xla;
 
+pub use kernel::{KernelKind, KernelStats, MatmulKernel};
 pub use native::NativeEngine;
 pub use xla::XlaEngine;
+
+use std::sync::Arc;
 
 use crate::data::{Batch, Dataset};
 use crate::model::ModelSpec;
@@ -99,17 +107,22 @@ pub trait TrainEngine: Send {
 }
 
 /// Build the engine selected by the config. XLA needs `artifacts/`
-/// (`make artifacts`); native works anywhere.
+/// (`make artifacts`); native works anywhere. `kernel` selects the native
+/// GEMM backend (ignored by XLA — its kernels are baked into the
+/// artifact); `stats` is the shared flop/byte tally every engine built
+/// from the same factory adds to.
 pub fn build_engine(
     model: &str,
     use_xla: bool,
     artifacts_dir: &str,
     batch: usize,
+    kernel: KernelKind,
+    stats: Arc<KernelStats>,
 ) -> anyhow::Result<Box<dyn TrainEngine>> {
     let spec = ModelSpec::by_name(model).map_err(anyhow::Error::msg)?;
     if use_xla {
         Ok(Box::new(XlaEngine::new(artifacts_dir, &spec)?))
     } else {
-        Ok(Box::new(NativeEngine::new(spec, batch)))
+        Ok(Box::new(NativeEngine::with_kernel(spec, batch, kernel, stats)?))
     }
 }

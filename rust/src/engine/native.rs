@@ -4,8 +4,23 @@
 //! Exists to (a) cross-validate the XLA artifact path step-for-step,
 //! (b) run large figure sweeps quickly, (c) keep unit tests hermetic.
 //! Scratch buffers are reused across steps (zero allocation in the hot
-//! loop after warmup — see EXPERIMENTS.md §Perf).
+//! loop after warmup — see EXPERIMENTS.md §Perf); this includes the
+//! evaluation path, whose index list and gathered batch live in the
+//! engine and are refilled in place per chunk.
+//!
+//! The three per-layer GEMMs are delegated to a [`MatmulKernel`]
+//! ([`crate::engine::kernel`]): `scalar` is the historical loop nest
+//! kept as the oracle, `blocked` (default) is the cache-blocked
+//! register-tiled version proven bit-identical, and `simd` (feature-
+//! gated) trades bit-exactness for FMA throughput. Selection flows from
+//! `--engine-kernel` through [`crate::engine::build_engine`].
 
+use std::sync::Arc;
+
+use super::kernel::{
+    backward_data_bytes, forward_bytes, gemm_flops, update_bytes, KernelKind,
+    KernelStats, MatmulKernel,
+};
 use super::TrainEngine;
 use crate::data::{Batch, Dataset};
 use crate::model::ModelSpec;
@@ -13,17 +28,47 @@ use crate::model::ModelSpec;
 pub struct NativeEngine {
     spec: ModelSpec,
     batch: usize,
+    kernel: Box<dyn MatmulKernel>,
+    /// shared flop/byte tally (see [`KernelStats`]); the engine adds
+    /// analytic per-layer counts so the kernels themselves stay pure
+    stats: Arc<KernelStats>,
     /// per-layer activations: acts[0] = input, acts[l+1] = output of layer l
     acts: Vec<Vec<f32>>,
     /// per-layer pre-activation gradients (delta), same shapes as acts[1..]
     deltas: Vec<Vec<f32>>,
     /// softmax probabilities buffer
     probs: Vec<f32>,
+    /// reusable chunk-index scratch for [`TrainEngine::evaluate_span`]
+    eval_idx: Vec<usize>,
+    /// reusable gathered-batch scratch for [`TrainEngine::evaluate_span`]
+    eval_scratch: Batch,
 }
 
 impl NativeEngine {
+    /// Engine with the default kernel ([`KernelKind::Blocked`]) and a
+    /// private stats tally.
     pub fn new(spec: ModelSpec, batch: usize) -> Self {
+        Self::with_kernel(
+            spec,
+            batch,
+            KernelKind::default(),
+            Arc::new(KernelStats::new()),
+        )
+        .expect("default kernel is always available")
+    }
+
+    /// Engine with an explicit kernel and a shared stats tally (the
+    /// [`crate::exec::EngineFactory`] path: every worker's engine adds to
+    /// the same counters). Errors if `kind` isn't compiled in (`simd`
+    /// without `--features simd`).
+    pub fn with_kernel(
+        spec: ModelSpec,
+        batch: usize,
+        kind: KernelKind,
+        stats: Arc<KernelStats>,
+    ) -> anyhow::Result<Self> {
         assert!(batch >= 1);
+        let kernel = kind.instantiate().map_err(anyhow::Error::msg)?;
         let acts = std::iter::once(batch * spec.sizes[0])
             .chain((1..spec.sizes.len()).map(|i| batch * spec.sizes[i]))
             .map(|n| vec![0f32; n])
@@ -32,7 +77,22 @@ impl NativeEngine {
             .map(|i| vec![0f32; batch * spec.sizes[i]])
             .collect();
         let probs = vec![0f32; batch * spec.num_classes()];
-        NativeEngine { spec, batch, acts, deltas, probs }
+        Ok(NativeEngine {
+            spec,
+            batch,
+            kernel,
+            stats,
+            acts,
+            deltas,
+            probs,
+            eval_idx: Vec::new(),
+            eval_scratch: Batch::empty(),
+        })
+    }
+
+    /// The active kernel's name (`scalar`/`blocked`/`simd`).
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
     }
 
     /// logits = forward(params, x); fills self.acts. `b` = rows used.
@@ -41,6 +101,8 @@ impl NativeEngine {
         self.acts[0][..b * sizes[0]].copy_from_slice(&x[..b * sizes[0]]);
         let segs = self.spec.segments();
         let n_layers = self.spec.num_layers();
+        let mut flops = 0u64;
+        let mut bytes = 0u64;
         for l in 0..n_layers {
             let (w_off, w_shape) = &segs[2 * l];
             let (b_off, _) = &segs[2 * l + 1];
@@ -50,23 +112,9 @@ impl NativeEngine {
             let (inp, out) = {
                 // split_at_mut around layer l
                 let (lo, hi) = self.acts.split_at_mut(l + 1);
-                (&lo[l], &mut hi[0])
+                (&lo[l][..], &mut hi[0][..])
             };
-            // out = inp @ w + bias  (row-major, ikj loop order)
-            for r in 0..b {
-                let orow = &mut out[r * fan_out..(r + 1) * fan_out];
-                orow.copy_from_slice(bias);
-                let irow = &inp[r * fan_in..(r + 1) * fan_in];
-                for (i, &iv) in irow.iter().enumerate() {
-                    if iv == 0.0 {
-                        continue;
-                    }
-                    let wrow = &w[i * fan_out..(i + 1) * fan_out];
-                    for (o, &wv) in orow.iter_mut().zip(wrow) {
-                        *o += iv * wv;
-                    }
-                }
-            }
+            self.kernel.forward(inp, w, bias, out, b, fan_in, fan_out);
             if l < n_layers - 1 {
                 for v in out[..b * fan_out].iter_mut() {
                     if *v < 0.0 {
@@ -74,7 +122,10 @@ impl NativeEngine {
                     }
                 }
             }
+            flops += gemm_flops(b, fan_in, fan_out);
+            bytes += forward_bytes(b, fan_in, fan_out);
         }
+        self.stats.add(flops, bytes);
     }
 
     /// Softmax + mean xent on acts.last(); fills self.probs; returns loss.
@@ -117,6 +168,8 @@ impl NativeEngine {
                 d[i] = (self.probs[i] - y[i]) * inv_b;
             }
         }
+        let mut flops = 0u64;
+        let mut bytes = 0u64;
         // Walk layers backwards.
         for l in (0..n_layers).rev() {
             let (w_off, w_shape) = segs[2 * l].clone();
@@ -126,54 +179,29 @@ impl NativeEngine {
             if l > 0 {
                 let (dprev, d) = {
                     let (lo, hi) = self.deltas.split_at_mut(l);
-                    (&mut lo[l - 1], &hi[0])
+                    (&mut lo[l - 1][..], &hi[0][..])
                 };
                 let w = &params[w_off..w_off + fan_in * fan_out];
-                let prev_act = &self.acts[l];
-                for r in 0..b {
-                    let drow = &d[r * fan_out..(r + 1) * fan_out];
-                    let prow = &mut dprev[r * fan_in..(r + 1) * fan_in];
-                    for (i, pv) in prow.iter_mut().enumerate() {
-                        // relu mask: gradient flows only where act > 0
-                        if prev_act[r * fan_in + i] <= 0.0 {
-                            *pv = 0.0;
-                            continue;
-                        }
-                        let wrow = &w[i * fan_out..(i + 1) * fan_out];
-                        let mut acc = 0f32;
-                        for (dv, wv) in drow.iter().zip(wrow) {
-                            acc += dv * wv;
-                        }
-                        *pv = acc;
-                    }
-                }
+                let prev_act = &self.acts[l][..];
+                self.kernel
+                    .backward_data(d, w, prev_act, dprev, b, fan_in, fan_out);
+                flops += gemm_flops(b, fan_in, fan_out);
+                bytes += backward_data_bytes(b, fan_in, fan_out);
             }
-            // SGD update: W -= lr * A^T d ; bias -= lr * sum_rows(d)
-            let d = &self.deltas[l];
-            let a = &self.acts[l];
-            let w = &mut params[w_off..w_off + fan_in * fan_out];
-            for r in 0..b {
-                let arow = &a[r * fan_in..(r + 1) * fan_in];
-                let drow = &d[r * fan_out..(r + 1) * fan_out];
-                for (i, &av) in arow.iter().enumerate() {
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let scale = lr * av;
-                    let wrow = &mut w[i * fan_out..(i + 1) * fan_out];
-                    for (wv, &dv) in wrow.iter_mut().zip(drow) {
-                        *wv -= scale * dv;
-                    }
-                }
-            }
-            let bias = &mut params[b_off..b_off + fan_out];
-            for r in 0..b {
-                let drow = &d[r * fan_out..(r + 1) * fan_out];
-                for (bv, &dv) in bias.iter_mut().zip(drow) {
-                    *bv -= lr * dv;
-                }
-            }
+            // SGD update: W -= lr * A^T d ; bias -= lr * sum_rows(d).
+            // Weights and bias are adjacent segments of the flat vector
+            // (segments() lays them out w_l, b_l, ...), so split at the
+            // bias offset to borrow both mutably.
+            let d = &self.deltas[l][..];
+            let a = &self.acts[l][..];
+            let (head, rest) = params.split_at_mut(b_off);
+            let w = &mut head[w_off..];
+            let bias = &mut rest[..fan_out];
+            self.kernel.update(a, d, w, bias, lr, b, fan_in, fan_out);
+            flops += gemm_flops(b, fan_in, fan_out) + 2 * (b * fan_out) as u64;
+            bytes += update_bytes(b, fan_in, fan_out);
         }
+        self.stats.add(flops, bytes);
     }
 }
 
@@ -213,24 +241,37 @@ impl TrainEngine for NativeEngine {
         let c = self.spec.num_classes();
         let chunk = self.batch;
         let mut out = Vec::with_capacity((hi - lo).div_ceil(chunk.max(1)));
+        // Move the scratch out of self for the loop (borrowck: forward
+        // takes &mut self while reading the gathered rows) and restore it
+        // after — capacity persists across chunks AND across calls, so
+        // the hot loop allocates nothing after the first chunk.
+        let mut idx = std::mem::take(&mut self.eval_idx);
+        let mut scratch = std::mem::replace(&mut self.eval_scratch, Batch::empty());
         let mut i = lo;
         while i < hi {
             let end = (i + chunk).min(hi);
-            let idx: Vec<usize> = (i..end).collect();
-            let batch = data.gather_batch(&idx);
-            let b = batch.batch;
-            self.forward(params, &batch.x, b);
-            let loss = self.loss_and_probs(&batch.y, b) as f64 * b as f64;
+            idx.clear();
+            idx.extend(i..end);
+            data.gather_batch_into(&idx, &mut scratch);
+            let b = scratch.batch;
+            self.forward(params, &scratch.x, b);
+            let loss = self.loss_and_probs(&scratch.y, b) as f64 * b as f64;
             let logits = self.acts.last().unwrap();
             let mut correct = 0usize;
             for r in 0..b {
                 let row = &logits[r * c..(r + 1) * c];
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0;
+                // NaN-safe argmax: total-order fold keeping the FIRST
+                // maximum. `v > best` is false for NaN, so a NaN logit
+                // can never win (an all-NaN row predicts class 0) — the
+                // previous `partial_cmp().unwrap()` panicked instead.
+                let mut pred = 0usize;
+                let mut best = f32::NEG_INFINITY;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > best {
+                        best = v;
+                        pred = j;
+                    }
+                }
                 if pred as u32 == data.labels[i + r] {
                     correct += 1;
                 }
@@ -238,6 +279,8 @@ impl TrainEngine for NativeEngine {
             out.push((loss, correct as f64));
             i = end;
         }
+        self.eval_idx = idx;
+        self.eval_scratch = scratch;
         Ok(out)
     }
 
@@ -354,5 +397,76 @@ mod tests {
         let l2 = e2.train_step(&mut p2, &batch, 0.05).unwrap();
         assert_eq!(l1, l2);
         assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn default_kernel_is_blocked_and_explicit_kinds_build() {
+        let spec = ModelSpec::by_name("mlp").unwrap();
+        let e = NativeEngine::new(spec.clone(), 8);
+        assert_eq!(e.kernel_name(), "blocked");
+        let e = NativeEngine::with_kernel(
+            spec,
+            8,
+            KernelKind::Scalar,
+            Arc::new(KernelStats::new()),
+        )
+        .unwrap();
+        assert_eq!(e.kernel_name(), "scalar");
+    }
+
+    #[test]
+    fn evaluate_survives_nan_logits() {
+        // Regression: the argmax used `partial_cmp().unwrap()` and
+        // panicked on the first NaN logit. Poisoning every parameter
+        // makes every logit NaN; evaluation must complete (predicting
+        // class 0 per row) and surface NaN through the loss only.
+        let (mut e, mut params, data) = setup();
+        for v in params.iter_mut() {
+            *v = f32::NAN;
+        }
+        let (loss, acc) = e.evaluate(&params, &data).unwrap();
+        assert!(loss.is_nan(), "NaN params must surface a NaN loss");
+        // All rows predict class 0, so accuracy equals label-0 frequency.
+        let zero_frac = data.labels.iter().filter(|&&l| l == 0).count() as f64
+            / data.len() as f64;
+        assert_eq!(acc, zero_frac);
+    }
+
+    #[test]
+    fn eval_scratch_reuses_capacity_across_calls() {
+        let (mut e, params, data) = setup();
+        e.evaluate(&params, &data).unwrap();
+        let cap_x = e.eval_scratch.x.capacity();
+        let cap_idx = e.eval_idx.capacity();
+        assert!(cap_x > 0 && cap_idx > 0, "first eval must warm the scratch");
+        e.evaluate(&params, &data).unwrap();
+        // Same shapes on the second pass: the buffers must not regrow.
+        assert_eq!(e.eval_scratch.x.capacity(), cap_x);
+        assert_eq!(e.eval_idx.capacity(), cap_idx);
+    }
+
+    #[test]
+    fn flop_byte_stats_accumulate_analytically() {
+        let spec = ModelSpec::by_name("mlp").unwrap(); // 784 -> 32 -> 10
+        let stats = Arc::new(KernelStats::new());
+        let mut e = NativeEngine::with_kernel(
+            spec,
+            32,
+            KernelKind::Blocked,
+            Arc::clone(&stats),
+        )
+        .unwrap();
+        let (train, _) = SynthSpec::family(SynthFamily::Mnist, 64, 16, 3).generate();
+        let idx: Vec<usize> = (0..32).collect();
+        let batch = train.gather_batch(&idx);
+        let mut params = e.spec().init_params(3);
+        e.train_step(&mut params, &batch, 0.1).unwrap();
+        // forward: both layers; backward_data: layer 1 only; update: both
+        // layers + bias terms.
+        let fwd = gemm_flops(32, 784, 32) + gemm_flops(32, 32, 10);
+        let bwd = gemm_flops(32, 32, 10);
+        let upd = fwd + 2 * (32 * 32) as u64 + 2 * (32 * 10) as u64;
+        assert_eq!(stats.flops(), fwd + bwd + upd);
+        assert!(stats.bytes() > 0);
     }
 }

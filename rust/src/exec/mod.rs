@@ -47,32 +47,59 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::data::{Batch, Dataset, Shard};
-use crate::engine::{build_engine, TrainEngine};
+use crate::engine::{build_engine, KernelKind, KernelStats, TrainEngine};
 use crate::model::ModelSpec;
 
 /// Recipe for building one worker's engine. Cloneable and cheap; the
 /// expensive part (XLA artifact compilation, scratch allocation) happens in
 /// [`EngineFactory::build`], once per pool worker.
+///
+/// Cloning shares the [`KernelStats`] tally, so every engine built from
+/// this factory — the pool's primary and all its workers — adds its
+/// flop/byte counts to the same counters ([`EngineFactory::kernel_stats`]).
 #[derive(Clone, Debug)]
 pub struct EngineFactory {
     pub model: String,
     pub use_xla: bool,
     pub artifacts_dir: String,
     pub batch: usize,
+    pub kernel: KernelKind,
+    stats: Arc<KernelStats>,
 }
 
 impl EngineFactory {
-    pub fn new(model: &str, use_xla: bool, artifacts_dir: &str, batch: usize) -> Self {
+    pub fn new(
+        model: &str,
+        use_xla: bool,
+        artifacts_dir: &str,
+        batch: usize,
+        kernel: KernelKind,
+    ) -> Self {
         EngineFactory {
             model: model.to_string(),
             use_xla,
             artifacts_dir: artifacts_dir.to_string(),
             batch,
+            kernel,
+            stats: Arc::new(KernelStats::new()),
         }
     }
 
     pub fn build(&self) -> Result<Box<dyn TrainEngine>> {
-        build_engine(&self.model, self.use_xla, &self.artifacts_dir, self.batch)
+        build_engine(
+            &self.model,
+            self.use_xla,
+            &self.artifacts_dir,
+            self.batch,
+            self.kernel,
+            Arc::clone(&self.stats),
+        )
+    }
+
+    /// The shared flop/byte tally across every engine this factory (and
+    /// its clones) built.
+    pub fn kernel_stats(&self) -> &KernelStats {
+        &self.stats
     }
 }
 
@@ -221,6 +248,14 @@ impl EnginePool {
     /// (the trace layer's `pool_busy_ns` counter).
     pub fn busy_ns(&self) -> u64 {
         self.busy_ns.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative (flops, bytes) across every engine the pool built —
+    /// primary and workers share one [`KernelStats`] via the factory.
+    /// Polled by the trace layer as `kernel_flops`/`kernel_bytes`.
+    pub fn kernel_stats(&self) -> (u64, u64) {
+        let s = self.factory.kernel_stats();
+        (s.flops(), s.bytes())
     }
 
     /// Resolved worker count (>= 1, including the caller's thread).
@@ -488,7 +523,7 @@ mod tests {
     const BATCH: usize = 8;
 
     fn factory() -> EngineFactory {
-        EngineFactory::new("mlp", false, "artifacts", BATCH)
+        EngineFactory::new("mlp", false, "artifacts", BATCH, KernelKind::default())
     }
 
     fn setup(n_clients: usize) -> (Dataset, Vec<Shard>, Vec<f32>) {
@@ -626,6 +661,26 @@ mod tests {
         let tasks = make_tasks(&train, &mut shards2, &params, &[2, 1, 1, 2, 1, 1]);
         pool4.run_local_sgd(tasks).unwrap();
         assert!(pool4.busy_ns() > 0, "parallel fan-out must record busy time");
+    }
+
+    #[test]
+    fn kernel_stats_shared_across_pool_workers() {
+        // Every engine the pool builds (primary + spawned workers) adds
+        // to the SAME tally, and the parallel total equals the serial
+        // total: analytic counts depend only on the work, not the split.
+        let (train, mut shards, params) = setup(6);
+        let hs = [2usize, 1, 1, 2, 1, 1];
+        let mut pool1 = EnginePool::new(factory(), 1).unwrap();
+        assert_eq!(pool1.kernel_stats(), (0, 0));
+        let tasks = make_tasks(&train, &mut shards, &params, &hs);
+        pool1.run_local_sgd(tasks).unwrap();
+        let (f1, b1) = pool1.kernel_stats();
+        assert!(f1 > 0 && b1 > 0);
+        let (_, mut shards2, _) = setup(6);
+        let mut pool4 = EnginePool::new(factory(), 4).unwrap();
+        let tasks = make_tasks(&train, &mut shards2, &params, &hs);
+        pool4.run_local_sgd(tasks).unwrap();
+        assert_eq!(pool4.kernel_stats(), (f1, b1));
     }
 
     #[test]

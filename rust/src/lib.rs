@@ -1,3 +1,4 @@
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! # QuAFL — Quantized Asynchronous Federated Learning
 //!
 //! Rust + JAX + Pallas reproduction of *"Communication-Efficient Federated
@@ -71,6 +72,20 @@
 //!   net_fleet` writes the BENCH_fleet.json scaling curve); the legacy
 //!   O(n) path is kept and rust/tests/scale_parity.rs proves both modes
 //!   bit-identical on every query, policy, and end-to-end trajectory.
+//! - **L3-kernel** — the GEMM kernel subsystem under the native engine
+//!   ([`engine::kernel`]): a [`engine::MatmulKernel`] trait over the three
+//!   dense products every MLP layer needs (forward affine, backward data
+//!   gradient, SGD update), with three backends selected by
+//!   `--engine-kernel`: `scalar` (the pre-subsystem loops, kept as the
+//!   bit-exact oracle), `blocked` (default — cache-blocked 4×8
+//!   register-tiled panels, proven **bit-identical** to scalar by
+//!   property tests and whole-run trajectory identity,
+//!   rust/tests/kernel_parity.rs), and `simd` (`std::simd` + FMA behind
+//!   the nightly-only `simd` cargo feature; approximate parity). Engines
+//!   report analytic flop/byte counts through a shared
+//!   [`engine::KernelStats`] that the trace layer polls as
+//!   `kernel_flops`/`kernel_bytes`. Contract and tile layout:
+//!   docs/KERNELS.md.
 //! - **L3-trace** — the structured tracing & self-profiling layer
 //!   ([`trace`]): a zero-overhead-when-off [`trace::Tracer`] handle on
 //!   [`coordinator::FlRun`] emits dual-stamped span events (wall-clock ns

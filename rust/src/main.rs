@@ -93,6 +93,10 @@ fn usage() {
          \x20 --weighted                  --swt/--sit FLOAT\n\
          \x20 --slow-fraction FLOAT (0.25) --batch INT (32)\n\
          \x20 --workers INT client-exec threads (0 = all cores)\n\
+         \x20 --engine-kernel scalar|blocked|simd (blocked) native GEMM\n\
+         \x20                             backend; scalar/blocked are\n\
+         \x20                             bit-identical, simd needs\n\
+         \x20                             --features simd\n\
          \x20 --price-init-broadcast      price the t=0 init-model broadcast\n\
          \x20 --dense-fleet               eager O(n·d) client models\n\
          \x20                             (reference layout; default is the\n\

@@ -238,7 +238,36 @@ impl Report {
                 s.push_str(&format!("{:<22} {:>8} {:>16.0}\n", name, a.count, a.last));
             }
         }
+        if let Some(line) = self.kernel_throughput_line() {
+            s.push_str(&line);
+        }
         s
+    }
+
+    /// Derived engine-throughput line: cumulative kernel flops/bytes (the
+    /// engine's analytic tally) over the wall time of the engine-bearing
+    /// phases (local_sgd + eval). flops/ns is numerically GFLOP/s.
+    /// `None` when the trace carries no kernel counters or no engine
+    /// phase wall time.
+    fn kernel_throughput_line(&self) -> Option<String> {
+        let flops = self.counters.get("kernel_flops")?.last;
+        let bytes = self.counters.get("kernel_bytes").map(|a| a.last).unwrap_or(0.0);
+        let engine_ns: f64 = ["local_sgd", "eval"]
+            .iter()
+            .filter_map(|p| self.spans.get(*p))
+            .map(|a| a.wall_ns_total)
+            .sum();
+        if flops <= 0.0 || engine_ns <= 0.0 {
+            return None;
+        }
+        Some(format!(
+            "\nengine: {:.2} GFLOP, {:.2} GB touched, {:.2} GFLOP/s over \
+             local_sgd+eval wall ({})\n",
+            flops / 1e9,
+            bytes / 1e9,
+            flops / engine_ns,
+            fmt_wall(engine_ns),
+        ))
     }
 
     /// The canonical `BENCH_phase.json` document: one row per phase,
@@ -407,6 +436,28 @@ mod tests {
         let (_, _, c1) = histogram(&[2.0, 2.0, 2.0], 8);
         assert_eq!(c1[0], 3);
         assert_eq!(c1.iter().sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn kernel_throughput_line_derived_from_counters_and_spans() {
+        // 2e9 flops over 1e9 ns of local_sgd + 1e9 ns of eval = 1 GFLOP/s.
+        let events = vec![
+            span("local_sgd", 0, 1_000_000_000, 0.0),
+            span("eval", 0, 1_000_000_000, 0.0),
+            counter("kernel_flops", 2.0e9),
+            counter("kernel_bytes", 5.0e8),
+        ];
+        let r = aggregate(&events);
+        let text = r.render();
+        assert!(text.contains("1.00 GFLOP/s"), "{text}");
+        assert!(text.contains("2.00 GFLOP"), "{text}");
+        // No kernel counters -> no derived line.
+        let r = aggregate(&[span("local_sgd", 0, 1000, 0.0)]);
+        assert!(!r.render().contains("GFLOP/s"));
+        // Kernel counters but no engine spans -> no derived line (avoid
+        // a divide-by-zero throughput claim).
+        let r = aggregate(&[counter("kernel_flops", 1.0e9)]);
+        assert!(!r.render().contains("GFLOP/s"));
     }
 
     #[test]
