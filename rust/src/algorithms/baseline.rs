@@ -23,11 +23,16 @@ use crate::coordinator::FlRun;
 use crate::data::Shard;
 use crate::exec::ClientTask;
 use crate::metrics::{CommTally, RunMetrics};
+use crate::telemetry::{names, Telemetry};
 use crate::util::rng::{derive_seed, Rng};
 
 pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     let cfg = ctx.cfg.clone();
     let mut metrics = RunMetrics::new("baseline");
+
+    // L3-telemetry: a single sequential node has no fleet, selection, or
+    // quantizer — its loss stream is the one meaningful metric.
+    let mut tel = Telemetry::new(ctx.telemetry_armed(), cfg.seed);
 
     let mut x = ctx.spec.init_params(derive_seed(cfg.seed, 0x1417));
     // The baseline node sees the whole training set.
@@ -70,11 +75,17 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         tally.total_steps += r.steps as u64;
         metrics.total_interactions += 1;
         metrics.sum_observed_steps += 1;
+        if r.steps > 0 {
+            let mean_loss = r.loss as f64 / r.steps as f64;
+            tel.observe(names::CLIENT_LOSS, mean_loss);
+            tel.observe_sampled(names::CLIENT_LOSS, mean_loss);
+        }
 
         if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
             ctx.eval_point(&mut metrics, t + 1, now, &tally, &x)?;
         }
         ctx.emit_counters(t as u64, now, &tally, None);
+        tel.flush(&ctx.tracer, t as u64, now);
         ctx.tracer.span("round", round_t0, t as u64, now - round_sim0, now);
     }
     Ok(metrics)

@@ -30,12 +30,18 @@ use super::make_task;
 use crate::coordinator::FlRun;
 use crate::metrics::{CommTally, RunMetrics};
 use crate::model::params;
+use crate::telemetry::{names, Telemetry};
 use crate::util::rng::derive_seed;
 
 pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     let cfg = ctx.cfg.clone();
     let d = ctx.spec.num_params();
     let mut metrics = RunMetrics::new("fedavg");
+
+    // L3-telemetry registry. FedAvg is synchronous and uncompressed, so
+    // there is no Φ_t probe and no quantization error — selection-bias
+    // gauges plus loss/delay distributions cover it.
+    let mut tel = Telemetry::new(ctx.telemetry_armed(), cfg.seed);
 
     let mut x_server = ctx.spec.init_params(derive_seed(cfg.seed, 0x1417));
     let mut now = 0f64;
@@ -71,10 +77,13 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             // Nobody reachable: the server idles one interaction slot.
             now += cfg.timing.sit;
             ctx.tracker.advance_round();
+            tel.gauge_set(names::SELECT_CHI2, ctx.tracker.selection_bias_chi2());
+            tel.gauge_set(names::GINI, ctx.tracker.participation_gini());
             if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
                 ctx.eval_point(&mut metrics, t + 1, now, &tally, &x_server)?;
             }
             ctx.emit_counters(t as u64, now, &tally, None);
+            tel.flush(&ctx.tracer, t as u64, now);
             ctx.tracer.span("round", round_t0, t as u64, now - round_sim0, now);
             continue;
         }
@@ -126,6 +135,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             tally.comm_up_time += up_t;
 
             ctx.tracer.sample("delay", t as u64, down_t + up_t);
+            tel.observe(names::DELAY, down_t + up_t);
             tasks.push(make_task(ctx, i, x_round.clone(), cfg.k, cfg.lr));
         }
         ctx.tracer.span("broadcast", bcast_t0, t as u64, 0.0, now);
@@ -151,19 +161,24 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             ctx.tracker.record_participation(r.client_id, now);
             ctx.tracker.note_snapshot(r.client_id);
             if r.steps > 0 {
-                ctx.tracker
-                    .note_loss(r.client_id, r.loss as f64 / r.steps as f64);
+                let mean_loss = r.loss as f64 / r.steps as f64;
+                ctx.tracker.note_loss(r.client_id, mean_loss);
+                tel.observe(names::CLIENT_LOSS, mean_loss);
+                tel.observe_sampled(names::CLIENT_LOSS, mean_loss);
             }
         }
         x_server = sum;
         ctx.tracer.span("reduce", reduce_t0, t as u64, 0.0, now);
         now = round_end + cfg.timing.sit;
         ctx.tracker.advance_round();
+        tel.gauge_set(names::SELECT_CHI2, ctx.tracker.selection_bias_chi2());
+        tel.gauge_set(names::GINI, ctx.tracker.participation_gini());
 
         if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
             ctx.eval_point(&mut metrics, t + 1, now, &tally, &x_server)?;
         }
         ctx.emit_counters(t as u64, now, &tally, None);
+        tel.flush(&ctx.tracer, t as u64, now);
         ctx.tracer.span("round", round_t0, t as u64, now - round_sim0, now);
     }
     Ok(metrics)

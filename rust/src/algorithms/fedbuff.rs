@@ -68,7 +68,9 @@ use crate::engine::TrainEngine;
 use crate::metrics::{CommTally, RunMetrics};
 use crate::model::params;
 use crate::quant::{QsgdQuantizer, Quantizer};
+use crate::telemetry::{names, probe::DivergenceProbe, Telemetry};
 use crate::util::rng::derive_seed;
+use crate::util::stats::l2_dist;
 
 /// Event-queue entry: client `id`'s push arrives at the server at `time`.
 #[derive(PartialEq)]
@@ -125,6 +127,15 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     // The snapshot clients pull until the next aggregation — starts as
     // the store's shared base (the init).
     let mut server_snap: Arc<Vec<f32>> = fleet.snapshot(0);
+
+    // Convergence diagnostics (L3-telemetry): FedBuff never records
+    // `metrics.potential`, so the Φ_t/discrepancy probe exists only for
+    // the armed metric stream. Incremental O(touched·d) maintenance —
+    // every pull is a "write" of the shared snapshot.
+    let tel_armed = ctx.telemetry_armed();
+    let mut tel = Telemetry::new(tel_armed, cfg.seed);
+    let mut probe =
+        tel_armed.then(|| DivergenceProbe::new(x_server.clone(), cfg.n));
 
     let mut now = 0f64;
     // At t=0 the live snapshot aliases the store's base, so the store's
@@ -190,6 +201,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
                 // refreshes the client's snapshot.
                 ctx.tracer
                     .sample("staleness", agg, ctx.tracker.staleness(id) as f64);
+                tel.observe(names::STALENESS, ctx.tracker.staleness(id) as f64);
                 let start = fleet.snapshot(id);
                 let mut task = make_task(ctx, id, start, cfg.k, cfg.lr);
                 if up_quant.is_some() {
@@ -214,11 +226,15 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             // (uncompressed, as in [30]) and restarts. The pull aliases
             // the shared server snapshot — no model floats are copied
             // here — and refreshes the client's snapshot epoch.
+            if let Some(p) = probe.as_mut() {
+                p.note_write(fleet.get(id), server_snap.as_slice());
+            }
             fleet.set_shared(id, server_snap.clone());
             ctx.tracker.note_snapshot(id);
             let down_t = ctx.transport.downlink_time(id, model_bits);
             let up_t = ctx.transport.uplink_time(id, delta_bits);
             ctx.tracer.sample("delay", agg, down_t + up_t);
+            tel.observe(names::DELAY, down_t + up_t);
             tally.bits_down += model_bits;
             tally.comm_down_time += down_t;
             tally.comm_up_time += up_t;
@@ -263,27 +279,37 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             let loss = engine.train_steps(&mut x_local, &task.batches, task.lr)?;
             // Δ = pulled - local (a descent direction scaled by η·h̃).
             let mut delta = params::sub(task.params.as_slice(), &x_local);
-            let bits = if let Some(q) = up_quant_ref {
+            let (bits, qerr) = if let Some(q) = up_quant_ref {
                 let msg = q.encode(&delta, task.seed);
                 let b = msg.bits as u64;
-                delta = q.decode(&msg, &delta);
-                b
+                let decoded = q.decode(&msg, &delta);
+                // Roundtrip quantization error of the compressed Δ —
+                // telemetry-only, never folded into the trajectory.
+                let e = tel_armed.then(|| l2_dist(&delta, &decoded));
+                delta = decoded;
+                (b, e)
             } else {
-                model_bits
+                (model_bits, None)
             };
-            Ok((id, delta, bits, loss))
+            Ok((id, delta, bits, loss, qerr))
         })?;
         ctx.tracer.span("local_sgd", sgd_t0, agg, 0.0, now);
 
         // Server aggregates the full buffer, applying Δs in event order.
         let reduce_t0 = ctx.tracer.start();
         let scale = cfg.fedbuff_server_lr / deltas.len() as f32;
-        for (id, delta, bits, loss) in deltas {
+        for (id, delta, bits, loss, qerr) in deltas {
             tally.bits_up += bits;
             params::axpy(&mut x_server, -scale, &delta);
             // Tracker observation for the loss-aware policies (pure
             // bookkeeping — no RNG, no trajectory float).
-            ctx.tracker.note_loss(id, loss as f64 / cfg.k as f64);
+            let mean_loss = loss as f64 / cfg.k as f64;
+            ctx.tracker.note_loss(id, mean_loss);
+            if let Some(e) = qerr {
+                tel.observe(names::QERR, e);
+            }
+            tel.observe(names::CLIENT_LOSS, mean_loss);
+            tel.observe_sampled(names::CLIENT_LOSS, mean_loss);
         }
         ctx.tracer.span("reduce", reduce_t0, agg, 0.0, now);
         aggregations += 1;
@@ -309,10 +335,18 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             .max(fleet.resident_bytes() + (d * 4) as u64)
             .max(fleet.peak_bytes());
 
+        if let Some(p) = probe.as_ref() {
+            tel.gauge_set(names::PHI, p.potential(&x_server));
+            tel.gauge_set(names::DISCREPANCY, p.discrepancy(&x_server));
+        }
+        tel.gauge_set(names::SELECT_CHI2, ctx.tracker.selection_bias_chi2());
+        tel.gauge_set(names::GINI, ctx.tracker.participation_gini());
+
         if aggregations % cfg.eval_every == 0 || aggregations == cfg.rounds {
             ctx.eval_point(&mut metrics, aggregations, now, &tally, &x_server)?;
         }
         ctx.emit_counters(agg, now, &tally, Some(&fleet));
+        tel.flush(&ctx.tracer, agg, now);
         ctx.tracer.span("round", round_t0, agg, now - round_sim0, now);
     }
     Ok(metrics)

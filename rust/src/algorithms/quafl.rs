@@ -51,6 +51,7 @@ use crate::engine::TrainEngine;
 use crate::metrics::{CommTally, RunMetrics};
 use crate::model::params;
 use crate::quant::Quantizer;
+use crate::telemetry::{names, probe::DivergenceProbe, Telemetry};
 use crate::util::rng::derive_seed;
 use crate::util::stats::l2_dist;
 
@@ -69,6 +70,10 @@ struct ClientOutcome {
     loss: f32,
     /// local steps actually executed (h)
     steps: usize,
+    /// ‖Y^i − Q(Y^i)‖ quantization-error norm, computed only when
+    /// telemetry is armed (`None` otherwise, so the trajectory's float
+    /// work is untouched by the observation)
+    qerr: Option<f64>,
 }
 
 pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
@@ -84,6 +89,18 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
     let server_init = ctx.spec.init_params(derive_seed(cfg.seed, 0x1417));
     let mut x_server = server_init.clone();
     let mut fleet = ctx.fleet_store(server_init);
+
+    // Convergence diagnostics (L3-telemetry). Φ_t / discrepancy come
+    // from the incremental O(touched·d) probe unless `--dense-potential`
+    // asks for the reference O(n·d) folds; the registry only arms on a
+    // traced run with `--telemetry` left on. Neither path touches a
+    // trajectory float or a simulation RNG stream
+    // (rust/tests/telemetry_parity.rs).
+    let tel_armed = ctx.telemetry_armed();
+    let mut tel = Telemetry::new(tel_armed, cfg.seed);
+    let want_phi = cfg.track_potential || tel_armed;
+    let mut probe = (want_phi && !cfg.dense_potential)
+        .then(|| DivergenceProbe::new(x_server.clone(), cfg.n));
 
     // η_i = H_min / H_i (weighted variant); 1 otherwise. The paper's
     // theory pairs the dampening with a global rate η ∝ 1/H_min
@@ -140,15 +157,24 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             now += cfg.timing.sit;
             ctx.tracker.advance_round();
             fleet.advance_epoch();
-            if cfg.track_potential {
-                metrics
-                    .potential
-                    .push(potential_view(&x_server, fleet.iter_dense()));
+            if want_phi {
+                let phi = phi_of(probe.as_ref(), &x_server, &fleet);
+                if cfg.track_potential {
+                    metrics.potential.push(phi);
+                }
+                tel.gauge_set(names::PHI, phi);
+                tel.gauge_set(
+                    names::DISCREPANCY,
+                    disc_of(probe.as_ref(), &x_server, &fleet),
+                );
             }
+            tel.gauge_set(names::SELECT_CHI2, ctx.tracker.selection_bias_chi2());
+            tel.gauge_set(names::GINI, ctx.tracker.participation_gini());
             if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
                 ctx.eval_point(&mut metrics, t + 1, now, &tally, &x_server)?;
             }
             ctx.emit_counters(t as u64, now, &tally, Some(&fleet));
+            tel.flush(&ctx.tracer, t as u64, now);
             ctx.tracer.span("round", round_t0, t as u64, now - round_sim0, now);
             continue;
         }
@@ -212,6 +238,10 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             let enc_y = quantizer.encode(&y_i, up_seed);
             let up_bits = enc_y.bits as u64;
             let q_y = quantizer.decode(&enc_y, x_server_key);
+            // Quantization-error observation for the telemetry sketch —
+            // computed only when armed, and never fed back into any
+            // trajectory value.
+            let qerr = tel_armed.then(|| l2_dist(&y_i, &q_y));
 
             // Downstream: Enc(X_t), decoded by the client against X^i.
             let q_x = quantizer.decode(enc_x_ref, task.params.as_slice());
@@ -229,7 +259,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
                 }
                 AveragingMode::ServerOnly => y_i,
             };
-            Ok(ClientOutcome { client_id: i, q_y, x_next, up_bits, loss, steps })
+            Ok(ClientOutcome { client_id: i, q_y, x_next, up_bits, loss, steps, qerr })
         })?;
         ctx.tracer.span("local_sgd", sgd_t0, t as u64, 0.0, now);
 
@@ -260,6 +290,18 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             tally.bits_up += out.up_bits;
             tally.bits_down += enc_x.bits as u64;
             params::axpy(&mut sum_qy, 1.0, &out.q_y);
+            if let Some(p) = probe.as_mut() {
+                p.note_write(fleet.get(out.client_id), &out.x_next);
+            }
+            if let Some(e) = out.qerr {
+                tel.observe(names::QERR, e);
+            }
+            tel.observe(names::DELAY, down_t + up_t);
+            if out.steps > 0 {
+                let mean_loss = out.loss as f64 / out.steps as f64;
+                tel.observe(names::CLIENT_LOSS, mean_loss);
+                tel.observe_sampled(names::CLIENT_LOSS, mean_loss);
+            }
             fleet.set(out.client_id, out.x_next);
             // Participation bookkeeping for the selection policies: the
             // client was served now, holds a round-t snapshot, and its
@@ -301,19 +343,53 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             "tracker round and fleet epoch must advance in lockstep"
         );
 
-        if cfg.track_potential {
-            metrics
-                .potential
-                .push(potential_view(&x_server, fleet.iter_dense()));
+        if want_phi {
+            let phi = phi_of(probe.as_ref(), &x_server, &fleet);
+            if cfg.track_potential {
+                metrics.potential.push(phi);
+            }
+            tel.gauge_set(names::PHI, phi);
+            tel.gauge_set(
+                names::DISCREPANCY,
+                disc_of(probe.as_ref(), &x_server, &fleet),
+            );
         }
+        tel.gauge_set(names::SELECT_CHI2, ctx.tracker.selection_bias_chi2());
+        tel.gauge_set(names::GINI, ctx.tracker.participation_gini());
 
         if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
             ctx.eval_point(&mut metrics, t + 1, now, &tally, &x_server)?;
         }
         ctx.emit_counters(t as u64, now, &tally, Some(&fleet));
+        tel.flush(&ctx.tracer, t as u64, now);
         ctx.tracer.span("round", round_t0, t as u64, now - round_sim0, now);
     }
     Ok(metrics)
+}
+
+/// Round-boundary Φ_t: the incremental probe when one is maintained,
+/// the reference dense fold otherwise (`--dense-potential`).
+fn phi_of(
+    probe: Option<&DivergenceProbe>,
+    x_server: &[f32],
+    fleet: &crate::fleet::ClientModelStore,
+) -> f64 {
+    match probe {
+        Some(p) => p.potential(x_server),
+        None => potential_view(x_server, fleet.iter_dense()),
+    }
+}
+
+/// Round-boundary server–client discrepancy, same probe-or-dense split.
+fn disc_of(
+    probe: Option<&DivergenceProbe>,
+    x_server: &[f32],
+    fleet: &crate::fleet::ClientModelStore,
+) -> f64 {
+    match probe {
+        Some(p) => p.discrepancy(x_server),
+        None => server_client_discrepancy_view(x_server, fleet.iter_dense()),
+    }
 }
 
 /// Diagnostic used by tests/benches: distance between server and the mean

@@ -181,8 +181,23 @@ pub struct ExperimentConfig {
     /// override γ for the lattice quantizer (otherwise derived from lr/K)
     pub lattice_gamma: Option<f32>,
     /// record the paper's potential Φ_t each round (Lemma 3.4 diagnostic;
-    /// costs O(n·d) per round, off by default)
+    /// `--track-potential`, off by default). Maintained incrementally
+    /// from fleet-store write deltas in O(touched·d) per round
+    /// ([`crate::telemetry::probe::DivergenceProbe`]); set
+    /// `dense_potential` to fold the full fleet instead.
     pub track_potential: bool,
+    /// compute Φ_t with the reference O(n·d) dense fold over
+    /// [`crate::fleet`]'s client-order view instead of the incremental
+    /// probe (`--dense-potential`; the oracle side of
+    /// rust/tests/telemetry_parity.rs). Only meaningful with
+    /// `track_potential`.
+    pub dense_potential: bool,
+    /// stream convergence/fleet metrics as `metric` trace events
+    /// (`--telemetry true|false`, default on). Telemetry only arms when
+    /// a trace sink is attached (`--trace`), so the default costs
+    /// nothing on untraced runs and is bit-exact on traced ones
+    /// (rust/tests/telemetry_parity.rs).
+    pub telemetry: bool,
     /// worker threads for the parallel client-execution subsystem
     /// ([`crate::exec`]); 0 = available parallelism. Trajectories are
     /// bit-identical for every value (deterministic fan-out + ordered
@@ -267,6 +282,8 @@ impl Default for ExperimentConfig {
             engine_kernel: KernelKind::default(),
             lattice_gamma: None,
             track_potential: false,
+            dense_potential: false,
+            telemetry: true,
             workers: 0,
             net: NetworkConfig::default(),
             price_init_broadcast: false,
@@ -322,7 +339,8 @@ impl ExperimentConfig {
         "fedbuff-buffer", "fedbuff-server-lr", "eval-every", "batch",
         "seed", "xla", "engine-kernel", "gamma", "out", "workers",
         "price-init-broadcast", "dense-fleet", "broadcast-downlink",
-        "event-driven", "trace", "trace-level",
+        "event-driven", "trace", "trace-level", "track-potential",
+        "dense-potential", "telemetry",
     ];
 
     /// The full `run` key set: [`ExperimentConfig::CLI_KEYS`] plus the
@@ -401,6 +419,20 @@ impl ExperimentConfig {
                 other => {
                     return Err(format!(
                         "--event-driven expects true|false, got {other:?}"
+                    ))
+                }
+            };
+        }
+        c.track_potential = args.bool("track-potential") || c.track_potential;
+        c.dense_potential = args.bool("dense-potential") || c.dense_potential;
+        // Default-on boolean, same contract as --event-driven.
+        if let Some(v) = args.get("telemetry") {
+            c.telemetry = match v {
+                "true" => true,
+                "false" => false,
+                other => {
+                    return Err(format!(
+                        "--telemetry expects true|false, got {other:?}"
                     ))
                 }
             };
@@ -543,6 +575,40 @@ mod tests {
         let a = cli::parse(&sv(&["run", "--event-driven", "junk"]));
         assert!(ExperimentConfig::from_args(&a).is_err());
         assert!(ExperimentConfig::cli_keys().contains(&"event-driven"));
+    }
+
+    #[test]
+    fn telemetry_flags_parse_with_expected_defaults() {
+        let d = ExperimentConfig::default();
+        assert!(d.telemetry);
+        assert!(!d.track_potential);
+        assert!(!d.dense_potential);
+        let a = cli::parse_with_bool_flags(
+            &sv(&["run", "--track-potential", "--dense-potential"]),
+            &["track-potential", "dense-potential"],
+        );
+        let c = ExperimentConfig::from_args(&a).unwrap();
+        assert!(c.track_potential);
+        assert!(c.dense_potential);
+        let a = cli::parse_with_bool_flags(
+            &sv(&["run", "--telemetry", "false"]),
+            &["telemetry"],
+        );
+        assert!(!ExperimentConfig::from_args(&a).unwrap().telemetry);
+        let a = cli::parse_with_bool_flags(
+            &sv(&["run", "--telemetry", "true"]),
+            &["telemetry"],
+        );
+        assert!(ExperimentConfig::from_args(&a).unwrap().telemetry);
+        // Bare flag restates the default.
+        let a = cli::parse_with_bool_flags(&sv(&["run", "--telemetry"]), &["telemetry"]);
+        assert!(ExperimentConfig::from_args(&a).unwrap().telemetry);
+        let a = cli::parse(&sv(&["run", "--telemetry", "junk"]));
+        assert!(ExperimentConfig::from_args(&a).is_err());
+        let keys = ExperimentConfig::cli_keys();
+        for k in ["telemetry", "track-potential", "dense-potential"] {
+            assert!(keys.contains(&k), "missing telemetry key {k}");
+        }
     }
 
     #[test]

@@ -170,6 +170,7 @@ impl FlRun {
             ("workers", Json::Num(cfg.workers as f64)),
             ("event_driven", Json::Bool(cfg.event_driven)),
             ("engine_kernel", Json::Str(cfg.engine_kernel.name().to_string())),
+            ("telemetry", Json::Bool(cfg.telemetry)),
         ]);
 
         Ok(FlRun {
@@ -190,6 +191,13 @@ impl FlRun {
             expected_h,
             tracer,
         })
+    }
+
+    /// Should the run's [`crate::telemetry::Telemetry`] registry arm?
+    /// Telemetry rides the trace sink, so it needs one attached
+    /// (`--trace`) and the `--telemetry` opt-out left at its default.
+    pub fn telemetry_armed(&self) -> bool {
+        self.tracer.enabled() && self.cfg.telemetry
     }
 
     /// Poll every passive per-layer counter and emit the round's gauge

@@ -101,6 +101,25 @@
 //!   (stderr, mirrored into the sink). Event schema and stability rules:
 //!   docs/TRACE_SCHEMA.md; rust/tests/trace_parity.rs proves an armed
 //!   sink perturbs no RNG draw or trajectory value.
+//! - **L3-telemetry** — the fleet-telemetry & convergence-diagnostics
+//!   layer ([`telemetry`]): a typed streaming-metrics registry
+//!   ([`telemetry::Telemetry`] — counters, gauges, and fixed-memory
+//!   distribution sketches, [`telemetry::sketch::QuantileSketch`] +
+//!   mergeable reservoir) riding the trace sink as the `metric` event
+//!   kind, plus convergence probes threaded through all four
+//!   algorithms: the paper's potential Φ_t and the server–client
+//!   discrepancy maintained incrementally from fleet-store write deltas
+//!   in O(touched·d)/round ([`telemetry::probe::DivergenceProbe`];
+//!   `--track-potential` uses it by default, `--dense-potential` keeps
+//!   the O(n·d) folds as the oracle), per-exchange quantization-error
+//!   norms from the [`quant::Quantizer`] seam, and selection-bias
+//!   statistics (χ² vs. uniform, Gini) from O(1) tracker aggregates.
+//!   `quafl health-report` renders the metric stream as a fleet-health
+//!   dashboard + `BENCH_health.json`, and `quafl bench-compare` gates
+//!   wall-time regressions between canonical BENCH artifacts. Catalog
+//!   and error bounds: docs/TELEMETRY.md; rust/tests/telemetry_parity.rs
+//!   proves armed telemetry is bit-free and the probes agree with the
+//!   dense oracles.
 //! - **L2/L1 (build-time Python)** — the client model's fwd/bwd/update as
 //!   JAX functions over Pallas kernels, AOT-lowered once to
 //!   `artifacts/*.hlo.txt`; [`runtime`] loads and [`engine::XlaEngine`]
@@ -124,6 +143,7 @@ pub mod quant;
 pub mod runtime;
 pub mod select;
 pub mod sim;
+pub mod telemetry;
 pub mod testing;
 pub mod trace;
 pub mod util;

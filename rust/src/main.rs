@@ -8,6 +8,10 @@
 //!   sweep        — grid runner: algorithms × quantizers × nets × seeds
 //!   trace-report — aggregate a `--trace` JSONL file into a per-phase
 //!                  breakdown + BENCH_phase.json
+//!   health-report — aggregate the `metric` events of a `--trace` JSONL
+//!                  file into a fleet-health dashboard + BENCH_health.json
+//!   bench-compare — diff two canonical BENCH_*.json artifacts and exit
+//!                  nonzero on wall-time regressions
 //!   info         — print artifact/platform/runtime information
 //!
 //! Examples:
@@ -32,7 +36,8 @@ use quafl::util::cli;
 /// e.g. `figures --smoke fig2` — are not swallowed as flag values).
 const BOOL_FLAGS: &[&str] = &[
     "smoke", "paper-scale", "weighted", "xla", "price-init-broadcast",
-    "dense-fleet", "broadcast-downlink", "event-driven",
+    "dense-fleet", "broadcast-downlink", "event-driven", "track-potential",
+    "dense-potential", "telemetry",
 ];
 
 fn main() {
@@ -64,6 +69,8 @@ fn main() {
         Some("figures") => cmd_figures(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("trace-report") => cmd_trace_report(&args),
+        Some("health-report") => cmd_health_report(&args),
+        Some("bench-compare") => cmd_bench_compare(&args),
         Some("info") => cmd_info(),
         Some(other) => {
             eprintln!("unknown subcommand {other:?}");
@@ -80,7 +87,8 @@ fn main() {
 
 fn usage() {
     eprintln!(
-        "usage: quafl <run|figures|sweep|info> [options]\n\
+        "usage: quafl <run|figures|sweep|trace-report|health-report|\
+         bench-compare|info> [options]\n\
          \n\
          run options (defaults in parentheses):\n\
          \x20 --algorithm quafl|fedavg|fedbuff|baseline (quafl)\n\
@@ -107,6 +115,15 @@ fn usage() {
          \x20                             sample events (dual wall/sim\n\
          \x20                             stamps; see docs/TRACE_SCHEMA.md)\n\
          \x20 --trace-level off|error|info|debug (info) diagnostic level\n\
+         telemetry (rides --trace; see docs/TELEMETRY.md):\n\
+         \x20 --telemetry true|false      stream convergence/fleet metrics\n\
+         \x20                             as `metric` events (default true;\n\
+         \x20                             only arms when --trace is set)\n\
+         \x20 --track-potential           record the paper's potential\n\
+         \x20                             Φ_t per round (incremental\n\
+         \x20                             O(touched·d) probe)\n\
+         \x20 --dense-potential           Φ_t via the reference O(n·d)\n\
+         \x20                             dense fold (parity oracle)\n\
          client selection (default: the paper's uniform draw):\n\
          \x20 --select uniform|staleness|fairness|loss-poc\n\
          \x20 --select-cap N              hard staleness cap (staleness;\n\
@@ -138,7 +155,17 @@ fn usage() {
          trace-report options: quafl trace-report FILE.jsonl\n\
          \x20 --out-dir DIR (results)     prints the per-phase wall/sim\n\
          \x20                             breakdown and writes\n\
-         \x20                             DIR/BENCH_phase.json\n"
+         \x20                             DIR/BENCH_phase.json\n\
+         \n\
+         health-report options: quafl health-report FILE.jsonl\n\
+         \x20 --out-dir DIR (results)     prints the fleet-health dashboard\n\
+         \x20                             (convergence curves, distribution\n\
+         \x20                             quantiles, selection bias) and\n\
+         \x20                             writes DIR/BENCH_health.json\n\
+         \n\
+         bench-compare options: quafl bench-compare OLD.json NEW.json\n\
+         \x20 --max-regress PCT (25)      fail (exit 1) when a wall-time\n\
+         \x20                             column regresses by more than PCT%\n"
     );
 }
 
@@ -373,6 +400,93 @@ fn cmd_trace_report(args: &cli::Args) -> i32 {
         Err(e) => {
             eprintln!("writing BENCH_phase.json: {e}");
             1
+        }
+    }
+}
+
+fn cmd_health_report(args: &cli::Args) -> i32 {
+    if let Err(e) = args.check_known(&["out-dir", "trace", "trace-level"]) {
+        eprintln!("{e}");
+        return 2;
+    }
+    let file = match args.positional.first() {
+        Some(f) => f,
+        None => {
+            eprintln!("usage: quafl health-report FILE.jsonl [--out-dir DIR]");
+            return 2;
+        }
+    };
+    let text = match std::fs::read_to_string(file) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("reading {file}: {e}");
+            return 1;
+        }
+    };
+    let events = match quafl::util::json::parse_lines(&text) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("parsing {file}: {e}");
+            return 1;
+        }
+    };
+    let report = quafl::telemetry::health::aggregate(&events);
+    print!("{}", report.render());
+    let out_dir = args.get_str("out-dir", "results");
+    match report.write_bench(&out_dir) {
+        Ok(path) => {
+            quafl::log!(Info, "[health-report] wrote {path}");
+            0
+        }
+        Err(e) => {
+            eprintln!("writing BENCH_health.json: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_bench_compare(args: &cli::Args) -> i32 {
+    if let Err(e) = args.check_known(&["max-regress", "trace", "trace-level"]) {
+        eprintln!("{e}");
+        return 2;
+    }
+    let (old_path, new_path) =
+        match (args.positional.first(), args.positional.get(1)) {
+            (Some(o), Some(n)) => (o, n),
+            _ => {
+                eprintln!(
+                    "usage: quafl bench-compare OLD.json NEW.json \
+                     [--max-regress PCT]"
+                );
+                return 2;
+            }
+        };
+    let max_regress = args.get_f64("max-regress", 25.0);
+    let load = |path: &str| -> Result<quafl::util::json::Json, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {path}: {e}"))?;
+        quafl::util::json::parse(text.trim())
+            .map_err(|e| format!("parsing {path}: {e}"))
+    };
+    let (old, new) = match (load(old_path), load(new_path)) {
+        (Ok(o), Ok(n)) => (o, n),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    match quafl::testing::compare::compare(&old, &new, max_regress) {
+        Ok(out) => {
+            print!("{}", out.render(max_regress));
+            if out.passed() {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("bench-compare: {e}");
+            2
         }
     }
 }

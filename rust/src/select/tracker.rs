@@ -56,6 +56,9 @@ pub struct ParticipationTracker {
     last_loss: Vec<Option<f64>>,
     /// Σ counts
     total: u64,
+    /// Σ counts² — the χ²-vs-uniform numerator (telemetry selection-bias
+    /// gauge); u128 so n=10⁷ runs cannot overflow
+    count_sumsq: u128,
     /// Σ_{i<j} |c_i − c_j| — the Gini numerator
     pair_abs_sum: i128,
     /// count value → #clients holding it (mirror of `cnt_index`)
@@ -81,6 +84,7 @@ impl ParticipationTracker {
             snapshot_round: vec![0; n],
             last_loss: vec![None; n],
             total: 0,
+            count_sumsq: 0,
             pair_abs_sum: 0,
             cnt_freq,
             cnt_index,
@@ -114,6 +118,8 @@ impl ParticipationTracker {
     /// Client `i` participated (contributed to the model) at `now`.
     pub fn record_participation(&mut self, i: usize, now: f64) {
         let a = self.counts[i];
+        // Δ(Σc²) for c_i: a → a+1 is (a+1)² − a² = 2a+1.
+        self.count_sumsq += (2 * a + 1) as u128;
         // ΔS2 for c_i: a → a+1, with le counting i itself (c_i = a ≤ a).
         let le = self.cnt_index.prefix(a as usize + 1) as i128;
         self.pair_abs_sum += 2 * le - self.counts.len() as i128 - 1;
@@ -221,6 +227,31 @@ impl ParticipationTracker {
             })
             .sum();
         num as f64 / (n as f64 * total as f64)
+    }
+
+    /// Σ counts² — the incrementally maintained χ² numerator. O(1).
+    pub fn participation_sumsq(&self) -> u128 {
+        self.count_sumsq
+    }
+
+    /// Full-scan Σ counts² oracle, retained for the parity suite.
+    pub fn participation_sumsq_scan(&self) -> u128 {
+        self.counts.iter().map(|&c| (c as u128) * (c as u128)).sum()
+    }
+
+    /// Pearson χ² statistic of the participation counts against the
+    /// uniform expectation `total/n`:
+    /// `Σ (c_i − total/n)² / (total/n) = n·Σc²/total − total`.
+    /// 0 means perfectly uniform service; grows with selection bias.
+    /// O(1) from the incremental sum of squares (telemetry gauge
+    /// `select_chi2`).
+    pub fn selection_bias_chi2(&self) -> f64 {
+        let n = self.counts.len();
+        if n == 0 || self.total == 0 {
+            return 0.0;
+        }
+        n as f64 * self.count_sumsq as f64 / self.total as f64
+            - self.total as f64
     }
 
     /// Max snapshot staleness across the fleet. O(1).
@@ -373,6 +404,13 @@ mod tests {
                     t.mean_staleness_scan().to_bits(),
                     "mean staleness diverged at step {step} (seed {seed})"
                 );
+                // Integer equality of the sums of squares makes the χ²
+                // gauge bitwise-deterministic too.
+                assert_eq!(
+                    t.participation_sumsq(),
+                    t.participation_sumsq_scan(),
+                    "count sumsq diverged at step {step} (seed {seed})"
+                );
             }
         }
     }
@@ -397,5 +435,22 @@ mod tests {
         assert_eq!(t.mean_staleness(), 0.0);
         assert_eq!(t.max_staleness_scan(), 0);
         assert_eq!(t.mean_staleness_scan(), 0.0);
+        assert_eq!(t.selection_bias_chi2(), 0.0);
+    }
+
+    #[test]
+    fn chi2_is_zero_for_uniform_and_grows_with_concentration() {
+        let mut t = ParticipationTracker::new(4);
+        assert_eq!(t.selection_bias_chi2(), 0.0);
+        for i in 0..4 {
+            t.record_participation(i, 1.0);
+        }
+        // Uniform counts [1,1,1,1]: χ² = 4·4/4 − 4 = 0.
+        assert_eq!(t.selection_bias_chi2(), 0.0);
+        for _ in 0..4 {
+            t.record_participation(0, 2.0);
+        }
+        // Counts [5,1,1,1]: χ² = 4·28/8 − 8 = 6.
+        assert!((t.selection_bias_chi2() - 6.0).abs() < 1e-12);
     }
 }

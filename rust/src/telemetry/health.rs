@@ -1,0 +1,435 @@
+//! Fleet-health aggregation: `quafl health-report FILE.jsonl`.
+//!
+//! The sibling of `quafl trace-report`: where trace-report renders
+//! phase timings from `span`/`counter`/`sample` events, health-report
+//! renders the *convergence diagnostics* from `metric` events (the
+//! [`super::Telemetry`] flush stream) — per-round convergence curves
+//! (Φ_t, discrepancy), distribution quantiles per sketch-backed metric,
+//! and the selection bias/Gini summary — and writes `BENCH_health.json`
+//! in the canonical `{bench, rows}` shape shared with the other BENCH
+//! artifacts. Unknown event kinds are skipped, never fatal (same
+//! forward-compat contract as trace-report).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Json};
+
+/// Sketch-summary suffixes the registry flush composes (see
+/// [`super::Telemetry::flush`]); health-report folds `name_p50` etc.
+/// back into one distribution row per stem.
+const DIST_SUFFIXES: &[&str] = &["_p50", "_p95", "_max", "_n", "_rmean", "_rstd"];
+
+/// Metrics rendered as convergence curves, in display order.
+const CURVE_ORDER: &[&str] = &["phi", "discrepancy", "client_loss_rmean"];
+
+/// Metrics rendered in the bias summary.
+const BIAS_ORDER: &[&str] = &["select_chi2", "gini"];
+
+/// One metric's per-round series, in event order.
+#[derive(Debug, Default, Clone)]
+pub struct Series {
+    /// (round, value) per flush, in stream order
+    pub points: Vec<(u64, f64)>,
+}
+
+impl Series {
+    pub fn first(&self) -> f64 {
+        self.points.first().map(|p| p.1).unwrap_or(0.0)
+    }
+
+    pub fn last(&self) -> f64 {
+        self.points.last().map(|p| p.1).unwrap_or(0.0)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.points.iter().map(|p| p.1).fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|p| p.1)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// Aggregated fleet-health view of one trace file.
+#[derive(Debug, Default)]
+pub struct HealthReport {
+    pub events: usize,
+    pub metric_points: usize,
+    /// `algorithm` field of every `meta` header seen (one per run).
+    pub runs: Vec<String>,
+    pub series: BTreeMap<String, Series>,
+    pub skipped: usize,
+}
+
+/// Fold a parsed event stream into a health report. Only `meta` and
+/// `metric` kinds contribute; everything else is counted as skipped.
+pub fn aggregate(events: &[Json]) -> HealthReport {
+    let mut r = HealthReport::default();
+    for e in events {
+        r.events += 1;
+        match e.get("kind").and_then(|k| k.as_str()) {
+            Some("meta") => r.runs.push(
+                e.get("algorithm")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("?")
+                    .to_string(),
+            ),
+            Some("metric") => {
+                let name = e
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("?")
+                    .to_string();
+                let round = e.get("round").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                let value = e.get("value").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                r.metric_points += 1;
+                r.series.entry(name).or_default().points.push((round, value));
+            }
+            _ => r.skipped += 1,
+        }
+    }
+    r
+}
+
+/// Downsampled ASCII sparkline of a series, normalized to its own
+/// min..max (constant series render flat).
+fn sparkline(points: &[(u64, f64)], width: usize) -> String {
+    const RAMP: &[u8] = b" .:-=+*#";
+    if points.is_empty() {
+        return String::new();
+    }
+    let lo = points.iter().map(|p| p.1).fold(f64::INFINITY, f64::min);
+    let hi = points.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(f64::MIN_POSITIVE);
+    let w = width.min(points.len()).max(1);
+    let mut out = String::with_capacity(w);
+    for c in 0..w {
+        // Mean of the chunk of points covering this column.
+        let start = c * points.len() / w;
+        let end = ((c + 1) * points.len() / w).max(start + 1);
+        let mean = points[start..end].iter().map(|p| p.1).sum::<f64>()
+            / (end - start) as f64;
+        let idx = (((mean - lo) / span) * (RAMP.len() - 1) as f64).round() as usize;
+        out.push(RAMP[idx.min(RAMP.len() - 1)] as char);
+    }
+    out
+}
+
+impl HealthReport {
+    /// Distribution stems: metric names that arrived as sketch/reservoir
+    /// summaries (`qerr_p50`, ...), folded back to their stem (`qerr`).
+    fn dist_stems(&self) -> Vec<String> {
+        let mut stems: Vec<String> = Vec::new();
+        for name in self.series.keys() {
+            for suf in DIST_SUFFIXES {
+                if let Some(stem) = name.strip_suffix(suf) {
+                    if !stem.is_empty() && !stems.iter().any(|s| s == stem) {
+                        stems.push(stem.to_string());
+                    }
+                }
+            }
+        }
+        stems
+    }
+
+    fn stat(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    /// The fleet-health dashboard (what `quafl health-report` prints).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "health: {} metric points across {} metrics ({} run(s): {})\n",
+            self.metric_points,
+            self.series.len(),
+            self.runs.len(),
+            if self.runs.is_empty() {
+                "no meta header".to_string()
+            } else {
+                self.runs.join(", ")
+            },
+        ));
+        if self.metric_points == 0 {
+            s.push_str(
+                "no metric events: run with --trace FILE.jsonl (telemetry \
+                 rides the trace sink; see docs/TELEMETRY.md)\n",
+            );
+            return s;
+        }
+
+        // Convergence curves: the quantities the paper's analysis bounds.
+        let curves: Vec<&str> = CURVE_ORDER
+            .iter()
+            .copied()
+            .filter(|n| self.series.contains_key(*n))
+            .collect();
+        if !curves.is_empty() {
+            s.push_str(&format!(
+                "\n{:<18} {:>7} {:>12} {:>12} {:>12} {:>12}  trend\n",
+                "convergence", "points", "first", "last", "min", "max"
+            ));
+            for name in curves {
+                let sr = &self.series[name];
+                s.push_str(&format!(
+                    "{:<18} {:>7} {:>12.5} {:>12.5} {:>12.5} {:>12.5}  [{}]\n",
+                    name,
+                    sr.points.len(),
+                    sr.first(),
+                    sr.last(),
+                    sr.min(),
+                    sr.max(),
+                    sparkline(&sr.points, 32),
+                ));
+            }
+        }
+
+        // Distribution quantiles per sketch-backed metric (last flush =
+        // the full-run distribution).
+        let stems = self.dist_stems();
+        if !stems.is_empty() {
+            s.push_str(&format!(
+                "\n{:<14} {:>10} {:>12} {:>12} {:>12} {:>12} {:>12}\n",
+                "distribution", "n", "p50", "p95", "max", "rmean", "rstd"
+            ));
+            for stem in &stems {
+                let last = |suf: &str| -> String {
+                    self.stat(&format!("{stem}{suf}"))
+                        .map(|sr| format!("{:.5}", sr.last()))
+                        .unwrap_or_else(|| "-".to_string())
+                };
+                let n = self
+                    .stat(&format!("{stem}_n"))
+                    .map(|sr| format!("{:.0}", sr.last()))
+                    .unwrap_or_else(|| "-".to_string());
+                s.push_str(&format!(
+                    "{:<14} {:>10} {:>12} {:>12} {:>12} {:>12} {:>12}\n",
+                    stem,
+                    n,
+                    last("_p50"),
+                    last("_p95"),
+                    last("_max"),
+                    last("_rmean"),
+                    last("_rstd"),
+                ));
+            }
+        }
+
+        // Selection bias: chi-square vs. uniform and the Gini coefficient.
+        let bias: Vec<&str> = BIAS_ORDER
+            .iter()
+            .copied()
+            .filter(|n| self.series.contains_key(*n))
+            .collect();
+        if !bias.is_empty() {
+            s.push_str(&format!(
+                "\n{:<18} {:>12} {:>12}  (0 = uniform service)\n",
+                "bias", "last", "max"
+            ));
+            for name in bias {
+                let sr = &self.series[name];
+                s.push_str(&format!(
+                    "{:<18} {:>12.5} {:>12.5}\n",
+                    name,
+                    sr.last(),
+                    sr.max()
+                ));
+            }
+        }
+
+        // Anything not already shown above.
+        let mut covered: Vec<String> = CURVE_ORDER
+            .iter()
+            .chain(BIAS_ORDER.iter())
+            .map(|s| s.to_string())
+            .collect();
+        for stem in &stems {
+            for suf in DIST_SUFFIXES {
+                covered.push(format!("{stem}{suf}"));
+            }
+        }
+        let other: Vec<&String> = self
+            .series
+            .keys()
+            .filter(|n| !covered.contains(n))
+            .collect();
+        if !other.is_empty() {
+            s.push_str(&format!(
+                "\n{:<18} {:>7} {:>12}\n",
+                "other", "points", "last"
+            ));
+            for name in other {
+                let sr = &self.series[name];
+                s.push_str(&format!(
+                    "{:<18} {:>7} {:>12.5}\n",
+                    name,
+                    sr.points.len(),
+                    sr.last()
+                ));
+            }
+        }
+        s
+    }
+
+    /// The canonical `BENCH_health.json` document: one row per metric
+    /// series, `{bench: "fleet_health", rows}` — same shape as
+    /// `BENCH_phase.json` and friends.
+    pub fn bench_json(&self) -> Json {
+        let mut rows = Vec::new();
+        for (name, sr) in &self.series {
+            let mut row = BTreeMap::new();
+            row.insert("kind".into(), Json::Str("metric".into()));
+            row.insert("name".into(), Json::Str(name.clone()));
+            row.insert("points".into(), Json::Num(sr.points.len() as f64));
+            row.insert("first".into(), Json::Num(sr.first()));
+            row.insert("last".into(), Json::Num(sr.last()));
+            row.insert("min".into(), Json::Num(sr.min()));
+            row.insert("max".into(), Json::Num(sr.max()));
+            row.insert(
+                "round_last".into(),
+                Json::Num(sr.points.last().map(|p| p.0).unwrap_or(0) as f64),
+            );
+            rows.push(Json::Obj(row));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".into(), Json::Str("fleet_health".into()));
+        doc.insert("rows".into(), Json::Arr(rows));
+        Json::Obj(doc)
+    }
+
+    /// Write `BENCH_health.json` under `out_dir`; returns the path.
+    pub fn write_bench(&self, out_dir: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all(out_dir)?;
+        let path = format!("{out_dir}/BENCH_health.json");
+        std::fs::write(&path, json::to_string(&self.bench_json()) + "\n")?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Event;
+
+    fn metric(name: &str, round: u64, value: f64) -> Json {
+        Event::Metric {
+            name: name.to_string(),
+            round,
+            value,
+            sim_now: round as f64,
+        }
+        .to_json()
+    }
+
+    fn meta(algorithm: &str) -> Json {
+        Event::Meta {
+            fields: vec![("algorithm", Json::Str(algorithm.to_string()))],
+        }
+        .to_json()
+    }
+
+    #[test]
+    fn aggregates_series_and_skips_other_kinds() {
+        let events = vec![
+            meta("QuAFL"),
+            metric("phi", 0, 8.0),
+            metric("phi", 1, 4.0),
+            metric("qerr_p50", 1, 0.5),
+            metric("qerr_p95", 1, 0.9),
+            metric("qerr_n", 1, 40.0),
+            metric("select_chi2", 1, 1.25),
+            Event::Sample {
+                name: "delay",
+                round: 0,
+                value: 0.1,
+            }
+            .to_json(),
+        ];
+        let r = aggregate(&events);
+        assert_eq!(r.runs, vec!["QuAFL".to_string()]);
+        assert_eq!(r.metric_points, 6);
+        assert_eq!(r.skipped, 1);
+        let phi = &r.series["phi"];
+        assert_eq!(phi.points, vec![(0, 8.0), (1, 4.0)]);
+        assert_eq!(phi.first(), 8.0);
+        assert_eq!(phi.last(), 4.0);
+        assert_eq!(r.dist_stems(), vec!["qerr".to_string()]);
+    }
+
+    #[test]
+    fn render_has_all_sections() {
+        let mut events = vec![meta("QuAFL")];
+        for t in 0..12u64 {
+            events.push(metric("phi", t, 10.0 / (t + 1) as f64));
+            events.push(metric("discrepancy", t, 1.0 / (t + 1) as f64));
+            events.push(metric("qerr_p50", t, 0.5));
+            events.push(metric("qerr_p95", t, 0.9));
+            events.push(metric("qerr_max", t, 1.1));
+            events.push(metric("qerr_n", t, (t + 1) as f64 * 4.0));
+            events.push(metric("select_chi2", t, 0.3));
+            events.push(metric("gini", t, 0.12));
+            events.push(metric("custom_counter", t, t as f64));
+        }
+        let r = aggregate(&events);
+        let text = r.render();
+        assert!(text.contains("convergence"), "{text}");
+        assert!(text.contains("phi"), "{text}");
+        assert!(text.contains("discrepancy"), "{text}");
+        assert!(text.contains("distribution"), "{text}");
+        assert!(text.contains("qerr"), "{text}");
+        assert!(text.contains("bias"), "{text}");
+        assert!(text.contains("select_chi2"), "{text}");
+        assert!(text.contains("gini"), "{text}");
+        assert!(text.contains("custom_counter"), "{text}");
+        assert!(text.contains("QuAFL"), "{text}");
+    }
+
+    #[test]
+    fn empty_stream_renders_hint() {
+        let r = aggregate(&[]);
+        let text = r.render();
+        assert!(text.contains("no metric events"), "{text}");
+    }
+
+    #[test]
+    fn bench_json_is_canonical() {
+        let events = vec![
+            metric("phi", 0, 4.0),
+            metric("phi", 3, 1.0),
+            metric("gini", 3, 0.2),
+        ];
+        let r = aggregate(&events);
+        let doc = r.bench_json();
+        assert_eq!(
+            doc.get("bench").and_then(|v| v.as_str()),
+            Some("fleet_health")
+        );
+        let rows = doc.get("rows").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(rows.len(), 2);
+        let phi = rows
+            .iter()
+            .find(|r| r.get("name").and_then(|n| n.as_str()) == Some("phi"))
+            .unwrap();
+        assert_eq!(phi.get("first").and_then(|v| v.as_f64()), Some(4.0));
+        assert_eq!(phi.get("last").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(phi.get("round_last").and_then(|v| v.as_f64()), Some(3.0));
+        let back = json::parse(&json::to_string(&doc)).unwrap();
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn sparkline_is_monotone_for_decay() {
+        let points: Vec<(u64, f64)> = (0..64).map(|t| (t, 64.0 - t as f64)).collect();
+        let line = sparkline(&points, 16);
+        assert_eq!(line.len(), 16);
+        assert!(line.starts_with('#'));
+        assert!(line.ends_with(' '));
+        assert_eq!(sparkline(&[], 16), "");
+        // Constant series: flat, no panic on zero span.
+        let flat = sparkline(&[(0, 1.0), (1, 1.0)], 8);
+        assert_eq!(flat.len(), 2);
+    }
+}

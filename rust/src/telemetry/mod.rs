@@ -1,0 +1,258 @@
+//! Fleet telemetry & convergence diagnostics (L3-telemetry).
+//!
+//! A typed streaming-metrics registry riding the trace layer: counters,
+//! gauges, and fixed-memory distribution sketches
+//! ([`sketch::QuantileSketch`], [`sketch::Reservoir`]) that flush at
+//! round boundaries as `metric` events on the armed [`crate::trace`]
+//! sink. The convergence probes ([`probe::DivergenceProbe`]) maintain
+//! the paper's potential Φ_t and the server–client discrepancy
+//! incrementally from fleet-store write deltas in O(touched·d) per
+//! round — the dense folds in [`crate::algorithms::quafl`] remain the
+//! parity oracles.
+//!
+//! Design rules, inherited from the trace layer and enforced by
+//! rust/tests/telemetry_parity.rs:
+//!
+//! - **Bit-exact when armed.** No telemetry path draws from a
+//!   simulation RNG stream or reorders a trajectory float fold; the
+//!   sketches own their RNGs. Arming telemetry changes bytes on the
+//!   sink, never a trajectory value.
+//! - **Zero overhead when off.** Every registry mutator starts with a
+//!   branch on the `armed` bool; a disarmed registry allocates nothing
+//!   and the probes are simply not constructed (except when
+//!   `--track-potential` asks for Φ_t in the run metrics, where the
+//!   probe runs identically with or without a sink).
+//! - **Fixed memory.** Distribution state is O(k·log n) per metric
+//!   regardless of stream length, so per-interaction observations stay
+//!   affordable at n = 10⁶.
+//!
+//! Metric catalog, per-algorithm coverage, and sketch error bounds:
+//! `docs/TELEMETRY.md`. Aggregation (`quafl health-report`,
+//! `BENCH_health.json`) lives in [`health`].
+
+pub mod health;
+pub mod probe;
+pub mod sketch;
+
+use crate::trace::Tracer;
+use crate::util::rng::derive_seed;
+use sketch::{QuantileSketch, Reservoir};
+
+/// Canonical metric names (the stable identifiers in the `metric` event
+/// stream — see docs/TELEMETRY.md before renaming anything here).
+pub mod names {
+    /// incremental potential Φ_t (QuAFL, FedBuff)
+    pub const PHI: &str = "phi";
+    /// ‖X_t − mean(Xⁱ)‖ server–client discrepancy (QuAFL, FedBuff)
+    pub const DISCREPANCY: &str = "discrepancy";
+    /// per-exchange quantization-error norm ‖y − Dec(Enc(y))‖ (sketch)
+    pub const QERR: &str = "qerr";
+    /// per-interaction mean local training loss (sketch + reservoir)
+    pub const CLIENT_LOSS: &str = "client_loss";
+    /// per-interaction downlink+uplink delay seconds (sketch)
+    pub const DELAY: &str = "delay";
+    /// model-version lag of admitted FedBuff updates (sketch)
+    pub const STALENESS: &str = "staleness";
+    /// chi-square statistic of participation counts vs. uniform
+    pub const SELECT_CHI2: &str = "select_chi2";
+    /// participation Gini coefficient (0 = perfectly uniform service)
+    pub const GINI: &str = "gini";
+}
+
+/// Reservoir capacity for per-client observation subsamples.
+const RESERVOIR_CAP: usize = 256;
+
+/// The streaming-metrics registry threaded through the algorithms. One
+/// instance per run; all lookups are linear scans over a handful of
+/// entries (the catalog is small and static).
+pub struct Telemetry {
+    armed: bool,
+    seed: u64,
+    counters: Vec<(&'static str, f64)>,
+    gauges: Vec<(&'static str, f64)>,
+    sketches: Vec<(&'static str, QuantileSketch)>,
+    reservoirs: Vec<(&'static str, Reservoir)>,
+}
+
+impl Telemetry {
+    /// `armed` gates every mutator; `seed` derives the private RNG
+    /// stream of each sketch (never the simulation's streams).
+    pub fn new(armed: bool, seed: u64) -> Telemetry {
+        Telemetry {
+            armed,
+            seed: derive_seed(seed, 0x7E1E),
+            counters: Vec::new(),
+            gauges: Vec::new(),
+            sketches: Vec::new(),
+            reservoirs: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+
+    /// Add to a cumulative counter (created on first touch).
+    pub fn counter_add(&mut self, name: &'static str, delta: f64) {
+        if !self.armed {
+            return;
+        }
+        match self.counters.iter_mut().find(|(n, _)| *n == name) {
+            Some((_, v)) => *v += delta,
+            None => self.counters.push((name, delta)),
+        }
+    }
+
+    /// Set a point-in-time gauge (flushed as its latest value).
+    pub fn gauge_set(&mut self, name: &'static str, value: f64) {
+        if !self.armed {
+            return;
+        }
+        match self.gauges.iter_mut().find(|(n, _)| *n == name) {
+            Some((_, v)) => *v = value,
+            None => self.gauges.push((name, value)),
+        }
+    }
+
+    /// Feed one observation into the named quantile sketch.
+    pub fn observe(&mut self, name: &'static str, value: f64) {
+        if !self.armed {
+            return;
+        }
+        if let Some((_, sk)) = self.sketches.iter_mut().find(|(n, _)| *n == name) {
+            sk.update(value);
+            return;
+        }
+        let sk_seed = derive_seed(self.seed, self.sketches.len() as u64);
+        let mut sk = QuantileSketch::new(sk_seed);
+        sk.update(value);
+        self.sketches.push((name, sk));
+    }
+
+    /// Feed one observation into the named reservoir subsample.
+    pub fn observe_sampled(&mut self, name: &'static str, value: f64) {
+        if !self.armed {
+            return;
+        }
+        if let Some((_, r)) = self.reservoirs.iter_mut().find(|(n, _)| *n == name) {
+            r.update(value);
+            return;
+        }
+        let r_seed = derive_seed(self.seed, 0x4E5 ^ self.reservoirs.len() as u64);
+        let mut r = Reservoir::new(RESERVOIR_CAP, r_seed);
+        r.update(value);
+        self.reservoirs.push((name, r));
+    }
+
+    /// Direct access for tests and the report layer.
+    pub fn sketch(&self, name: &str) -> Option<&QuantileSketch> {
+        self.sketches.iter().find(|(n, _)| *n == name).map(|(_, s)| s)
+    }
+
+    /// Flush the registry as `metric` events at a round boundary.
+    /// Counters/gauges emit their current value; each sketch emits its
+    /// cumulative `_p50`/`_p95`/`_max`/`_n` summary (the distribution of
+    /// *all* observations so far — the last flush is the full-run one);
+    /// each reservoir emits `_rmean`/`_rstd` over its subsample.
+    pub fn flush(&self, tracer: &Tracer, round: u64, sim_now: f64) {
+        if !self.armed {
+            return;
+        }
+        for (name, v) in &self.counters {
+            tracer.metric(name, round, *v, sim_now);
+        }
+        for (name, v) in &self.gauges {
+            tracer.metric(name, round, *v, sim_now);
+        }
+        for (name, sk) in &self.sketches {
+            if sk.is_empty() {
+                continue;
+            }
+            tracer.metric(&format!("{name}_p50"), round, sk.quantile(0.5), sim_now);
+            tracer.metric(&format!("{name}_p95"), round, sk.quantile(0.95), sim_now);
+            tracer.metric(&format!("{name}_max"), round, sk.max(), sim_now);
+            tracer.metric(&format!("{name}_n"), round, sk.count() as f64, sim_now);
+        }
+        for (name, r) in &self.reservoirs {
+            if r.seen() == 0 {
+                continue;
+            }
+            let (mean, std) = r.mean_std();
+            tracer.metric(&format!("{name}_rmean"), round, mean, sim_now);
+            tracer.metric(&format!("{name}_rstd"), round, std, sim_now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Event, Level, RingSink, Tracer};
+    use std::sync::Arc;
+
+    #[test]
+    fn disarmed_registry_is_inert() {
+        let mut tel = Telemetry::new(false, 42);
+        tel.counter_add("c", 1.0);
+        tel.gauge_set("g", 2.0);
+        tel.observe("s", 3.0);
+        tel.observe_sampled("r", 4.0);
+        assert!(tel.counters.is_empty());
+        assert!(tel.gauges.is_empty());
+        assert!(tel.sketches.is_empty());
+        assert!(tel.reservoirs.is_empty());
+        let ring = Arc::new(RingSink::new());
+        tel.flush(&Tracer::new(ring.clone(), Level::Info), 0, 0.0);
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn armed_registry_flushes_metric_events() {
+        let mut tel = Telemetry::new(true, 42);
+        tel.counter_add("bits", 10.0);
+        tel.counter_add("bits", 5.0);
+        tel.gauge_set(names::PHI, 1.25);
+        tel.gauge_set(names::PHI, 0.75);
+        for i in 0..100 {
+            tel.observe(names::QERR, i as f64);
+            tel.observe_sampled(names::CLIENT_LOSS, i as f64);
+        }
+        let ring = Arc::new(RingSink::new());
+        tel.flush(&Tracer::new(ring.clone(), Level::Info), 7, 3.5);
+        let evs = ring.events();
+        let get = |want: &str| -> f64 {
+            evs.iter()
+                .find_map(|e| match e {
+                    Event::Metric { name, round, value, .. }
+                        if name == want && *round == 7 =>
+                    {
+                        Some(*value)
+                    }
+                    _ => None,
+                })
+                .unwrap_or_else(|| panic!("metric {want} not flushed"))
+        };
+        assert_eq!(get("bits"), 15.0);
+        assert_eq!(get("phi"), 0.75);
+        assert_eq!(get("qerr_n"), 100.0);
+        assert_eq!(get("qerr_max"), 99.0);
+        assert_eq!(get("qerr_p50"), 50.0); // exact below sketch capacity
+        assert_eq!(get("client_loss_rmean"), 49.5);
+        assert!(get("client_loss_rstd") > 0.0);
+    }
+
+    #[test]
+    fn sketch_lookup_and_determinism() {
+        let mk = || {
+            let mut tel = Telemetry::new(true, 7);
+            for i in 0..2000 {
+                tel.observe(names::DELAY, (i % 37) as f64);
+            }
+            tel.sketch(names::DELAY).unwrap().quantile(0.9)
+        };
+        assert_eq!(mk(), mk());
+        let tel = Telemetry::new(true, 7);
+        assert!(tel.sketch("nope").is_none());
+    }
+}

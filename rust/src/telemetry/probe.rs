@@ -1,0 +1,210 @@
+//! Incremental convergence probes: Φ_t and server–client discrepancy in
+//! O(touched·d) per round instead of the O(n·d) dense folds.
+//!
+//! The paper's potential (Section 3.3, Lemma 3.4)
+//!
+//! ```text
+//! Φ_t = ‖X_t − μ_t‖² + Σᵢ‖Xⁱ − μ_t‖²,   μ_t = (X_t + Σᵢ Xⁱ)/(n+1)
+//! ```
+//!
+//! needs two fleet aggregates: `Σᵢ Xⁱ` and `Σᵢ‖Xⁱ‖²`-type mass. Both
+//! are maintainable incrementally because a round only rewrites the
+//! *touched* clients (the same CoW-divergence observation that makes the
+//! fleet store O(touched·d)). To keep the update cancellation-safe the
+//! probe centers every vector at the shared init `X₀` (all clients start
+//! there, so deviations stay small relative to the weights themselves):
+//!
+//! - `sum_dev  = Σᵢ (Xⁱ − X₀)`  (f64, updated per touched coordinate)
+//! - `sumsq_dev = Σᵢ ‖Xⁱ − X₀‖²` (f64 scalar)
+//!
+//! With `v = X_t − X₀` and `m = μ_t − X₀ = (v + sum_dev)/(n+1)`:
+//!
+//! ```text
+//! Φ_t = ‖v − m‖² + sumsq_dev − 2⟨m, sum_dev⟩ + n‖m‖²
+//! discrepancy = ‖X_t − (Σᵢ Xⁱ)/n‖ = ‖v − sum_dev/n‖
+//! ```
+//!
+//! Each client write costs O(d) (`note_write`), each query O(d) — the
+//! per-round total is O(touched·d), independent of n. The dense folds
+//! ([`crate::algorithms::quafl::potential_view`],
+//! [`server_client_discrepancy_view`]) are retained as the parity
+//! oracles; `rust/tests/telemetry_parity.rs` proves agreement within the
+//! documented fp-fold tolerance (the oracle accumulates μ in f32, the
+//! probe in f64 — the folds are different, so agreement is relative, not
+//! bitwise; see docs/TELEMETRY.md §Probes).
+//!
+//! [`server_client_discrepancy_view`]: crate::algorithms::quafl::server_client_discrepancy_view
+
+/// Incremental Φ_t / discrepancy state for one fleet.
+#[derive(Debug, Clone)]
+pub struct DivergenceProbe {
+    /// the common init X₀ every model started from (centering point)
+    base: Vec<f32>,
+    n: usize,
+    sum_dev: Vec<f64>,
+    sumsq_dev: f64,
+    writes: u64,
+}
+
+impl DivergenceProbe {
+    /// `base` is the shared initial model (all n clients start there, so
+    /// every deviation is initially zero).
+    pub fn new(base: Vec<f32>, n: usize) -> DivergenceProbe {
+        let d = base.len();
+        DivergenceProbe {
+            base,
+            n,
+            sum_dev: vec![0.0; d],
+            sumsq_dev: 0.0,
+            writes: 0,
+        }
+    }
+
+    /// Record one client-model overwrite `old → new` (call immediately
+    /// before the fleet-store `set`/`set_shared`). O(d).
+    pub fn note_write(&mut self, old: &[f32], new: &[f32]) {
+        debug_assert_eq!(old.len(), self.base.len());
+        debug_assert_eq!(new.len(), self.base.len());
+        let mut dsq = 0.0f64;
+        for j in 0..self.base.len() {
+            let b = self.base[j] as f64;
+            let od = old[j] as f64 - b;
+            let nd = new[j] as f64 - b;
+            self.sum_dev[j] += nd - od;
+            dsq += nd * nd - od * od;
+        }
+        self.sumsq_dev += dsq;
+        self.writes += 1;
+    }
+
+    /// Total `note_write` calls (diagnostic: per-round cost is
+    /// `writes·d`, not `n·d`).
+    pub fn writes(&self) -> u64 {
+        self.writes
+    }
+
+    /// Φ_t given the current server model. O(d).
+    pub fn potential(&self, x_server: &[f32]) -> f64 {
+        let n1 = (self.n + 1) as f64;
+        let mut server_term = 0.0f64; // ‖v − m‖²
+        let mut cross = 0.0f64; // ⟨m, sum_dev⟩
+        let mut m_sq = 0.0f64; // ‖m‖²
+        for j in 0..self.base.len() {
+            let v = x_server[j] as f64 - self.base[j] as f64;
+            let m = (v + self.sum_dev[j]) / n1;
+            let sv = v - m;
+            server_term += sv * sv;
+            cross += m * self.sum_dev[j];
+            m_sq += m * m;
+        }
+        // Σᵢ‖Xⁱ − μ‖² = sumsq_dev − 2⟨m, sum_dev⟩ + n‖m‖² can round to a
+        // tiny negative when every deviation is ~0; clamp keeps Φ ≥ 0.
+        server_term + (self.sumsq_dev - 2.0 * cross + self.n as f64 * m_sq).max(0.0)
+    }
+
+    /// ‖X_t − (Σᵢ Xⁱ)/n‖ given the current server model. O(d).
+    pub fn discrepancy(&self, x_server: &[f32]) -> f64 {
+        let n = self.n as f64;
+        let mut acc = 0.0f64;
+        for j in 0..self.base.len() {
+            let v = x_server[j] as f64 - self.base[j] as f64;
+            let diff = v - self.sum_dev[j] / n;
+            acc += diff * diff;
+        }
+        acc.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::quafl::{potential, server_client_discrepancy};
+    use crate::testing::{check, close, PropConfig};
+
+    #[test]
+    fn zero_state_matches_oracles() {
+        let d = 8;
+        let base = vec![0.5f32; d];
+        let probe = DivergenceProbe::new(base.clone(), 4);
+        let clients = vec![base.clone(); 4];
+        // All clients at X₀, server at X₀: Φ = 0, discrepancy = 0.
+        assert!(probe.potential(&base) < 1e-12);
+        assert!(probe.discrepancy(&base) < 1e-12);
+        assert!(potential(&base, &clients) < 1e-12);
+        // Server moves, clients stay: both track the oracle.
+        let x: Vec<f32> = base.iter().map(|v| v + 1.0).collect();
+        assert!(close(probe.potential(&x), potential(&x, &clients), 1e-9));
+        assert!(close(
+            probe.discrepancy(&x),
+            server_client_discrepancy(&x, &clients),
+            1e-9
+        ));
+    }
+
+    #[test]
+    fn random_write_sequences_match_dense_oracles() {
+        // The oracle folds μ in f32; the probe accumulates in f64.
+        // Agreement is therefore relative (documented fp-fold tolerance),
+        // not bitwise — 1e-4 is ~30x the worst drift seen at these sizes.
+        check(
+            "probe_vs_dense_oracles",
+            PropConfig { cases: 32, seed: 0xD17E, max_size: 24 },
+            |rng, size| {
+                let n = 1 + size % 12;
+                let d = 1 + size;
+                let base: Vec<f32> =
+                    (0..d).map(|_| rng.normal() as f32).collect();
+                let mut clients = vec![base.clone(); n];
+                let mut probe = DivergenceProbe::new(base.clone(), n);
+                let mut x_server = base.clone();
+                for _ in 0..3 * n {
+                    let i = rng.gen_range(n);
+                    let newv: Vec<f32> = (0..d)
+                        .map(|j| clients[i][j] + rng.normal() as f32 * 0.3)
+                        .collect();
+                    probe.note_write(&clients[i], &newv);
+                    clients[i] = newv;
+                    for v in x_server.iter_mut() {
+                        *v += rng.normal() as f32 * 0.05;
+                    }
+                    let (got_phi, want_phi) =
+                        (probe.potential(&x_server), potential(&x_server, &clients));
+                    crate::prop_assert!(
+                        close(got_phi, want_phi, 1e-4),
+                        "phi probe {got_phi} vs dense {want_phi} (n={n} d={d})"
+                    );
+                    let (got_dsc, want_dsc) = (
+                        probe.discrepancy(&x_server),
+                        server_client_discrepancy(&x_server, &clients),
+                    );
+                    crate::prop_assert!(
+                        close(got_dsc, want_dsc, 1e-4),
+                        "discrepancy probe {got_dsc} vs dense {want_dsc}"
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn cost_is_touched_not_fleet_size() {
+        // A million-client probe must only pay for the writes it sees.
+        let d = 16;
+        let n = 1_000_000;
+        let base = vec![0.0f32; d];
+        let mut probe = DivergenceProbe::new(base.clone(), n);
+        let old = base.clone();
+        let new: Vec<f32> = (0..d).map(|j| j as f32 * 0.01).collect();
+        for _ in 0..10 {
+            probe.note_write(&old, &new);
+            probe.note_write(&new, &old);
+        }
+        probe.note_write(&old, &new);
+        assert_eq!(probe.writes(), 21);
+        let x = vec![0.0f32; d];
+        // Exactly one client deviates; Φ = ‖m‖²·(n+1-term algebra) > 0.
+        assert!(probe.potential(&x) > 0.0);
+        assert!(probe.discrepancy(&x) > 0.0);
+    }
+}

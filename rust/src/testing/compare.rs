@@ -1,0 +1,295 @@
+//! Bench-regression gate (`quafl bench-compare OLD.json NEW.json`): diff
+//! two canonical `{bench, rows}` BENCH artifacts and flag wall-time
+//! regressions beyond a percentage threshold.
+//!
+//! Rows are matched by the concatenation of their string-valued fields
+//! (for the standard [`super::bench`] schema that is the row `name`;
+//! richer artifacts like BENCH_fleet.json match on every string column),
+//! so reordering rows between runs never misreports. Only the wall-time
+//! keys in [`GATE_KEYS`] are gated; counts/throughput columns are
+//! informational. Rows present on one side only are reported but
+//! non-fatal — benchmarks legitimately grow new rows.
+
+use crate::util::json::Json;
+
+/// Wall-time row keys the gate inspects (a key participates only when
+/// present and numeric on both sides).
+pub const GATE_KEYS: &[&str] =
+    &["mean_ns", "p50_ns", "p95_ns", "wall_ns_total", "wall_ns_mean"];
+
+/// One gated key's old→new movement on one row.
+#[derive(Clone, Debug)]
+pub struct Delta {
+    pub row: String,
+    pub key: &'static str,
+    pub old: f64,
+    pub new: f64,
+    /// (new − old) / old · 100
+    pub pct: f64,
+}
+
+/// Everything `bench-compare` reports.
+#[derive(Debug, Default)]
+pub struct CompareOutcome {
+    pub bench: String,
+    /// rows matched on both sides
+    pub compared: usize,
+    /// gated keys that slowed down by more than the threshold (fatal)
+    pub regressions: Vec<Delta>,
+    /// gated keys that sped up by more than the threshold (informational)
+    pub improvements: Vec<Delta>,
+    /// row ids present in OLD only (warn)
+    pub missing: Vec<String>,
+    /// row ids present in NEW only (warn)
+    pub added: Vec<String>,
+}
+
+impl CompareOutcome {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+
+    /// Human-readable report, worst regression first.
+    pub fn render(&self, max_regress_pct: f64) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "bench-compare: {} — {} row(s) compared, {} regression(s), \
+             {} improvement(s) (threshold {:.1}%)\n",
+            self.bench,
+            self.compared,
+            self.regressions.len(),
+            self.improvements.len(),
+            max_regress_pct,
+        ));
+        let mut worst = self.regressions.clone();
+        worst.sort_by(|a, b| b.pct.partial_cmp(&a.pct).unwrap());
+        for d in &worst {
+            out.push_str(&format!(
+                "  REGRESSION {:+.1}%  {}  {}: {:.0} -> {:.0} ns\n",
+                d.pct, d.row, d.key, d.old, d.new
+            ));
+        }
+        for d in &self.improvements {
+            out.push_str(&format!(
+                "  improved   {:+.1}%  {}  {}: {:.0} -> {:.0} ns\n",
+                d.pct, d.row, d.key, d.old, d.new
+            ));
+        }
+        for id in &self.missing {
+            out.push_str(&format!("  warning: row only in OLD: {id}\n"));
+        }
+        for id in &self.added {
+            out.push_str(&format!("  warning: row only in NEW: {id}\n"));
+        }
+        if self.passed() {
+            out.push_str("  PASS\n");
+        } else {
+            out.push_str("  FAIL\n");
+        }
+        out
+    }
+}
+
+/// A row's identity: its string-valued fields as sorted `key=value`
+/// pairs (the `Json::Obj` BTreeMap is already key-sorted). Rows with no
+/// string field fall back to their array position.
+fn row_id(row: &Json, index: usize) -> String {
+    let mut parts = Vec::new();
+    if let Json::Obj(m) = row {
+        for (k, v) in m {
+            if let Json::Str(s) = v {
+                parts.push(format!("{k}={s}"));
+            }
+        }
+    }
+    if parts.is_empty() {
+        format!("row#{index}")
+    } else {
+        parts.join("|")
+    }
+}
+
+fn rows_by_id(doc: &Json) -> Result<Vec<(String, &Json)>, String> {
+    let rows = doc
+        .get("rows")
+        .and_then(|r| match r {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        })
+        .ok_or("artifact has no `rows` array (not a canonical BENCH file?)")?;
+    Ok(rows
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (row_id(r, i), r))
+        .collect())
+}
+
+/// Diff two canonical BENCH artifacts. `max_regress_pct` is the fatal
+/// slowdown threshold on every [`GATE_KEYS`] column; errors are
+/// malformed inputs, never regressions (the caller checks
+/// [`CompareOutcome::passed`]).
+pub fn compare(
+    old: &Json,
+    new: &Json,
+    max_regress_pct: f64,
+) -> Result<CompareOutcome, String> {
+    let old_bench = old
+        .get("bench")
+        .and_then(Json::as_str)
+        .ok_or("OLD artifact has no `bench` name")?;
+    let new_bench = new
+        .get("bench")
+        .and_then(Json::as_str)
+        .ok_or("NEW artifact has no `bench` name")?;
+    if old_bench != new_bench {
+        return Err(format!(
+            "bench name mismatch: OLD is {old_bench:?}, NEW is {new_bench:?}"
+        ));
+    }
+    let old_rows = rows_by_id(old)?;
+    let new_rows = rows_by_id(new)?;
+
+    let mut out = CompareOutcome {
+        bench: old_bench.to_string(),
+        ..Default::default()
+    };
+    for (id, old_row) in &old_rows {
+        let Some((_, new_row)) = new_rows.iter().find(|(nid, _)| nid == id)
+        else {
+            out.missing.push(id.clone());
+            continue;
+        };
+        out.compared += 1;
+        for &key in GATE_KEYS {
+            let (Some(o), Some(n)) = (
+                old_row.get(key).and_then(Json::as_f64),
+                new_row.get(key).and_then(Json::as_f64),
+            ) else {
+                continue;
+            };
+            if o.is_nan() || o <= 0.0 {
+                continue;
+            }
+            let pct = (n - o) / o * 100.0;
+            let d = Delta { row: id.clone(), key, old: o, new: n, pct };
+            if pct > max_regress_pct {
+                out.regressions.push(d);
+            } else if pct < -max_regress_pct {
+                out.improvements.push(d);
+            }
+        }
+    }
+    for (id, _) in &new_rows {
+        if !old_rows.iter().any(|(oid, _)| oid == id) {
+            out.added.push(id.clone());
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn bench_doc(rows: &[(&str, f64)]) -> Json {
+        let rows_json: Vec<String> = rows
+            .iter()
+            .map(|(name, mean)| {
+                format!(
+                    "{{\"name\":\"{name}\",\"mean_ns\":{mean},\"iters\":3}}"
+                )
+            })
+            .collect();
+        parse(&format!(
+            "{{\"bench\":\"engine_step\",\"rows\":[{}]}}",
+            rows_json.join(",")
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn identical_artifacts_pass() {
+        let doc = bench_doc(&[("a", 100.0), ("b", 200.0)]);
+        let out = compare(&doc, &doc, 10.0).unwrap();
+        assert!(out.passed());
+        assert_eq!(out.compared, 2);
+        assert!(out.regressions.is_empty() && out.improvements.is_empty());
+        assert!(out.missing.is_empty() && out.added.is_empty());
+    }
+
+    #[test]
+    fn slowdown_beyond_threshold_fails() {
+        let old = bench_doc(&[("a", 100.0), ("b", 200.0)]);
+        let new = bench_doc(&[("a", 125.0), ("b", 205.0)]);
+        let out = compare(&old, &new, 10.0).unwrap();
+        assert!(!out.passed());
+        assert_eq!(out.regressions.len(), 1);
+        assert_eq!(out.regressions[0].row, "name=a");
+        assert_eq!(out.regressions[0].key, "mean_ns");
+        assert!((out.regressions[0].pct - 25.0).abs() < 1e-9);
+        assert!(out.render(10.0).contains("REGRESSION"));
+    }
+
+    #[test]
+    fn speedup_is_informational_not_fatal() {
+        let old = bench_doc(&[("a", 100.0)]);
+        let new = bench_doc(&[("a", 50.0)]);
+        let out = compare(&old, &new, 10.0).unwrap();
+        assert!(out.passed());
+        assert_eq!(out.improvements.len(), 1);
+    }
+
+    #[test]
+    fn missing_and_added_rows_warn_but_pass() {
+        let old = bench_doc(&[("a", 100.0), ("gone", 1.0)]);
+        let new = bench_doc(&[("a", 100.0), ("fresh", 1.0)]);
+        let out = compare(&old, &new, 10.0).unwrap();
+        assert!(out.passed());
+        assert_eq!(out.missing, vec!["name=gone".to_string()]);
+        assert_eq!(out.added, vec!["name=fresh".to_string()]);
+        let r = out.render(10.0);
+        assert!(r.contains("only in OLD") && r.contains("only in NEW"));
+    }
+
+    #[test]
+    fn multi_string_fields_compose_the_identity() {
+        let doc = parse(
+            "{\"bench\":\"engine_step\",\"rows\":[{\"name\":\"a\",\
+             \"kind\":\"blocked\",\"mean_ns\":5}]}",
+        )
+        .unwrap();
+        let out = compare(&doc, &doc, 10.0).unwrap();
+        assert_eq!(out.compared, 1);
+        // BTreeMap ordering: kind before name.
+        let rows = rows_by_id(&doc).unwrap();
+        assert_eq!(rows[0].0, "kind=blocked|name=a");
+    }
+
+    #[test]
+    fn mismatched_bench_names_error() {
+        let old = bench_doc(&[("a", 100.0)]);
+        let new = parse("{\"bench\":\"other\",\"rows\":[]}").unwrap();
+        assert!(compare(&old, &new, 10.0).is_err());
+        assert!(compare(&parse("{}").unwrap(), &old, 10.0).is_err());
+        let no_rows = parse("{\"bench\":\"engine_step\"}").unwrap();
+        assert!(compare(&no_rows, &no_rows, 10.0).is_err());
+    }
+
+    #[test]
+    fn zero_or_missing_gate_keys_are_skipped() {
+        let old = parse(
+            "{\"bench\":\"b\",\"rows\":[{\"name\":\"a\",\"mean_ns\":0,\
+             \"count\":10}]}",
+        )
+        .unwrap();
+        let new = parse(
+            "{\"bench\":\"b\",\"rows\":[{\"name\":\"a\",\"mean_ns\":999,\
+             \"count\":99999}]}",
+        )
+        .unwrap();
+        // mean_ns old == 0 → no ratio; `count` is not a gate key.
+        let out = compare(&old, &new, 10.0).unwrap();
+        assert!(out.passed());
+    }
+}

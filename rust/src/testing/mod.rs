@@ -7,6 +7,7 @@
 //! base seed, so failures are reproducible from the log line.
 
 pub mod bench;
+pub mod compare;
 
 use crate::util::rng::Rng;
 

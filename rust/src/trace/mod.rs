@@ -106,6 +106,17 @@ pub enum Event {
         round: u64,
         value: f64,
     },
+    /// A named telemetry metric flushed at a round boundary by the
+    /// [`crate::telemetry`] registry: convergence probes (Φ_t,
+    /// discrepancy), distribution-sketch summaries, selection-bias
+    /// statistics. Owns its name (sketch summaries compose suffixes
+    /// like `qerr_p95` at flush time).
+    Metric {
+        name: String,
+        round: u64,
+        value: f64,
+        sim_now: f64,
+    },
     /// A mirrored diagnostic line from [`crate::log!`].
     Log { level: Level, msg: String },
 }
@@ -117,6 +128,7 @@ impl Event {
             Event::Span { .. } => "span",
             Event::Counter { .. } => "counter",
             Event::Sample { .. } => "sample",
+            Event::Metric { .. } => "metric",
             Event::Log { .. } => "log",
         }
     }
@@ -158,6 +170,17 @@ impl Event {
                 o.insert("name".into(), Json::Str(name.to_string()));
                 o.insert("round".into(), Json::Num(*round as f64));
                 o.insert("value".into(), Json::Num(*value));
+            }
+            Event::Metric {
+                name,
+                round,
+                value,
+                sim_now,
+            } => {
+                o.insert("name".into(), Json::Str(name.clone()));
+                o.insert("round".into(), Json::Num(*round as f64));
+                o.insert("value".into(), Json::Num(*value));
+                o.insert("sim_now".into(), Json::Num(*sim_now));
             }
             Event::Log { level, msg } => {
                 o.insert("level".into(), Json::Str(level.name().to_string()));
@@ -341,6 +364,21 @@ impl Tracer {
         }
     }
 
+    /// Emit one [`Event::Metric`] (the [`crate::telemetry`] registry's
+    /// flush path). Takes `&str` because sketch summaries compose their
+    /// names at flush time; the allocation only happens when armed.
+    #[inline]
+    pub fn metric(&self, name: &str, round: u64, value: f64, sim_now: f64) {
+        if self.enabled() {
+            self.emit(&Event::Metric {
+                name: name.to_string(),
+                round,
+                value,
+                sim_now,
+            });
+        }
+    }
+
     pub fn meta(&self, fields: Vec<(&'static str, Json)>) {
         if self.enabled() {
             self.emit(&Event::Meta { fields });
@@ -511,6 +549,29 @@ mod tests {
         .to_json();
         assert_eq!(log.get("level").and_then(|v| v.as_str()), Some("info"));
         assert_eq!(log.get("msg").and_then(|v| v.as_str()), Some("hello"));
+    }
+
+    #[test]
+    fn metric_events_round_trip() {
+        let ring = Arc::new(RingSink::new());
+        let t = Tracer::new(ring.clone(), Level::Info);
+        t.metric("qerr_p95", 4, 0.125, 17.0);
+        let evs = ring.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].kind(), "metric");
+        let j = evs[0].to_json();
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("metric"));
+        assert_eq!(j.get("name").and_then(|v| v.as_str()), Some("qerr_p95"));
+        assert_eq!(j.get("round").and_then(|v| v.as_f64()), Some(4.0));
+        assert_eq!(j.get("value").and_then(|v| v.as_f64()), Some(0.125));
+        assert_eq!(j.get("sim_now").and_then(|v| v.as_f64()), Some(17.0));
+        let back = json::parse(&json::to_string(&j)).unwrap();
+        assert_eq!(back.get("value").and_then(|v| v.as_f64()), Some(0.125));
+        // Disarmed levels suppress metrics like every structured kind.
+        let quiet = Tracer::new(Arc::new(RingSink::new()), Level::Error);
+        quiet.metric("phi", 0, 1.0, 0.0);
+        let off = Tracer::off();
+        off.metric("phi", 0, 1.0, 0.0);
     }
 
     #[test]

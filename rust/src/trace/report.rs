@@ -8,6 +8,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::telemetry::sketch::QuantileSketch;
 use crate::util::json::{self, Json};
 
 /// Canonical phase display order; phases outside this list render after
@@ -25,6 +26,23 @@ const PHASE_ORDER: &[&str] = &[
 /// Number of equal-width bins in sample histograms.
 const HIST_BINS: usize = 8;
 
+/// Fixed seed for the report-side sketches: summaries of the same trace
+/// are identical across invocations.
+const SAMPLE_SKETCH_SEED: u64 = 0x5A3C;
+
+/// Distribution summary shared with `quafl health-report`: both reports
+/// run their sample streams through the telemetry quantile sketch
+/// ([`crate::telemetry::sketch`]) — one implementation, one set of error
+/// bounds (exact below the sketch capacity, documented rank-error bound
+/// above it).
+fn sample_sketch(values: &[f64]) -> QuantileSketch {
+    let mut sk = QuantileSketch::new(SAMPLE_SKETCH_SEED);
+    for &v in values {
+        sk.update(v);
+    }
+    sk
+}
+
 #[derive(Debug, Default, Clone)]
 pub struct SpanAgg {
     pub count: u64,
@@ -40,6 +58,30 @@ pub struct CounterAgg {
     pub max: f64,
 }
 
+/// Summary of one telemetry metric series (`kind: "metric"` events —
+/// the full per-round series rendering is `quafl health-report`'s job;
+/// trace-report only summarizes).
+#[derive(Debug, Clone)]
+pub struct MetricAgg {
+    pub count: u64,
+    pub first: f64,
+    pub last: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Default for MetricAgg {
+    fn default() -> MetricAgg {
+        MetricAgg {
+            count: 0,
+            first: 0.0,
+            last: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
 /// Aggregated view of one trace file.
 #[derive(Debug, Default)]
 pub struct Report {
@@ -48,6 +90,7 @@ pub struct Report {
     pub spans: BTreeMap<String, SpanAgg>,
     pub counters: BTreeMap<String, CounterAgg>,
     pub samples: BTreeMap<String, Vec<f64>>,
+    pub metrics: BTreeMap<String, MetricAgg>,
     pub logs: usize,
     pub unknown: usize,
 }
@@ -94,39 +137,27 @@ pub fn aggregate(events: &[Json]) -> Report {
                 let value = e.get("value").and_then(|v| v.as_f64()).unwrap_or(0.0);
                 r.samples.entry(name).or_default().push(value);
             }
+            Some("metric") => {
+                let name = e
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("?")
+                    .to_string();
+                let value = e.get("value").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let agg = r.metrics.entry(name).or_default();
+                if agg.count == 0 {
+                    agg.first = value;
+                }
+                agg.count += 1;
+                agg.last = value;
+                agg.min = agg.min.min(value);
+                agg.max = agg.max.max(value);
+            }
             Some("log") => r.logs += 1,
             _ => r.unknown += 1,
         }
     }
     r
-}
-
-/// Nearest-rank percentile over a sorted slice, `q` in `[0, 1]`.
-fn percentile(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
-}
-
-/// Equal-width histogram over `[min, max]`; returns (min, max, counts).
-fn histogram(sorted: &[f64], bins: usize) -> (f64, f64, Vec<u64>) {
-    if sorted.is_empty() {
-        return (0.0, 0.0, vec![0; bins]);
-    }
-    let (lo, hi) = (sorted[0], sorted[sorted.len() - 1]);
-    let mut counts = vec![0u64; bins];
-    if hi <= lo {
-        counts[0] = sorted.len() as u64;
-        return (lo, hi, counts);
-    }
-    let width = (hi - lo) / bins as f64;
-    for &v in sorted {
-        let b = (((v - lo) / width) as usize).min(bins - 1);
-        counts[b] += 1;
-    }
-    (lo, hi, counts)
 }
 
 fn fmt_wall(ns: f64) -> String {
@@ -161,12 +192,13 @@ impl Report {
     pub fn render(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "trace: {} events ({} meta, {} spans, {} counters, {} samples, {} logs, {} unknown)\n",
+            "trace: {} events ({} meta, {} spans, {} counters, {} samples, {} metrics, {} logs, {} unknown)\n",
             self.events,
             self.meta.len(),
             self.spans.values().map(|a| a.count).sum::<u64>(),
             self.counters.values().map(|a| a.count).sum::<u64>(),
             self.samples.values().map(|v| v.len()).sum::<usize>(),
+            self.metrics.values().map(|a| a.count).sum::<u64>(),
             self.logs,
             self.unknown,
         ));
@@ -211,18 +243,19 @@ impl Report {
                 "sample", "count", "mean", "p50", "p95", "max"
             ));
             for (name, values) in &self.samples {
-                let mut sorted = values.clone();
-                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-                let mean = sorted.iter().sum::<f64>() / sorted.len().max(1) as f64;
-                let (lo, hi, counts) = histogram(&sorted, HIST_BINS);
+                let sk = sample_sketch(values);
+                let mean = values.iter().sum::<f64>() / values.len().max(1) as f64;
+                let (lo, hi, counts) = sk
+                    .histogram(HIST_BINS)
+                    .unwrap_or((0.0, 0.0, vec![0; HIST_BINS]));
                 s.push_str(&format!(
                     "{:<12} {:>8} {:>12.4} {:>12.4} {:>12.4} {:>12.4}\n",
                     name,
-                    sorted.len(),
+                    values.len(),
                     mean,
-                    percentile(&sorted, 0.50),
-                    percentile(&sorted, 0.95),
-                    sorted.last().copied().unwrap_or(0.0),
+                    sk.quantile(0.50),
+                    sk.quantile(0.95),
+                    sk.max(),
                 ));
                 let bars: Vec<String> = counts.iter().map(|c| c.to_string()).collect();
                 s.push_str(&format!(
@@ -237,6 +270,21 @@ impl Report {
             for (name, a) in &self.counters {
                 s.push_str(&format!("{:<22} {:>8} {:>16.0}\n", name, a.count, a.last));
             }
+        }
+        if !self.metrics.is_empty() {
+            s.push_str(&format!(
+                "\n{:<18} {:>8} {:>12} {:>12} {:>12} {:>12}\n",
+                "metric", "points", "first", "last", "min", "max"
+            ));
+            for (name, a) in &self.metrics {
+                s.push_str(&format!(
+                    "{:<18} {:>8} {:>12.4} {:>12.4} {:>12.4} {:>12.4}\n",
+                    name, a.count, a.first, a.last, a.min, a.max
+                ));
+            }
+            s.push_str(
+                "(per-round metric series: quafl health-report FILE.jsonl)\n",
+            );
         }
         if let Some(line) = self.kernel_throughput_line() {
             s.push_str(&line);
@@ -295,20 +343,21 @@ impl Report {
             rows.push(Json::Obj(row));
         }
         for (name, values) in &self.samples {
-            let mut sorted = values.clone();
-            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-            let (lo, hi, counts) = histogram(&sorted, HIST_BINS);
+            let sk = sample_sketch(values);
+            let (lo, hi, counts) = sk
+                .histogram(HIST_BINS)
+                .unwrap_or((0.0, 0.0, vec![0; HIST_BINS]));
             let mut row = BTreeMap::new();
             row.insert("kind".into(), Json::Str("sample".into()));
             row.insert("name".into(), Json::Str(name.clone()));
-            row.insert("count".into(), Json::Num(sorted.len() as f64));
+            row.insert("count".into(), Json::Num(values.len() as f64));
             row.insert(
                 "mean".into(),
-                Json::Num(sorted.iter().sum::<f64>() / sorted.len().max(1) as f64),
+                Json::Num(values.iter().sum::<f64>() / values.len().max(1) as f64),
             );
-            row.insert("p50".into(), Json::Num(percentile(&sorted, 0.50)));
-            row.insert("p95".into(), Json::Num(percentile(&sorted, 0.95)));
-            row.insert("max".into(), Json::Num(sorted.last().copied().unwrap_or(0.0)));
+            row.insert("p50".into(), Json::Num(sk.quantile(0.50)));
+            row.insert("p95".into(), Json::Num(sk.quantile(0.95)));
+            row.insert("max".into(), Json::Num(if sk.is_empty() { 0.0 } else { sk.max() }));
             row.insert("hist_min".into(), Json::Num(lo));
             row.insert("hist_max".into(), Json::Num(hi));
             row.insert(
@@ -418,24 +467,55 @@ mod tests {
     }
 
     #[test]
-    fn percentile_nearest_rank() {
+    fn sample_summary_via_shared_sketch() {
+        // Below sketch capacity the shared implementation is exact
+        // nearest-rank — the same numbers the old in-module percentile
+        // computed.
         let v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
-        assert_eq!(percentile(&v, 0.0), 1.0);
-        assert_eq!(percentile(&v, 0.5), 3.0);
-        assert_eq!(percentile(&v, 1.0), 5.0);
-        assert_eq!(percentile(&[], 0.5), 0.0);
-    }
-
-    #[test]
-    fn histogram_covers_range() {
-        let v = vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
-        let (lo, hi, counts) = histogram(&v, 8);
+        let sk = sample_sketch(&v);
+        assert_eq!(sk.quantile(0.0), 1.0);
+        assert_eq!(sk.quantile(0.5), 3.0);
+        assert_eq!(sk.quantile(1.0), 5.0);
+        let v8: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let (lo, hi, counts) = sample_sketch(&v8).histogram(8).unwrap();
         assert_eq!((lo, hi), (0.0, 7.0));
         assert_eq!(counts.iter().sum::<u64>(), 8);
         // Degenerate range: everything lands in bin 0.
-        let (_, _, c1) = histogram(&[2.0, 2.0, 2.0], 8);
+        let (_, _, c1) = sample_sketch(&[2.0, 2.0, 2.0]).histogram(8).unwrap();
         assert_eq!(c1[0], 3);
         assert_eq!(c1.iter().sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn metric_events_aggregate_and_render() {
+        let metric = |name: &str, round: u64, value: f64| {
+            Event::Metric {
+                name: name.to_string(),
+                round,
+                value,
+                sim_now: round as f64,
+            }
+            .to_json()
+        };
+        let events = vec![
+            metric("phi", 0, 4.0),
+            metric("phi", 1, 2.0),
+            metric("phi", 2, 1.0),
+            metric("qerr_p95", 2, 0.25),
+        ];
+        let r = aggregate(&events);
+        assert_eq!(r.unknown, 0);
+        let phi = &r.metrics["phi"];
+        assert_eq!(phi.count, 3);
+        assert_eq!(phi.first, 4.0);
+        assert_eq!(phi.last, 1.0);
+        assert_eq!(phi.min, 1.0);
+        assert_eq!(phi.max, 4.0);
+        let text = r.render();
+        assert!(text.contains("phi"), "{text}");
+        assert!(text.contains("qerr_p95"), "{text}");
+        assert!(text.contains("health-report"), "{text}");
+        assert!(text.contains("4 metrics"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,309 @@
+//! Parity suite for the L3-telemetry layer (rust/src/telemetry): the
+//! tentpole guarantee is that armed telemetry is **bit-free** — a traced
+//! run with the metric registry armed must reproduce the untraced
+//! trajectory bit for bit, for every algorithm — and that the
+//! incremental O(touched·d) Φ_t probe agrees with the retained dense
+//! O(n·d) oracle within floating-point fold tolerance (the two
+//! accumulate in different orders/precisions, so bitwise equality is
+//! not the contract there — trajectory identity is).
+
+mod common;
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use common::assert_identical;
+use quafl::config::{Algorithm, ExperimentConfig, TimingConfig};
+use quafl::coordinator;
+use quafl::metrics::RunMetrics;
+use quafl::telemetry::health;
+use quafl::telemetry::sketch::QuantileSketch;
+use quafl::util::json::{self, Json};
+
+fn base(algorithm: Algorithm) -> ExperimentConfig {
+    ExperimentConfig {
+        algorithm,
+        n: 10,
+        s: 4,
+        k: 4,
+        rounds: 6,
+        eval_every: 2,
+        workers: 2,
+        train_samples: 512,
+        val_samples: 128,
+        batch: 16,
+        seed: 23,
+        timing: TimingConfig { slow_fraction: 0.3, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn tmp_trace(tag: &str) -> (PathBuf, String) {
+    let path = std::env::temp_dir().join(format!(
+        "quafl_telemetry_parity_{tag}_{}.jsonl",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let s = path.to_str().unwrap().to_string();
+    (path, s)
+}
+
+/// Run `cfg` untraced (registry disarmed — no sink) and traced (armed,
+/// `telemetry` at its default true); assert bit-identical metrics and
+/// return the traced run's parsed event stream.
+fn run_pair(cfg: ExperimentConfig, tag: &str) -> (RunMetrics, Vec<Json>) {
+    let off = coordinator::run(&cfg).expect("untraced run");
+    assert!(!off.points.is_empty(), "no eval points — vacuous parity");
+    let (path, path_s) = tmp_trace(tag);
+    let armed = coordinator::run(&ExperimentConfig {
+        trace: Some(path_s),
+        ..cfg.clone()
+    })
+    .expect("traced run");
+    assert_identical(
+        &off,
+        &armed,
+        &format!("{} telemetry off vs armed", cfg.algorithm.name()),
+    );
+    let text = std::fs::read_to_string(&path).expect("trace file written");
+    let events = json::parse_lines(&text).expect("trace lines parse");
+    let _ = std::fs::remove_file(&path);
+    (armed, events)
+}
+
+fn metric_names(events: &[Json]) -> BTreeSet<String> {
+    events
+        .iter()
+        .filter(|e| e.get("kind").and_then(|k| k.as_str()) == Some("metric"))
+        .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+        .map(|s| s.to_string())
+        .collect()
+}
+
+#[test]
+fn quafl_armed_telemetry_is_bit_free_and_emits_the_catalog() {
+    let cfg = ExperimentConfig {
+        track_potential: true,
+        ..base(Algorithm::QuAFL)
+    };
+    let (metrics, events) = run_pair(cfg, "quafl");
+    assert!(!metrics.potential.is_empty(), "Φ_t series recorded");
+    let names = metric_names(&events);
+    for want in [
+        "phi",
+        "discrepancy",
+        "select_chi2",
+        "gini",
+        "qerr_p50",
+        "qerr_p95",
+        "qerr_n",
+        "client_loss_p50",
+        "client_loss_rmean",
+        "delay_p50",
+    ] {
+        assert!(names.contains(want), "missing metric {want:?} in {names:?}");
+    }
+    // The flushed phi gauge must equal the recorded Φ_t series values
+    // exactly — both read the same probe.
+    let phi_events: Vec<f64> = events
+        .iter()
+        .filter(|e| {
+            e.get("kind").and_then(|k| k.as_str()) == Some("metric")
+                && e.get("name").and_then(|n| n.as_str()) == Some("phi")
+        })
+        .map(|e| e.get("value").and_then(|v| v.as_f64()).unwrap())
+        .collect();
+    assert_eq!(phi_events.len(), metrics.potential.len());
+    for (i, (a, b)) in phi_events.iter().zip(&metrics.potential).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "phi gauge vs series at {i}");
+    }
+}
+
+#[test]
+fn fedavg_armed_telemetry_is_bit_free() {
+    let (_, events) = run_pair(base(Algorithm::FedAvg), "fedavg");
+    let names = metric_names(&events);
+    for want in ["select_chi2", "gini", "client_loss_p50", "delay_p50"] {
+        assert!(names.contains(want), "missing metric {want:?} in {names:?}");
+    }
+    // FedAvg is uncompressed and probe-less.
+    assert!(!names.contains("qerr_p50"), "no quantizer in fedavg");
+    assert!(!names.contains("phi"), "no Φ_t probe in fedavg");
+}
+
+#[test]
+fn fedbuff_armed_telemetry_is_bit_free_with_probe_and_staleness() {
+    let (_, events) = run_pair(base(Algorithm::FedBuff), "fedbuff");
+    let names = metric_names(&events);
+    for want in [
+        "phi",
+        "discrepancy",
+        "staleness_p50",
+        "qerr_p50",
+        "client_loss_p50",
+        "delay_p50",
+    ] {
+        assert!(names.contains(want), "missing metric {want:?} in {names:?}");
+    }
+}
+
+#[test]
+fn baseline_armed_telemetry_is_bit_free() {
+    let (_, events) = run_pair(base(Algorithm::Baseline), "baseline");
+    let names = metric_names(&events);
+    assert!(names.contains("client_loss_p50"), "{names:?}");
+}
+
+#[test]
+fn telemetry_opt_out_suppresses_metric_events_and_stays_bit_free() {
+    let cfg = base(Algorithm::QuAFL);
+    let off = coordinator::run(&cfg).expect("untraced run");
+    let (path, path_s) = tmp_trace("opt_out");
+    let traced = coordinator::run(&ExperimentConfig {
+        trace: Some(path_s),
+        telemetry: false,
+        ..cfg
+    })
+    .expect("traced run with --telemetry false");
+    assert_identical(&off, &traced, "quafl telemetry opt-out");
+    let text = std::fs::read_to_string(&path).expect("trace file written");
+    let events = json::parse_lines(&text).expect("trace lines parse");
+    assert!(!events.is_empty(), "tracing itself still on");
+    assert!(
+        metric_names(&events).is_empty(),
+        "--telemetry false must suppress every metric event"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Satellite 1: `--track-potential` defaults to the incremental probe;
+/// `--dense-potential` keeps the O(n·d) folds. The two runs must have
+/// bit-identical *trajectories* (the probe reads, never writes), and
+/// Φ_t series that agree within fp-fold tolerance: the dense fold
+/// averages in f32 client order while the probe keeps f64 centered
+/// sums, so the documented contract is relative agreement (1e-3 here,
+/// same order as rust/src/telemetry/probe.rs's property tests), not
+/// bitwise equality.
+#[test]
+fn incremental_phi_agrees_with_dense_oracle() {
+    for algorithm in [Algorithm::QuAFL] {
+        let cfg = ExperimentConfig {
+            track_potential: true,
+            ..base(algorithm)
+        };
+        let inc = coordinator::run(&cfg).expect("incremental run");
+        let dense = coordinator::run(&ExperimentConfig {
+            dense_potential: true,
+            ..cfg
+        })
+        .expect("dense run");
+        assert_eq!(inc.potential.len(), dense.potential.len());
+        assert!(!inc.potential.is_empty(), "vacuous Φ_t comparison");
+        // Trajectory identity: swap in the dense potential series and
+        // demand everything else bitwise equal.
+        let mut inc_swapped = inc.clone();
+        inc_swapped.potential = dense.potential.clone();
+        assert_identical(
+            &inc_swapped,
+            &dense,
+            &format!("{} incremental vs dense trajectory", algorithm.name()),
+        );
+        for (i, (a, b)) in
+            inc.potential.iter().zip(&dense.potential).enumerate()
+        {
+            let tol = 1e-6 + 1e-3 * a.abs().max(b.abs());
+            assert!(
+                (a - b).abs() <= tol,
+                "{}: Φ[{i}] probe {a} vs dense {b} (tol {tol})",
+                algorithm.name()
+            );
+            assert!(b.is_finite() && *b >= 0.0, "dense Φ sane");
+        }
+    }
+}
+
+/// Satellite 3 (public-API face): the streaming quantile sketch obeys
+/// its documented rank-error bound `depth·n/k` on adversarial streams.
+#[test]
+fn sketch_rank_error_bound_holds_through_public_api() {
+    let k = 64;
+    let n = 4096;
+    let streams: Vec<Vec<f64>> = vec![
+        (0..n).map(|i| i as f64).collect(),
+        (0..n).map(|i| (n - i) as f64).collect(),
+        (0..n).map(|i| (i % 17) as f64).collect(),
+    ];
+    for (si, stream) in streams.iter().enumerate() {
+        let mut sk = QuantileSketch::with_k(k, 0xBEEF + si as u64);
+        for &v in stream {
+            sk.update(v);
+        }
+        let mut sorted = stream.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let bound = sk.depth() as f64 * n as f64 / k as f64 + 1.0;
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            let est = sk.quantile(q);
+            let target = (q * (n - 1) as f64).round();
+            let rank = sorted.iter().filter(|&&v| v < est).count() as f64;
+            assert!(
+                (rank - target).abs() <= bound,
+                "stream {si} q={q}: rank {rank} vs target {target} \
+                 (bound {bound})"
+            );
+        }
+    }
+}
+
+/// End-to-end health-report: aggregate a real traced run's stream and
+/// write the canonical BENCH_health.json.
+#[test]
+fn health_report_aggregates_a_real_run() {
+    let cfg = ExperimentConfig {
+        track_potential: true,
+        ..base(Algorithm::QuAFL)
+    };
+    let (path, path_s) = tmp_trace("health");
+    let metrics = coordinator::run(&ExperimentConfig {
+        trace: Some(path_s),
+        ..cfg.clone()
+    })
+    .expect("traced run");
+    let text = std::fs::read_to_string(&path).expect("trace file written");
+    let events = json::parse_lines(&text).expect("trace lines parse");
+    let _ = std::fs::remove_file(&path);
+
+    let r = health::aggregate(&events);
+    assert!(r.metric_points > 0, "metric events aggregated");
+    assert_eq!(r.runs, vec!["QuAFL".to_string()]);
+    let phi = r.series.get("phi").expect("phi series");
+    assert_eq!(phi.points.len(), metrics.potential.len());
+    assert_eq!(
+        phi.last().to_bits(),
+        metrics.potential.last().unwrap().to_bits(),
+        "health-report reproduces the recorded Φ_t tail"
+    );
+    let rendered = r.render();
+    assert!(rendered.contains("convergence"), "{rendered}");
+    assert!(rendered.contains("phi"), "{rendered}");
+
+    let dir = std::env::temp_dir().join(format!(
+        "quafl_health_report_test_{}",
+        std::process::id()
+    ));
+    let out_dir = dir.to_str().unwrap().to_string();
+    let bench_path = r.write_bench(&out_dir).expect("write BENCH_health.json");
+    let doc =
+        json::parse(&std::fs::read_to_string(&bench_path).unwrap()).unwrap();
+    assert_eq!(
+        doc.get("bench").and_then(|v| v.as_str()),
+        Some("fleet_health")
+    );
+    let rows = doc.get("rows").and_then(|v| v.as_arr()).unwrap();
+    assert!(
+        rows.iter().any(|row| {
+            row.get("name").and_then(|n| n.as_str()) == Some("phi")
+        }),
+        "BENCH_health.json carries the phi series row"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -104,6 +104,12 @@ fn check_schema(events: &[Json], what: &str) {
                     assert!(e.get(f).is_some(), "{what}: sample.{f} missing");
                 }
             }
+            "metric" => {
+                // L3-telemetry flush stream (default-on when traced).
+                for f in ["name", "round", "value", "sim_now"] {
+                    assert!(e.get(f).is_some(), "{what}: metric.{f} missing");
+                }
+            }
             "log" => {
                 assert!(e.get("msg").is_some(), "{what}: log.msg missing");
             }
