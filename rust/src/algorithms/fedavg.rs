@@ -98,8 +98,13 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
                 .iter()
                 .map(|&i| ctx.transport.downlink_time(i, model_bits))
                 .fold(0.0, f64::max);
-            tally.bits_down += model_bits;
-            tally.comm_down_time += slowest;
+            if ctx.fault.is_none() {
+                tally.bits_down += model_bits;
+                tally.comm_down_time += slowest;
+            }
+            // Under chaos the shared medium only sets the per-client base
+            // link time; retransmissions are unicast re-sends, so the
+            // armed pre-pass charges bits per client per attempt.
             Some(slowest)
         } else {
             None
@@ -110,10 +115,28 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         // push the result back. Pre-pass advances clocks and snapshots
         // each client's K-step burst from X_t.
         let mut round_end = now;
-        let mut tasks = Vec::with_capacity(sampled.len());
         // One broadcast snapshot shared by every sampled client's task;
         // each worker deep-copies it once for its K-step burst.
         let x_round = Arc::new(x_server.clone());
+        if ctx.fault.is_some() {
+            ctx.tracer.span("broadcast", bcast_t0, t as u64, 0.0, now);
+            round_end = faulted_round(
+                ctx, t, now, &sampled, bcast_t, model_bits, &x_round,
+                &mut x_server, &mut metrics, &mut tally, &mut tel,
+            )?;
+            now = round_end + cfg.timing.sit;
+            ctx.tracker.advance_round();
+            tel.gauge_set(names::SELECT_CHI2, ctx.tracker.selection_bias_chi2());
+            tel.gauge_set(names::GINI, ctx.tracker.participation_gini());
+            if (t + 1) % cfg.eval_every == 0 || t + 1 == cfg.rounds {
+                ctx.eval_point(&mut metrics, t + 1, now, &tally, &x_server)?;
+            }
+            ctx.emit_counters(t as u64, now, &tally, None);
+            tel.flush(&ctx.tracer, t as u64, now);
+            ctx.tracer.span("round", round_t0, t as u64, now - round_sim0, now);
+            continue;
+        }
+        let mut tasks = Vec::with_capacity(sampled.len());
         for &i in &sampled {
             let down_t = match bcast_t {
                 Some(slowest) => slowest,
@@ -182,4 +205,152 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         ctx.tracer.span("round", round_t0, t as u64, now - round_sim0, now);
     }
     Ok(metrics)
+}
+
+/// One synchronous round under chaos ([`crate::fault`]): both directions
+/// of every exchange run through the fault engine (fp32 messages carry no
+/// byte payload, so corruption is the bernoulli frame-failure draw),
+/// stragglers pay a link-time multiplier, clients crash after their
+/// K-step burst (wasted compute priced; repeat offenders evicted), and
+/// the `--round-deadline` quorum rule decides which returned models the
+/// equal-weight average accepts — arrival-reweighted to 1/accepted.
+/// Returns the round-end time (the cutoff under a deadline; the last
+/// retry chain otherwise). A fully degraded round keeps X_t.
+#[allow(clippy::too_many_arguments)]
+fn faulted_round(
+    ctx: &mut FlRun,
+    t: usize,
+    now: f64,
+    sampled: &[usize],
+    bcast_t: Option<f64>,
+    model_bits: u64,
+    x_round: &Arc<Vec<f32>>,
+    x_server: &mut Vec<f32>,
+    metrics: &mut RunMetrics,
+    tally: &mut CommTally,
+    tel: &mut Telemetry,
+) -> Result<f64> {
+    use crate::fault::LinkDir;
+
+    let round = t as u64;
+    let k = ctx.cfg.k;
+    let d = x_server.len();
+    let mut tasks = Vec::new();
+    /// per-arrived-result context, aligned with `tasks`
+    struct Arrived {
+        arrival: f64,
+        compute_s: f64,
+    }
+    let mut arrived = Vec::new();
+    let mut arrivals = Vec::new();
+    let mut max_elapsed = 0f64;
+    for &i in sampled {
+        metrics.total_interactions += 1;
+        let mult = ctx.fault.as_ref().unwrap().slow_mult(i);
+        let down_link = match bcast_t {
+            Some(slowest) => slowest,
+            None => ctx.transport.downlink_time(i, model_bits),
+        } * mult;
+        let down = ctx.fault.as_mut().unwrap().deliver(
+            round,
+            i,
+            LinkDir::Down,
+            down_link,
+            model_bits,
+            None,
+        );
+        tally.bits_down += model_bits * down.attempts as u64;
+        tally.comm_down_time += down.time;
+        if !down.delivered {
+            // The client never received the round model — it idles.
+            max_elapsed = max_elapsed.max(down.time);
+            metrics.zero_progress_interactions += 1;
+            continue;
+        }
+        // The client runs its synchronous K-step burst.
+        ctx.clocks[i].restart(now + down.time);
+        let finish = ctx.clocks[i].finish_time_for(k);
+        let compute_s = finish - (now + down.time);
+        metrics.sum_observed_steps += k as u64;
+        tally.total_steps += k as u64;
+        if ctx.fault.as_ref().unwrap().crashes(round, i) {
+            // Crash after the burst, before upload.
+            let fe = ctx.fault.as_mut().unwrap();
+            fe.waste(compute_s, 0);
+            let evicted = fe.record_crash(i);
+            tally.wasted_compute_time += compute_s;
+            if evicted {
+                ctx.availability.evict(i);
+            }
+            max_elapsed = max_elapsed.max(finish - now);
+            continue;
+        }
+        let up_link = ctx.transport.uplink_time(i, model_bits) * mult;
+        let up = ctx.fault.as_mut().unwrap().deliver(
+            round,
+            i,
+            LinkDir::Up,
+            up_link,
+            model_bits,
+            None,
+        );
+        tally.bits_up += model_bits * up.attempts as u64;
+        tally.comm_up_time += up.time;
+        let elapsed = finish - now + up.time;
+        max_elapsed = max_elapsed.max(elapsed);
+        if up.delivered {
+            arrivals.push(elapsed);
+            ctx.tracer.sample("delay", round, down.time + up.time);
+            tel.observe(names::DELAY, down.time + up.time);
+            arrived.push(Arrived { arrival: elapsed, compute_s });
+            tasks.push(make_task(ctx, i, x_round.clone(), k, ctx.cfg.lr));
+        } else {
+            tally.wasted_up_bits += model_bits * up.attempts as u64;
+            tally.wasted_compute_time += compute_s;
+        }
+    }
+
+    // Quorum/deadline close over what actually arrived.
+    let cutoff = ctx.fault.as_mut().unwrap().quorum_cutoff(&arrivals).0;
+    let round_end = if ctx.cfg.fault.round_deadline > 0.0 {
+        now + cutoff
+    } else {
+        now + max_elapsed.max(cutoff)
+    };
+
+    let sgd_t0 = ctx.tracer.start();
+    let results = ctx.pool.run_local_sgd(tasks)?;
+    ctx.tracer.span("local_sgd", sgd_t0, round, 0.0, now);
+    tally.peak_model_bytes = tally
+        .peak_model_bytes
+        .max(((results.len() + 1) * d * 4) as u64);
+
+    let reduce_t0 = ctx.tracer.start();
+    let accepted_n =
+        arrived.iter().filter(|a| a.arrival <= cutoff).count();
+    let mut sum = vec![0f32; d];
+    for (a, r) in arrived.iter().zip(&results) {
+        // The server received the model either way; participation and
+        // loss history update even for a deadline-missed arrival.
+        ctx.tracker.record_participation(r.client_id, now);
+        ctx.tracker.note_snapshot(r.client_id);
+        if r.steps > 0 {
+            let mean_loss = r.loss as f64 / r.steps as f64;
+            ctx.tracker.note_loss(r.client_id, mean_loss);
+            tel.observe(names::CLIENT_LOSS, mean_loss);
+            tel.observe_sampled(names::CLIENT_LOSS, mean_loss);
+        }
+        if a.arrival <= cutoff {
+            params::axpy(&mut sum, 1.0 / accepted_n as f32, &r.params);
+        } else {
+            // Arrived past the cutoff: the average excludes it.
+            tally.wasted_up_bits += model_bits;
+            tally.wasted_compute_time += a.compute_s;
+        }
+    }
+    if accepted_n > 0 {
+        *x_server = sum;
+    }
+    ctx.tracer.span("reduce", reduce_t0, round, 0.0, now);
+    Ok(round_end)
 }

@@ -160,8 +160,15 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             0.0
         };
         ctx.clocks[i].restart(recv);
-        let t = ctx.clocks[i].finish_time_for(cfg.k)
-            + ctx.transport.uplink_time(i, delta_bits);
+        // Under chaos the uplink is priced at pop time through the fault
+        // engine (retries shift the arrival), so the scheduled event is
+        // the bare compute finish.
+        let t = if ctx.fault.is_some() {
+            ctx.clocks[i].finish_time_for(cfg.k)
+        } else {
+            ctx.clocks[i].finish_time_for(cfg.k)
+                + ctx.transport.uplink_time(i, delta_bits)
+        };
         queue.push(Reverse(Finish { time: t, id: i }));
     }
 
@@ -182,6 +189,23 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         // it churned off.
         let select_t0 = ctx.tracer.start();
         let mut tasks = Vec::with_capacity(cfg.fedbuff_buffer);
+        if ctx.fault.is_some() {
+            faulted_fill(
+                ctx, agg, round_sim0, &mut now, &mut queue, &mut tasks,
+                &mut fleet, &server_snap, &mut probe, &mut tel, &mut tally,
+                &mut metrics, &mut msg_counter, delta_bits, model_bits,
+                up_quant.is_some(),
+            );
+            if tasks.len() < cfg.fedbuff_buffer {
+                metrics.short_rounds += 1;
+            }
+            if tasks.is_empty() {
+                // The whole fleet is dead: degrade by ending the run at
+                // the last completed aggregation instead of hanging.
+                ctx.tracer.span("select", select_t0, agg, now - round_sim0, now);
+                break;
+            }
+        } else {
         while tasks.len() < cfg.fedbuff_buffer {
             let Reverse(Finish { time, id }) = queue.pop().expect("queue non-empty");
             now = time;
@@ -217,9 +241,13 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
                 // Rejected: the compute and the transmission already
                 // happened — the Δ's exact wire bits stay charged (the
                 // admitted path charges them at aggregation) — but the
-                // update is never aggregated.
+                // update is never aggregated. The waste is priced too:
+                // rejection's cost used to be invisible next to the
+                // event-count `rejected_interactions`.
                 metrics.rejected_interactions += 1;
                 tally.bits_up += delta_bits;
+                tally.wasted_up_bits += delta_bits;
+                tally.wasted_compute_time += cfg.k as f64 / ctx.clocks[id].rate();
             }
 
             // Admitted or not, the client pulls the current model
@@ -242,6 +270,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             ctx.clocks[id].restart(resume + down_t);
             let t_next = ctx.clocks[id].finish_time_for(cfg.k) + up_t;
             queue.push(Reverse(Finish { time: t_next, id }));
+        }
         }
         ctx.tracer.span("select", select_t0, agg, now - round_sim0, now);
 
@@ -297,9 +326,16 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
 
         // Server aggregates the full buffer, applying Δs in event order.
         let reduce_t0 = ctx.tracer.start();
+        // Arrival-reweighting: an early quorum close aggregates fewer
+        // than Z deltas and the mean follows the realized count.
         let scale = cfg.fedbuff_server_lr / deltas.len() as f32;
+        let armed = ctx.fault.is_some();
         for (id, delta, bits, loss, qerr) in deltas {
-            tally.bits_up += bits;
+            if !armed {
+                // Armed runs charged the push (with its retries) at
+                // delivery time in `faulted_fill`.
+                tally.bits_up += bits;
+            }
             params::axpy(&mut x_server, -scale, &delta);
             // Tracker observation for the loss-aware policies (pure
             // bookkeeping — no RNG, no trajectory float).
@@ -350,4 +386,170 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         ctx.tracer.span("round", round_t0, agg, now - round_sim0, now);
     }
     Ok(metrics)
+}
+
+/// The event-queue walk under chaos ([`crate::fault`]): fills the buffer
+/// through the fault engine instead of the legacy pop loop. Scheduled
+/// events carry the bare compute finish; the uplink (Δ push, framed when
+/// compressed) is delivered at pop time with retry/backoff, so a retried
+/// push admits late — `now` advances to the delivered arrival and never
+/// rewinds past a later pop. Clients crash at push time (wasted burst
+/// priced; repeat offenders evicted and never re-queued — the queue
+/// permanently forgets them), a failed re-pull leaves the client
+/// computing on its stale snapshot, and a `--round-deadline` closes the
+/// buffer early K-of-Z quorum-style once the next arrival would land
+/// past the deadline (the aggregation mean reweights to the realized
+/// count). Admission-rejected pushes price their waste exactly like the
+/// legacy path.
+#[allow(clippy::too_many_arguments)]
+fn faulted_fill(
+    ctx: &mut FlRun,
+    agg: u64,
+    round_sim0: f64,
+    now: &mut f64,
+    queue: &mut BinaryHeap<Reverse<Finish>>,
+    tasks: &mut Vec<crate::exec::ClientTask>,
+    fleet: &mut crate::fleet::ClientModelStore,
+    server_snap: &Arc<Vec<f32>>,
+    probe: &mut Option<DivergenceProbe>,
+    tel: &mut Telemetry,
+    tally: &mut CommTally,
+    metrics: &mut RunMetrics,
+    msg_counter: &mut u64,
+    delta_bits: u64,
+    model_bits: u64,
+    compress: bool,
+) {
+    use crate::fault::LinkDir;
+    use crate::quant::FRAME_HEADER_BITS;
+
+    let k = ctx.cfg.k;
+    let lr = ctx.cfg.lr;
+    let buffer = ctx.cfg.fedbuff_buffer;
+    let deadline = ctx.cfg.fault.round_deadline;
+    let quorum = ctx.cfg.fault.quorum;
+    let track_selection = ctx.cfg.track_selection;
+    // Only quantized payloads are checksum-framed; raw fp32 Δs are not.
+    let push_bits = delta_bits
+        + if compress { FRAME_HEADER_BITS as u64 } else { 0 };
+    while tasks.len() < buffer {
+        // Early quorum close: at quorum strength the server aggregates
+        // what it holds rather than waiting past its deadline.
+        if deadline > 0.0 && !tasks.is_empty() && tasks.len() >= quorum {
+            if let Some(Reverse(peek)) = queue.peek() {
+                if peek.time - round_sim0 > deadline {
+                    let fe = ctx.fault.as_mut().unwrap();
+                    fe.counters.deadline_misses +=
+                        (buffer - tasks.len()) as u64;
+                    break;
+                }
+            }
+        }
+        let Some(Reverse(Finish { time, id })) = queue.pop() else {
+            break; // every client evicted — nothing left to wait for
+        };
+        if deadline > 0.0
+            && time - round_sim0 > deadline
+            && tasks.len() < quorum
+        {
+            // Below quorum the server waits out its deadline for more.
+            ctx.fault.as_mut().unwrap().counters.quorum_waits += 1;
+        }
+        *now = time.max(*now);
+        metrics.total_interactions += 1;
+        metrics.sum_observed_steps += k as u64;
+        tally.total_steps += k as u64;
+        let compute_s = k as f64 / ctx.clocks[id].rate();
+
+        let mut push_ok = false;
+        let mut evicted = false;
+        if ctx.fault.as_ref().unwrap().crashes(agg, id) {
+            // Crash at push time: the K-step burst is lost.
+            let fe = ctx.fault.as_mut().unwrap();
+            fe.waste(compute_s, 0);
+            evicted = fe.record_crash(id);
+            tally.wasted_compute_time += compute_s;
+            if evicted {
+                ctx.availability.evict(id);
+            }
+        } else {
+            let mult = ctx.fault.as_ref().unwrap().slow_mult(id);
+            let up_link = ctx.transport.uplink_time(id, push_bits) * mult;
+            let up = ctx.fault.as_mut().unwrap().deliver(
+                agg,
+                id,
+                LinkDir::Up,
+                up_link,
+                push_bits,
+                None,
+            );
+            tally.bits_up += push_bits * up.attempts as u64;
+            tally.comm_up_time += up.time;
+            // The retried push admits at its delivered arrival, which
+            // can land past the next scheduled pop — never rewind.
+            *now = (time + up.time).max(*now);
+            if up.delivered {
+                push_ok = true;
+            } else {
+                tally.wasted_up_bits += push_bits * up.attempts as u64;
+                tally.wasted_compute_time += compute_s;
+            }
+        }
+
+        let admitted = push_ok && ctx.admit_update(*now, id);
+        if admitted {
+            ctx.tracer
+                .sample("staleness", agg, ctx.tracker.staleness(id) as f64);
+            tel.observe(names::STALENESS, ctx.tracker.staleness(id) as f64);
+            let start = fleet.snapshot(id);
+            let mut task = make_task(ctx, id, start, k, lr);
+            if compress {
+                *msg_counter += 1;
+                task.seed = derive_seed(ctx.cfg.seed, 0xFB0F ^ *msg_counter);
+            }
+            tasks.push(task);
+            ctx.tracker.record_participation(id, *now);
+            if track_selection {
+                metrics.selections.push((*now, vec![id]));
+            }
+        } else if push_ok {
+            // Delivered but admission-rejected: same waste pricing as
+            // the legacy rejected path (bits were charged at delivery).
+            metrics.rejected_interactions += 1;
+            tally.wasted_up_bits += push_bits;
+            tally.wasted_compute_time += compute_s;
+        }
+
+        // Re-pull and restart — unless the client is permanently dead.
+        if !evicted {
+            let mult = ctx.fault.as_ref().unwrap().slow_mult(id);
+            let down_link =
+                ctx.transport.downlink_time(id, model_bits) * mult;
+            let down = ctx.fault.as_mut().unwrap().deliver(
+                agg,
+                id,
+                LinkDir::Down,
+                down_link,
+                model_bits,
+                None,
+            );
+            tally.bits_down += model_bits * down.attempts as u64;
+            tally.comm_down_time += down.time;
+            if down.delivered {
+                if let Some(p) = probe.as_mut() {
+                    p.note_write(fleet.get(id), server_snap.as_slice());
+                }
+                fleet.set_shared(id, server_snap.clone());
+                ctx.tracker.note_snapshot(id);
+            }
+            // else: the pull failed for good — the client keeps its
+            // stale snapshot and its next push is computed on it.
+            ctx.tracer.sample("delay", agg, down.time);
+            tel.observe(names::DELAY, down.time);
+            let resume = ctx.availability.next_up(id, *now);
+            ctx.clocks[id].restart(resume + down.time);
+            let t_next = ctx.clocks[id].finish_time_for(k);
+            queue.push(Reverse(Finish { time: t_next, id }));
+        }
+    }
 }

@@ -74,6 +74,10 @@ struct ClientOutcome {
     /// telemetry is armed (`None` otherwise, so the trajectory's float
     /// work is untouched by the observation)
     qerr: Option<f64>,
+    /// the encoded uplink payload bytes, kept only when chaos is armed
+    /// so the fault layer can run the real checksum-frame corruption
+    /// model on the wire ([`crate::fault`]); `None` on default runs
+    wire: Option<Vec<u8>>,
 }
 
 pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
@@ -211,6 +215,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         let x_server_key = &x_server;
         let enc_x_ref = &enc_x;
         let eta_ref = &eta;
+        let fault_armed = ctx.fault.is_some();
         let outcomes = ctx.pool.map(tasks, |engine: &mut dyn TrainEngine, task| {
             let i = task.client_id;
             // Execute the h steps the client actually took (from X^i).
@@ -238,6 +243,7 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             let enc_y = quantizer.encode(&y_i, up_seed);
             let up_bits = enc_y.bits as u64;
             let q_y = quantizer.decode(&enc_y, x_server_key);
+            let wire = fault_armed.then(|| enc_y.payload);
             // Quantization-error observation for the telemetry sketch —
             // computed only when armed, and never fed back into any
             // trajectory value.
@@ -259,7 +265,16 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
                 }
                 AveragingMode::ServerOnly => y_i,
             };
-            Ok(ClientOutcome { client_id: i, q_y, x_next, up_bits, loss, steps, qerr })
+            Ok(ClientOutcome {
+                client_id: i,
+                q_y,
+                x_next,
+                up_bits,
+                loss,
+                steps,
+                qerr,
+                wire,
+            })
         })?;
         ctx.tracer.span("local_sgd", sgd_t0, t as u64, 0.0, now);
 
@@ -279,6 +294,16 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         let reduce_t0 = ctx.tracer.start();
         let mut sum_qy = vec![0f32; d];
         let mut round_comm = 0f64;
+        // Server-side averaging weight follows the updates it actually
+        // holds; equal to the sampled count (hence the legacy weight, bit
+        // for bit) on every unfaulted run.
+        let mut accepted_n = sampled.len();
+        if ctx.fault.is_some() {
+            accepted_n = faulted_reduce(
+                ctx, t, now, &enc_x, outcomes, &mut sum_qy, &mut round_comm,
+                &mut tally, &mut fleet, &mut probe, &mut tel,
+            );
+        } else {
         for out in outcomes {
             let down_t =
                 ctx.transport.downlink_time(out.client_id, enc_x.bits as u64);
@@ -317,19 +342,27 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
             // and folded in the server's message.
             ctx.clocks[out.client_id].restart(now + cfg.timing.sit + down_t);
         }
+        }
         ctx.tracer.span("reduce", reduce_t0, t as u64, 0.0, now);
 
-        // Server-side model update. ClientOnly removes the server's
-        // self-retention: it adopts the plain mean of client replies.
+        // Server-side model update over the updates the server actually
+        // accepted (== the full sample on unfaulted runs, so the weight
+        // is the legacy 1/(s+1) bit for bit). ClientOnly removes the
+        // server's self-retention: it adopts the plain mean of client
+        // replies.
+        let inv_srv = 1.0 / (accepted_n as f32 + 1.0);
         match cfg.averaging {
             AveragingMode::Both | AveragingMode::ServerOnly => {
                 // X_{t+1} = (X_t + Σ Q(Y^i)) / (s+1)
-                params::scale(&mut x_server, inv_s1);
-                params::axpy(&mut x_server, inv_s1, &sum_qy);
+                params::scale(&mut x_server, inv_srv);
+                params::axpy(&mut x_server, inv_srv, &sum_qy);
             }
             AveragingMode::ClientOnly => {
-                x_server = sum_qy;
-                params::scale(&mut x_server, 1.0 / sampled.len() as f32);
+                if accepted_n > 0 {
+                    x_server = sum_qy;
+                    params::scale(&mut x_server, 1.0 / accepted_n as f32);
+                }
+                // A fully degraded round (nothing accepted) keeps X_t.
             }
         }
 
@@ -365,6 +398,190 @@ pub fn run(ctx: &mut FlRun) -> Result<RunMetrics> {
         ctx.tracer.span("round", round_t0, t as u64, now - round_sim0, now);
     }
     Ok(metrics)
+}
+
+/// The reduce loop when chaos is armed ([`crate::fault`]): every
+/// exchange runs through the fault engine — the server's Enc(X_t) and
+/// the client's Enc(Y^i) each retry with exponential backoff on loss,
+/// the uplink payload carries a checksum frame whose corruption is
+/// detected server-side, stragglers pay a link-time multiplier, crashed
+/// clients waste their SGD burst (repeat offenders are evicted from the
+/// availability process), and a configured `--round-deadline` closes
+/// the round K-of-s quorum-style. A client whose exchange completed
+/// still applies its own update even when the server discarded a late
+/// arrival. Returns the number of updates the server accepted.
+#[allow(clippy::too_many_arguments)]
+fn faulted_reduce(
+    ctx: &mut FlRun,
+    t: usize,
+    now: f64,
+    enc_x: &crate::quant::QuantMessage,
+    outcomes: Vec<ClientOutcome>,
+    sum_qy: &mut [f32],
+    round_comm: &mut f64,
+    tally: &mut CommTally,
+    fleet: &mut crate::fleet::ClientModelStore,
+    probe: &mut Option<DivergenceProbe>,
+    tel: &mut Telemetry,
+) -> usize {
+    use crate::fault::LinkDir;
+    use crate::quant::FRAME_HEADER_BITS;
+
+    /// One sampled client's exchange fate, resolved before the quorum
+    /// rule closes the round.
+    struct Fate {
+        out: ClientOutcome,
+        crashed: bool,
+        /// downlink delivered — the client folded the round locally
+        served: bool,
+        /// uplink delivered — the server holds Q(Y^i)
+        arrived: bool,
+        down_time: f64,
+        /// exchange completion offset from round start (finite iff
+        /// `arrived`)
+        arrival: f64,
+        compute_s: f64,
+    }
+
+    let round = t as u64;
+    let header = FRAME_HEADER_BITS as u64;
+    let sit = ctx.cfg.timing.sit;
+    let mut fates = Vec::with_capacity(outcomes.len());
+    let mut arrivals = Vec::new();
+    let mut max_elapsed = 0f64;
+    for out in outcomes {
+        let i = out.client_id;
+        let compute_s = out.steps as f64 / ctx.clocks[i].rate();
+        if ctx.fault.as_ref().unwrap().crashes(round, i) {
+            // Crash after local SGD, before upload: the burst is wasted
+            // and the exchange never starts. First crash reboots the
+            // client; repeat offenders are permanently evicted.
+            let fe = ctx.fault.as_mut().unwrap();
+            fe.waste(compute_s, 0);
+            let evicted = fe.record_crash(i);
+            tally.wasted_compute_time += compute_s;
+            if evicted {
+                ctx.availability.evict(i);
+            } else {
+                ctx.clocks[i].restart(now + sit); // reboot
+            }
+            fates.push(Fate {
+                out,
+                crashed: true,
+                served: false,
+                arrived: false,
+                down_time: 0.0,
+                arrival: f64::INFINITY,
+                compute_s,
+            });
+            continue;
+        }
+        let mult = ctx.fault.as_ref().unwrap().slow_mult(i);
+        let down_bits = enc_x.bits as u64 + header;
+        let up_bits = out.up_bits + header;
+        let down_link = ctx.transport.downlink_time(i, down_bits) * mult;
+        let up_link = ctx.transport.uplink_time(i, up_bits) * mult;
+        let down = ctx.fault.as_mut().unwrap().deliver(
+            round,
+            i,
+            LinkDir::Down,
+            down_link,
+            down_bits,
+            None,
+        );
+        // Retries cost real bits and real time, delivered or not.
+        tally.bits_down += down_bits * down.attempts as u64;
+        tally.comm_down_time += down.time;
+        let mut arrival = f64::INFINITY;
+        let mut arrived = false;
+        if down.delivered {
+            let up = ctx.fault.as_mut().unwrap().deliver(
+                round,
+                i,
+                LinkDir::Up,
+                up_link,
+                up_bits,
+                out.wire.as_deref(),
+            );
+            tally.bits_up += up_bits * up.attempts as u64;
+            tally.comm_up_time += up.time;
+            if up.delivered {
+                arrived = true;
+                arrival = down.time + up.time;
+                arrivals.push(arrival);
+            } else {
+                tally.wasted_up_bits += up_bits * up.attempts as u64;
+                tally.wasted_compute_time += compute_s;
+            }
+            max_elapsed = max_elapsed.max(down.time + up.time);
+        } else {
+            // The client never learned it was sampled: its realized
+            // progress buys nothing this round.
+            tally.wasted_compute_time += compute_s;
+            max_elapsed = max_elapsed.max(down.time);
+        }
+        fates.push(Fate {
+            out,
+            crashed: false,
+            served: down.delivered,
+            arrived,
+            down_time: down.time,
+            arrival,
+            compute_s,
+        });
+    }
+
+    // Close the round: the quorum/deadline rule decides the cutoff; a
+    // delivered update past it is discarded (its cost already paid).
+    let cutoff = ctx.fault.as_mut().unwrap().quorum_cutoff(&arrivals).0;
+    *round_comm = if ctx.cfg.fault.round_deadline > 0.0 {
+        cutoff
+    } else {
+        // No deadline: the server waits out every retry chain.
+        max_elapsed.max(cutoff)
+    };
+
+    let mut accepted_n = 0usize;
+    for f in fates {
+        let i = f.out.client_id;
+        let accepted = f.arrived && f.arrival <= cutoff;
+        if accepted {
+            accepted_n += 1;
+            params::axpy(sum_qy, 1.0, &f.out.q_y);
+        } else if f.arrived {
+            // Delivered but after the cutoff: the server discarded it.
+            tally.wasted_up_bits += f.out.up_bits + header;
+            tally.wasted_compute_time += f.compute_s;
+        }
+        if f.arrived {
+            ctx.tracer.sample("delay", round, f.arrival);
+            tel.observe(names::DELAY, f.arrival);
+        }
+        if f.served {
+            // The client received Enc(X_t) and folded the round locally
+            // whatever the server later accepted.
+            if let Some(p) = probe.as_mut() {
+                p.note_write(fleet.get(i), &f.out.x_next);
+            }
+            if let Some(e) = f.out.qerr {
+                tel.observe(names::QERR, e);
+            }
+            if f.out.steps > 0 {
+                let mean_loss = f.out.loss as f64 / f.out.steps as f64;
+                tel.observe(names::CLIENT_LOSS, mean_loss);
+                tel.observe_sampled(names::CLIENT_LOSS, mean_loss);
+                ctx.tracker.note_loss(i, mean_loss);
+            }
+            fleet.set(i, f.out.x_next);
+            ctx.tracker.record_participation(i, now);
+            ctx.tracker.note_snapshot(i);
+            ctx.clocks[i].restart(now + sit + f.down_time);
+        } else if !f.crashed {
+            // Unreached client: no exchange, fresh local burst.
+            ctx.clocks[i].restart(now + sit);
+        }
+    }
+    accepted_n
 }
 
 /// Round-boundary Φ_t: the incremental probe when one is maintained,

@@ -5,6 +5,7 @@
 
 use crate::data::{PartitionKind, SynthFamily};
 use crate::engine::KernelKind;
+use crate::fault::FaultConfig;
 use crate::net::NetworkConfig;
 use crate::select::SelectionKind;
 use crate::trace::Level;
@@ -253,6 +254,12 @@ pub struct ExperimentConfig {
     /// default `info`). Gates both the structured event stream and the
     /// [`crate::log!`] stderr diagnostics.
     pub trace_level: Level,
+    /// fault-injection & failure-handling plan ([`crate::fault`];
+    /// `--fault-crash/--fault-drop/--fault-corrupt/--fault-straggle`,
+    /// `--round-deadline`/`--fault-quorum`, retry/backoff knobs). The
+    /// default is fully disabled — no engine is constructed and every
+    /// trajectory is bit-exact legacy (rust/tests/fault_parity.rs).
+    pub fault: FaultConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -294,6 +301,7 @@ impl Default for ExperimentConfig {
             event_driven: true,
             trace: None,
             trace_level: Level::Info,
+            fault: FaultConfig::default(),
         }
     }
 }
@@ -326,6 +334,34 @@ impl ExperimentConfig {
         }
         self.net.validate()?;
         self.select.validate(self.s)?;
+        self.fault.validate()?;
+        // Cross-subsystem fault combos the fault parser can't see alone.
+        if self.fault.enabled() {
+            if self.fault.quorum > self.s {
+                return Err(format!(
+                    "--fault-quorum {} exceeds the sample size s={} — the \
+                     round could never reach quorum",
+                    self.fault.quorum, self.s
+                ));
+            }
+            // A deadline only ever binds on communication or straggler
+            // slowdowns; with a zero-cost ideal transport and no
+            // stragglers it silently never fires.
+            if self.fault.round_deadline > 0.0
+                && self.net.profile.is_ideal()
+                && self.fault.straggle == 0.0
+                && self.fault.drop == 0.0
+                && self.fault.corrupt == 0.0
+            {
+                return Err(
+                    "--round-deadline has nothing to bind on: the ideal \
+                     transport prices every exchange at zero and no \
+                     straggle/drop/corrupt faults are armed; pick a priced \
+                     --net or add a fault rate"
+                        .into(),
+                );
+            }
+        }
         Ok(())
     }
 
@@ -344,13 +380,15 @@ impl ExperimentConfig {
     ];
 
     /// The full `run` key set: [`ExperimentConfig::CLI_KEYS`] plus the
-    /// network keys owned by [`NetworkConfig::CLI_KEYS`] and the selection
-    /// keys owned by [`SelectionKind::CLI_KEYS`] (single source — a flag
-    /// added to one parser cannot drift out of the typo guard).
+    /// network keys owned by [`NetworkConfig::CLI_KEYS`], the selection
+    /// keys owned by [`SelectionKind::CLI_KEYS`], and the fault keys
+    /// owned by [`FaultConfig::CLI_KEYS`] (single source — a flag added
+    /// to one parser cannot drift out of the typo guard).
     pub fn cli_keys() -> Vec<&'static str> {
         let mut keys = Self::CLI_KEYS.to_vec();
         keys.extend_from_slice(NetworkConfig::CLI_KEYS);
         keys.extend_from_slice(SelectionKind::CLI_KEYS);
+        keys.extend_from_slice(FaultConfig::CLI_KEYS);
         keys
     }
 
@@ -445,6 +483,7 @@ impl ExperimentConfig {
         }
         c.net = NetworkConfig::from_args(args)?;
         c.select = SelectionKind::from_args(args)?;
+        c.fault = FaultConfig::from_args(args)?;
         c.validate()?;
         Ok(c)
     }
@@ -668,6 +707,51 @@ mod tests {
         assert!(ExperimentConfig::from_args(&a).is_err());
         let keys = ExperimentConfig::cli_keys();
         assert!(keys.contains(&"trace") && keys.contains(&"trace-level"));
+    }
+
+    #[test]
+    fn fault_flags_parse_into_config() {
+        let d = ExperimentConfig::default();
+        assert!(!d.fault.enabled(), "faults default off");
+        let a = cli::parse(&sv(&[
+            "run", "--net", "mobile", "--fault-crash", "0.1", "--fault-drop",
+            "0.2", "--fault-corrupt", "0.05", "--fault-straggle", "0.25:4",
+            "--round-deadline", "30", "--fault-quorum", "2",
+        ]));
+        let c = ExperimentConfig::from_args(&a).unwrap();
+        assert!(c.fault.enabled());
+        assert_eq!(c.fault.crash, 0.1);
+        assert_eq!(c.fault.straggle_mult, 4.0);
+        assert_eq!(c.fault.quorum, 2);
+        // The typo guard covers every fault key without hand-copying.
+        let keys = ExperimentConfig::cli_keys();
+        for k in FaultConfig::CLI_KEYS {
+            assert!(keys.contains(k), "missing fault key {k}");
+        }
+    }
+
+    #[test]
+    fn fault_combos_rejected_at_validation() {
+        // Quorum larger than the sample could never be reached.
+        let a = cli::parse(&sv(&[
+            "run", "--s", "3", "--n", "20", "--net", "mobile",
+            "--round-deadline", "30", "--fault-quorum", "5",
+        ]));
+        assert!(ExperimentConfig::from_args(&a).is_err());
+        // A deadline with the zero-cost ideal transport and no fault rate
+        // silently never fires — rejected as a footgun.
+        let a = cli::parse(&sv(&["run", "--round-deadline", "30"]));
+        assert!(ExperimentConfig::from_args(&a).is_err());
+        // Same deadline becomes meaningful on a priced net…
+        let a = cli::parse(&sv(&[
+            "run", "--net", "mobile", "--round-deadline", "30",
+        ]));
+        assert!(ExperimentConfig::from_args(&a).is_ok());
+        // …or with a fault model that inflates delivery time.
+        let a = cli::parse(&sv(&[
+            "run", "--round-deadline", "30", "--fault-straggle", "0.2:8",
+        ]));
+        assert!(ExperimentConfig::from_args(&a).is_ok());
     }
 
     #[test]

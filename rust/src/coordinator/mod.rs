@@ -14,6 +14,7 @@ use crate::algorithms;
 use crate::config::{Algorithm, ExperimentConfig, QuantizerKind};
 use crate::data::{partition, Dataset, Shard, SynthSpec};
 use crate::exec::{EngineFactory, EnginePool};
+use crate::fault::FaultEngine;
 use crate::fleet::ClientModelStore;
 use crate::metrics::{CommTally, EvalPoint, RunMetrics};
 use crate::model::ModelSpec;
@@ -69,6 +70,10 @@ pub struct FlRun {
     /// when off and never consumes RNG or perturbs the trajectory when
     /// on (rust/tests/trace_parity.rs).
     pub tracer: Tracer,
+    /// seeded chaos engine ([`crate::fault`]) — `None` unless a fault
+    /// flag armed it, so `--faults off` (the default) constructs nothing
+    /// and stays bit-exact (rust/tests/fault_parity.rs)
+    pub fault: Option<FaultEngine>,
 }
 
 impl FlRun {
@@ -171,7 +176,13 @@ impl FlRun {
             ("event_driven", Json::Bool(cfg.event_driven)),
             ("engine_kernel", Json::Str(cfg.engine_kernel.name().to_string())),
             ("telemetry", Json::Bool(cfg.telemetry)),
+            ("faults", Json::Str(cfg.fault.label())),
         ]);
+
+        let fault = cfg
+            .fault
+            .enabled()
+            .then(|| FaultEngine::new(&cfg.fault, cfg.seed, cfg.n));
 
         Ok(FlRun {
             cfg: cfg.clone(),
@@ -190,6 +201,7 @@ impl FlRun {
             rng: Rng::new(derive_seed(cfg.seed, 0x5E1EC7)),
             expected_h,
             tracer,
+            fault,
         })
     }
 
@@ -236,6 +248,30 @@ impl FlRun {
         let (kflops, kbytes) = self.pool.kernel_stats();
         t.counter("kernel_flops", round, kflops as f64, now);
         t.counter("kernel_bytes", round, kbytes as f64, now);
+        if let Some(f) = &self.fault {
+            let c = &f.counters;
+            t.counter("fault_crashes", round, c.crashes as f64, now);
+            t.counter("fault_evictions", round, c.evictions as f64, now);
+            t.counter("fault_drops_up", round, c.drops_up as f64, now);
+            t.counter("fault_drops_down", round, c.drops_down as f64, now);
+            t.counter("fault_corruptions", round, c.corruptions as f64, now);
+            t.counter("fault_retries", round, c.retries as f64, now);
+            t.counter("fault_gave_up", round, c.gave_up as f64, now);
+            t.counter(
+                "fault_deadline_misses",
+                round,
+                c.deadline_misses as f64,
+                now,
+            );
+            t.counter(
+                "fault_degraded_rounds",
+                round,
+                c.degraded_rounds as f64,
+                now,
+            );
+            t.counter("fault_wasted_bits", round, c.wasted_bits as f64, now);
+            t.counter("fault_backoff_s", round, c.backoff_time, now);
+        }
     }
 
     /// Sample this round's participants through the selection policy.
@@ -328,6 +364,8 @@ impl FlRun {
             val_loss,
             val_acc,
             train_loss,
+            wasted_up_bits: tally.wasted_up_bits,
+            wasted_compute_time: tally.wasted_compute_time,
         });
         Ok(())
     }
@@ -386,12 +424,15 @@ pub fn run(cfg: &ExperimentConfig) -> Result<RunMetrics> {
 
 pub fn run_with_artifacts(cfg: &ExperimentConfig, artifacts: &str) -> Result<RunMetrics> {
     let mut ctx = FlRun::with_artifacts(cfg, artifacts)?;
-    let result = match cfg.algorithm {
+    let mut result = match cfg.algorithm {
         Algorithm::QuAFL => algorithms::quafl::run(&mut ctx),
         Algorithm::FedAvg => algorithms::fedavg::run(&mut ctx),
         Algorithm::FedBuff => algorithms::fedbuff::run(&mut ctx),
         Algorithm::Baseline => algorithms::baseline::run(&mut ctx),
     };
+    if let (Ok(metrics), Some(f)) = (&mut result, &ctx.fault) {
+        metrics.fault = f.counters;
+    }
     ctx.tracer.flush();
     result
 }

@@ -1,0 +1,815 @@
+//! Seeded fault injection + failure handling (the chaos subsystem).
+//!
+//! The paper's QuAFL server is *built* to tolerate partial client
+//! asynchrony — it aggregates whatever quantized updates arrive rather
+//! than waiting for all of them — but without injected failures that
+//! robustness is never exercised: churn/duty gate *pre-selection*
+//! availability only, and once a client is selected its exchange always
+//! succeeds. This module closes the gap with four seeded fault models
+//! behind a [`FaultConfig`] plus the server-side recovery machinery that
+//! turns injected faults into graceful degradation:
+//!
+//! - **crash** (`--fault-crash P`): the client dies after local SGD but
+//!   before upload — the compute is wasted (priced into
+//!   `wasted_compute_time`) and repeated crashes evict the client
+//!   permanently ([`FaultEngine::record_crash`], fed to the
+//!   availability index so it is never resampled);
+//! - **drop** (`--fault-drop P`): per-attempt uplink/downlink message
+//!   loss, recovered by bounded retry with exponential backoff — every
+//!   retransmission costs real bits and real simulated time through the
+//!   existing `Transport` prices ([`FaultEngine::deliver`]);
+//! - **corrupt** (`--fault-corrupt P`): payload corruption of the
+//!   quantized encoding. When chaos is armed every uplink payload is
+//!   framed with a 32-bit FNV-1a checksum header
+//!   ([`crate::quant::frame_checksum`], [`crate::quant::FRAME_HEADER_BITS`]
+//!   extra bits on the wire); the server verifies the frame, detects the
+//!   flip, and treats the message as a drop (retry path);
+//! - **straggle** (`--fault-straggle P:MULT`): a seeded subset of
+//!   chronic stragglers whose compute and link times are multiplied by
+//!   `MULT`, fattening the delay tail the deadline must cut.
+//!
+//! Recovery: a per-round deadline (`--round-deadline D`) closes the
+//! round at `D` simulated seconds with whatever arrived — K-of-s quorum
+//! semantics ([`FaultEngine::quorum_cutoff`]): if fewer than
+//! `--fault-quorum` updates beat the deadline the server waits for the
+//! quorum-th fastest arrival, and if even that is impossible the round
+//! degrades gracefully to whatever was delivered (never hangs).
+//! Aggregation reweights by *arrivals*, not by the nominal sample size.
+//!
+//! Everything draws from a private RNG tree derived off the master seed
+//! (`derive_seed(seed, 0xFA17)`), one leaf per (round, client,
+//! decision) — never from a shared mutable stream — so fault schedules
+//! are bit-identical across `--workers` counts and replays. The default
+//! `--faults off` constructs no engine at all and is a bit-exact no-op
+//! (rust/tests/fault_parity.rs). Semantics contract: docs/FAULTS.md.
+
+use crate::quant::frame_checksum;
+use crate::util::cli::Args;
+use crate::util::rng::{derive_seed, Rng};
+
+/// Salt of the fault subsystem's RNG tree under the master seed.
+const FAULT_STREAM: u64 = 0xFA17;
+/// Per-decision salts inside the fault tree.
+const SALT_STRAGGLER: u64 = 0x57A6;
+const SALT_CRASH: u64 = 0x11;
+const SALT_UP: u64 = 0x22;
+const SALT_DOWN: u64 = 0x33;
+
+/// Crashes before a client is declared dead and evicted for good.
+pub const CRASHES_TO_EVICT: u32 = 2;
+/// Default bounded-retry attempts after the first transmission.
+pub const DEFAULT_MAX_RETRIES: u32 = 2;
+/// Default initial backoff delay (simulated seconds); doubles per retry.
+pub const DEFAULT_BACKOFF_BASE: f64 = 0.5;
+
+/// Which direction a message travels (distinct RNG salts, distinct
+/// counters).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkDir {
+    Up,
+    Down,
+}
+
+/// The fault plan: all rates default to zero and
+/// [`FaultConfig::enabled`] == false, which the coordinator maps to "no
+/// engine constructed" — the bit-exact no-op path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// P(client crashes after local SGD, before upload), per interaction.
+    pub crash: f64,
+    /// P(one transmission attempt is lost), per attempt and direction.
+    pub drop: f64,
+    /// P(a delivered uplink payload is corrupted in flight), per attempt.
+    pub corrupt: f64,
+    /// Fraction of the fleet that are chronic stragglers.
+    pub straggle: f64,
+    /// Compute/link slowdown multiplier for stragglers (>= 1).
+    pub straggle_mult: f64,
+    /// Round deadline in simulated seconds; 0.0 = no deadline.
+    pub round_deadline: f64,
+    /// Bounded retransmissions after the first attempt.
+    pub max_retries: u32,
+    /// Initial backoff delay; attempt i waits `backoff_base * 2^i`.
+    pub backoff_base: f64,
+    /// Minimum arrivals before the deadline may close the round.
+    pub quorum: usize,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            crash: 0.0,
+            drop: 0.0,
+            corrupt: 0.0,
+            straggle: 0.0,
+            straggle_mult: 1.0,
+            round_deadline: 0.0,
+            max_retries: DEFAULT_MAX_RETRIES,
+            backoff_base: DEFAULT_BACKOFF_BASE,
+            quorum: 1,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// CLI keys this subsystem owns (merged into the run/sweep key sets).
+    pub const CLI_KEYS: &'static [&'static str] = &[
+        "faults",
+        "fault-crash",
+        "fault-drop",
+        "fault-corrupt",
+        "fault-straggle",
+        "fault-retries",
+        "fault-backoff",
+        "fault-quorum",
+        "round-deadline",
+    ];
+
+    /// Any fault model or recovery knob active? `false` means the
+    /// coordinator builds no engine and the run is bit-exact legacy.
+    pub fn enabled(&self) -> bool {
+        self.crash > 0.0
+            || self.drop > 0.0
+            || self.corrupt > 0.0
+            || self.straggle > 0.0
+            || self.round_deadline > 0.0
+    }
+
+    /// Short label for trace meta / figure arms: `"off"` or the active
+    /// knobs, e.g. `"crash=0.1,drop=0.05,deadline=30"`.
+    pub fn label(&self) -> String {
+        if !self.enabled() {
+            return "off".into();
+        }
+        let mut parts = Vec::new();
+        if self.crash > 0.0 {
+            parts.push(format!("crash={}", self.crash));
+        }
+        if self.drop > 0.0 {
+            parts.push(format!("drop={}", self.drop));
+        }
+        if self.corrupt > 0.0 {
+            parts.push(format!("corrupt={}", self.corrupt));
+        }
+        if self.straggle > 0.0 {
+            parts.push(format!(
+                "straggle={}x{}",
+                self.straggle, self.straggle_mult
+            ));
+        }
+        if self.round_deadline > 0.0 {
+            parts.push(format!("deadline={}", self.round_deadline));
+            if self.quorum > 1 {
+                parts.push(format!("quorum={}", self.quorum));
+            }
+        }
+        parts.join(",")
+    }
+
+    fn prob(key: &str, s: &str) -> Result<f64, String> {
+        let p: f64 =
+            s.parse().map_err(|_| format!("--{key}: bad number {s:?}"))?;
+        if !(0.0..=1.0).contains(&p) {
+            return Err(format!("--{key} {p} outside [0, 1]"));
+        }
+        Ok(p)
+    }
+
+    /// Build from CLI args. `--fault-straggle` takes `P:MULT`; the other
+    /// rates take a bare probability. A `--faults off|on` master switch
+    /// cross-checks the rest (off + any rate, or on + no rate, are both
+    /// rejected as inconsistent).
+    pub fn from_args(args: &Args) -> Result<Self, String> {
+        // Every fault key takes a value; a bare flag would pass the typo
+        // guard and silently leave chaos disarmed.
+        for key in Self::CLI_KEYS {
+            if args.flag(key) {
+                return Err(format!("--{key} requires a value"));
+            }
+        }
+        let mut c = FaultConfig::default();
+        if let Some(s) = args.get("fault-crash") {
+            c.crash = Self::prob("fault-crash", s)?;
+        }
+        if let Some(s) = args.get("fault-drop") {
+            c.drop = Self::prob("fault-drop", s)?;
+        }
+        if let Some(s) = args.get("fault-corrupt") {
+            c.corrupt = Self::prob("fault-corrupt", s)?;
+        }
+        if let Some(s) = args.get("fault-straggle") {
+            let (p, m) = s.split_once(':').ok_or_else(|| {
+                format!("--fault-straggle expects P:MULT, got {s:?}")
+            })?;
+            c.straggle = Self::prob("fault-straggle", p)?;
+            c.straggle_mult = m
+                .parse()
+                .map_err(|_| format!("--fault-straggle: bad MULT {m:?}"))?;
+        }
+        if let Some(s) = args.get("round-deadline") {
+            c.round_deadline = s
+                .parse()
+                .map_err(|_| format!("--round-deadline: bad number {s:?}"))?;
+        }
+        if let Some(s) = args.get("fault-retries") {
+            c.max_retries = s
+                .parse()
+                .map_err(|_| format!("--fault-retries: bad count {s:?}"))?;
+            if c.drop == 0.0 && c.corrupt == 0.0 {
+                return Err("--fault-retries has no effect without \
+                            --fault-drop or --fault-corrupt"
+                    .into());
+            }
+        }
+        if let Some(s) = args.get("fault-backoff") {
+            c.backoff_base = s
+                .parse()
+                .map_err(|_| format!("--fault-backoff: bad number {s:?}"))?;
+            if c.drop == 0.0 && c.corrupt == 0.0 {
+                return Err("--fault-backoff has no effect without \
+                            --fault-drop or --fault-corrupt"
+                    .into());
+            }
+        }
+        if let Some(s) = args.get("fault-quorum") {
+            c.quorum = s
+                .parse()
+                .map_err(|_| format!("--fault-quorum: bad count {s:?}"))?;
+            if c.round_deadline == 0.0 {
+                return Err("--fault-quorum has no effect without \
+                            --round-deadline"
+                    .into());
+            }
+        }
+        if let Some(s) = args.get("faults") {
+            match s {
+                "off" => {
+                    if c.enabled() {
+                        return Err(
+                            "--faults off contradicts the --fault-* / \
+                             --round-deadline flags also given"
+                                .into(),
+                        );
+                    }
+                }
+                "on" => {
+                    if !c.enabled() {
+                        return Err(
+                            "--faults on needs at least one --fault-* rate \
+                             or --round-deadline"
+                                .into(),
+                        );
+                    }
+                }
+                other => {
+                    return Err(format!("--faults {other:?}: expected off|on"))
+                }
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, p) in [
+            ("fault-crash", self.crash),
+            ("fault-drop", self.drop),
+            ("fault-corrupt", self.corrupt),
+            ("fault-straggle", self.straggle),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("--{name} {p} outside [0, 1]"));
+            }
+        }
+        if self.straggle_mult < 1.0 || !self.straggle_mult.is_finite() {
+            return Err(format!(
+                "--fault-straggle multiplier {} must be finite and >= 1",
+                self.straggle_mult
+            ));
+        }
+        if self.round_deadline < 0.0 || !self.round_deadline.is_finite() {
+            return Err(format!(
+                "--round-deadline {} must be finite and >= 0",
+                self.round_deadline
+            ));
+        }
+        if self.backoff_base <= 0.0 || !self.backoff_base.is_finite() {
+            return Err(format!(
+                "--fault-backoff {} must be finite and > 0",
+                self.backoff_base
+            ));
+        }
+        if self.max_retries > 16 {
+            return Err(format!(
+                "--fault-retries {} is absurd (max 16)",
+                self.max_retries
+            ));
+        }
+        if self.quorum == 0 {
+            return Err("--fault-quorum must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Cumulative fault/recovery counters — surfaced as trace counters, as
+/// telemetry gauges in `health-report`, and in `RunMetrics` for the
+/// chaos bench rows.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultCounters {
+    /// client crashes injected (post-SGD, pre-upload)
+    pub crashes: u64,
+    /// clients permanently evicted after repeated crashes
+    pub evictions: u64,
+    /// lost uplink transmission attempts
+    pub drops_up: u64,
+    /// lost downlink transmission attempts
+    pub drops_down: u64,
+    /// checksum-detected corrupted uplink payloads (treated as drops)
+    pub corruptions: u64,
+    /// retransmission attempts made
+    pub retries: u64,
+    /// deliveries abandoned after exhausting the retry budget
+    pub gave_up: u64,
+    /// delivered updates discarded for missing the round deadline
+    pub deadline_misses: u64,
+    /// rounds where the server waited past the deadline to reach quorum
+    pub quorum_waits: u64,
+    /// rounds closed with fewer than quorum arrivals (degraded)
+    pub degraded_rounds: u64,
+    /// simulated seconds spent in retry backoff
+    pub backoff_time: f64,
+    /// simulated compute seconds whose results never reached the server
+    pub wasted_compute_time: f64,
+    /// payload bits of failed or discarded transmissions
+    pub wasted_bits: u64,
+}
+
+/// One delivery attempt sequence's outcome ([`FaultEngine::deliver`]).
+#[derive(Clone, Copy, Debug)]
+pub struct Delivery {
+    /// did any attempt get through intact?
+    pub delivered: bool,
+    /// total link + backoff time across every attempt
+    pub time: f64,
+    /// transmissions made (1 = first attempt succeeded)
+    pub attempts: u32,
+}
+
+/// The seeded chaos engine: per-(round, client) fault draws from a
+/// private RNG tree, straggler assignment, crash/eviction bookkeeping,
+/// retry/backoff delivery, and the deadline/quorum round-close rule.
+#[derive(Clone, Debug)]
+pub struct FaultEngine {
+    cfg: FaultConfig,
+    seed: u64,
+    straggler: Vec<bool>,
+    crash_count: Vec<u32>,
+    dead: Vec<bool>,
+    pub counters: FaultCounters,
+}
+
+impl FaultEngine {
+    pub fn new(cfg: &FaultConfig, master_seed: u64, n: usize) -> Self {
+        let seed = derive_seed(master_seed, FAULT_STREAM);
+        let mut rng = Rng::new(derive_seed(seed, SALT_STRAGGLER));
+        let straggler =
+            (0..n).map(|_| rng.bernoulli(cfg.straggle)).collect();
+        FaultEngine {
+            cfg: cfg.clone(),
+            seed,
+            straggler,
+            crash_count: vec![0; n],
+            dead: vec![false; n],
+            counters: FaultCounters::default(),
+        }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// One private RNG leaf per (decision, round, client): algorithms may
+    /// consume decisions in any order (worker fan-out, event pops)
+    /// without perturbing each other's draws.
+    fn leaf(&self, salt: u64, round: u64, client: usize) -> Rng {
+        Rng::new(derive_seed(
+            derive_seed(self.seed, salt),
+            (round << 32) | client as u64,
+        ))
+    }
+
+    pub fn is_straggler(&self, client: usize) -> bool {
+        self.straggler[client]
+    }
+
+    /// Compute/link slowdown for this client (1.0 for non-stragglers).
+    pub fn slow_mult(&self, client: usize) -> f64 {
+        if self.straggler[client] {
+            self.cfg.straggle_mult
+        } else {
+            1.0
+        }
+    }
+
+    /// Does this client crash after local SGD this round? (Stateless
+    /// draw; pair with [`Self::record_crash`] when it fires.)
+    pub fn crashes(&self, round: u64, client: usize) -> bool {
+        self.cfg.crash > 0.0
+            && self.leaf(SALT_CRASH, round, client).bernoulli(self.cfg.crash)
+    }
+
+    /// Book a crash; returns true when it tips the client into permanent
+    /// eviction (the caller must then also evict it from the
+    /// availability index so it is never resampled).
+    pub fn record_crash(&mut self, client: usize) -> bool {
+        self.counters.crashes += 1;
+        self.crash_count[client] += 1;
+        if self.crash_count[client] >= CRASHES_TO_EVICT && !self.dead[client] {
+            self.dead[client] = true;
+            self.counters.evictions += 1;
+            return true;
+        }
+        false
+    }
+
+    pub fn is_dead(&self, client: usize) -> bool {
+        self.dead[client]
+    }
+
+    /// Price compute/bits that never became a server-visible update.
+    pub fn waste(&mut self, compute_s: f64, bits: u64) {
+        self.counters.wasted_compute_time += compute_s;
+        self.counters.wasted_bits += bits;
+    }
+
+    /// Attempt a transmission with bounded retry + exponential backoff.
+    ///
+    /// `link_time` is one attempt's transport price (already
+    /// straggle-multiplied by the caller); every attempt pays it again,
+    /// plus `backoff_base * 2^i` between attempts. For uplink payloads
+    /// pass the encoded bytes: the first attempt then runs the *real*
+    /// frame check — checksum the payload, flip one seeded bit if the
+    /// corrupt draw fires, verify server-side (FNV-1a detects every
+    /// single-bit flip; see quant::frame_checksum tests). Retries model
+    /// re-encoded transmissions with a bernoulli corrupt draw.
+    ///
+    /// The caller charges `attempts * bits` to the tally (retries cost
+    /// real bits); failed attempts' bits are also booked here as waste.
+    pub fn deliver(
+        &mut self,
+        round: u64,
+        client: usize,
+        dir: LinkDir,
+        link_time: f64,
+        bits: u64,
+        payload: Option<&[u8]>,
+    ) -> Delivery {
+        let salt = match dir {
+            LinkDir::Up => SALT_UP,
+            LinkDir::Down => SALT_DOWN,
+        };
+        let mut rng = self.leaf(salt, round, client);
+        let mut time = 0.0;
+        for attempt in 0..=self.cfg.max_retries {
+            time += link_time;
+            let lost = rng.bernoulli(self.cfg.drop);
+            let corrupted = if lost || dir == LinkDir::Down {
+                false
+            } else if attempt == 0 {
+                self.frame_corrupted(&mut rng, payload)
+            } else {
+                rng.bernoulli(self.cfg.corrupt)
+            };
+            if !lost && !corrupted {
+                return Delivery { delivered: true, time, attempts: attempt + 1 };
+            }
+            if lost {
+                match dir {
+                    LinkDir::Up => self.counters.drops_up += 1,
+                    LinkDir::Down => self.counters.drops_down += 1,
+                }
+            } else {
+                self.counters.corruptions += 1;
+            }
+            self.counters.wasted_bits += bits;
+            if attempt < self.cfg.max_retries {
+                let backoff =
+                    self.cfg.backoff_base * f64::powi(2.0, attempt as i32);
+                time += backoff;
+                self.counters.retries += 1;
+                self.counters.backoff_time += backoff;
+            }
+        }
+        self.counters.gave_up += 1;
+        Delivery {
+            delivered: false,
+            time,
+            attempts: self.cfg.max_retries + 1,
+        }
+    }
+
+    /// The wire-level corruption model for a framed uplink payload:
+    /// checksum sender-side, flip one seeded bit when the corrupt draw
+    /// fires, verify server-side. Returns true when the frame check
+    /// fails (→ treated as a drop). Without the payload bytes (e.g.
+    /// uncompressed fp32 messages never materialized as bytes) the draw
+    /// alone decides.
+    fn frame_corrupted(&self, rng: &mut Rng, payload: Option<&[u8]>) -> bool {
+        if !rng.bernoulli(self.cfg.corrupt) {
+            return false;
+        }
+        match payload {
+            Some(bytes) if !bytes.is_empty() => {
+                let sent = frame_checksum(bytes);
+                let mut wire = bytes.to_vec();
+                let bit = rng.gen_range(wire.len() * 8);
+                wire[bit / 8] ^= 1 << (bit % 8);
+                frame_checksum(&wire) != sent
+            }
+            _ => true,
+        }
+    }
+
+    /// The deadline/quorum round-close rule over delivered arrival
+    /// offsets (simulated seconds relative to round start). Returns the
+    /// round's communication cutoff and an accept mask aligned with
+    /// `arrivals`:
+    ///
+    /// - no deadline: accept everything, cutoff = max arrival;
+    /// - all beat the deadline: accept everything, cutoff = max arrival
+    ///   (the server closes as soon as the last update lands);
+    /// - some miss but quorum beat it: accept the on-time ones, cutoff =
+    ///   deadline (the server waited that long), misses counted;
+    /// - fewer than quorum beat it: extend the cutoff to the quorum-th
+    ///   fastest arrival (`quorum_waits`), accept those;
+    /// - fewer than quorum delivered at all: degrade gracefully — accept
+    ///   everything that arrived, cutoff = max(deadline, last arrival).
+    pub fn quorum_cutoff(
+        &mut self,
+        arrivals: &[f64],
+    ) -> (f64, Vec<bool>) {
+        let max_arrival =
+            arrivals.iter().cloned().fold(0.0f64, f64::max);
+        if self.cfg.round_deadline == 0.0 {
+            return (max_arrival, vec![true; arrivals.len()]);
+        }
+        let deadline = self.cfg.round_deadline;
+        let quorum_short = arrivals.len() < self.cfg.quorum;
+        if quorum_short {
+            self.counters.degraded_rounds += 1;
+        }
+        let on_time = arrivals.iter().filter(|&&a| a <= deadline).count();
+        if on_time == arrivals.len() {
+            // Everything delivered beat the deadline. Below quorum the
+            // server still waited the deadline out hoping for more.
+            let cutoff = if quorum_short {
+                deadline.max(max_arrival)
+            } else {
+                max_arrival
+            };
+            return (cutoff, vec![true; arrivals.len()]);
+        }
+        let quorum = self.cfg.quorum.min(arrivals.len());
+        let cutoff = if on_time >= quorum {
+            deadline
+        } else {
+            // Wait past the deadline for the quorum-th fastest arrival.
+            let mut sorted = arrivals.to_vec();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.counters.quorum_waits += 1;
+            sorted[quorum.max(1) - 1]
+        };
+        let accept: Vec<bool> =
+            arrivals.iter().map(|&a| a <= cutoff).collect();
+        let misses = accept.iter().filter(|&&ok| !ok).count() as u64;
+        self.counters.deadline_misses += misses;
+        (cutoff, accept)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn chaotic() -> FaultConfig {
+        FaultConfig {
+            crash: 0.3,
+            drop: 0.4,
+            corrupt: 0.2,
+            straggle: 0.5,
+            straggle_mult: 4.0,
+            round_deadline: 20.0,
+            quorum: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn default_is_disabled_and_labelled_off() {
+        let c = FaultConfig::default();
+        assert!(!c.enabled());
+        assert!(c.validate().is_ok());
+        assert_eq!(c.label(), "off");
+        assert!(chaotic().enabled());
+        assert!(chaotic().label().contains("crash=0.3"));
+    }
+
+    #[test]
+    fn cli_full_surface_parses() {
+        let a = cli::parse(&sv(&[
+            "run",
+            "--fault-crash",
+            "0.1",
+            "--fault-drop",
+            "0.2",
+            "--fault-corrupt",
+            "0.05",
+            "--fault-straggle",
+            "0.25:4",
+            "--round-deadline",
+            "30",
+            "--fault-retries",
+            "3",
+            "--fault-backoff",
+            "0.25",
+            "--fault-quorum",
+            "2",
+        ]));
+        let c = FaultConfig::from_args(&a).unwrap();
+        assert!(c.enabled());
+        assert_eq!(c.crash, 0.1);
+        assert_eq!(c.straggle, 0.25);
+        assert_eq!(c.straggle_mult, 4.0);
+        assert_eq!(c.max_retries, 3);
+        assert_eq!(c.quorum, 2);
+    }
+
+    #[test]
+    fn cli_rejects_inconsistent_combos() {
+        // off + a rate is contradictory.
+        let a = cli::parse(&sv(&["run", "--faults", "off", "--fault-drop", "0.1"]));
+        assert!(FaultConfig::from_args(&a).is_err());
+        // on with nothing armed is vacuous.
+        let a = cli::parse(&sv(&["run", "--faults", "on"]));
+        assert!(FaultConfig::from_args(&a).is_err());
+        // retry/backoff/quorum knobs without the faults they tune.
+        let a = cli::parse(&sv(&["run", "--fault-retries", "3"]));
+        assert!(FaultConfig::from_args(&a).is_err());
+        let a = cli::parse(&sv(&["run", "--fault-backoff", "1.0"]));
+        assert!(FaultConfig::from_args(&a).is_err());
+        let a = cli::parse(&sv(&["run", "--fault-quorum", "2"]));
+        assert!(FaultConfig::from_args(&a).is_err());
+        // Bare flags, bad grammar, out-of-range rates.
+        let a = cli::parse(&sv(&["run", "--fault-crash"]));
+        assert!(FaultConfig::from_args(&a).is_err());
+        let a = cli::parse(&sv(&["run", "--fault-crash", "1.5"]));
+        assert!(FaultConfig::from_args(&a).is_err());
+        let a = cli::parse(&sv(&["run", "--fault-straggle", "0.5"]));
+        assert!(FaultConfig::from_args(&a).is_err());
+        let a = cli::parse(&sv(&["run", "--fault-straggle", "0.5:0.5"]));
+        assert!(FaultConfig::from_args(&a).is_err());
+        let a = cli::parse(&sv(&["run", "--faults", "maybe"]));
+        assert!(FaultConfig::from_args(&a).is_err());
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_order_free() {
+        let cfg = chaotic();
+        let a = FaultEngine::new(&cfg, 7, 32);
+        let b = FaultEngine::new(&cfg, 7, 32);
+        // Same seed ⇒ identical straggler set and per-leaf draws, in any
+        // query order.
+        assert_eq!(a.straggler, b.straggler);
+        for (round, client) in [(0u64, 3usize), (5, 0), (2, 31), (0, 3)] {
+            assert_eq!(a.crashes(round, client), b.crashes(round, client));
+        }
+        // Different seeds diverge somewhere on a grid this size.
+        let c = FaultEngine::new(&cfg, 8, 32);
+        let mut differs = c.straggler != a.straggler;
+        for round in 0..8u64 {
+            for client in 0..32 {
+                if a.crashes(round, client) != c.crashes(round, client) {
+                    differs = true;
+                }
+            }
+        }
+        assert!(differs, "seed must matter");
+    }
+
+    #[test]
+    fn deliver_prices_retries_and_gives_up() {
+        // drop=1: every attempt lost, full retry budget spent.
+        let cfg = FaultConfig {
+            drop: 1.0,
+            max_retries: 2,
+            backoff_base: 0.5,
+            ..Default::default()
+        };
+        let mut e = FaultEngine::new(&cfg, 1, 4);
+        let d = e.deliver(0, 0, LinkDir::Up, 2.0, 100, None);
+        assert!(!d.delivered);
+        assert_eq!(d.attempts, 3);
+        // 3 transmissions at 2.0 + backoffs 0.5 + 1.0.
+        assert!((d.time - 7.5).abs() < 1e-12);
+        assert_eq!(e.counters.drops_up, 3);
+        assert_eq!(e.counters.retries, 2);
+        assert_eq!(e.counters.gave_up, 1);
+        assert_eq!(e.counters.wasted_bits, 300);
+        assert!((e.counters.backoff_time - 1.5).abs() < 1e-12);
+        // drop=0, corrupt=0: first attempt sails through at link price.
+        let mut ok = FaultEngine::new(&FaultConfig::default(), 1, 4);
+        let d = ok.deliver(0, 0, LinkDir::Down, 2.0, 100, None);
+        assert!(d.delivered);
+        assert_eq!(d.attempts, 1);
+        assert_eq!(d.time.to_bits(), 2.0f64.to_bits());
+        assert_eq!(ok.counters, FaultCounters::default());
+    }
+
+    #[test]
+    fn corruption_is_detected_via_the_real_frame_check() {
+        let cfg = FaultConfig { corrupt: 1.0, max_retries: 0, ..Default::default() };
+        let mut e = FaultEngine::new(&cfg, 3, 4);
+        let payload: Vec<u8> = (0..64).map(|i| (i * 37) as u8).collect();
+        let d = e.deliver(0, 1, LinkDir::Up, 1.0, 512, Some(&payload));
+        assert!(!d.delivered, "flipped bit must fail the frame check");
+        assert_eq!(e.counters.corruptions, 1);
+        // Downlink frames are not corrupted (corruption models the
+        // quantized uplink encoding).
+        let d = e.deliver(0, 1, LinkDir::Down, 1.0, 512, None);
+        assert!(d.delivered);
+    }
+
+    #[test]
+    fn crash_bookkeeping_evicts_after_threshold() {
+        let mut e = FaultEngine::new(&chaotic(), 1, 8);
+        assert!(!e.record_crash(5), "first crash reboots");
+        assert!(!e.is_dead(5));
+        assert!(e.record_crash(5), "second crash evicts");
+        assert!(e.is_dead(5));
+        assert!(!e.record_crash(5), "already dead: no double eviction");
+        assert_eq!(e.counters.crashes, 3);
+        assert_eq!(e.counters.evictions, 1);
+    }
+
+    #[test]
+    fn quorum_cutoff_covers_every_regime() {
+        let mk = |deadline: f64, quorum: usize| {
+            FaultEngine::new(
+                &FaultConfig {
+                    drop: 0.1,
+                    round_deadline: deadline,
+                    quorum,
+                    ..Default::default()
+                },
+                1,
+                8,
+            )
+        };
+        // No deadline: everything accepted, cutoff = slowest.
+        let mut e = FaultEngine::new(
+            &FaultConfig { drop: 0.1, ..Default::default() },
+            1,
+            8,
+        );
+        let (cut, acc) = e.quorum_cutoff(&[3.0, 1.0, 2.0]);
+        assert_eq!(cut, 3.0);
+        assert!(acc.iter().all(|&x| x));
+        // All on time: closes at the last arrival, not the deadline.
+        let mut e = mk(10.0, 2);
+        let (cut, acc) = e.quorum_cutoff(&[3.0, 1.0]);
+        assert_eq!(cut, 3.0);
+        assert!(acc.iter().all(|&x| x));
+        assert_eq!(e.counters.deadline_misses, 0);
+        // Quorum met, one late: cutoff = deadline, the late one dropped.
+        let mut e = mk(10.0, 2);
+        let (cut, acc) = e.quorum_cutoff(&[3.0, 25.0, 7.0]);
+        assert_eq!(cut, 10.0);
+        assert_eq!(acc, vec![true, false, true]);
+        assert_eq!(e.counters.deadline_misses, 1);
+        // Quorum not met by the deadline: wait for the quorum-th fastest.
+        let mut e = mk(10.0, 2);
+        let (cut, acc) = e.quorum_cutoff(&[25.0, 12.0, 30.0]);
+        assert_eq!(cut, 25.0);
+        assert_eq!(acc, vec![true, true, false]);
+        assert_eq!(e.counters.quorum_waits, 1);
+        assert_eq!(e.counters.deadline_misses, 1);
+        // Fewer deliveries than quorum: degrade, accept what arrived.
+        let mut e = mk(10.0, 3);
+        let (cut, acc) = e.quorum_cutoff(&[12.0]);
+        assert_eq!(cut, 12.0);
+        assert_eq!(acc, vec![true]);
+        assert_eq!(e.counters.degraded_rounds, 1);
+        // Nothing delivered at all: the server waited out the deadline.
+        let mut e = mk(10.0, 2);
+        let (cut, acc) = e.quorum_cutoff(&[]);
+        assert!(acc.is_empty());
+        assert_eq!(cut, 10.0);
+        assert_eq!(e.counters.degraded_rounds, 1);
+    }
+}

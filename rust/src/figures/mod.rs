@@ -38,6 +38,13 @@
 //!   (`--paper-scale`) on `mobile` under churn. The summary's
 //!   `participation_gini`, `staleness_max`/`staleness_mean`, and
 //!   `rejected` columns separate the policies.
+//! - **`chaos`** — the failure-handling sweep ([`crate::fault`],
+//!   docs/FAULTS.md): QuAFL under each seeded fault model in isolation
+//!   (crash, drop, corrupt, straggle + deadline), then all three
+//!   federated algorithms under the combined chaos profile with quorum
+//!   aggregation. Also writes `BENCH_chaos.json` — recovery counters
+//!   next to wall time, gated in CI against
+//!   `bench/baselines/BENCH_chaos.json`.
 //!
 //! The same axes are scriptable as a grid via `quafl sweep`
 //! (`--algorithms`, `--quantizers`, `--nets`, `--seeds` — see
@@ -52,6 +59,7 @@ use crate::config::{
 };
 use crate::coordinator;
 use crate::data::{PartitionKind, SynthFamily};
+use crate::fault::FaultConfig;
 use crate::metrics::RunMetrics;
 use crate::net::{AvailabilityKind, NetProfile, NetworkConfig};
 use crate::select::SelectionKind;
@@ -67,7 +75,7 @@ pub fn list() -> Vec<&'static str> {
     vec![
         "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
         "fig9", "fig10", "fig11", "fig13", "fig15", "fig16", "net_bw",
-        "net_churn", "net_fleet", "select_churn",
+        "net_churn", "net_fleet", "select_churn", "chaos",
     ]
 }
 
@@ -174,6 +182,9 @@ pub fn run_figure(
     if id == "net_fleet" {
         write_fleet_bench(out_dir, smoke)?;
     }
+    if id == "chaos" {
+        write_chaos_bench(out_dir)?;
+    }
     Ok(())
 }
 
@@ -273,6 +284,148 @@ fn write_fleet_bench(out_dir: &str, smoke: bool) -> Result<()> {
     doc.insert("rows".into(), Json::Arr(rows));
     std::fs::write(
         format!("{out_dir}/BENCH_fleet.json"),
+        json::to_string(&Json::Obj(doc)) + "\n",
+    )?;
+    Ok(())
+}
+
+/// The configs behind `BENCH_chaos.json`: one aggressive all-faults
+/// chaos profile per algorithm plus a clean control, at a fixed
+/// seconds-scale size. Deliberately identical in every mode (never
+/// smoke-clamped), so the CI chaos row ids always match the committed
+/// baseline ceilings in `bench/baselines/BENCH_chaos.json`.
+pub fn chaos_bench_configs() -> Vec<(String, ExperimentConfig)> {
+    let chaos = FaultConfig {
+        crash: 0.1,
+        drop: 0.2,
+        corrupt: 0.1,
+        straggle: 0.3,
+        straggle_mult: 4.0,
+        round_deadline: 60.0,
+        quorum: 2,
+        ..FaultConfig::default()
+    };
+    let mk = |algorithm: Algorithm,
+              quantizer: QuantizerKind,
+              fault: FaultConfig| ExperimentConfig {
+        algorithm,
+        quantizer,
+        n: 24,
+        s: 6,
+        k: 5,
+        rounds: 6,
+        eval_every: 6,
+        family: SynthFamily::Hard,
+        train_samples: 2048,
+        val_samples: 256,
+        net: NetworkConfig {
+            profile: NetProfile::preset("mobile").expect("preset"),
+            ..Default::default()
+        },
+        fault,
+        ..ExperimentConfig::default()
+    };
+    vec![
+        (
+            "quafl_clean".into(),
+            mk(
+                Algorithm::QuAFL,
+                QuantizerKind::Lattice { bits: 10 },
+                FaultConfig::default(),
+            ),
+        ),
+        (
+            "quafl_chaos".into(),
+            mk(
+                Algorithm::QuAFL,
+                QuantizerKind::Lattice { bits: 10 },
+                chaos.clone(),
+            ),
+        ),
+        (
+            "fedbuff_chaos".into(),
+            mk(
+                Algorithm::FedBuff,
+                QuantizerKind::Qsgd { bits: 10 },
+                chaos.clone(),
+            ),
+        ),
+        (
+            "fedavg_chaos".into(),
+            mk(Algorithm::FedAvg, QuantizerKind::None, chaos),
+        ),
+    ]
+}
+
+/// The chaos-recovery perf/robustness artifact, written alongside the
+/// `chaos` figure output: per [`chaos_bench_configs`] row, wall time
+/// (the gated column — `wall_ns_total` rides the bench-compare gate,
+/// [`crate::testing::compare::GATE_KEYS`]) plus the full
+/// [`crate::fault::FaultCounters`] family so regressions in recovery
+/// behaviour are visible in review, not just timing.
+fn write_chaos_bench(out_dir: &str) -> Result<()> {
+    use crate::util::json::{self, Json};
+    use std::collections::BTreeMap;
+
+    let mut rows = Vec::new();
+    for (label, cfg) in chaos_bench_configs() {
+        let t0 = std::time::Instant::now();
+        let metrics = coordinator::run(&cfg)
+            .with_context(|| format!("chaos bench {label}"))?;
+        let wall_ns = t0.elapsed().as_nanos() as f64;
+        let c = &metrics.fault;
+        crate::log!(
+            Info,
+            "[figures] chaos bench {label}: acc={:.3} crashes={} retries={} \
+             degraded={} ({:.3}s)",
+            metrics.final_acc(),
+            c.crashes,
+            c.retries,
+            c.degraded_rounds,
+            wall_ns / 1e9
+        );
+        let mut row = BTreeMap::new();
+        row.insert("arm".into(), Json::Str(label));
+        row.insert("rounds".into(), Json::Num(cfg.rounds as f64));
+        row.insert("wall_ns_total".into(), Json::Num(wall_ns));
+        row.insert("final_acc".into(), Json::Num(metrics.final_acc()));
+        row.insert(
+            "sim_time".into(),
+            Json::Num(
+                metrics.points.last().map(|p| p.sim_time).unwrap_or(0.0),
+            ),
+        );
+        row.insert("crashes".into(), Json::Num(c.crashes as f64));
+        row.insert("evictions".into(), Json::Num(c.evictions as f64));
+        row.insert("drops_up".into(), Json::Num(c.drops_up as f64));
+        row.insert("drops_down".into(), Json::Num(c.drops_down as f64));
+        row.insert("corruptions".into(), Json::Num(c.corruptions as f64));
+        row.insert("retries".into(), Json::Num(c.retries as f64));
+        row.insert("gave_up".into(), Json::Num(c.gave_up as f64));
+        row.insert(
+            "deadline_misses".into(),
+            Json::Num(c.deadline_misses as f64),
+        );
+        row.insert("quorum_waits".into(), Json::Num(c.quorum_waits as f64));
+        row.insert(
+            "degraded_rounds".into(),
+            Json::Num(c.degraded_rounds as f64),
+        );
+        row.insert("wasted_bits".into(), Json::Num(c.wasted_bits as f64));
+        row.insert(
+            "wasted_compute_s".into(),
+            Json::Num(c.wasted_compute_time),
+        );
+        row.insert("backoff_s".into(), Json::Num(c.backoff_time));
+        rows.push(Json::Obj(row));
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("chaos_recovery".into()));
+    doc.insert("figure".into(), Json::Str("chaos".into()));
+    doc.insert("rows".into(), Json::Arr(rows));
+    std::fs::write(
+        format!("{out_dir}/BENCH_chaos.json"),
         json::to_string(&Json::Obj(doc)) + "\n",
     )?;
     Ok(())
@@ -884,6 +1037,91 @@ pub fn arms_for(id: &str, paper: bool) -> Option<Vec<Arm>> {
             }
             arms
         }
+        // §fault chaos: the failure-handling sweep — QuAFL under each
+        // fault model in isolation, then all three
+        // federated algorithms under the combined chaos profile with a
+        // round deadline and quorum aggregation ([`crate::fault`],
+        // docs/FAULTS.md). Every arm runs the `mobile` transport so fault
+        // pricing lands on a real clock; `quafl_clean` is the control
+        // (same net, chaos disarmed). The summary's wasted columns and
+        // `BENCH_chaos.json`'s recovery counters separate the arms.
+        "chaos" => {
+            let n = scale(paper, 24, 100);
+            let s = scale(paper, 6, 10);
+            let mobile = NetworkConfig {
+                profile: NetProfile::preset("mobile").expect("preset"),
+                ..Default::default()
+            };
+            let mk = |label: &str,
+                      algorithm: Algorithm,
+                      quantizer: QuantizerKind,
+                      fault: FaultConfig| Arm {
+                label: label.into(),
+                cfg: ExperimentConfig {
+                    algorithm,
+                    quantizer,
+                    n,
+                    s,
+                    family: SynthFamily::Hard,
+                    net: mobile.clone(),
+                    fault,
+                    ..b.clone()
+                },
+            };
+            // quorum=2 survives the smoke clamp (s is clamped to 3).
+            let chaos = FaultConfig {
+                crash: 0.05,
+                drop: 0.1,
+                corrupt: 0.05,
+                straggle: 0.2,
+                straggle_mult: 4.0,
+                round_deadline: 60.0,
+                quorum: 2,
+                ..FaultConfig::default()
+            };
+            let l10 = QuantizerKind::Lattice { bits: 10 };
+            vec![
+                mk("quafl_clean", Algorithm::QuAFL, l10, FaultConfig::default()),
+                mk(
+                    "quafl_crash",
+                    Algorithm::QuAFL,
+                    l10,
+                    FaultConfig { crash: 0.1, ..FaultConfig::default() },
+                ),
+                mk(
+                    "quafl_drop",
+                    Algorithm::QuAFL,
+                    l10,
+                    FaultConfig { drop: 0.2, ..FaultConfig::default() },
+                ),
+                mk(
+                    "quafl_corrupt",
+                    Algorithm::QuAFL,
+                    l10,
+                    FaultConfig { corrupt: 0.1, ..FaultConfig::default() },
+                ),
+                mk(
+                    "quafl_straggle",
+                    Algorithm::QuAFL,
+                    l10,
+                    FaultConfig {
+                        straggle: 0.3,
+                        straggle_mult: 4.0,
+                        round_deadline: 60.0,
+                        quorum: 2,
+                        ..FaultConfig::default()
+                    },
+                ),
+                mk("quafl_chaos", Algorithm::QuAFL, l10, chaos.clone()),
+                mk(
+                    "fedbuff_chaos",
+                    Algorithm::FedBuff,
+                    QuantizerKind::Qsgd { bits: 10 },
+                    chaos.clone(),
+                ),
+                mk("fedavg_chaos", Algorithm::FedAvg, QuantizerKind::None, chaos),
+            ]
+        }
         // Fig 16: FedBuff+QSGD vs QuAFL+lattice at equal bit width.
         "fig16" => vec![
             Arm {
@@ -1051,6 +1289,70 @@ mod tests {
             if let SelectionKind::StalenessAware { cap } = cfg.select {
                 assert!(cap <= 2, "smoke cap {cap} cannot bind in 4 rounds");
             }
+        }
+    }
+
+    #[test]
+    fn chaos_covers_every_fault_model_and_all_algorithms() {
+        for paper in [false, true] {
+            let arms = arms_for("chaos", paper).unwrap();
+            assert_eq!(arms.len(), 8);
+            let clean =
+                arms.iter().find(|a| a.label == "quafl_clean").unwrap();
+            assert!(!clean.cfg.fault.enabled(), "control must stay disarmed");
+            assert_eq!(
+                arms.iter().filter(|a| a.cfg.fault.enabled()).count(),
+                7
+            );
+            // All three federated algorithms face the combined profile
+            // (crash + drop + corrupt + straggle + deadline + quorum).
+            for algo in
+                [Algorithm::QuAFL, Algorithm::FedBuff, Algorithm::FedAvg]
+            {
+                assert!(
+                    arms.iter().any(|a| a.cfg.algorithm == algo
+                        && a.cfg.fault.crash > 0.0
+                        && a.cfg.fault.drop > 0.0
+                        && a.cfg.fault.round_deadline > 0.0
+                        && a.cfg.fault.quorum > 1),
+                    "{algo:?} missing a combined-chaos arm"
+                );
+            }
+            // Fault time needs a priced clock to show up on.
+            assert!(arms.iter().all(|a| !a.cfg.net.profile.is_ideal()));
+            // The quorum must survive the smoke clamp (s drops to 3).
+            for arm in arms {
+                let label = arm.label;
+                let cfg = smoke_cfg(arm.cfg);
+                assert!(cfg.fault.quorum <= cfg.s, "{label}");
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_bench_configs_validate_and_arm_every_fault() {
+        let cfgs = chaos_bench_configs();
+        assert_eq!(cfgs.len(), 4);
+        for (label, cfg) in &cfgs {
+            cfg.validate()
+                .unwrap_or_else(|e| panic!("chaos bench {label}: {e}"));
+        }
+        // Exactly one clean control; every armed row runs all four fault
+        // models under a deadline + quorum (the acceptance scenario).
+        assert_eq!(cfgs.iter().filter(|(_, c)| !c.fault.enabled()).count(), 1);
+        for (label, cfg) in cfgs.iter().filter(|(_, c)| c.fault.enabled()) {
+            let f = &cfg.fault;
+            assert!(
+                f.crash > 0.0
+                    && f.drop > 0.0
+                    && f.corrupt > 0.0
+                    && f.straggle > 0.0,
+                "{label}: all four fault models must be armed"
+            );
+            assert!(
+                f.round_deadline > 0.0 && f.quorum == 2,
+                "{label}: deadline + quorum must be armed"
+            );
         }
     }
 

@@ -120,6 +120,25 @@
 //!   and error bounds: docs/TELEMETRY.md; rust/tests/telemetry_parity.rs
 //!   proves armed telemetry is bit-free and the probes agree with the
 //!   dense oracles.
+//! - **L3-fault** — the fault-injection & failure-handling subsystem
+//!   ([`fault`]): a seeded chaos engine (private RNG tree off the master
+//!   seed, one leaf per round/client/decision — worker-count invariant)
+//!   injecting client crashes after local SGD (wasted compute priced,
+//!   repeat offenders permanently evicted from the availability index),
+//!   per-attempt uplink/downlink message loss with bounded
+//!   retry + exponential backoff priced through the real
+//!   [`net::Transport`], checksum-framed payload corruption
+//!   ([`quant::frame_checksum`], detected server-side and treated as a
+//!   drop), and seeded straggler slowdowns — behind
+//!   `--fault-crash/--fault-drop/--fault-corrupt/--fault-straggle`.
+//!   Recovery: a `--round-deadline` closes rounds K-of-s quorum-style
+//!   (`--fault-quorum`; QuAFL's natural semantics, generalized to
+//!   FedAvg/FedBuff with arrival-reweighting) and degrades gracefully
+//!   below quorum instead of hanging. Fault/recovery counters flow into
+//!   trace counters, telemetry gauges, `health-report`, and the
+//!   `figures chaos` sweep (`BENCH_chaos.json`). `--faults off`
+//!   (default) constructs no engine and is a bit-exact no-op
+//!   (rust/tests/fault_parity.rs). Contract: docs/FAULTS.md.
 //! - **L2/L1 (build-time Python)** — the client model's fwd/bwd/update as
 //!   JAX functions over Pallas kernels, AOT-lowered once to
 //!   `artifacts/*.hlo.txt`; [`runtime`] loads and [`engine::XlaEngine`]
@@ -134,6 +153,7 @@ pub mod coordinator;
 pub mod data;
 pub mod engine;
 pub mod exec;
+pub mod fault;
 pub mod figures;
 pub mod fleet;
 pub mod metrics;

@@ -144,6 +144,26 @@ fn usage() {
          \x20 --event-driven true|false   O(s log n) event-queue availability\n\
          \x20                             index (default true; false = legacy\n\
          \x20                             O(n) walk, bit-identical)\n\
+         faults (default: off — no engine built, bit-exact legacy runs;\n\
+         \x20       seeded chaos + recovery, see docs/FAULTS.md):\n\
+         \x20 --fault-crash P             P(client crashes after local SGD,\n\
+         \x20                             before upload) per interaction\n\
+         \x20 --fault-drop P              P(loss per transmission attempt,\n\
+         \x20                             both directions)\n\
+         \x20 --fault-corrupt P           P(uplink payload corruption);\n\
+         \x20                             checksum-detected server-side and\n\
+         \x20                             treated as a drop\n\
+         \x20 --fault-straggle P:MULT     chronic-straggler fleet fraction\n\
+         \x20                             and link-slowdown multiplier\n\
+         \x20 --fault-retries N (2)       bounded retransmissions per message\n\
+         \x20 --fault-backoff S (0.5)     initial backoff; attempt i waits\n\
+         \x20                             S*2^i simulated seconds\n\
+         \x20 --round-deadline S          server closes the round S sim-\n\
+         \x20                             seconds in, once quorum is met\n\
+         \x20 --fault-quorum K (1)        min arrivals before the deadline\n\
+         \x20                             may close the round (K-of-s)\n\
+         \x20 --faults off|on             master switch cross-checked\n\
+         \x20                             against the flags above\n\
          \n\
          figures options: --out-dir DIR (results) --paper-scale|--smoke [ids...]\n\
          \n\

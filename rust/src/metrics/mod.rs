@@ -27,6 +27,16 @@ pub struct CommTally {
     /// the dense layout). O((s + touched)·d) under the CoW store vs the
     /// eager layout's O(n·d).
     pub peak_model_bytes: u64,
+    /// uplink bits that bought nothing: FedBuff pushes the admission rule
+    /// rejected, plus (under [`crate::fault`]) lost/corrupted attempts
+    /// and updates discarded at the round deadline. A subset of
+    /// `bits_up` — rejection's cost was previously invisible next to the
+    /// event-count `rejected_interactions`.
+    pub wasted_up_bits: u64,
+    /// simulated client compute seconds whose results never entered the
+    /// server model: FedBuff rejected pushes, crashed clients, and
+    /// dropped/deadline-missed updates.
+    pub wasted_compute_time: f64,
 }
 
 /// One evaluation point.
@@ -54,6 +64,10 @@ pub struct EvalPoint {
     pub val_acc: f64,
     /// loss on a fixed training subsample (the paper's train-loss curves)
     pub train_loss: f64,
+    /// cumulative uplink bits that bought nothing (see [`CommTally`])
+    pub wasted_up_bits: u64,
+    /// cumulative compute seconds that bought nothing (see [`CommTally`])
+    pub wasted_compute_time: f64,
 }
 
 /// Full run record.
@@ -79,6 +93,9 @@ pub struct RunMetrics {
     /// when `ExperimentConfig::track_selection` (test/diagnostic hook;
     /// FedBuff records each admitted arrival as a singleton set)
     pub selections: Vec<(f64, Vec<usize>)>,
+    /// fault/recovery counter totals ([`crate::fault`]; all zero when
+    /// `--faults off` — the `figures chaos` bench rows read these)
+    pub fault: crate::fault::FaultCounters,
 }
 
 impl RunMetrics {
@@ -183,6 +200,8 @@ impl RunMetrics {
         "participation_gini",
         "staleness_max",
         "staleness_mean",
+        "wasted_up_bits",
+        "wasted_compute_s",
     ];
 
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
@@ -203,6 +222,8 @@ impl RunMetrics {
                 p.participation_gini,
                 p.staleness_max as f64,
                 p.staleness_mean,
+                p.wasted_up_bits as f64,
+                p.wasted_compute_time,
             ])?;
         }
         w.flush()
@@ -229,6 +250,8 @@ mod tests {
             val_loss: 1.0 - acc,
             val_acc: acc,
             train_loss: 1.0 - acc,
+            wasted_up_bits: round as u64 * 8,
+            wasted_compute_time: round as f64 * 0.125,
         }
     }
 
@@ -264,11 +287,10 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 3);
         assert!(text.starts_with("round,sim_time"));
-        assert!(text
-            .lines()
-            .next()
-            .unwrap()
-            .ends_with("participation_gini,staleness_max,staleness_mean"));
+        assert!(text.lines().next().unwrap().ends_with(
+            "participation_gini,staleness_max,staleness_mean,\
+             wasted_up_bits,wasted_compute_s"
+        ));
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -200,6 +200,11 @@ pub struct ClientAvailability {
     event_driven: bool,
     /// the queue+Fenwick index (event mode, churn/duty kinds only)
     events: Option<EventIndex>,
+    /// permanently evicted clients ([`crate::fault`] dead-client
+    /// recovery) — excluded from every query path, in both modes
+    dead: Vec<bool>,
+    /// number of set bits in `dead`
+    evicted: usize,
 }
 
 impl ClientAvailability {
@@ -298,7 +303,44 @@ impl ClientAvailability {
         } else {
             None
         };
-        ClientAvailability { kind, churn, phases, event_driven, events }
+        ClientAvailability {
+            kind,
+            churn,
+            phases,
+            event_driven,
+            events,
+            dead: vec![false; n],
+            evicted: 0,
+        }
+    }
+
+    /// Permanently remove client `id` from the availability process — the
+    /// fault layer's dead-client eviction ([`crate::fault`]). The client
+    /// is never reachable, never sampled, and `next_up` returns infinity;
+    /// in event mode its Fenwick up-bit is cleared immediately and any
+    /// still-queued transition event is discarded at its due time (no
+    /// stale heap entry ever flips the bit back). Idempotent.
+    pub fn evict(&mut self, id: usize) {
+        if self.dead[id] {
+            return;
+        }
+        self.dead[id] = true;
+        self.evicted += 1;
+        if let Some(ev) = self.events.as_mut() {
+            if ev.up.get(id) == 1 {
+                ev.up.add(id, -1);
+            }
+        }
+    }
+
+    /// True when `id` has been permanently evicted.
+    pub fn is_evicted(&self, id: usize) -> bool {
+        self.dead[id]
+    }
+
+    /// Number of permanently evicted clients.
+    pub fn evicted_count(&self) -> usize {
+        self.evicted
     }
 
     pub fn kind(&self) -> &AvailabilityKind {
@@ -331,7 +373,8 @@ impl ClientAvailability {
     /// when nothing is due. Event-mode queries must be globally
     /// non-decreasing in `t` (every algorithm's clock is monotone).
     fn drain(&mut self, t: f64) {
-        let ClientAvailability { kind, churn, phases, events, .. } = self;
+        let ClientAvailability { kind, churn, phases, events, dead, .. } =
+            self;
         let Some(ev) = events.as_mut() else { return };
         debug_assert!(
             t >= ev.drained_to,
@@ -352,6 +395,9 @@ impl ClientAvailability {
                         break;
                     }
                     let Reverse(Event { id, .. }) = ev.queue.pop().unwrap();
+                    if dead[id] {
+                        continue; // evicted: discard, never re-schedule
+                    }
                     ev.drained_events += 1;
                     let st = &mut churn[id];
                     let was_up = st.up;
@@ -378,6 +424,9 @@ impl ClientAvailability {
                         break;
                     }
                     let Reverse(Event { id, .. }) = ev.queue.pop().unwrap();
+                    if dead[id] {
+                        continue; // evicted: discard, never re-schedule
+                    }
                     ev.drained_events += 1;
                     // The event time is conservative; the *exact* legacy
                     // predicate at the drain instant decides the bit.
@@ -417,6 +466,9 @@ impl ClientAvailability {
     /// Is client `i` reachable at time `t`? (`t` non-decreasing — per
     /// client in legacy mode, globally in event mode)
     pub fn is_up(&mut self, i: usize, t: f64) -> bool {
+        if self.dead[i] {
+            return false;
+        }
         match &self.kind {
             AvailabilityKind::Always => true,
             AvailabilityKind::Churn { .. } => {
@@ -440,6 +492,9 @@ impl ClientAvailability {
     /// itself (bitwise) when the client is already up — the `Always` path
     /// is therefore an exact no-op.
     pub fn next_up(&mut self, i: usize, t: f64) -> f64 {
+        if self.dead[i] {
+            return f64::INFINITY; // evicted clients never come back
+        }
         match &self.kind {
             AvailabilityKind::Always => t,
             AvailabilityKind::Churn { .. } => {
@@ -471,7 +526,10 @@ impl ClientAvailability {
     /// index by rank in O(u log n). Identical output, zero RNG, in both.
     pub fn reachable(&mut self, n: usize, t: f64) -> Vec<usize> {
         if self.is_always() {
-            return (0..n).collect();
+            if self.evicted == 0 {
+                return (0..n).collect();
+            }
+            return (0..n).filter(|&i| !self.dead[i]).collect();
         }
         if self.events.is_some() {
             self.drain(t);
@@ -499,6 +557,22 @@ impl ClientAvailability {
         t: f64,
     ) -> Vec<usize> {
         if self.is_always() {
+            if self.evicted > 0 {
+                // Evictions only happen on faulted runs, so leaving the
+                // exact pre-net RNG path here cannot perturb a default
+                // trajectory.
+                let live: Vec<usize> =
+                    (0..n).filter(|&i| !self.dead[i]).collect();
+                if live.len() <= s {
+                    return live;
+                }
+                let picks = if self.event_driven {
+                    rng.sample_distinct_sparse(live.len(), s)
+                } else {
+                    rng.sample_distinct(live.len(), s)
+                };
+                return picks.into_iter().map(|j| live[j]).collect();
+            }
             return if self.event_driven {
                 rng.sample_distinct_sparse(n, s)
             } else {
@@ -770,6 +844,78 @@ mod tests {
         assert!(drained > 0, "churn over 160s must pop transitions");
         assert_eq!(depth, 8, "every churn client keeps one pending event");
         assert!(fops > 0, "fenwick served the reachability queries");
+    }
+
+    #[test]
+    fn evicted_clients_leave_every_query_path() {
+        // Satellite regression for [`crate::fault`] dead-client eviction:
+        // across all three kinds and both query modes, an evicted client
+        // is never up, never reachable, never sampled, and its next_up is
+        // infinite — forever.
+        let kinds = [
+            AvailabilityKind::Always,
+            AvailabilityKind::Churn { mean_up: 4.0, mean_down: 4.0 },
+            AvailabilityKind::DutyCycle { period: 10.0, on_fraction: 0.6 },
+        ];
+        for kind in kinds {
+            for mode in [false, true] {
+                let mut av =
+                    ClientAvailability::with_mode(kind.clone(), 12, 9, mode);
+                av.evict(3);
+                av.evict(7);
+                av.evict(7); // idempotent
+                assert!(av.is_evicted(3) && av.is_evicted(7));
+                assert!(!av.is_evicted(0));
+                assert_eq!(av.evicted_count(), 2);
+                let mut rng = Rng::new(5);
+                for step in 0..80 {
+                    let t = step as f64 * 1.3;
+                    assert!(!av.is_up(3, t), "{} t={t}", kind.name());
+                    assert_eq!(av.next_up(7, t), f64::INFINITY);
+                    let reach = av.reachable(12, t);
+                    assert!(
+                        !reach.contains(&3) && !reach.contains(&7),
+                        "{} mode={mode} t={t}: evicted client reachable",
+                        kind.name()
+                    );
+                    for i in av.sample(&mut rng, 12, 5, t) {
+                        assert!(i != 3 && i != 7, "evicted client sampled");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eviction_keeps_fenwick_in_sync_with_live_oracle() {
+        // The event queue holds a pending transition for every churn
+        // client at eviction time; those stale events must be discarded —
+        // not flip the Fenwick bit back — so the up-set always equals the
+        // legacy per-client oracle restricted to live clients.
+        let kind = AvailabilityKind::Churn { mean_up: 5.0, mean_down: 5.0 };
+        let mut legacy = ClientAvailability::new(kind.clone(), 16, 21);
+        let mut event = ClientAvailability::with_mode(kind, 16, 21, true);
+        for id in [2, 5, 11] {
+            legacy.evict(id);
+            event.evict(id);
+        }
+        for step in 0..200 {
+            let t = step as f64 * 0.9;
+            let oracle: Vec<usize> =
+                (0..16).filter(|&i| legacy.is_up(i, t)).collect();
+            assert_eq!(event.reachable(16, t), oracle, "t={t}");
+        }
+        // Mid-run eviction of a currently-up client drops it immediately.
+        let victim = event.reachable(16, 180.0)[0];
+        event.evict(victim);
+        legacy.evict(victim);
+        for step in 200..260 {
+            let t = step as f64 * 0.9;
+            let oracle: Vec<usize> =
+                (0..16).filter(|&i| legacy.is_up(i, t)).collect();
+            assert_eq!(event.reachable(16, t), oracle, "t={t}");
+            assert!(!event.reachable(16, t).contains(&victim));
+        }
     }
 
     #[test]

@@ -66,6 +66,28 @@ pub fn roundtrip(q: &dyn Quantizer, x: &[f32], key: &[f32], seed: u64) -> (Vec<f
     (q.decode(&msg, key), bits)
 }
 
+/// Wire size of the integrity frame header the fault subsystem prepends
+/// to every quantized payload when chaos is armed (`crate::fault`): a
+/// 32-bit [`frame_checksum`] over the payload bytes. The header exists
+/// only on faulted runs — [`Quantizer::encoded_bits`] and the default
+/// bit accounting are untouched, preserving the `--faults off` bit-exact
+/// contract (rust/tests/fault_parity.rs).
+pub const FRAME_HEADER_BITS: usize = 32;
+
+/// 32-bit FNV-1a over the payload bytes — the frame header's integrity
+/// check. Each step XORs one byte into the state and multiplies by an
+/// odd prime; both are bijections on u32, so two payloads differing in
+/// exactly one byte (any single-bit flip) always hash differently —
+/// the fault layer's in-flight corruption is detected deterministically.
+pub fn frame_checksum(payload: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in payload {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +133,29 @@ mod tests {
         let msg = q.encode(&x, 0);
         assert!(msg.bits >= 3200);
         assert!(msg.bits < 3200 + 128);
+    }
+
+    #[test]
+    fn frame_checksum_detects_every_single_bit_flip() {
+        // The corruption model flips one bit in flight; FNV-1a's
+        // per-byte xor/multiply chain is a bijection composition, so any
+        // single-byte difference must change the hash. Exhaustive over a
+        // real encoded payload.
+        let q = LatticeQuantizer::new(8, 0.05);
+        let msg = q.encode(&randvec(97, 5, 1.0), 11);
+        let sent = frame_checksum(&msg.payload);
+        for bit in 0..msg.payload.len() * 8 {
+            let mut wire = msg.payload.clone();
+            wire[bit / 8] ^= 1 << (bit % 8);
+            assert_ne!(
+                frame_checksum(&wire),
+                sent,
+                "undetected flip at bit {bit}"
+            );
+        }
+        // Identical payloads agree, and the header size is fixed.
+        assert_eq!(frame_checksum(&msg.payload), sent);
+        assert_eq!(FRAME_HEADER_BITS, 32);
     }
 
     #[test]

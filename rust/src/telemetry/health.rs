@@ -25,6 +25,10 @@ const CURVE_ORDER: &[&str] = &["phi", "discrepancy", "client_loss_rmean"];
 /// Metrics rendered in the bias summary.
 const BIAS_ORDER: &[&str] = &["select_chi2", "gini"];
 
+/// Trace-counter prefix of the fault-recovery family ([`crate::fault`]);
+/// these ride the `counter` stream but belong on the health dashboard.
+const FAULT_PREFIX: &str = "fault_";
+
 /// One metric's per-round series, in event order.
 #[derive(Debug, Default, Clone)]
 pub struct Series {
@@ -64,8 +68,11 @@ pub struct HealthReport {
     pub skipped: usize,
 }
 
-/// Fold a parsed event stream into a health report. Only `meta` and
-/// `metric` kinds contribute; everything else is counted as skipped.
+/// Fold a parsed event stream into a health report. `meta` and `metric`
+/// kinds contribute, plus `counter` events in the `fault_*` family
+/// (chaos outcomes belong on the health dashboard; other counters stay
+/// with trace-report's phase view); everything else is counted as
+/// skipped.
 pub fn aggregate(events: &[Json]) -> HealthReport {
     let mut r = HealthReport::default();
     for e in events {
@@ -78,6 +85,21 @@ pub fn aggregate(events: &[Json]) -> HealthReport {
                     .to_string(),
             ),
             Some("metric") => {
+                let name = e
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("?")
+                    .to_string();
+                let round = e.get("round").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                let value = e.get("value").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                r.metric_points += 1;
+                r.series.entry(name).or_default().points.push((round, value));
+            }
+            Some("counter")
+                if e.get("name")
+                    .and_then(|v| v.as_str())
+                    .is_some_and(|n| n.starts_with(FAULT_PREFIX)) =>
+            {
                 let name = e
                     .get("name")
                     .and_then(|v| v.as_str())
@@ -240,6 +262,28 @@ impl HealthReport {
             }
         }
 
+        // Fault-recovery counters (cumulative — `last` is the run total).
+        let faults: Vec<&String> = self
+            .series
+            .keys()
+            .filter(|n| n.starts_with(FAULT_PREFIX))
+            .collect();
+        if !faults.is_empty() {
+            s.push_str(&format!(
+                "\n{:<22} {:>7} {:>12}  (cumulative; last = run total)\n",
+                "faults", "points", "last"
+            ));
+            for name in &faults {
+                let sr = &self.series[name.as_str()];
+                s.push_str(&format!(
+                    "{:<22} {:>7} {:>12.5}\n",
+                    name,
+                    sr.points.len(),
+                    sr.last()
+                ));
+            }
+        }
+
         // Anything not already shown above.
         let mut covered: Vec<String> = CURVE_ORDER
             .iter()
@@ -254,7 +298,7 @@ impl HealthReport {
         let other: Vec<&String> = self
             .series
             .keys()
-            .filter(|n| !covered.contains(n))
+            .filter(|n| !covered.contains(n) && !n.starts_with(FAULT_PREFIX))
             .collect();
         if !other.is_empty() {
             s.push_str(&format!(
@@ -385,6 +429,38 @@ mod tests {
         assert!(text.contains("gini"), "{text}");
         assert!(text.contains("custom_counter"), "{text}");
         assert!(text.contains("QuAFL"), "{text}");
+    }
+
+    #[test]
+    fn fault_counters_fold_into_dedicated_section() {
+        let counter = |name: &'static str, round: u64, value: f64| {
+            Event::Counter {
+                name,
+                round,
+                value,
+                sim_now: round as f64,
+            }
+            .to_json()
+        };
+        let events = vec![
+            meta("QuAFL"),
+            metric("phi", 0, 2.0),
+            counter("fault_retries", 0, 3.0),
+            counter("fault_retries", 1, 7.0),
+            counter("fault_evictions", 1, 1.0),
+            // Non-fault counters stay with trace-report.
+            counter("interactions", 1, 40.0),
+        ];
+        let r = aggregate(&events);
+        assert_eq!(r.skipped, 1, "non-fault counter must be skipped");
+        assert_eq!(r.series["fault_retries"].last(), 7.0);
+        assert_eq!(r.series["fault_evictions"].points.len(), 1);
+        let text = r.render();
+        assert!(text.contains("faults"), "{text}");
+        assert!(text.contains("fault_retries"), "{text}");
+        // Fault series must not repeat in the `other` bucket.
+        assert_eq!(text.matches("fault_retries").count(), 1, "{text}");
+        assert!(!text.contains("interactions"), "{text}");
     }
 
     #[test]

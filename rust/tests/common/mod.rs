@@ -78,7 +78,19 @@ pub fn assert_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
             "{what}: staleness_mean at round {}",
             p.round
         );
+        assert_eq!(
+            p.wasted_up_bits, q.wasted_up_bits,
+            "{what}: wasted_up_bits at round {}",
+            p.round
+        );
+        assert_eq!(
+            p.wasted_compute_time.to_bits(),
+            q.wasted_compute_time.to_bits(),
+            "{what}: wasted_compute_time at round {}",
+            p.round
+        );
     }
+    assert_eq!(a.fault, b.fault, "{what}: fault counters");
     assert_eq!(a.total_interactions, b.total_interactions, "{what}");
     assert_eq!(
         a.zero_progress_interactions, b.zero_progress_interactions,

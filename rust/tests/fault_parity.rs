@@ -1,0 +1,300 @@
+//! Parity + recovery suite for the fault-injection subsystem
+//! (rust/src/fault): the tentpole guarantee is that **chaos off is
+//! free** — with every fault rate at zero no engine is built and each
+//! algorithm runs its untouched legacy loop, so trajectories are
+//! bit-identical to a build that never heard of faults. Armed runs must
+//! be seeded-deterministic (same seed ⇒ same crashes, drops, retries,
+//! evictions, counters), visibly different from clean runs, and able to
+//! finish under the aggressive all-faults profile via deadline + quorum
+//! degradation. See docs/FAULTS.md for the model semantics.
+
+mod common;
+
+use common::assert_identical;
+use quafl::config::{Algorithm, ExperimentConfig, QuantizerKind, TimingConfig};
+use quafl::coordinator;
+use quafl::fault::FaultConfig;
+use quafl::net::{NetProfile, NetworkConfig};
+use quafl::util::json;
+
+fn base(algorithm: Algorithm) -> ExperimentConfig {
+    ExperimentConfig {
+        algorithm,
+        n: 10,
+        s: 4,
+        k: 4,
+        rounds: 8,
+        eval_every: 2,
+        train_samples: 512,
+        val_samples: 128,
+        batch: 16,
+        seed: 37,
+        timing: TimingConfig { slow_fraction: 0.3, ..Default::default() },
+        net: NetworkConfig {
+            profile: NetProfile::preset("mobile").expect("preset"),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn quantizer_for(algorithm: Algorithm) -> QuantizerKind {
+    match algorithm {
+        Algorithm::QuAFL => QuantizerKind::Lattice { bits: 10 },
+        Algorithm::FedBuff => QuantizerKind::Qsgd { bits: 8 },
+        _ => QuantizerKind::None,
+    }
+}
+
+const ALL: [Algorithm; 4] = [
+    Algorithm::QuAFL,
+    Algorithm::FedAvg,
+    Algorithm::FedBuff,
+    Algorithm::Baseline,
+];
+
+/// Aggressive all-faults profile: every model armed at once, plus the
+/// deadline/quorum recovery path.
+fn chaos() -> FaultConfig {
+    FaultConfig {
+        crash: 0.5,
+        drop: 0.4,
+        corrupt: 0.2,
+        straggle: 0.3,
+        straggle_mult: 4.0,
+        round_deadline: 60.0,
+        quorum: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn recovery_knobs_alone_never_arm_the_engine() {
+    // Retry/backoff/quorum tuning without any fault *rate* must not
+    // build an engine: the trajectory stays bit-identical to the pure
+    // default config for every algorithm (counters included — the
+    // extended assert_identical compares FaultCounters too).
+    for algorithm in ALL {
+        let cfg = ExperimentConfig {
+            quantizer: quantizer_for(algorithm),
+            ..base(algorithm)
+        };
+        let tuned = ExperimentConfig {
+            fault: FaultConfig {
+                max_retries: 7,
+                backoff_base: 9.0,
+                quorum: 3,
+                ..Default::default()
+            },
+            ..cfg.clone()
+        };
+        assert!(!tuned.fault.enabled());
+        let a = coordinator::run(&cfg).expect("default run");
+        let b = coordinator::run(&tuned).expect("tuned-but-disarmed run");
+        assert!(!a.points.is_empty(), "vacuous parity");
+        assert_identical(
+            &a,
+            &b,
+            &format!("{} recovery knobs disarmed", algorithm.name()),
+        );
+        assert_eq!(a.fault, Default::default(), "clean run counted faults");
+    }
+}
+
+#[test]
+fn armed_runs_are_seed_deterministic() {
+    for algorithm in [Algorithm::QuAFL, Algorithm::FedAvg, Algorithm::FedBuff]
+    {
+        let cfg = ExperimentConfig {
+            quantizer: quantizer_for(algorithm),
+            fault: chaos(),
+            ..base(algorithm)
+        };
+        let a = coordinator::run(&cfg).expect("armed run A");
+        let b = coordinator::run(&cfg).expect("armed run B");
+        assert!(!a.points.is_empty(), "vacuous parity");
+        assert_identical(
+            &a,
+            &b,
+            &format!("{} armed same-seed replay", algorithm.name()),
+        );
+    }
+}
+
+#[test]
+fn armed_chaos_actually_perturbs_the_run() {
+    // Non-vacuity: the same seed with chaos armed must produce a
+    // *different* trajectory and nonzero recovery counters — otherwise
+    // every parity assertion above proves nothing.
+    for algorithm in [Algorithm::QuAFL, Algorithm::FedAvg, Algorithm::FedBuff]
+    {
+        let clean_cfg = ExperimentConfig {
+            quantizer: quantizer_for(algorithm),
+            ..base(algorithm)
+        };
+        let clean = coordinator::run(&clean_cfg).expect("clean run");
+        let armed = coordinator::run(&ExperimentConfig {
+            fault: chaos(),
+            ..clean_cfg
+        })
+        .expect("armed run");
+        let c = &armed.fault;
+        assert!(c.crashes > 0, "{}: no crashes", algorithm.name());
+        assert!(
+            c.drops_up + c.drops_down > 0,
+            "{}: no drops",
+            algorithm.name()
+        );
+        assert!(c.retries > 0, "{}: no retries", algorithm.name());
+        assert!(
+            c.wasted_compute_time > 0.0,
+            "{}: wasted compute unpriced",
+            algorithm.name()
+        );
+        let diverged = clean.points.len() != armed.points.len()
+            || clean
+                .points
+                .iter()
+                .zip(&armed.points)
+                .any(|(p, q)| {
+                    p.sim_time.to_bits() != q.sim_time.to_bits()
+                        || p.total_client_steps != q.total_client_steps
+                });
+        assert!(diverged, "{}: chaos was a no-op", algorithm.name());
+    }
+}
+
+#[test]
+fn aggressive_chaos_completes_and_evicts() {
+    // The graceful-degradation acceptance scenario: every fault model at
+    // once, deadline + 2-of-s quorum, repeated crashers evicted — and
+    // the run still terminates with eval points and sane accounting.
+    let cfg = ExperimentConfig {
+        fault: chaos(),
+        rounds: 12,
+        ..base(Algorithm::QuAFL)
+    };
+    let m = coordinator::run(&cfg).expect("chaos run must complete");
+    assert!(!m.points.is_empty());
+    let c = &m.fault;
+    assert!(c.crashes >= 2, "crash rate 0.5 produced {} crashes", c.crashes);
+    assert!(c.evictions > 0, "repeat crashers were never evicted");
+    assert!(c.retries > 0, "drops never retried");
+    assert!(c.wasted_bits > 0, "failed uplinks cost no bits");
+    // The CSV waste columns mirror the counters' story.
+    let last = m.points.last().unwrap();
+    assert!(last.wasted_compute_time > 0.0);
+    assert!(last.wasted_up_bits > 0);
+}
+
+#[test]
+fn fault_counters_flow_into_trace_and_health_report() {
+    let path = std::env::temp_dir().join(format!(
+        "quafl_fault_parity_{}.jsonl",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let cfg = ExperimentConfig {
+        fault: chaos(),
+        trace: Some(path.to_str().unwrap().to_string()),
+        ..base(Algorithm::QuAFL)
+    };
+    let m = coordinator::run(&cfg).expect("traced chaos run");
+    let text = std::fs::read_to_string(&path).expect("trace file written");
+    let events = json::parse_lines(&text).expect("trace lines parse");
+    let _ = std::fs::remove_file(&path);
+
+    // The meta header labels the fault plan.
+    let meta_faults = events.iter().find_map(|e| {
+        (e.get("kind").and_then(|k| k.as_str()) == Some("meta"))
+            .then(|| e.get("faults").and_then(|v| v.as_str()))
+            .flatten()
+    });
+    assert_eq!(meta_faults, Some(cfg.fault.label().as_str()));
+    assert_ne!(meta_faults, Some("off"));
+
+    // Cumulative fault_* counter events exist, and the last value of the
+    // retries series matches the run totals.
+    let last_counter = |name: &str| -> Option<f64> {
+        events
+            .iter()
+            .filter(|e| {
+                e.get("kind").and_then(|k| k.as_str()) == Some("counter")
+                    && e.get("name").and_then(|n| n.as_str()) == Some(name)
+            })
+            .filter_map(|e| e.get("value").and_then(|v| v.as_f64()))
+            .next_back()
+    };
+    assert_eq!(last_counter("fault_retries"), Some(m.fault.retries as f64));
+    assert_eq!(last_counter("fault_crashes"), Some(m.fault.crashes as f64));
+    assert!(last_counter("fault_drops_up").unwrap_or(0.0) >= 0.0);
+
+    // And health-report folds the family into its dashboard.
+    let report = quafl::telemetry::health::aggregate(&events);
+    assert!(report.series.contains_key("fault_retries"));
+    let rendered = report.render();
+    assert!(rendered.contains("faults"), "{rendered}");
+    assert!(rendered.contains("fault_retries"), "{rendered}");
+}
+
+#[test]
+fn per_model_isolation_only_trips_its_own_counters() {
+    let run = |fault: FaultConfig| {
+        coordinator::run(&ExperimentConfig {
+            fault,
+            ..base(Algorithm::QuAFL)
+        })
+        .expect("isolated-fault run")
+        .fault
+    };
+    let crash_only = run(FaultConfig { crash: 0.4, ..Default::default() });
+    assert!(crash_only.crashes > 0);
+    assert_eq!(crash_only.drops_up + crash_only.drops_down, 0);
+    assert_eq!(crash_only.corruptions, 0);
+
+    let drop_only = run(FaultConfig { drop: 0.4, ..Default::default() });
+    assert!(drop_only.drops_up + drop_only.drops_down > 0);
+    assert_eq!(drop_only.crashes, 0);
+    assert_eq!(drop_only.corruptions, 0);
+
+    let corrupt_only =
+        run(FaultConfig { corrupt: 0.5, ..Default::default() });
+    assert!(corrupt_only.corruptions > 0);
+    assert_eq!(corrupt_only.crashes, 0);
+    assert_eq!(corrupt_only.drops_up + corrupt_only.drops_down, 0);
+}
+
+#[test]
+fn deadline_quorum_combos_validate_correctly() {
+    // Quorum above the per-round sample size can never be met.
+    let too_big = ExperimentConfig {
+        fault: FaultConfig {
+            drop: 0.1,
+            round_deadline: 30.0,
+            quorum: 9,
+            ..Default::default()
+        },
+        ..base(Algorithm::QuAFL)
+    };
+    assert!(too_big.validate().is_err());
+    // A deadline on the zero-cost ideal transport with no time-inflating
+    // fault is dead config.
+    let idle_deadline = ExperimentConfig {
+        net: NetworkConfig::default(),
+        fault: FaultConfig { round_deadline: 30.0, ..Default::default() },
+        ..base(Algorithm::QuAFL)
+    };
+    assert!(idle_deadline.validate().is_err());
+    // The same deadline priced by a straggler multiplier is fine.
+    let with_straggle = ExperimentConfig {
+        net: NetworkConfig::default(),
+        fault: FaultConfig {
+            round_deadline: 30.0,
+            straggle: 0.2,
+            straggle_mult: 8.0,
+            ..Default::default()
+        },
+        ..base(Algorithm::QuAFL)
+    };
+    assert!(with_straggle.validate().is_ok());
+}

@@ -140,6 +140,55 @@ fn fedbuff_parity_under_transport_and_churn() {
     });
 }
 
+/// The full chaos profile: all four fault models plus deadline/quorum
+/// recovery ([`quafl::fault`]). Fault draws come from stateless
+/// per-(round, client) RNG leaves and every fault decision runs in the
+/// serial pre-pass / reduction, so a faulted trajectory — including the
+/// recovery counters, which [`assert_identical`] also compares — must
+/// replay bit-identically across worker counts.
+fn chaos_plan() -> quafl::fault::FaultConfig {
+    quafl::fault::FaultConfig {
+        crash: 0.1,
+        drop: 0.2,
+        corrupt: 0.1,
+        straggle: 0.3,
+        straggle_mult: 4.0,
+        round_deadline: 60.0,
+        quorum: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn quafl_parity_under_chaos() {
+    parity_for(ExperimentConfig {
+        fault: chaos_plan(),
+        net: lossy_net(),
+        rounds: 10,
+        ..base(Algorithm::QuAFL)
+    });
+}
+
+#[test]
+fn fedavg_parity_under_chaos() {
+    parity_for(ExperimentConfig {
+        quantizer: QuantizerKind::None,
+        fault: chaos_plan(),
+        net: lossy_net(),
+        ..base(Algorithm::FedAvg)
+    });
+}
+
+#[test]
+fn fedbuff_parity_under_chaos() {
+    parity_for(ExperimentConfig {
+        quantizer: QuantizerKind::Qsgd { bits: 8 },
+        fault: chaos_plan(),
+        net: lossy_net(),
+        ..base(Algorithm::FedBuff)
+    });
+}
+
 #[test]
 fn workers_knob_leaves_config_validation_unaffected() {
     for workers in [0usize, 1, 3, 64] {
